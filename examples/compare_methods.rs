@@ -1,0 +1,38 @@
+//! Compare pruning methods on one Table-1 cell (smoke scale):
+//! Original / PQF / FPGM / NetAdapt / AMC / CPrune on ResNet-18, Kryo 385.
+//!
+//!     cargo run --release --example compare_methods [-- <device>]
+//!     device ∈ {kryo280, kryo385, kryo585, mali-g72}
+
+use cprune::device::DeviceSpec;
+use cprune::exp::{device_by_name, table1, Scale};
+use cprune::graph::model_zoo::ModelKind;
+use cprune::util::bench::print_table;
+
+fn main() {
+    let device = std::env::args()
+        .nth(1)
+        .map(|n| device_by_name(&n))
+        .unwrap_or_else(DeviceSpec::kryo385);
+    let block = table1::run_cell(ModelKind::ResNet18ImageNet, device, Scale::Smoke, 7);
+    let rows: Vec<Vec<String>> = block
+        .rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.method.clone(),
+                format!("{:.2}", r.fps),
+                format!("{:.2}x", r.fps_increase_rate),
+                format!("{:.0}M", r.macs as f64 / 1e6),
+                format!("{:.2}M", r.params as f64 / 1e6),
+                format!("{:.2}%", r.top1 * 100.0),
+                format!("{:.2}%", r.top5 * 100.0),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("{} on {}", block.model, block.device),
+        &["method", "FPS", "rate", "MACs", "params", "top-1", "top-5"],
+        &rows,
+    );
+}

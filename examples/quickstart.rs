@@ -1,0 +1,69 @@
+//! Quickstart: run CPrune on ResNet-18 (ImageNet-scale) for a simulated
+//! Kryo 385 CPU and print the before/after comparison.
+//!
+//!     cargo run --release --example quickstart
+
+use cprune::accuracy::ProxyOracle;
+use cprune::device::{DeviceSpec, Simulator};
+use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::graph::stats;
+use cprune::pruner::{cprune as run_cprune, CPruneConfig};
+use cprune::tuner::TuneOptions;
+
+fn main() {
+    // 1. A workload from the zoo (graph IR + seeded weights).
+    let model = Model::build(ModelKind::ResNet18ImageNet, 0);
+    let (flops, params) = stats::flops_params(&model.graph);
+    println!(
+        "model: {} — {:.2} GMACs, {:.1}M params, {} convs",
+        model.kind.name(),
+        flops as f64 / 2e9,
+        params as f64 / 1e6,
+        model.graph.conv_ids().len()
+    );
+
+    // 2. A target device (analytic simulator standing in for the phone).
+    let sim = Simulator::new(DeviceSpec::kryo385());
+    println!("target: {}", sim.spec.name);
+
+    // 3. CPrune: compiler-informed pruning to the accuracy budget.
+    let cfg = CPruneConfig {
+        target_accuracy: 0.66, // a_g: stop before dropping below 66% top-1
+        max_iterations: 12,
+        tune_opts: TuneOptions::quick(),
+        ..Default::default()
+    };
+    let mut oracle = ProxyOracle::new();
+    let result = run_cprune(&model, &sim, &mut oracle, &cfg);
+
+    println!("\niterations accepted: {}", result.iterations.len());
+    for it in &result.iterations {
+        println!(
+            "  iter {:>2}: pruned {:>3} filters of {:?} -> {:.2}x FPS, short-term top-1 {:.2}%",
+            it.iteration,
+            it.filters_removed,
+            it.pruned_convs,
+            it.fps_rate,
+            it.short_accuracy * 100.0
+        );
+    }
+    let (f2, p2) = stats::flops_params(&result.final_graph);
+    println!(
+        "\nresult: {:.2}x FPS vs TVM-auto-tune baseline ({:.1} -> {:.1} FPS)",
+        result.fps_increase_rate,
+        result.baseline.fps(),
+        result.final_fps
+    );
+    println!(
+        "        {:.2} -> {:.2} GMACs, {:.1}M -> {:.1}M params",
+        flops as f64 / 2e9,
+        f2 as f64 / 2e9,
+        params as f64 / 1e6,
+        p2 as f64 / 1e6
+    );
+    println!(
+        "        final top-1 {:.2}% / top-5 {:.2}% (original 69.76% / 89.08%)",
+        result.final_top1 * 100.0,
+        result.final_top5 * 100.0
+    );
+}

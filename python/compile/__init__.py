@@ -1,0 +1,1 @@
+"""CPrune build-time python package (L1 kernels + L2 model + AOT)."""

@@ -1,0 +1,154 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts for Rust.
+
+Run once by `make artifacts` (no Python on the request path):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs:
+    train_step.hlo.txt   (params, mom, masks, x[B,32,32,3], y[B], lr) ->
+                         (params', mom', loss)
+    eval_batch.hlo.txt   (params, masks, x, y) -> (correct, loss)
+    predict.hlo.txt      (params, masks, x[1,...]) -> (logits,)
+    kernel_gemm.hlo.txt  standalone Pallas GEMM (smoke test for the runtime)
+    manifest.json        argument order/shapes + init-param binary layout
+    params_init.bin      raw little-endian f32 initial parameters
+
+HLO text (NOT .serialize()) is the interchange format: jax>=0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import conv2d as k
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 100
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def arg_specs(kind: str):
+    """Positional ShapeDtypeStructs for each exported function."""
+    pspecs = [_spec(s) for _, s in model.param_specs()]
+    mspecs = [_spec(s) for _, s in model.mask_specs()]
+    if kind == "train":
+        x = _spec((TRAIN_BATCH, model.IMG, model.IMG, 3))
+        y = _spec((TRAIN_BATCH,), jnp.int32)
+        lr = _spec((), jnp.float32)
+        return pspecs + pspecs + mspecs + [x, y, lr]
+    if kind == "eval":
+        x = _spec((EVAL_BATCH, model.IMG, model.IMG, 3))
+        y = _spec((EVAL_BATCH,), jnp.int32)
+        return pspecs + mspecs + [x, y]
+    if kind == "predict":
+        x = _spec((1, model.IMG, model.IMG, 3))
+        return pspecs + mspecs + [x]
+    raise ValueError(kind)
+
+
+def lower(fn, kind: str) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs(kind)))
+
+
+def gemm_example() -> str:
+    """Standalone Pallas GEMM artifact: (128,64)x(64,32) + affine + relu."""
+
+    def fn(x, w, scale, shift):
+        return (k.matmul_scale_shift(x, w, scale, shift, True, 64, 16),)
+
+    specs = (_spec((128, 64)), _spec((64, 32)), _spec((32,)), _spec((32,)))
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def write_manifest(out_dir: str) -> None:
+    params = model.init_params(seed=0)
+    order = [n for n, _ in model.param_specs()]
+    offset = 0
+    entries = []
+    with open(os.path.join(out_dir, "params_init.bin"), "wb") as f:
+        for name in order:
+            arr = np.asarray(params[name], dtype=np.float32)
+            f.write(arr.tobytes())
+            entries.append(
+                {
+                    "name": name,
+                    "shape": list(arr.shape),
+                    "offset": offset,
+                    "numel": int(arr.size),
+                }
+            )
+            offset += arr.size * 4
+
+    manifest = {
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "img": model.IMG,
+        "num_classes": model.NUM_CLASSES,
+        "params": entries,
+        "masks": [
+            {"name": n, "shape": list(s)} for n, s in model.mask_specs()
+        ],
+        "convs": [
+            {
+                "name": name,
+                "kh": kh, "kw": kw, "cin": cin, "cout": cout,
+                "stride": stride, "relu": relu,
+            }
+            for name, kh, kw, cin, cout, stride, relu in model.CONV_SPECS
+        ],
+        "momentum": model.MOMENTUM,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", choices=["train", "eval", "predict", "gemm"],
+                    default=None, help="export a single artifact (debugging)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jobs = {
+        "train": ("train_step.hlo.txt", lambda: lower(model.flat_train_step, "train")),
+        "eval": ("eval_batch.hlo.txt", lambda: lower(model.flat_eval_batch, "eval")),
+        "predict": ("predict.hlo.txt", lambda: lower(model.flat_predict, "predict")),
+        "gemm": ("kernel_gemm.hlo.txt", gemm_example),
+    }
+    for key, (fname, thunk) in jobs.items():
+        if args.only and key != args.only:
+            continue
+        text = thunk()
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    if not args.only:
+        write_manifest(args.out_dir)
+        print(f"wrote {os.path.join(args.out_dir, 'manifest.json')} + params_init.bin")
+
+
+if __name__ == "__main__":
+    main()

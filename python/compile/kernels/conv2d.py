@@ -1,0 +1,221 @@
+"""Layer-1 Pallas kernels: the compute hot-spot of the CPrune stack.
+
+A convolution is lowered (in L2, ``model.py``) to im2col + GEMM; the GEMM —
+with its fused scale/shift (folded batch-norm) + ReLU epilogue — is the hot
+spot, implemented here as a block-tiled Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper prunes filter
+counts to stay compatible with the *iterator split tree* of TVM's fastest
+schedule on a mobile target.  The TPU-side analog of that split tree is this
+kernel's ``(block_m, block_n, block_k)`` tiling: the N (= output-channel)
+dimension is covered by a grid of ``block_n``-wide tiles, so channel counts
+that are multiples of ``block_n`` keep the HBM→VMEM schedule intact — exactly
+the structural constraint CPrune's LCM rule preserves.  MXU-friendly defaults
+are multiples of 128 where the problem is big enough; small CIFAR-scale
+problems use smaller power-of-two tiles.
+
+All kernels run with ``interpret=True`` so they lower to plain HLO and execute
+on the CPU PJRT client (real TPU lowering emits Mosaic custom-calls the CPU
+plugin cannot run).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_epilogue_kernel(x_ref, w_ref, scale_ref, shift_ref, o_ref, *, relu: bool):
+    """One (block_m, block_n) output tile: full-K matmul + scale/shift [+ReLU].
+
+    x_ref:     (block_m, K)  im2col patches tile
+    w_ref:     (K, block_n)  filter tile
+    scale_ref: (1, block_n)  folded-BN scale (broadcast over rows)
+    shift_ref: (1, block_n)  folded-BN shift
+    o_ref:     (block_m, block_n)
+    """
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    out = acc * scale_ref[...] + shift_ref[...]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Plain tiled GEMM tile: o = a @ b (used by fwd z and all bwd matmuls)."""
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul_pallas(
+    a: jax.Array, b: jax.Array, *, block_m: int = 128, block_n: int = 16
+) -> jax.Array:
+    """Block-tiled Pallas GEMM for arbitrary (M,K)x(K,N); pads M/N to tiles."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    pad_m = (-m) % bm if bm > 1 else 0
+    pad_n = (-n) % bn if bn > 1 else 0
+    # _pick_block guarantees divisibility, so pads are 0; keep the guard for
+    # future block policies.
+    ap = jnp.pad(a, ((0, pad_m), (0, 0))) if pad_m else a
+    bp = jnp.pad(b, ((0, 0), (0, pad_n))) if pad_n else b
+    mp, np_ = m + pad_m, n + pad_n
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap.astype(jnp.float32), bp.astype(jnp.float32))
+    if pad_m or pad_n:
+        out = out[:m, :n]
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def matmul_scale_shift(
+    x: jax.Array,
+    w: jax.Array,
+    scale: jax.Array,
+    shift: jax.Array,
+    relu: bool = True,
+    block_m: int = 128,
+    block_n: int = 16,
+) -> jax.Array:
+    """Tiled GEMM with fused affine epilogue: ``act((x @ w) * scale + shift)``.
+
+    ``x``: (M, K) — im2col patch matrix.  ``w``: (K, N) — flattened filters.
+    ``scale``/``shift``: (N,) — folded batch-norm.  M and N must be multiples
+    of ``block_m``/``block_n`` (the L2 caller pads M; N is a channel count the
+    pruner keeps block-aligned).  Differentiable via a custom VJP whose
+    backward matmuls also run through the Pallas GEMM.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % block_m == 0, f"M={m} not a multiple of block_m={block_m}"
+    assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
+    scale2 = scale.reshape(1, n).astype(jnp.float32)
+    shift2 = shift.reshape(1, n).astype(jnp.float32)
+
+    grid = (m // block_m, n // block_n)
+    kernel = functools.partial(_matmul_epilogue_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32), scale2, shift2)
+
+
+def _mss_fwd(x, w, scale, shift, relu, block_m, block_n):
+    z = matmul_pallas(x, w, block_m=block_m, block_n=block_n)
+    u = z * scale.reshape(1, -1) + shift.reshape(1, -1)
+    y = jnp.maximum(u, 0.0) if relu else u
+    return y, (x, w, scale, z, u)
+
+
+def _mss_bwd(relu, block_m, block_n, res, g):
+    x, w, scale, z, u = res
+    gu = jnp.where(u > 0.0, g, 0.0) if relu else g
+    gshift = jnp.sum(gu, axis=0)
+    gscale = jnp.sum(gu * z, axis=0)
+    gz = gu * scale.reshape(1, -1)
+    # dx = gz @ w.T  (M,N)x(N,K); dw = x.T @ gz  (K,M)x(M,N) — both via Pallas.
+    gx = matmul_pallas(gz, w.T, block_m=block_m, block_n=block_n)
+    gw = matmul_pallas(x.T, gz, block_m=block_m, block_n=block_n)
+    return gx, gw, gscale, gshift
+
+
+matmul_scale_shift.defvjp(_mss_fwd, _mss_bwd)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest power-of-two tile ≤ preferred that divides ``dim``."""
+    b = preferred
+    while b > 1 and dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int) -> jax.Array:
+    """NHWC image -> (N*OH*OW, KH*KW*C) patch matrix (pure jnp, fused by XLA)."""
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    # Gather all (kh, kw) shifted views; stack along a new patch axis.
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = xp[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            patches.append(sl)
+    # (N, OH, OW, KH*KW, C) -> (N*OH*OW, KH*KW*C)
+    pat = jnp.stack(patches, axis=3)
+    return pat.reshape(n * oh * ow, kh * kw * c), (n, oh, ow)
+
+
+def conv2d_bn_act(
+    x: jax.Array,
+    w: jax.Array,
+    scale: jax.Array,
+    shift: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 1,
+    relu: bool = True,
+    block_m: int | None = None,
+    block_n: int = 16,
+) -> jax.Array:
+    """Conv2D (NHWC, HWIO weights) + folded-BN affine + optional ReLU.
+
+    Lowers to im2col (L2/XLA territory) feeding the Pallas GEMM hot-spot.
+
+    ``block_m=None`` (default) uses a full-M tile: the grid iterates only
+    over the output-channel axis — the axis whose tiling the paper's §3.5
+    reads — and the interpret-mode grid loop stays short (CPU-PJRT executes
+    each grid step as plain HLO; fine-grained M-tiling there costs ~100×
+    wall-clock for zero fidelity gain). On a real TPU lowering you would
+    set ``block_m≈128`` for MXU-shaped tiles; see DESIGN.md §Perf.
+    """
+    kh, kw, cin, cout = w.shape
+    cols, (n, oh, ow) = im2col(x, kh, kw, stride, padding)
+    m = cols.shape[0]
+    if block_m is None:
+        bm = m
+    elif m % block_m != 0:
+        bm = _pick_block(m, block_m)
+        if bm < 8:
+            pad_rows = (-m) % block_m
+            cols = jnp.pad(cols, ((0, pad_rows), (0, 0)))
+            bm = block_m
+            m = m + pad_rows
+    else:
+        bm = block_m
+    m_orig = n * oh * ow
+    bn_ = _pick_block(cout, block_n)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = matmul_scale_shift(cols, wmat, scale, shift, relu, bm, bn_)
+    out = out[:m_orig] if out.shape[0] != m_orig else out
+    return out.reshape(n, oh, ow, cout)
+
+
+def avgpool_global(x: jax.Array) -> jax.Array:
+    """Global average pool NHWC -> NC (pure jnp; not a hot spot)."""
+    return jnp.mean(x, axis=(1, 2))

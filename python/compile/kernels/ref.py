@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every L1 kernel has a reference here written with plain jax.numpy /
+jax.lax ops only — no Pallas — used by the pytest suite (exact math,
+same dtype discipline) and by hypothesis sweeps over shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_scale_shift_ref(x, w, scale, shift, *, relu: bool = True):
+    """Reference for kernels.conv2d.matmul_scale_shift."""
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    out = out * scale.reshape(1, -1) + shift.reshape(1, -1)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def conv2d_bn_act_ref(x, w, scale, shift, *, stride: int = 1, padding: int = 1, relu: bool = True):
+    """Reference conv (NHWC, HWIO) + affine + ReLU via lax.conv_general_dilated."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out * scale.reshape(1, 1, 1, -1) + shift.reshape(1, 1, 1, -1)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def avgpool_global_ref(x):
+    return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,105 @@
+"""TPU resource model for the L1 Pallas GEMM: VMEM footprint + MXU
+utilization estimates per block configuration.
+
+interpret=True gives CPU-numpy timings only, so real-TPU performance is
+*estimated structurally* (DESIGN.md §Perf): a block config is TPU-viable
+when its tiles fit VMEM with double-buffering headroom, and its MXU
+utilization is the fraction of each 128x128 systolic pass kept busy by the
+tile shape.  The estimates below are what DESIGN.md §Perf quotes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on current TPUs
+MXU_DIM = 128                  # systolic array edge
+F32 = 4
+
+
+@dataclass
+class BlockEstimate:
+    """Resource estimate of one (block_m, K, block_n) GEMM tile."""
+
+    block_m: int
+    k: int
+    block_n: int
+    vmem_bytes: int
+    vmem_ok: bool
+    mxu_utilization: float
+    macs_per_tile: int
+
+    @property
+    def summary(self) -> str:
+        return (
+            f"tile {self.block_m}x{self.k}x{self.block_n}: "
+            f"VMEM {self.vmem_bytes / 1024:.0f} KiB "
+            f"({'OK' if self.vmem_ok else 'OVER'}), "
+            f"MXU util {self.mxu_utilization:.2f}"
+        )
+
+
+def estimate(block_m: int, k: int, block_n: int, *, double_buffer: bool = True) -> BlockEstimate:
+    """VMEM + MXU estimate for one tile of matmul_scale_shift.
+
+    VMEM holds: x tile (bm, K), w tile (K, bn), scale/shift (2, bn),
+    output tile (bm, bn); double-buffering doubles the input tiles.
+    MXU utilization: each (128,128)x(128,128) pass is fully used only when
+    the tile dims are multiples of 128; fractional occupancy multiplies.
+    """
+    in_bytes = (block_m * k + k * block_n + 2 * block_n) * F32
+    out_bytes = block_m * block_n * F32
+    vmem = (2 * in_bytes if double_buffer else in_bytes) + out_bytes
+
+    def occ(dim: int) -> float:
+        full, rem = divmod(dim, MXU_DIM)
+        passes = full + (1 if rem else 0)
+        return dim / (passes * MXU_DIM)
+
+    util = occ(block_m) * occ(k) * occ(block_n)
+    return BlockEstimate(
+        block_m=block_m,
+        k=k,
+        block_n=block_n,
+        vmem_bytes=vmem,
+        vmem_ok=vmem <= VMEM_BYTES,
+        mxu_utilization=util,
+        macs_per_tile=block_m * k * block_n,
+    )
+
+
+def best_tpu_blocks(m: int, k: int, n: int) -> BlockEstimate:
+    """Pick the MXU-aligned block config a real-TPU lowering would use:
+    largest (multiple-of-128) tiles that fit VMEM."""
+    best = None
+    for bm in (512, 256, 128):
+        for bn_ in (512, 256, 128):
+            if bm > max(m, MXU_DIM) or bn_ > max(n, MXU_DIM):
+                continue
+            e = estimate(min(bm, m), k, min(bn_, n))
+            if not e.vmem_ok:
+                continue
+            score = (e.mxu_utilization, e.macs_per_tile)
+            if best is None or score > (best.mxu_utilization, best.macs_per_tile):
+                best = e
+    return best or estimate(min(m, MXU_DIM), k, min(n, MXU_DIM))
+
+
+def report_model_convs() -> list[str]:
+    """Estimates for every conv GEMM of the L2 model (DESIGN.md §Perf)."""
+    from compile import model
+
+    lines = []
+    batch = 32
+    for name, kh, kw, cin, cout, stride, _ in model.CONV_SPECS:
+        hw = 32 // (1 if name in ("stem", "b1c1", "b1c2") else (2 if name.startswith("b2") else 4))
+        m = batch * hw * hw
+        k = kh * kw * cin
+        e = best_tpu_blocks(m, k, cout)
+        lines.append(f"{name:8s} M={m:6d} K={k:4d} N={cout:3d} -> {e.summary}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in report_model_convs():
+        print(line)

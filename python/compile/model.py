@@ -1,0 +1,196 @@
+"""Layer-2: JAX model + training step for the CPrune end-to-end driver.
+
+A *masked* ResNet-8-style CNN for 32x32x3 inputs (CIFAR-scale).  Structured
+pruning is expressed as per-conv **channel masks** passed as runtime inputs,
+so the AOT-compiled HLO has static shapes: one artifact serves every pruning
+state the Rust coordinator explores.  Zeroed mask entries kill the
+corresponding output channels (the folded-BN scale/shift are masked, so the
+channel is exactly 0 after the epilogue), which is numerically equivalent to
+removing the filter; the *latency* effect of removal is modeled by the L3
+device simulator, and the *accuracy* effect is measured here for real.
+
+Every convolution lowers through the L1 Pallas GEMM hot-spot
+(kernels.conv2d.conv2d_bn_act).  This module is build-time only: aot.py
+lowers `train_step` / `eval_batch` / `predict` to HLO text and Rust drives
+them via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import conv2d as k
+
+NUM_CLASSES = 10
+IMG = 32
+
+# (name, kh, kw, cin, cout, stride, relu) for every conv, in forward order.
+CONV_SPECS = [
+    ("stem",   3, 3,  3, 16, 1, True),
+    ("b1c1",   3, 3, 16, 16, 1, True),
+    ("b1c2",   3, 3, 16, 16, 1, False),
+    ("b2c1",   3, 3, 16, 32, 2, True),
+    ("b2c2",   3, 3, 32, 32, 1, False),
+    ("b2proj", 1, 1, 16, 32, 2, False),
+    ("b3c1",   3, 3, 32, 64, 2, True),
+    ("b3c2",   3, 3, 64, 64, 1, False),
+    ("b3proj", 1, 1, 32, 64, 2, False),
+]
+
+#: convs whose output-channel masks the pruner controls (order = mask input order)
+MASKED_CONVS = [s[0] for s in CONV_SPECS]
+
+
+def param_specs():
+    """Flat, ordered (name, shape) list — the AOT calling convention."""
+    specs = []
+    for name, kh, kw, cin, cout, _, _ in CONV_SPECS:
+        specs.append((f"{name}.w", (kh, kw, cin, cout)))
+        specs.append((f"{name}.scale", (cout,)))
+        specs.append((f"{name}.shift", (cout,)))
+    specs.append(("fc.w", (64, NUM_CLASSES)))
+    specs.append(("fc.b", (NUM_CLASSES,)))
+    return specs
+
+
+def mask_specs():
+    return [(f"{name}.mask", (cout,)) for name, _, _, _, cout, _, _ in CONV_SPECS]
+
+
+def init_params(seed: int = 0):
+    """He-normal conv weights, unit scale, zero shift.  Returns dict name->array."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith(".w") and len(shape) == 4:
+            fan_in = shape[0] * shape[1] * shape[2]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(
+                2.0 / fan_in
+            )
+        elif name.endswith(".w"):
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(
+                1.0 / shape[0]
+            )
+        elif name.endswith(".scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+def _conv(params, masks, x, name, kh, kw, cin, cout, stride, relu):
+    pad = 1 if kh == 3 else 0
+    m = masks[f"{name}.mask"]
+    return k.conv2d_bn_act(
+        x,
+        params[f"{name}.w"],
+        params[f"{name}.scale"] * m,
+        params[f"{name}.shift"] * m,
+        stride=stride,
+        padding=pad,
+        relu=relu,
+    )
+
+
+def forward(params, masks, x):
+    """Masked ResNet-8 forward.  x: (B, 32, 32, 3) float32 -> (B, 10) logits."""
+    spec = {s[0]: s for s in CONV_SPECS}
+
+    def c(name, inp):
+        _, kh, kw, cin, cout, stride, relu = spec[name]
+        return _conv(params, masks, inp, name, kh, kw, cin, cout, stride, relu)
+
+    h = c("stem", x)
+    # stage 1: identity residual
+    h = jnp.maximum(c("b1c2", c("b1c1", h)) + h, 0.0)
+    # stage 2: projection residual (stride 2)
+    h = jnp.maximum(c("b2c2", c("b2c1", h)) + c("b2proj", h), 0.0)
+    # stage 3: projection residual (stride 2)
+    h = jnp.maximum(c("b3c2", c("b3c1", h)) + c("b3proj", h), 0.0)
+    h = k.avgpool_global(h)  # (B, 64)
+    return h @ params["fc.w"] + params["fc.b"]
+
+
+def loss_fn(params, masks, x, y):
+    logits = forward(params, masks, x)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return nll
+
+
+MOMENTUM = 0.9
+GRAD_CLIP = 5.0  # global-norm clip keeps long Rust-driven runs stable
+
+
+def train_step(params, mom, masks, x, y, lr):
+    """One SGD+momentum step with global-norm gradient clipping.
+
+    Returns (params', mom', loss)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, masks, x, y)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()) + 1e-12)
+    scale = jnp.minimum(1.0, GRAD_CLIP / gnorm)
+    new_params, new_mom = {}, {}
+    for name in params:
+        v = MOMENTUM * mom[name] + grads[name] * scale
+        new_mom[name] = v
+        new_params[name] = params[name] - lr * v
+    return new_params, new_mom, loss
+
+
+def eval_batch(params, masks, x, y):
+    """Returns (#correct as f32, mean loss) over the batch."""
+    logits = forward(params, masks, x)
+    pred = jnp.argmax(logits, axis=1)
+    correct = jnp.sum((pred == y).astype(jnp.float32))
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return correct, nll
+
+
+def predict(params, masks, x):
+    return forward(params, masks, x)
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument wrappers: the AOT boundary.  Rust passes arrays positionally
+# in the order given by param_specs() / mask_specs(); these wrappers
+# reassemble the dicts.
+# ---------------------------------------------------------------------------
+
+def _pack(names, flat):
+    return dict(zip(names, flat))
+
+
+def flat_train_step(*args):
+    pnames = [n for n, _ in param_specs()]
+    mnames = [n for n, _ in mask_specs()]
+    np_, nm = len(pnames), len(mnames)
+    params = _pack(pnames, args[:np_])
+    mom = _pack(pnames, args[np_ : 2 * np_])
+    masks = _pack(mnames, args[2 * np_ : 2 * np_ + nm])
+    x, y, lr = args[2 * np_ + nm :]
+    new_params, new_mom, loss = train_step(params, mom, masks, x, y, lr)
+    out = [new_params[n] for n in pnames] + [new_mom[n] for n in pnames] + [loss]
+    return tuple(out)
+
+
+def flat_eval_batch(*args):
+    pnames = [n for n, _ in param_specs()]
+    mnames = [n for n, _ in mask_specs()]
+    np_, nm = len(pnames), len(mnames)
+    params = _pack(pnames, args[:np_])
+    masks = _pack(mnames, args[np_ : np_ + nm])
+    x, y = args[np_ + nm :]
+    return eval_batch(params, masks, x, y)
+
+
+def flat_predict(*args):
+    pnames = [n for n, _ in param_specs()]
+    mnames = [n for n, _ in mask_specs()]
+    np_, nm = len(pnames), len(mnames)
+    params = _pack(pnames, args[:np_])
+    masks = _pack(mnames, args[np_ : np_ + nm])
+    (x,) = args[np_ + nm :]
+    return (predict(params, masks, x),)

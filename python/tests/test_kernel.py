@@ -1,0 +1,134 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the CORE signal)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as k
+from compile.kernels import ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("m,kk,n,bm,bn", [
+    (128, 64, 32, 64, 16),
+    (128, 27, 16, 128, 16),
+    (64, 16, 16, 32, 8),
+    (256, 9, 64, 128, 16),
+    (32, 144, 32, 16, 16),
+])
+@pytest.mark.parametrize("relu", [True, False])
+def test_matmul_scale_shift_matches_ref(m, kk, n, bm, bn, relu):
+    rng = np.random.default_rng(m + kk + n)
+    x, w = _rand(rng, m, kk), _rand(rng, kk, n)
+    s, b = _rand(rng, n), _rand(rng, n)
+    out = k.matmul_scale_shift(x, w, s, b, relu, bm, bn)
+    want = ref.matmul_scale_shift_ref(x, w, s, b, relu=relu)
+    np.testing.assert_allclose(out, want, rtol=2e-3, atol=2e-3)
+
+
+def test_matmul_pallas_pads_non_aligned():
+    rng = np.random.default_rng(7)
+    a, b = _rand(rng, 100, 30), _rand(rng, 30, 20)
+    out = k.matmul_pallas(a, b, block_m=64, block_n=16)
+    np.testing.assert_allclose(out, a @ b, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("stride,pad,kh", [(1, 1, 3), (2, 1, 3), (1, 0, 1), (2, 0, 1)])
+def test_conv2d_bn_act_matches_lax_conv(stride, pad, kh):
+    rng = np.random.default_rng(stride * 10 + kh)
+    x = _rand(rng, 2, 16, 16, 8)
+    w = _rand(rng, kh, kh, 8, 16)
+    s, b = _rand(rng, 16), _rand(rng, 16)
+    out = k.conv2d_bn_act(x, w, s, b, stride=stride, padding=pad)
+    want = ref.conv2d_bn_act_ref(x, w, s, b, stride=stride, padding=pad)
+    np.testing.assert_allclose(out, want, rtol=2e-3, atol=2e-3)
+
+
+def test_conv2d_no_relu():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 1, 8, 8, 4)
+    w = _rand(rng, 3, 3, 4, 16)
+    s, b = _rand(rng, 16), _rand(rng, 16)
+    out = k.conv2d_bn_act(x, w, s, b, relu=False)
+    want = ref.conv2d_bn_act_ref(x, w, s, b, relu=False)
+    assert (np.asarray(out) < 0).any(), "no-relu output should have negatives"
+    np.testing.assert_allclose(out, want, rtol=2e-3, atol=2e-3)
+
+
+def test_custom_vjp_matches_ref_grads():
+    rng = np.random.default_rng(11)
+    x, w = _rand(rng, 64, 32), _rand(rng, 32, 16)
+    s, b = _rand(rng, 16), _rand(rng, 16)
+
+    def f_pal(x, w, s, b):
+        return jnp.sum(k.matmul_scale_shift(x, w, s, b, True, 32, 16) ** 2)
+
+    def f_ref(x, w, s, b):
+        return jnp.sum(ref.matmul_scale_shift_ref(x, w, s, b) ** 2)
+
+    got = jax.grad(f_pal, argnums=(0, 1, 2, 3))(x, w, s, b)
+    want = jax.grad(f_ref, argnums=(0, 1, 2, 3))(x, w, s, b)
+    for g1, g2 in zip(got, want):
+        np.testing.assert_allclose(g1, g2, rtol=5e-3, atol=5e-3)
+
+
+def test_im2col_shapes():
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 2, 8, 8, 3)
+    cols, (n, oh, ow) = k.im2col(x, 3, 3, 1, 1)
+    assert cols.shape == (2 * 8 * 8, 27) and (n, oh, ow) == (2, 8, 8)
+    cols, (n, oh, ow) = k.im2col(x, 3, 3, 2, 1)
+    assert cols.shape == (2 * 4 * 4, 27) and (n, oh, ow) == (2, 4, 4)
+
+
+def test_pick_block():
+    assert k._pick_block(512, 128) == 128
+    assert k._pick_block(48, 128) == 16
+    assert k._pick_block(10, 16) == 2
+    assert k._pick_block(7, 16) == 1
+
+
+# -- hypothesis sweep over shapes/blocks: the pruner explores many channel
+#    counts; the kernel must agree with the oracle on all of them. ----------
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([16, 32, 64, 128]),
+    kk=st.integers(1, 96),
+    n=st.sampled_from([8, 16, 32, 48, 64]),
+    bm=st.sampled_from([8, 16, 32, 64]),
+    bn=st.sampled_from([8, 16]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis(m, kk, n, bm, bn, relu, seed):
+    if m % bm or n % bn:
+        bm, bn = k._pick_block(m, bm), k._pick_block(n, bn)
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, kk), _rand(rng, kk, n)
+    s, b = _rand(rng, n), _rand(rng, n)
+    out = k.matmul_scale_shift(x, w, s, b, relu, bm, bn)
+    want = ref.matmul_scale_shift_ref(x, w, s, b, relu=relu)
+    np.testing.assert_allclose(out, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    hw=st.sampled_from([4, 8, 12]),
+    cin=st.sampled_from([3, 4, 8]),
+    cout=st.sampled_from([8, 16, 32]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_hypothesis(hw, cin, cout, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 1, hw, hw, cin)
+    w = _rand(rng, 3, 3, cin, cout)
+    s, b = _rand(rng, cout), _rand(rng, cout)
+    out = k.conv2d_bn_act(x, w, s, b, stride=stride, padding=1)
+    want = ref.conv2d_bn_act_ref(x, w, s, b, stride=stride, padding=1)
+    np.testing.assert_allclose(out, want, rtol=2e-3, atol=2e-3)

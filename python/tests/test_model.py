@@ -1,0 +1,108 @@
+"""L2 model invariants: shapes, masking semantics, training signal."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = model.init_params(0)
+    masks = {n: jnp.ones(s, jnp.float32) for n, s in model.mask_specs()}
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 32, 32, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=(8,)).astype(np.int32))
+    return params, masks, x, y
+
+
+def test_forward_shape(setup):
+    params, masks, x, _ = setup
+    logits = model.forward(params, masks, x)
+    assert logits.shape == (8, model.NUM_CLASSES)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_param_specs_cover_all_convs():
+    names = {n for n, _ in model.param_specs()}
+    for cname, *_ in model.CONV_SPECS:
+        assert {f"{cname}.w", f"{cname}.scale", f"{cname}.shift"} <= names
+    assert "fc.w" in names and "fc.b" in names
+
+
+def test_masking_zeroes_channels(setup):
+    """A masked-out stem channel must be exactly zero after the epilogue."""
+    params, masks, x, _ = setup
+    m = dict(masks)
+    mm = np.ones(16, np.float32); mm[3] = 0.0; mm[7] = 0.0
+    m["stem.mask"] = jnp.asarray(mm)
+    spec = {s[0]: s for s in model.CONV_SPECS}
+    _, kh, kw, cin, cout, stride, relu = spec["stem"]
+    h = model._conv(params, m, x, "stem", kh, kw, cin, cout, stride, relu)
+    h = np.asarray(h)
+    assert np.all(h[..., 3] == 0.0) and np.all(h[..., 7] == 0.0)
+    assert np.any(h[..., 0] != 0.0)
+
+
+def test_full_mask_equals_unmasked_forward(setup):
+    params, masks, x, _ = setup
+    logits1 = model.forward(params, masks, x)
+    logits2 = model.forward(params, {k: v * 1.0 for k, v in masks.items()}, x)
+    np.testing.assert_allclose(logits1, logits2, rtol=1e-6)
+
+
+def test_train_step_reduces_loss_on_fixed_batch(setup):
+    params, masks, x, y = setup
+    mom = {n: jnp.zeros_like(v) for n, v in params.items()}
+    lr = jnp.float32(0.05)
+    losses = []
+    p, m = params, mom
+    for _ in range(5):
+        p, m, loss = model.train_step(p, m, masks, x, y, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"loss did not decrease: {losses}"
+
+
+def test_train_step_respects_masks(setup):
+    """A masked channel stays exactly zero after a training step."""
+    params, masks, x, y = setup
+    m = dict(masks)
+    mm = np.ones(16, np.float32); mm[0] = 0.0
+    m["b1c1.mask"] = jnp.asarray(mm)
+    mom = {n: jnp.zeros_like(v) for n, v in params.items()}
+    p2, _, _ = model.train_step(params, mom, m, x, y, jnp.float32(0.1))
+    h = model._conv(p2, m, model._conv(p2, m, x, "stem", 3, 3, 3, 16, 1, True),
+                    "b1c1", 3, 3, 16, 16, 1, True)
+    assert np.all(np.asarray(h)[..., 0] == 0.0)
+
+
+def test_eval_batch(setup):
+    params, masks, x, y = setup
+    correct, loss = model.eval_batch(params, masks, x, y)
+    assert 0.0 <= float(correct) <= x.shape[0]
+    assert np.isfinite(float(loss))
+
+
+def test_flat_wrappers_roundtrip(setup):
+    params, masks, x, y = setup
+    pnames = [n for n, _ in model.param_specs()]
+    mnames = [n for n, _ in model.mask_specs()]
+    mom = {n: jnp.zeros_like(params[n]) for n in pnames}
+    args = ([params[n] for n in pnames] + [mom[n] for n in pnames]
+            + [masks[n] for n in mnames] + [x, y, jnp.float32(0.1)])
+    out = model.flat_train_step(*args)
+    assert len(out) == 2 * len(pnames) + 1
+    d_params, d_mom, d_loss = model.train_step(params, mom, masks, x, y, jnp.float32(0.1))
+    np.testing.assert_allclose(out[-1], d_loss, rtol=1e-6)
+    np.testing.assert_allclose(out[0], d_params[pnames[0]], rtol=1e-6)
+
+    eargs = [params[n] for n in pnames] + [masks[n] for n in mnames] + [x, y]
+    correct, loss = model.flat_eval_batch(*eargs)
+    c2, l2 = model.eval_batch(params, masks, x, y)
+    np.testing.assert_allclose(correct, c2)
+
+    pargs = [params[n] for n in pnames] + [masks[n] for n in mnames] + [x[:1]]
+    (logits,) = model.flat_predict(*pargs)
+    np.testing.assert_allclose(logits, model.forward(params, masks, x[:1]), rtol=1e-6)

@@ -1,0 +1,43 @@
+"""TPU resource-model sanity: VMEM accounting and MXU occupancy."""
+
+from compile.kernels import vmem
+
+
+def test_small_tile_fits_vmem():
+    e = vmem.estimate(128, 1152, 128)
+    assert e.vmem_ok
+    # 2*(128*1152 + 1152*128 + 2*128)*4 + 128*128*4 bytes
+    expected = 2 * (128 * 1152 + 1152 * 128 + 2 * 128) * 4 + 128 * 128 * 4
+    assert e.vmem_bytes == expected
+
+
+def test_huge_tile_overflows_vmem():
+    e = vmem.estimate(4096, 4096, 512)
+    assert not e.vmem_ok
+
+
+def test_mxu_full_alignment_is_1():
+    e = vmem.estimate(128, 128, 128)
+    assert abs(e.mxu_utilization - 1.0) < 1e-9
+    e = vmem.estimate(256, 384, 128)
+    assert abs(e.mxu_utilization - 1.0) < 1e-9
+
+
+def test_mxu_misaligned_fraction():
+    # 64 of 128 lanes busy in one pass on each misaligned dim
+    e = vmem.estimate(64, 128, 128)
+    assert abs(e.mxu_utilization - 0.5) < 1e-9
+    e = vmem.estimate(192, 128, 128)  # 192 = 1.5 passes worth in 2 passes
+    assert abs(e.mxu_utilization - 0.75) < 1e-9
+
+
+def test_best_blocks_prefers_aligned():
+    e = vmem.best_tpu_blocks(32 * 32 * 32, 27, 16)
+    assert e.vmem_ok
+    assert e.block_m % 128 == 0 or e.block_m == 32 * 32 * 32
+
+
+def test_model_report_runs():
+    lines = vmem.report_model_convs()
+    assert len(lines) == 9
+    assert all("MXU util" in l for l in lines)

@@ -1,0 +1,30 @@
+//! Supplementary ablation regenerator: α/β grid (the paper's supplementary
+//! "finding reasonable α and β"). Run: cargo bench --bench ablation_alpha_beta
+
+use cprune::exp::{ablation_alpha_beta, Scale};
+use cprune::util::bench::print_table;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let cells = ablation_alpha_beta::run(Scale::Full, 42);
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                format!("{:.3}", c.alpha),
+                format!("{:.3}", c.beta),
+                format!("{:.2}x", c.fps_rate),
+                format!("{:.2}%", c.final_top1 * 100.0),
+                format!("{}", c.iterations),
+                format!("{}", c.candidates),
+            ]
+        })
+        .collect();
+    print_table(
+        "Supplementary — alpha/beta sweep (ResNet-18, Kryo 585, CIFAR-10)",
+        &["alpha", "beta", "FPS rate", "top-1", "iterations", "candidates"],
+        &rows,
+    );
+    println!("BENCH ablation_alpha_beta_total_seconds {:.1}", t0.elapsed().as_secs_f64());
+}

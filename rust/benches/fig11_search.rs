@@ -1,0 +1,34 @@
+//! Fig. 11 regenerator: selective (CPrune) vs exhaustive (NetAdapt-style)
+//! search cost. Run: cargo bench --bench fig11_search
+
+use cprune::exp::{fig11, Scale};
+use cprune::util::bench::print_table;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let r = fig11::run(Scale::Full, 42);
+    print_table(
+        "Fig.11 — selective vs exhaustive search (ResNet-18, Kryo 585)",
+        &["search", "FPS", "candidates", "main-step seconds"],
+        &[
+            vec![
+                "CPrune (selective)".into(),
+                format!("{:.1}", r.cprune_fps),
+                format!("{}", r.cprune_candidates),
+                format!("{:.1}", r.cprune_seconds),
+            ],
+            vec![
+                "Exhaustive (NetAdapt-style)".into(),
+                format!("{:.1}", r.exhaustive_fps),
+                format!("{}", r.exhaustive_candidates),
+                format!("{:.1}", r.exhaustive_seconds),
+            ],
+        ],
+    );
+    println!(
+        "\nselective cost = {:.0}% of exhaustive (paper: ~10%)",
+        100.0 * r.cprune_candidates as f64 / r.exhaustive_candidates.max(1) as f64
+    );
+    println!("BENCH fig11_total_seconds {:.1}", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,31 @@
+//! Fig. 6 regenerator: FPS increase rate + short-term accuracy per CPrune
+//! iteration (ResNet-18/ImageNet-scale, Kryo 385).
+//! Run: cargo bench --bench fig6_iterations
+
+use cprune::exp::{fig6, Scale};
+use cprune::util::bench::print_table;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let r = fig6::run(Scale::Full, 42);
+    let rows: Vec<Vec<String>> = r
+        .series
+        .iter()
+        .map(|(it, rate, acc)| {
+            vec![format!("{it}"), format!("{rate:.2}x"), format!("{:.2}%", acc * 100.0)]
+        })
+        .collect();
+    print_table(
+        "Fig.6 — CPrune iterations (ResNet-18, Kryo 385): FPS rate & short-term top-1",
+        &["iteration", "FPS increase rate", "short-term top-1"],
+        &rows,
+    );
+    println!(
+        "\nfinal: {:.2}x FPS rate (paper: 1.96x), final top-1 {:.2}% / top-5 {:.2}% (paper: 88.34% top-5)",
+        r.result.fps_increase_rate,
+        r.result.final_top1 * 100.0,
+        r.result.final_top5 * 100.0
+    );
+    println!("BENCH fig6_total_seconds {:.1}", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,33 @@
+//! Fig. 7 regenerator: CPrune+TVM vs TVM vs TFLite-like library FPS across
+//! models and devices. Run: cargo bench --bench fig7_frameworks
+
+use cprune::exp::{fig7, Scale};
+use cprune::util::bench::print_table;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = fig7::run(Scale::Full, 42);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.to_string(),
+                r.device.to_string(),
+                format!("{:.1}", r.fps_tflite),
+                format!("{:.1}", r.fps_tvm),
+                format!("{:.1}", r.fps_cprune),
+                format!("{:.2}x", r.fps_cprune / r.fps_tvm),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig.7 — FPS by framework (library default vs TVM auto-tune vs CPrune)",
+        &["model", "device", "TFLite-like", "TVM", "CPrune", "CPrune/TVM"],
+        &table,
+    );
+    for r in &rows {
+        assert!(r.fps_cprune > r.fps_tflite, "CPrune must beat the library path");
+    }
+    println!("BENCH fig7_total_seconds {:.1}", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,28 @@
+//! Fig. 8 regenerator: CPrune model executed on its target processor vs
+//! other processors. Run: cargo bench --bench fig8_cross_device
+
+use cprune::exp::{fig8, Scale};
+use cprune::util::bench::print_table;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = fig8::run(Scale::Full, 42);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.tuned_for.to_string(),
+                r.run_on.to_string(),
+                format!("{:.1}", r.fps),
+                format!("{:.2}", r.relative_to_native),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig.8 — MobileNetV2 CPrune model: tuned-for vs run-on (relative to native)",
+        &["tuned for", "run on", "FPS", "vs native"],
+        &table,
+    );
+    println!("BENCH fig8_total_seconds {:.1}", t0.elapsed().as_secs_f64());
+}

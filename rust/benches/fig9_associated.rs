@@ -1,0 +1,31 @@
+//! Fig. 9 regenerator: associated-subgraphs vs single-subgraph pruning —
+//! main-step time + FPS + accuracy. Run: cargo bench --bench fig9_associated
+
+use cprune::exp::{fig9_10, Scale};
+use cprune::util::bench::print_table;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = fig9_10::run(Scale::Full, 42);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .filter(|r| !r.variant.contains("tuning"))
+        .map(|r| {
+            vec![
+                r.variant.to_string(),
+                format!("{:.1}", r.fps),
+                format!("{:.2}x", r.fps_increase_rate),
+                format!("{:.2}%", r.top1 * 100.0),
+                format!("{:.1}s", r.main_step_seconds),
+                format!("{}", r.candidates_tried),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig.9 — associated vs single-subgraph pruning (ResNet-18, Kryo 585, CIFAR-10)",
+        &["variant", "FPS", "rate", "top-1", "main-step time", "candidates"],
+        &table,
+    );
+    println!("BENCH fig9_total_seconds {:.1}", t0.elapsed().as_secs_f64());
+}

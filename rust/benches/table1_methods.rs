@@ -1,0 +1,33 @@
+//! Table 1 regenerator: method comparison (Original/PQF/FPGM/NetAdapt/
+//! AMC/CPrune) per model x device. Run: cargo bench --bench table1_methods
+
+use cprune::exp::{table1, Scale};
+use cprune::util::bench::print_table;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    for (kind, spec) in table1::paper_cells() {
+        let block = table1::run_cell(kind, spec, Scale::Full, 42);
+        let rows: Vec<Vec<String>> = block
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.method.clone(),
+                    format!("{:.2} ({:.2}x)", r.fps, r.fps_increase_rate),
+                    format!("{:.0}M", r.macs as f64 / 1e6),
+                    format!("{:.2}M", r.params as f64 / 1e6),
+                    format!("{:.2}%", r.top1 * 100.0),
+                    format!("{:.2}%", r.top5 * 100.0),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Table 1 — {} on {}", block.model, block.device),
+            &["method", "FPS (rate)", "MACs", "params", "top-1", "top-5"],
+            &rows,
+        );
+    }
+    println!("BENCH table1_total_seconds {:.1}", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,31 @@
+//! Table 2 regenerator: ResNet-18/CIFAR-10 on Kryo 280 & 585 with CPrune
+//! ablations. Run: cargo bench --bench table2_cifar
+
+use cprune::exp::{table2, Scale};
+use cprune::util::bench::print_table;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    for block in table2::run(Scale::Full, 42) {
+        let rows: Vec<Vec<String>> = block
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.method.clone(),
+                    format!("{:.2} ({:.2}x)", r.fps, r.fps_increase_rate),
+                    format!("{:.0}M", r.macs as f64 / 1e6),
+                    format!("{:.2}M", r.params as f64 / 1e6),
+                    format!("{:.2}%", r.top1 * 100.0),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Table 2 — ResNet-18/CIFAR-10 on {}", block.device),
+            &["method", "FPS (rate)", "MACs", "params", "top-1"],
+            &rows,
+        );
+    }
+    println!("BENCH table2_total_seconds {:.1}", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,55 @@
+//! L3 microbenchmarks: tuner throughput, simulator latency-model speed,
+//! partition + task extraction, tuned compile on the small model.
+//! These are the §Perf hot paths. Run: cargo bench --bench tuner_micro
+
+use cprune::device::{DeviceSpec, Simulator};
+use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::graph::ops::OpKind;
+use cprune::relay::partition::extract_tasks;
+use cprune::tir::{Program, Workload};
+use cprune::tuner::{tune_task, TuneOptions, TuningSession};
+use cprune::util::bench::{bench_auto, print_table};
+use cprune::util::rng::Rng;
+use std::collections::HashMap;
+
+fn main() {
+    let w = Workload::from_conv(
+        &OpKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: 256, stride: 1, padding: 1, groups: 1 },
+        [1, 28, 28, 256],
+        vec!["bn", "relu"],
+    );
+    let sim = Simulator::new(DeviceSpec::kryo385());
+
+    let mut rng = Rng::new(0);
+    let progs: Vec<Program> = (0..256).map(|_| Program::sample(&w, &mut rng)).collect();
+    let mut i = 0;
+    let r = bench_auto("sim_latency_single_call", 400, || {
+        i = (i + 1) % progs.len();
+        std::hint::black_box(sim.latency(&w, &progs[i]));
+    });
+    r.report();
+    println!("  -> {:.0} latency-model evaluations / second", 1e9 / r.median_ns);
+
+    let mut seed = 0u64;
+    let r = bench_auto("tune_task_quick", 3000, || {
+        seed += 1;
+        let mut rng = Rng::new(seed);
+        std::hint::black_box(tune_task(&w, &sim, &TuneOptions::quick(), &mut rng, None));
+    });
+    r.report();
+
+    let m = Model::build(ModelKind::ResNet18ImageNet, 0);
+    let r = bench_auto("partition_resnet18", 2000, || {
+        std::hint::black_box(extract_tasks(&m.graph));
+    });
+    r.report();
+
+    let small = Model::build(ModelKind::ResNet8Cifar, 0);
+    let r = bench_auto("compile_tuned_resnet8_fresh_session", 3000, || {
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 7);
+        std::hint::black_box(cprune::compiler::compile_tuned(&small.graph, &session, &HashMap::new()));
+    });
+    r.report();
+
+    print_table("tuner_micro complete", &["metric"], &[vec!["see BENCH lines".into()]]);
+}

@@ -1,0 +1,84 @@
+//! Accuracy oracles: what "short-term train and measure a_s" (Alg. 1
+//! line 11) and "final long-term training" (line 17) return.
+//!
+//! Two implementations:
+//! * [`proxy::ProxyOracle`] — analytic model for the ImageNet/CIFAR-scale
+//!   workloads (no ImageNet in this environment; DESIGN.md §2), calibrated
+//!   so the paper's (FLOPs-reduction → accuracy-drop) pairs hold;
+//! * `train::TrainedOracle` (in `crate::train`) — *real* training of the
+//!   CIFAR-scale masked CNN through the AOT-compiled PJRT train step,
+//!   used by the end-to-end example.
+
+pub mod proxy;
+pub mod sensitivity;
+
+pub use proxy::ProxyOracle;
+
+use crate::graph::model_zoo::ModelKind;
+
+/// Which filter-selection criterion produced the prune sets (affects
+/// accuracy quality; §3.5 uses ℓ1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Criterion {
+    /// Smallest ℓ1-norm filters first (CPrune, NetAdapt, AMC, magnitude).
+    L1Norm,
+    /// Distance-to-geometric-median (FPGM).
+    GeomMedian,
+    /// Random selection (Fig. 1's random pruned variants).
+    Random,
+}
+
+/// Training budget of an accuracy query.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainPhase {
+    /// Short-term fine-tune (5 epochs CIFAR / 1 epoch ImageNet).
+    Short,
+    /// Full training at the end of the search (100 / 20 epochs).
+    Final,
+}
+
+/// Per-layer pruning description handed to an oracle.
+#[derive(Clone, Debug)]
+pub struct LayerPrune {
+    /// Conv node id in the *original* graph.
+    pub conv: usize,
+    pub original_channels: usize,
+    pub remaining_channels: usize,
+    /// Relative depth of the layer in (0, 1]: position / #convs.
+    pub depth: f64,
+}
+
+/// Whole-model pruning summary.
+#[derive(Clone, Debug)]
+pub struct PruneSummary {
+    pub model: ModelKind,
+    pub layers: Vec<LayerPrune>,
+    pub criterion: Criterion,
+}
+
+impl PruneSummary {
+    pub fn unpruned(model: ModelKind) -> PruneSummary {
+        PruneSummary { model, layers: Vec::new(), criterion: Criterion::L1Norm }
+    }
+
+    /// True when no layer lost any channel.
+    pub fn is_identity(&self) -> bool {
+        self.layers
+            .iter()
+            .all(|l| l.remaining_channels == l.original_channels)
+    }
+}
+
+/// The oracle interface Algorithm 1 calls.
+pub trait AccuracyOracle {
+    /// Top-1 accuracy (fraction) after the given training phase.
+    fn top1(&mut self, summary: &PruneSummary, phase: TrainPhase) -> f64;
+
+    /// Top-5 accuracy; default mapping mirrors the paper's tables where
+    /// top-5 drops ≈ 0.6 × top-1 drops.
+    fn top5(&mut self, summary: &PruneSummary, phase: TrainPhase) -> f64 {
+        let (b1, b5) = summary.model.base_accuracy();
+        let drop1 = (b1 - self.top1(summary, phase)).max(0.0);
+        (b5 - 0.6 * drop1).clamp(0.0, 1.0)
+    }
+}

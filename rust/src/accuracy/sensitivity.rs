@@ -1,0 +1,122 @@
+//! Per-layer pruning-sensitivity scan (NetAdapt-style analysis).
+//!
+//! For each prunable conv, sweep pruned fractions and query the oracle's
+//! short-term accuracy — producing the sensitivity curves hardware-aware
+//! pruners consult and the paper's supplementary α/β discussion relies on.
+//! Also exposes `latency_sensitivity`: the FPS side of the same sweep,
+//! which is where CPrune's compiler-awareness shows up (accuracy-equal
+//! layers can have wildly different latency payoffs).
+
+use super::{AccuracyOracle, Criterion, TrainPhase};
+use crate::compiler;
+use crate::graph::model_zoo::Model;
+use crate::graph::prune::{apply, PruneState};
+use crate::pruner::summarize;
+use crate::tuner::TuningSession;
+use std::collections::HashMap;
+
+/// One (layer, fraction) sample of the scan.
+#[derive(Clone, Debug)]
+pub struct SensitivityPoint {
+    pub conv: usize,
+    pub conv_name: String,
+    pub pruned_fraction: f64,
+    pub short_top1: f64,
+    /// Latency of the whole model with only this layer pruned (seconds).
+    pub latency: f64,
+}
+
+/// Sweep `fractions` per prunable layer; returns all sample points.
+pub fn scan(
+    model: &Model,
+    session: &TuningSession,
+    oracle: &mut dyn AccuracyOracle,
+    fractions: &[f64],
+) -> Vec<SensitivityPoint> {
+    let mut out = Vec::new();
+    for &conv in &model.prunable {
+        let full = PruneState::full(model);
+        let total = full.remaining(conv);
+        for &frac in fractions {
+            let mut st = full.clone();
+            let k = ((total as f64 * frac).round() as usize).min(total.saturating_sub(2));
+            st.shrink(conv, k);
+            let acc = oracle.top1(
+                &summarize(model, &st, Criterion::L1Norm),
+                TrainPhase::Short,
+            );
+            let graph = apply(&model.graph, &st.cout).expect("valid pruned graph");
+            let lat = compiler::compile_tuned(&graph, session, &HashMap::new()).latency();
+            out.push(SensitivityPoint {
+                conv,
+                conv_name: model.graph.node(conv).name.clone(),
+                pruned_fraction: frac,
+                short_top1: acc,
+                latency: lat,
+            });
+        }
+    }
+    out
+}
+
+/// Rank layers by "efficiency frontier": latency saved per accuracy lost
+/// at the given fraction. High values = good pruning targets — compare
+/// with CPrune's impact ordering, which needs no per-layer sweep at all.
+pub fn frontier(
+    points: &[SensitivityPoint],
+    base_latency: f64,
+    base_accuracy: f64,
+    fraction: f64,
+) -> Vec<(String, f64)> {
+    let mut rows: Vec<(String, f64)> = points
+        .iter()
+        .filter(|p| (p.pruned_fraction - fraction).abs() < 1e-9)
+        .map(|p| {
+            let saved = (base_latency - p.latency).max(0.0);
+            let lost = (base_accuracy - p.short_top1).max(1e-6);
+            (p.conv_name.clone(), saved / lost)
+        })
+        .collect();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::ProxyOracle;
+    use crate::device::{DeviceSpec, Simulator};
+    use crate::graph::model_zoo::ModelKind;
+    use crate::tuner::TuneOptions;
+
+    #[test]
+    fn scan_produces_monotone_layer_curves() {
+        let model = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 1);
+        let mut oracle = ProxyOracle::new();
+        let pts = scan(&model, &session, &mut oracle, &[0.25, 0.5]);
+        assert_eq!(pts.len(), model.prunable.len() * 2);
+        // within a layer, deeper pruning → lower accuracy & lower latency
+        for &conv in &model.prunable {
+            let l: Vec<&SensitivityPoint> = pts.iter().filter(|p| p.conv == conv).collect();
+            assert!(l[0].short_top1 >= l[1].short_top1);
+        }
+    }
+
+    #[test]
+    fn frontier_ranks_all_layers() {
+        let model = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 1);
+        let mut oracle = ProxyOracle::new();
+        let base = compiler::compile_tuned(&model.graph, &session, &HashMap::new()).latency();
+        let pts = scan(&model, &session, &mut oracle, &[0.5]);
+        let f = frontier(&pts, base, model.kind.base_accuracy().0, 0.5);
+        assert_eq!(f.len(), model.prunable.len());
+        // sorted descending
+        for w in f.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+}

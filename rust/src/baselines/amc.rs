@@ -1,0 +1,116 @@
+//! AMC — AutoML for Model Compression (He et al., ECCV 2018), simplified.
+//!
+//! The original trains a DDPG agent to emit per-layer sparsities under a
+//! FLOPs budget. Training an RL agent adds nothing to the comparison our
+//! substrate isolates (search policy over the same latency/accuracy
+//! signals), so we use the deterministic greedy equivalent: walk layers in
+//! order, pick each layer's sparsity from a grid to maximize the same
+//! reward AMC optimizes (accuracy with a log-FLOPs bonus) subject to the
+//! remaining budget. Documented as a substitution in DESIGN.md §2.
+
+use super::{evaluate, Outcome};
+use crate::accuracy::{AccuracyOracle, Criterion, TrainPhase};
+use crate::graph::model_zoo::Model;
+use crate::graph::prune::{apply, PruneState};
+use crate::graph::stats;
+use crate::graph::weights::Weights;
+use crate::tuner::TuningSession;
+
+/// AMC configuration.
+#[derive(Clone, Debug)]
+pub struct AmcConfig {
+    /// Target fraction of original MACs to keep (e.g. 0.8).
+    pub macs_budget: f64,
+    /// Sparsity grid searched per layer.
+    pub grid: Vec<f64>,
+}
+
+impl Default for AmcConfig {
+    fn default() -> Self {
+        AmcConfig {
+            macs_budget: 0.8,
+            grid: vec![0.0, 0.1, 0.2, 0.3, 0.4, 0.5],
+        }
+    }
+}
+
+pub fn amc(
+    model: &Model,
+    session: &TuningSession,
+    oracle: &mut dyn AccuracyOracle,
+    cfg: &AmcConfig,
+    baseline_latency: f64,
+) -> Outcome {
+    let (orig_flops, _) = stats::flops_params(&model.graph);
+    let target_flops = orig_flops as f64 * cfg.macs_budget;
+
+    let mut state = PruneState::full(model);
+    let mut weights = model.weights.clone();
+
+    for &conv in &model.prunable {
+        // Choose the sparsity that maximizes reward while heading toward
+        // the budget: reward = short_acc − λ·max(0, flops_excess_ratio).
+        let mut best: Option<(f64, PruneState, Weights)> = None;
+        for &sp in &cfg.grid {
+            let mut cand_state = state.clone();
+            let mut cand_weights = weights.clone();
+            let total = cand_state.remaining(conv);
+            let k = ((total as f64 * sp).round() as usize).min(total.saturating_sub(2));
+            if k > 0 {
+                let idx = Weights::lowest_k(&cand_weights.l1_norms(conv), k);
+                cand_weights.remove_filters(conv, &idx);
+                cand_state.shrink(conv, k);
+            }
+            let Ok(g) = apply(&model.graph, &cand_state.cout) else { continue };
+            let (flops, _) = stats::flops_params(&g);
+            let acc = oracle.top1(
+                &crate::pruner::summarize(model, &cand_state, Criterion::L1Norm),
+                TrainPhase::Short,
+            );
+            let excess = (flops as f64 / target_flops - 1.0).max(0.0);
+            let reward = acc - 2.0 * excess;
+            if best.as_ref().map(|(r, ..)| reward > *r).unwrap_or(true) {
+                best = Some((reward, cand_state, cand_weights));
+            }
+        }
+        if let Some((_, s, w)) = best {
+            state = s;
+            weights = w;
+        }
+    }
+
+    evaluate(
+        model,
+        &state,
+        session,
+        oracle,
+        Criterion::L1Norm,
+        "AMC+TVM",
+        baseline_latency,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::ProxyOracle;
+    use crate::baselines::original_row;
+    use crate::device::{DeviceSpec, Simulator};
+    use crate::graph::model_zoo::ModelKind;
+    use crate::tuner::TuneOptions;
+
+    #[test]
+    fn amc_approaches_flops_budget() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 3);
+        let mut oracle = ProxyOracle::new();
+        let (orig, base_lat) = original_row(&m, &session);
+        let cfg = AmcConfig { macs_budget: 0.75, ..Default::default() };
+        let out = amc(&m, &session, &mut oracle, &cfg, base_lat);
+        let kept = out.macs as f64 / orig.macs as f64;
+        assert!(kept < 1.0, "AMC pruned nothing");
+        assert!(kept > 0.4, "AMC over-pruned: kept {kept}");
+        assert!(out.fps >= orig.fps);
+    }
+}

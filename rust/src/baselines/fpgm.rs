@@ -1,0 +1,55 @@
+//! FPGM — Filter Pruning via Geometric Median (He et al., CVPR 2019).
+//!
+//! Prunes, per layer, the filters closest to the layer's geometric median
+//! (most redundant), at a uniform ratio. Model-only: no hardware feedback,
+//! which is exactly why the paper's Table 1 shows it trailing CPrune on
+//! FPS despite decent accuracy.
+
+use super::{evaluate, uniform_prune, Outcome};
+use crate::accuracy::{AccuracyOracle, Criterion};
+use crate::graph::model_zoo::Model;
+use crate::tuner::TuningSession;
+
+/// The ratio FPGM's paper uses for ResNets (40% of filters scored, ~30%
+/// pruned effective); we expose it as a parameter.
+pub fn fpgm_prune(
+    model: &Model,
+    ratio: f64,
+    session: &TuningSession,
+    oracle: &mut dyn AccuracyOracle,
+    baseline_latency: f64,
+) -> Outcome {
+    let state = uniform_prune(model, ratio, Criterion::GeomMedian, 0);
+    evaluate(
+        model,
+        &state,
+        session,
+        oracle,
+        Criterion::GeomMedian,
+        "FPGM+TVM",
+        baseline_latency,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::ProxyOracle;
+    use crate::baselines::{magnitude::magnitude_prune, original_row};
+    use crate::device::{DeviceSpec, Simulator};
+    use crate::graph::model_zoo::ModelKind;
+    use crate::tuner::TuneOptions;
+
+    #[test]
+    fn fpgm_beats_magnitude_on_accuracy_at_same_ratio() {
+        let m = Model::build(ModelKind::Vgg16Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 1);
+        let mut oracle = ProxyOracle::new();
+        let (_, base_lat) = original_row(&m, &session);
+        let f = fpgm_prune(&m, 0.3, &session, &mut oracle, base_lat);
+        let g = magnitude_prune(&m, 0.3, &session, &mut oracle, base_lat);
+        assert!(f.top1 >= g.top1, "fpgm {} < magnitude {}", f.top1, g.top1);
+        assert!(f.fps > 0.0 && f.macs > 0);
+    }
+}

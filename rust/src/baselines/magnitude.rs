@@ -1,0 +1,94 @@
+//! Uniform-ratio magnitude (ℓ1) pruning — and the random-pruning variant
+//! used to generate Fig. 1's twenty pruned VGG-16 models.
+
+use super::{evaluate, uniform_prune, Outcome};
+use crate::accuracy::{AccuracyOracle, Criterion};
+use crate::graph::model_zoo::Model;
+use crate::graph::prune::PruneState;
+use crate::tuner::TuningSession;
+use crate::util::rng::Rng;
+
+/// One-shot ℓ1 pruning at a fixed ratio, then final fine-tune.
+pub fn magnitude_prune(
+    model: &Model,
+    ratio: f64,
+    session: &TuningSession,
+    oracle: &mut dyn AccuracyOracle,
+    baseline_latency: f64,
+) -> Outcome {
+    let state = uniform_prune(model, ratio, Criterion::L1Norm, 0);
+    evaluate(
+        model,
+        &state,
+        session,
+        oracle,
+        Criterion::L1Norm,
+        &format!("Magnitude(l1)@{ratio:.0e}"),
+        baseline_latency,
+    )
+}
+
+/// A randomly pruned model variant (Fig. 1). The paper's 20 variants all
+/// sit in a narrow accuracy band (92.8–93.1 %), i.e. they compress by a
+/// *similar overall amount* but distribute the pruning differently across
+/// layers — which is exactly what decouples pre- and post-compilation
+/// speed (per-layer channel structure, not total FLOPs, decides how well
+/// each layer tunes). We reproduce that: mean pruned fraction ≈
+/// `max_ratio/2` per variant, with high per-layer variance.
+pub fn random_variant(model: &Model, max_ratio: f64, seed: u64) -> PruneState {
+    let mut rng = Rng::new(seed);
+    let mut state = PruneState::full(model);
+    let mut weights = model.weights.clone();
+    let mean_ratio = max_ratio / 2.0;
+    for &conv in &model.prunable {
+        let total = state.remaining(conv);
+        // lognormal spread around the common mean, clamped
+        let ratio = (mean_ratio * rng.lognormal(0.7) as f64).clamp(0.0, 0.8);
+        let k = ((total as f64 * ratio).round() as usize).min(total.saturating_sub(2));
+        if k == 0 {
+            continue;
+        }
+        let mut all: Vec<usize> = (0..total).collect();
+        rng.shuffle(&mut all);
+        let mut sel = all[..k].to_vec();
+        sel.sort_unstable();
+        weights.remove_filters(conv, &sel);
+        state.shrink(conv, k);
+    }
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::ProxyOracle;
+    use crate::baselines::original_row;
+    use crate::device::{DeviceSpec, Simulator};
+    use crate::graph::model_zoo::ModelKind;
+    use crate::tuner::TuneOptions;
+
+    #[test]
+    fn magnitude_prune_speeds_up_and_drops_accuracy() {
+        let m = Model::build(ModelKind::Vgg16Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 1);
+        let mut oracle = ProxyOracle::new();
+        let (orig, base_lat) = original_row(&m, &session);
+        let out = magnitude_prune(&m, 0.3, &session, &mut oracle, base_lat);
+        assert!(out.fps > orig.fps);
+        assert!(out.top1 < orig.top1);
+        assert!(out.macs < orig.macs);
+    }
+
+    #[test]
+    fn random_variants_differ_by_seed() {
+        let m = Model::build(ModelKind::Vgg16Cifar, 0);
+        let a = random_variant(&m, 0.5, 1);
+        let b = random_variant(&m, 0.5, 2);
+        assert_ne!(a, b);
+        // all channels at least 2
+        for (_, &c) in &a.cout {
+            assert!(c >= 2);
+        }
+    }
+}

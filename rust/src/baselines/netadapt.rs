@@ -1,0 +1,180 @@
+//! NetAdapt (Yang et al., ECCV 2018): platform-aware pruning by direct
+//! per-layer measurement — the paper's strongest hardware-aware baseline
+//! and the exhaustive-search reference of Fig. 11.
+//!
+//! Each iteration: for *every* prunable layer independently, find the
+//! smallest filter count whose measured latency meets the iteration's
+//! reduction budget; short-term fine-tune each candidate; keep the most
+//! accurate one. This measures #layers candidates per iteration — the
+//! cost CPrune's selective, impact-ordered search avoids (~90 % less,
+//! Fig. 11).
+//!
+//! Faithful to the paper's Alg. with two environment substitutions: the
+//! latency lookup is our device simulator via tuned compilation (NetAdapt
+//! uses lookup tables of measured layer latencies), and short-term
+//! accuracy is the shared oracle.
+
+use super::Outcome;
+use crate::accuracy::{AccuracyOracle, Criterion, TrainPhase};
+use crate::compiler;
+use crate::device::Simulator;
+use crate::graph::model_zoo::Model;
+use crate::graph::prune::{apply, PruneState};
+use crate::graph::stats;
+use crate::graph::weights::Weights;
+use crate::tuner::TuningSession;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// NetAdapt configuration.
+#[derive(Clone, Debug)]
+pub struct NetAdaptConfig {
+    /// Fraction of current latency to remove per iteration (the paper's
+    /// resource reduction schedule), e.g. 0.03.
+    pub step_ratio: f64,
+    /// Stop when latency ≤ this fraction of the original (budget).
+    pub target_latency_ratio: f64,
+    /// Accuracy floor for accepting a candidate (short-term).
+    pub min_short_accuracy: f64,
+    pub max_iterations: usize,
+}
+
+impl Default for NetAdaptConfig {
+    fn default() -> Self {
+        NetAdaptConfig {
+            step_ratio: 0.04,
+            target_latency_ratio: 0.6,
+            min_short_accuracy: 0.0,
+            max_iterations: 40,
+        }
+    }
+}
+
+/// Result, including the search-cost counters Fig. 11 plots.
+#[derive(Clone, Debug)]
+pub struct NetAdaptResult {
+    pub outcome: Outcome,
+    pub state: PruneState,
+    pub iterations: usize,
+    pub candidates_tried: usize,
+}
+
+pub fn netadapt(
+    model: &Model,
+    session: &TuningSession,
+    sim: &Simulator,
+    oracle: &mut dyn AccuracyOracle,
+    cfg: &NetAdaptConfig,
+) -> NetAdaptResult {
+    let t0 = Instant::now();
+    let base = compiler::compile_tuned(&model.graph, session, &HashMap::new());
+    let base_latency = base.latency();
+    let target = base_latency * cfg.target_latency_ratio;
+
+    let mut state = PruneState::full(model);
+    let mut weights = model.weights.clone();
+    let mut cur_latency = base_latency;
+    let mut candidates = 0usize;
+    let mut iterations = 0usize;
+
+    for _ in 0..cfg.max_iterations {
+        if cur_latency <= target {
+            break;
+        }
+        let budget = cur_latency * (1.0 - cfg.step_ratio);
+
+        // Exhaustive per-layer candidate generation.
+        let mut best: Option<(f64, PruneState, Weights, f64)> = None; // (acc, state, weights, lat)
+        for &conv in &model.prunable {
+            let remaining = state.remaining(conv);
+            if remaining <= 2 {
+                continue;
+            }
+            // Grow the pruned count until the measured latency meets the
+            // budget (the paper walks its layer lookup table the same way).
+            let mut k = (remaining / 8).max(1);
+            let mut found: Option<(PruneState, Weights, f64)> = None;
+            while k < remaining - 1 {
+                let mut cand_state = state.clone();
+                let mut cand_weights = weights.clone();
+                let idx = Weights::lowest_k(&cand_weights.l1_norms(conv), k);
+                cand_weights.remove_filters(conv, &idx);
+                cand_state.shrink(conv, k);
+                let Ok(g) = apply(&model.graph, &cand_state.cout) else { break };
+                let lat = compiler::compile_tuned(&g, session, &HashMap::new()).latency();
+                candidates += 1;
+                if lat <= budget {
+                    found = Some((cand_state, cand_weights, lat));
+                    break;
+                }
+                k = (k * 2).min(remaining - 1);
+                let _ = sim; // measurement goes through the tuned compile path
+            }
+            if let Some((cand_state, cand_weights, lat)) = found {
+                let acc = oracle.top1(
+                    &crate::pruner::summarize(model, &cand_state, Criterion::L1Norm),
+                    TrainPhase::Short,
+                );
+                if acc >= cfg.min_short_accuracy
+                    && best.as_ref().map(|(a, ..)| acc > *a).unwrap_or(true)
+                {
+                    best = Some((acc, cand_state, cand_weights, lat));
+                }
+            }
+        }
+
+        match best {
+            Some((_, s, w, lat)) => {
+                state = s;
+                weights = w;
+                cur_latency = lat;
+                iterations += 1;
+            }
+            None => break, // no layer can meet the budget
+        }
+    }
+
+    let graph = apply(&model.graph, &state.cout).expect("valid pruned graph");
+    let compiled = compiler::compile_tuned(&graph, session, &HashMap::new());
+    let (flops, params) = stats::flops_params(&graph);
+    let summary = crate::pruner::summarize(model, &state, Criterion::L1Norm);
+    let outcome = Outcome {
+        method: "NetAdapt+TVM".into(),
+        fps: compiled.fps(),
+        fps_increase_rate: base_latency / compiled.latency(),
+        macs: flops / 2,
+        params,
+        top1: oracle.top1(&summary, TrainPhase::Final),
+        top5: oracle.top5(&summary, TrainPhase::Final),
+        search_candidates: candidates,
+        main_step_seconds: t0.elapsed().as_secs_f64(),
+    };
+    NetAdaptResult { outcome, state, iterations, candidates_tried: candidates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::ProxyOracle;
+    use crate::device::DeviceSpec;
+    use crate::graph::model_zoo::ModelKind;
+    use crate::tuner::TuneOptions;
+
+    #[test]
+    fn netadapt_reaches_latency_target_with_many_candidates() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 2);
+        let mut oracle = ProxyOracle::new();
+        let cfg = NetAdaptConfig {
+            target_latency_ratio: 0.8,
+            max_iterations: 10,
+            ..Default::default()
+        };
+        let r = netadapt(&m, &session, &sim, &mut oracle, &cfg);
+        assert!(r.outcome.fps_increase_rate > 1.0);
+        assert!(r.iterations >= 1);
+        // exhaustive: candidates ≥ iterations (one per layer per iter at least)
+        assert!(r.candidates_tried >= r.iterations);
+    }
+}

@@ -1,0 +1,342 @@
+//! Command-line interface (hand-rolled parsing; clap is unavailable in
+//! this offline environment).
+//!
+//! Subcommands:
+//!   prune    — run CPrune on a zoo model for a device
+//!   tune     — auto-tune a model without pruning (the TVM baseline)
+//!   compare  — method comparison for one (model, device) cell
+//!   report   — regenerate a paper experiment (fig1..fig11, table1, table2)
+//!   e2e-info — show the AOT artifact inventory the e2e path consumes
+
+use crate::accuracy::ProxyOracle;
+use crate::compiler;
+use crate::device::{DeviceSpec, Simulator};
+use crate::exp::{self, Scale};
+use crate::graph::model_zoo::{Model, ModelKind};
+use crate::graph::stats;
+use crate::pruner::{cprune, CPruneConfig};
+use crate::tuner::{TuneOptions, TuningSession};
+use crate::util::bench::print_table;
+use std::collections::HashMap;
+
+/// Parsed flags: `--key value` pairs plus positional arguments.
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+pub fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+pub fn model_by_name(name: &str) -> ModelKind {
+    match name {
+        "vgg16-cifar" => ModelKind::Vgg16Cifar,
+        "resnet18" | "resnet18-imagenet" => ModelKind::ResNet18ImageNet,
+        "resnet18-cifar" => ModelKind::ResNet18Cifar,
+        "resnet34" | "resnet34-imagenet" => ModelKind::ResNet34ImageNet,
+        "mobilenetv1" => ModelKind::MobileNetV1ImageNet,
+        "mobilenetv2" => ModelKind::MobileNetV2ImageNet,
+        "mnasnet" | "mnasnet1.0" => ModelKind::MnasNet10ImageNet,
+        "resnet8-cifar" => ModelKind::ResNet8Cifar,
+        other => {
+            eprintln!("unknown model '{other}'. options: vgg16-cifar, resnet18-imagenet, resnet18-cifar, mobilenetv2, mnasnet1.0, resnet8-cifar");
+            std::process::exit(2);
+        }
+    }
+}
+
+const USAGE: &str = "cprune — compiler-informed model pruning (paper reproduction)
+
+USAGE:
+  cprune prune     [--model M] [--device D] [--target-acc A] [--iters N] [--seed S] [--out FILE.json]
+  cprune tune      [--model M] [--device D] [--seed S]
+  cprune compare   [--model M] [--device D] [--seed S]
+  cprune report    <fig1|fig6|fig7|fig8|fig9|fig10|fig11|table1|table2> [--scale smoke|full]
+  cprune dot       [--model M]                    # graphviz of graph+subgraphs+tasks
+  cprune calibrate [--device D]                   # fit sim scale to paper anchors
+  cprune e2e-info
+
+  models:  vgg16-cifar resnet18-imagenet resnet18-cifar resnet34 mobilenetv1
+           mobilenetv2 mnasnet1.0 resnet8-cifar
+  devices: kryo280 kryo385 kryo585 mali-g72 rtx3080";
+
+pub fn run(argv: Vec<String>) -> i32 {
+    let args = parse_args(&argv);
+    let Some(cmd) = args.positional.first() else {
+        println!("{USAGE}");
+        return 0;
+    };
+    let seed: u64 = args.flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let device = args
+        .flags
+        .get("device")
+        .map(|d| exp::device_by_name(d))
+        .unwrap_or_else(DeviceSpec::kryo385);
+    let model_kind = args
+        .flags
+        .get("model")
+        .map(|m| model_by_name(m))
+        .unwrap_or(ModelKind::ResNet18ImageNet);
+
+    match cmd.as_str() {
+        "prune" => {
+            let model = Model::build(model_kind, seed);
+            let sim = Simulator::new(device);
+            let cfg = CPruneConfig {
+                target_accuracy: args
+                    .flags
+                    .get("target-acc")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(0.0),
+                max_iterations: args
+                    .flags
+                    .get("iters")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(20),
+                tune_opts: TuneOptions::quick(),
+                seed,
+                ..Default::default()
+            };
+            let mut oracle = ProxyOracle::new();
+            let r = cprune(&model, &sim, &mut oracle, &cfg);
+            if let Some(path) = args.flags.get("out") {
+                let j = crate::pruner::report::to_json(&model, sim.spec.name, &r);
+                if let Err(e) = std::fs::write(path, j.to_string()) {
+                    eprintln!("writing {path}: {e}");
+                    return 1;
+                }
+                println!("wrote {path}");
+            }
+            let (f, p) = stats::flops_params(&r.final_graph);
+            println!(
+                "{} on {}: {:.2}x FPS ({:.1} -> {:.1}), {:.0}M MACs, {:.2}M params, top-1 {:.2}%",
+                model.kind.name(),
+                sim.spec.name,
+                r.fps_increase_rate,
+                r.baseline.fps(),
+                r.final_fps,
+                f as f64 / 2e6,
+                p as f64 / 1e6,
+                r.final_top1 * 100.0
+            );
+            0
+        }
+        "tune" => {
+            let model = Model::build(model_kind, seed);
+            let sim = Simulator::new(device);
+            let session = TuningSession::new(&sim, TuneOptions::default(), seed);
+            let c = compiler::compile_tuned(&model.graph, &session, &HashMap::new());
+            let fallback = compiler::compile_fallback(&model.graph, &sim);
+            println!(
+                "{} on {}: tuned {:.2} FPS vs library-default {:.2} FPS ({} tasks, {} programs measured)",
+                model.kind.name(),
+                sim.spec.name,
+                c.fps(),
+                fallback.fps(),
+                c.table.len(),
+                session.measured_count()
+            );
+            0
+        }
+        "compare" => {
+            let block = exp::table1::run_cell(model_kind, device, Scale::Smoke, seed);
+            let rows: Vec<Vec<String>> = block
+                .rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.method.clone(),
+                        format!("{:.2} ({:.2}x)", r.fps, r.fps_increase_rate),
+                        format!("{:.2}%", r.top1 * 100.0),
+                    ]
+                })
+                .collect();
+            print_table(
+                &format!("{} on {}", block.model, block.device),
+                &["method", "FPS (rate)", "top-1"],
+                &rows,
+            );
+            0
+        }
+        "report" => {
+            let which = args.positional.get(1).cloned().unwrap_or_default();
+            let scale = match args.flags.get("scale").map(|s| s.as_str()) {
+                Some("full") => Scale::Full,
+                _ => Scale::Smoke,
+            };
+            report(&which, scale, seed)
+        }
+        "dot" => {
+            let model = Model::build(model_kind, seed);
+            println!("{}", crate::graph::dot::to_dot(&model.graph));
+            0
+        }
+        "calibrate" => {
+            let anchors = crate::device::calibration::paper_anchors(device.name);
+            if anchors.is_empty() {
+                eprintln!("no paper anchors known for {}", device.name);
+                return 1;
+            }
+            let cal = crate::device::calibration::calibrate(&device, &anchors, seed);
+            println!(
+                "{}: scale={:.3} residual={:.1}% over {} anchors",
+                device.name,
+                cal.scale,
+                cal.residual * 100.0,
+                anchors.len()
+            );
+            0
+        }
+        "e2e-info" => {
+            let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            if !dir.join("manifest.json").exists() {
+                println!("no artifacts — run `make artifacts`");
+                return 1;
+            }
+            match crate::train::Manifest::load(dir.join("manifest.json")) {
+                Ok(m) => {
+                    println!(
+                        "artifacts at {}: train_batch={}, eval_batch={}, {} params, {} masked convs",
+                        dir.display(),
+                        m.train_batch,
+                        m.eval_batch,
+                        m.params.len(),
+                        m.convs.len()
+                    );
+                    0
+                }
+                Err(e) => {
+                    eprintln!("manifest error: {e:#}");
+                    1
+                }
+            }
+        }
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn report(which: &str, scale: Scale, seed: u64) -> i32 {
+    match which {
+        "fig1" => {
+            let r = exp::fig1::run(scale, 20, seed);
+            println!(
+                "fig1: best-before=v{} best-after=v{} pearson={:.3} spearman={:.3}",
+                r.best_before, r.best_after, r.pearson_r, r.spearman_rho
+            );
+        }
+        "fig6" => {
+            let r = exp::fig6::run(scale, seed);
+            for (it, rate, acc) in &r.series {
+                println!("fig6: iter={it} rate={rate:.2} acc={:.4}", acc);
+            }
+        }
+        "fig7" => {
+            for row in exp::fig7::run(scale, seed) {
+                println!(
+                    "fig7: {} {} tflite={:.1} tvm={:.1} cprune={:.1}",
+                    row.model, row.device, row.fps_tflite, row.fps_tvm, row.fps_cprune
+                );
+            }
+        }
+        "fig8" => {
+            for row in exp::fig8::run(scale, seed) {
+                println!(
+                    "fig8: tuned_for={} run_on={} fps={:.1} vs_native={:.2}",
+                    row.tuned_for, row.run_on, row.fps, row.relative_to_native
+                );
+            }
+        }
+        "fig9" | "fig10" => {
+            for row in exp::fig9_10::run(scale, seed) {
+                println!(
+                    "{which}: {} fps={:.1} rate={:.2} top1={:.4} time={:.1}s candidates={}",
+                    row.variant, row.fps, row.fps_increase_rate, row.top1,
+                    row.main_step_seconds, row.candidates_tried
+                );
+            }
+        }
+        "fig11" => {
+            let r = exp::fig11::run(scale, seed);
+            println!(
+                "fig11: cprune fps={:.1} candidates={} | exhaustive fps={:.1} candidates={}",
+                r.cprune_fps, r.cprune_candidates, r.exhaustive_fps, r.exhaustive_candidates
+            );
+        }
+        "table1" => {
+            for (kind, spec) in exp::table1::paper_cells() {
+                let block = exp::table1::run_cell(kind, spec, scale, seed);
+                for r in &block.rows {
+                    println!(
+                        "table1: {} {} {} fps={:.2} rate={:.2} top1={:.4}",
+                        block.model, block.device, r.method, r.fps, r.fps_increase_rate, r.top1
+                    );
+                }
+            }
+        }
+        "table2" => {
+            for block in exp::table2::run(scale, seed) {
+                for r in &block.rows {
+                    println!(
+                        "table2: {} {} fps={:.2} rate={:.2} top1={:.4}",
+                        block.device, r.method, r.fps, r.fps_increase_rate, r.top1
+                    );
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown report '{other}'");
+            return 2;
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_args_flags_and_positionals() {
+        let argv: Vec<String> = ["prune", "--model", "resnet18", "--iters", "5", "--verbose"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = parse_args(&argv);
+        assert_eq!(a.positional, vec!["prune"]);
+        assert_eq!(a.flags.get("model").unwrap(), "resnet18");
+        assert_eq!(a.flags.get("iters").unwrap(), "5");
+        assert_eq!(a.flags.get("verbose").unwrap(), "true");
+    }
+
+    #[test]
+    fn model_names_resolve() {
+        assert_eq!(model_by_name("mobilenetv2"), ModelKind::MobileNetV2ImageNet);
+        assert_eq!(model_by_name("resnet8-cifar"), ModelKind::ResNet8Cifar);
+    }
+}

@@ -1,0 +1,148 @@
+//! Per-layer latency lookup tables (NetAdapt's actual mechanism).
+//!
+//! NetAdapt §3 precomputes, per layer, a table `latency(#filters)` from
+//! on-device measurements, then answers every candidate query from the
+//! table instead of re-measuring. This module builds the same table from
+//! our simulator (tuned per sampled channel count, interpolated between),
+//! giving the NetAdapt baseline its authentic O(1) inner-loop queries and
+//! making the Fig. 11 search-cost comparison faithful.
+
+use super::sim::Simulator;
+use crate::tir::Workload;
+use crate::tuner::{tune_task, TuneOptions};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Latency table for one layer: sampled (channels, seconds) points.
+#[derive(Clone, Debug)]
+pub struct LayerLut {
+    /// Ascending by channel count.
+    pub points: Vec<(usize, f64)>,
+}
+
+impl LayerLut {
+    /// Build by tuning the workload at `samples` channel counts.
+    pub fn build(
+        base: &Workload,
+        sim: &Simulator,
+        opts: &TuneOptions,
+        samples: &[usize],
+        seed: u64,
+    ) -> LayerLut {
+        let mut points: Vec<(usize, f64)> = samples
+            .iter()
+            .map(|&ff| {
+                let mut w = base.clone();
+                w.ff = ff;
+                let mut rng = Rng::with_stream(seed, ff as u64 | 1);
+                let r = tune_task(&w, sim, opts, &mut rng, None);
+                (ff, r.latency)
+            })
+            .collect();
+        points.sort_by_key(|&(ff, _)| ff);
+        LayerLut { points }
+    }
+
+    /// Interpolated latency at an arbitrary channel count.
+    pub fn latency(&self, channels: usize) -> f64 {
+        let pts = &self.points;
+        if pts.is_empty() {
+            return 0.0;
+        }
+        if channels <= pts[0].0 {
+            return pts[0].1 * channels as f64 / pts[0].0.max(1) as f64;
+        }
+        if channels >= pts[pts.len() - 1].0 {
+            let (c, l) = pts[pts.len() - 1];
+            return l * channels as f64 / c as f64;
+        }
+        let i = pts.partition_point(|&(c, _)| c < channels);
+        let (c0, l0) = pts[i - 1];
+        let (c1, l1) = pts[i];
+        if c0 == channels {
+            return l0;
+        }
+        let t = (channels - c0) as f64 / (c1 - c0) as f64;
+        l0 + t * (l1 - l0)
+    }
+}
+
+/// Latency tables for every prunable conv of a model.
+pub struct ModelLut {
+    pub layers: HashMap<usize, LayerLut>,
+}
+
+impl ModelLut {
+    /// Sample each layer at {25, 50, 75, 100}% of its original width.
+    pub fn build(
+        model: &crate::graph::model_zoo::Model,
+        sim: &Simulator,
+        opts: &TuneOptions,
+        seed: u64,
+    ) -> ModelLut {
+        let part = crate::relay::partition::partition(&model.graph);
+        let mut layers = HashMap::new();
+        for sg in &part.subgraphs {
+            if !model.prunable.contains(&sg.anchor) {
+                continue;
+            }
+            let ff = sg.workload.ff;
+            let samples: Vec<usize> = [4usize, 2, 4 / 3, 1]
+                .iter()
+                .map(|&d| (ff * 3 / (d * 3)).max(2)) // 25/50/75/100%
+                .collect::<std::collections::BTreeSet<_>>()
+                .into_iter()
+                .collect();
+            layers.insert(
+                sg.anchor,
+                LayerLut::build(&sg.workload, sim, opts, &samples, seed),
+            );
+        }
+        ModelLut { layers }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+    use crate::graph::model_zoo::{Model, ModelKind};
+    use crate::graph::ops::OpKind;
+
+    fn wl(ff: usize) -> Workload {
+        Workload::from_conv(
+            &OpKind::Conv2d { kh: 3, kw: 3, cin: 32, cout: ff, stride: 1, padding: 1, groups: 1 },
+            [1, 14, 14, ff],
+            vec!["bn", "relu"],
+        )
+    }
+
+    #[test]
+    fn lut_latency_is_monotone_ish_and_interpolates() {
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let lut = LayerLut::build(&wl(128), &sim, &TuneOptions::quick(), &[32, 64, 96, 128], 0);
+        assert_eq!(lut.points.len(), 4);
+        // exact sample points round-trip
+        for &(c, l) in &lut.points {
+            assert_eq!(lut.latency(c), l);
+        }
+        // interpolated mid-point lies between neighbours
+        let mid = lut.latency(80);
+        let lo = lut.latency(64).min(lut.latency(96));
+        let hi = lut.latency(64).max(lut.latency(96));
+        assert!(mid >= lo && mid <= hi);
+        // fewer channels never slower at the sampled resolution
+        assert!(lut.latency(32) <= lut.latency(128) * 1.05);
+    }
+
+    #[test]
+    fn model_lut_covers_prunable_layers() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let lut = ModelLut::build(&m, &sim, &TuneOptions::quick(), 1);
+        for &conv in &m.prunable {
+            assert!(lut.layers.contains_key(&conv), "no LUT for conv {conv}");
+            assert!(lut.layers[&conv].latency(8) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Target-device models and the latency simulator.
+//!
+//! The paper measures real phones (Kryo 280/385/585 CPUs, Mali-G72 GPU) and
+//! desktop GPUs. None exist in this environment, so `spec.rs` captures each
+//! target's architectural parameters and `sim.rs` estimates the latency of a
+//! *scheduled program* on a *device* analytically (roofline + schedule
+//! efficiency + cache behaviour + measurement noise).
+//!
+//! What matters for reproducing the paper is not absolute numbers but the
+//! *decision landscape*: schedule quality spreads of ~5–30× between worst
+//! and best programs, step-function latency vs. channel count (Tang et
+//! al. [38]), device-specific optima (a program tuned for 8 cores/
+//! 128-bit NEON is wrong for a 18-core GPU), and task latencies that rank
+//! consistently. The simulator produces all four (see `sim.rs` tests).
+
+pub mod calibration;
+pub mod lut;
+pub mod sim;
+pub mod spec;
+
+pub use sim::Simulator;
+pub use spec::{DeviceKind, DeviceSpec};

@@ -1,0 +1,155 @@
+//! Architectural parameters of the paper's target devices.
+//!
+//! Numbers are public-spec approximations (clock × FMA width × pipes for
+//! peak, LPDDR4/4X/5 for bandwidth). The simulator consumes ratios, so
+//! modest absolute errors do not change any experiment's *shape*.
+
+/// CPU vs GPU execution model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+}
+
+/// One execution target.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub kind: DeviceKind,
+    /// CPU cores or GPU shader cores usable for one inference.
+    pub cores: usize,
+    /// Peak f32 multiply-accumulates per second *per core*.
+    pub peak_macs_per_core: f64,
+    /// Preferred f32 vector width (NEON lanes / GPU vec unit).
+    pub simd_lanes: usize,
+    /// Per-core fast memory (L1 D-cache / GPU local memory), bytes.
+    pub l1_bytes: usize,
+    /// Shared last-level cache, bytes.
+    pub l2_bytes: usize,
+    /// DRAM bandwidth, bytes/second.
+    pub mem_bytes_per_s: f64,
+    /// Fixed per-subgraph dispatch overhead, seconds (kernel launch /
+    /// function call + scheduling).
+    pub dispatch_overhead_s: f64,
+}
+
+impl DeviceSpec {
+    /// Samsung Galaxy S8 — Kryo 280 (4 big A73-class @ 2.35 GHz, 128-bit NEON).
+    pub fn kryo280() -> DeviceSpec {
+        DeviceSpec {
+            name: "Kryo 280 (Galaxy S8)",
+            kind: DeviceKind::Cpu,
+            cores: 4,
+            peak_macs_per_core: 2.35e9 * 4.0, // 1 FMA pipe x 4 lanes
+            simd_lanes: 4,
+            l1_bytes: 64 * 1024,
+            l2_bytes: 2 * 1024 * 1024,
+            mem_bytes_per_s: 14.9e9,
+            dispatch_overhead_s: 8e-6,
+        }
+    }
+
+    /// Galaxy S9 / Pixel 3 XL — Kryo 385 (4 big A75-class @ 2.8 GHz).
+    pub fn kryo385() -> DeviceSpec {
+        DeviceSpec {
+            name: "Kryo 385 (Galaxy S9)",
+            kind: DeviceKind::Cpu,
+            cores: 4,
+            peak_macs_per_core: 2.8e9 * 4.0 * 1.4, // wider issue than A73
+            simd_lanes: 4,
+            l1_bytes: 64 * 1024,
+            l2_bytes: 3 * 1024 * 1024,
+            mem_bytes_per_s: 24.0e9,
+            dispatch_overhead_s: 7e-6,
+        }
+    }
+
+    /// Galaxy S20+ — Kryo 585 (A77-class @ 2.73 GHz, 2 FMA pipes).
+    pub fn kryo585() -> DeviceSpec {
+        DeviceSpec {
+            name: "Kryo 585 (Galaxy S20+)",
+            kind: DeviceKind::Cpu,
+            cores: 4,
+            peak_macs_per_core: 2.73e9 * 4.0 * 2.0, // 2 x 128-bit FMA
+            simd_lanes: 4,
+            l1_bytes: 64 * 1024,
+            l2_bytes: 4 * 1024 * 1024,
+            mem_bytes_per_s: 34.1e9,
+            dispatch_overhead_s: 6e-6,
+        }
+    }
+
+    /// Galaxy S9 GPU — Mali-G72 MP18 @ 850 MHz.
+    pub fn mali_g72() -> DeviceSpec {
+        DeviceSpec {
+            name: "Mali-G72 (Galaxy S9 GPU)",
+            kind: DeviceKind::Gpu,
+            cores: 18,
+            peak_macs_per_core: 0.85e9 * 8.0, // 8 f32 FMA / core / clk
+            simd_lanes: 8,
+            l1_bytes: 32 * 1024, // per-core local
+            l2_bytes: 1024 * 1024,
+            mem_bytes_per_s: 24.0e9, // shared with CPU
+            dispatch_overhead_s: 40e-6, // GL/CL kernel launch dominates
+        }
+    }
+
+    /// Desktop-class GPU host for the Fig. 1 motivation experiment
+    /// (RTX 3080-like: the experiment only needs "a very fast device
+    /// whose schedule preferences differ wildly from mobile").
+    pub fn rtx3080() -> DeviceSpec {
+        DeviceSpec {
+            name: "RTX 3080 (host)",
+            kind: DeviceKind::Gpu,
+            cores: 68,             // SMs
+            peak_macs_per_core: 219e9, // ~29.8 TFLOPs total
+            simd_lanes: 32,        // warp
+            l1_bytes: 128 * 1024,
+            l2_bytes: 5 * 1024 * 1024,
+            mem_bytes_per_s: 760e9,
+            dispatch_overhead_s: 5e-6,
+        }
+    }
+
+    /// All mobile targets used in the paper's tables.
+    pub fn mobile_targets() -> Vec<DeviceSpec> {
+        vec![
+            DeviceSpec::kryo280(),
+            DeviceSpec::kryo385(),
+            DeviceSpec::kryo585(),
+            DeviceSpec::mali_g72(),
+        ]
+    }
+
+    /// Aggregate peak MACs/s across cores.
+    pub fn peak_macs(&self) -> f64 {
+        self.peak_macs_per_core * self.cores as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_ordering_matches_generation() {
+        // Newer Kryo generations are faster.
+        let k280 = DeviceSpec::kryo280().peak_macs();
+        let k385 = DeviceSpec::kryo385().peak_macs();
+        let k585 = DeviceSpec::kryo585().peak_macs();
+        assert!(k280 < k385 && k385 < k585);
+    }
+
+    #[test]
+    fn gpu_has_more_cores_and_higher_dispatch() {
+        let g = DeviceSpec::mali_g72();
+        let c = DeviceSpec::kryo385();
+        assert!(g.cores > c.cores);
+        assert!(g.dispatch_overhead_s > c.dispatch_overhead_s);
+    }
+
+    #[test]
+    fn host_gpu_dwarfs_mobile() {
+        assert!(DeviceSpec::rtx3080().peak_macs() > 50.0 * DeviceSpec::kryo585().peak_macs());
+    }
+}

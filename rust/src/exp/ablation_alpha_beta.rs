@@ -1,0 +1,82 @@
+//! Supplementary ablation: "the details of finding reasonable α and β
+//! values" (§4.1 points to the paper's supplementary materials).
+//!
+//! Sweeps α (the per-iteration accuracy-retention gate) and β (the
+//! latency-target ratio) over a grid and reports final FPS rate, final
+//! accuracy and search cost for each cell — showing the trade-off the
+//! paper's chosen values sit on: loose α over-prunes accuracy, tight α
+//! stops early; β near 1 creeps (many candidates), small β overshoots
+//! (few, aggressive steps that the accuracy gate then rejects).
+
+use crate::accuracy::ProxyOracle;
+use crate::device::{DeviceSpec, Simulator};
+use crate::exp::Scale;
+use crate::graph::model_zoo::{Model, ModelKind};
+use crate::pruner::{cprune, CPruneConfig};
+
+#[derive(Clone, Debug)]
+pub struct AlphaBetaCell {
+    pub alpha: f64,
+    pub beta: f64,
+    pub fps_rate: f64,
+    pub final_top1: f64,
+    pub iterations: usize,
+    pub candidates: usize,
+}
+
+pub fn run(scale: Scale, seed: u64) -> Vec<AlphaBetaCell> {
+    let model = Model::build(ModelKind::ResNet18Cifar, seed);
+    let sim = Simulator::new(DeviceSpec::kryo585());
+    let alphas = [0.90, 0.95, 0.98, 0.995];
+    let betas = [0.90, 0.97, 0.995];
+    let mut out = Vec::new();
+    for &alpha in &alphas {
+        for &beta in &betas {
+            let cfg = CPruneConfig {
+                alpha,
+                beta,
+                max_iterations: scale.cprune_iters(),
+                tune_opts: scale.tune_opts(),
+                seed,
+                target_accuracy: 0.90,
+                ..Default::default()
+            };
+            let mut oracle = ProxyOracle::new();
+            let r = cprune(&model, &sim, &mut oracle, &cfg);
+            out.push(AlphaBetaCell {
+                alpha,
+                beta,
+                fps_rate: r.fps_increase_rate,
+                final_top1: r.final_top1,
+                iterations: r.iterations.len(),
+                candidates: r.candidates_tried,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_beta_tradeoffs_visible() {
+        let cells = run(Scale::Smoke, 3);
+        assert_eq!(cells.len(), 12);
+        // looser alpha (0.90) must prune at least as deep as the tightest
+        let rate_at = |a: f64, b: f64| {
+            cells
+                .iter()
+                .find(|c| (c.alpha - a).abs() < 1e-9 && (c.beta - b).abs() < 1e-9)
+                .unwrap()
+                .fps_rate
+        };
+        assert!(rate_at(0.90, 0.97) >= rate_at(0.995, 0.97) * 0.95);
+        // every cell produced a valid model
+        for c in &cells {
+            assert!(c.fps_rate >= 0.9, "{c:?}");
+            assert!(c.final_top1 > 0.85);
+        }
+    }
+}

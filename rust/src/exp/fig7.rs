@@ -1,0 +1,86 @@
+//! Fig. 7 — CPrune+TVM vs TVM-only vs target-agnostic library (TFLite).
+//!
+//! {ResNet-18, MobileNetV2} × {Kryo 385, Kryo 585, Mali-G72}: per cell,
+//! FPS of (a) library-default schedules, (b) auto-tuned original model,
+//! (c) CPrune's pruned+tuned model. Paper shape: (c) > (b) > (a), with
+//! (c)/(b) between ~1.3× and ~2.7×.
+
+use crate::accuracy::ProxyOracle;
+use crate::compiler;
+use crate::device::{DeviceSpec, Simulator};
+use crate::exp::Scale;
+use crate::graph::model_zoo::{Model, ModelKind};
+use crate::pruner::{cprune, CPruneConfig};
+use crate::tuner::TuningSession;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct Fig7Row {
+    pub model: &'static str,
+    pub device: &'static str,
+    pub fps_tflite: f64,
+    pub fps_tvm: f64,
+    pub fps_cprune: f64,
+}
+
+pub fn run(scale: Scale, seed: u64) -> Vec<Fig7Row> {
+    let cells: Vec<(ModelKind, DeviceSpec)> = vec![
+        (ModelKind::ResNet18ImageNet, DeviceSpec::kryo385()),
+        (ModelKind::ResNet18ImageNet, DeviceSpec::mali_g72()),
+        (ModelKind::MobileNetV2ImageNet, DeviceSpec::kryo385()),
+        (ModelKind::MobileNetV2ImageNet, DeviceSpec::kryo585()),
+        (ModelKind::MobileNetV2ImageNet, DeviceSpec::mali_g72()),
+    ];
+    cells
+        .into_iter()
+        .map(|(kind, spec)| {
+            let model = Model::build(kind, seed);
+            let device_name = spec.name;
+            let sim = Simulator::new(spec);
+            let session = TuningSession::new(&sim, scale.tune_opts(), seed);
+            let fps_tflite = compiler::compile_fallback(&model.graph, &sim).fps();
+            let fps_tvm = compiler::compile_tuned(&model.graph, &session, &HashMap::new()).fps();
+            let mut oracle = ProxyOracle::new();
+            let cfg = CPruneConfig {
+                max_iterations: scale.cprune_iters(),
+                tune_opts: scale.tune_opts(),
+                seed,
+                target_accuracy: crate::exp::paper_accuracy_budget(kind),
+                ..Default::default()
+            };
+            let res = cprune(&model, &sim, &mut oracle, &cfg);
+            Fig7Row {
+                model: kind.name(),
+                device: device_name,
+                fps_tflite,
+                fps_tvm,
+                fps_cprune: res.final_fps,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_ordering_holds_per_cell() {
+        // One smoke cell is enough for the unit test; the bench does all.
+        let model = Model::build(ModelKind::ResNet18ImageNet, 1);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, Scale::Smoke.tune_opts(), 1);
+        let tflite = compiler::compile_fallback(&model.graph, &sim).fps();
+        let tvm = compiler::compile_tuned(&model.graph, &session, &HashMap::new()).fps();
+        assert!(tvm > tflite, "tuned {tvm} <= library {tflite}");
+        let mut oracle = ProxyOracle::new();
+        let cfg = CPruneConfig {
+            max_iterations: 6,
+            tune_opts: Scale::Smoke.tune_opts(),
+            seed: 1,
+            ..Default::default()
+        };
+        let res = cprune(&model, &sim, &mut oracle, &cfg);
+        assert!(res.final_fps > tvm * 0.98, "cprune {} vs tvm {tvm}", res.final_fps);
+    }
+}

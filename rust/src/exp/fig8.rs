@@ -1,0 +1,90 @@
+//! Fig. 8 — target-processor specificity: a CPrune model tuned for device
+//! X runs fastest on X; executing it (with X's programs) on another
+//! processor Y loses most of the gain.
+
+use crate::accuracy::ProxyOracle;
+use crate::compiler;
+use crate::device::{DeviceSpec, Simulator};
+use crate::exp::Scale;
+use crate::graph::model_zoo::{Model, ModelKind};
+use crate::pruner::{cprune, CPruneConfig};
+
+#[derive(Clone, Debug)]
+pub struct Fig8Row {
+    pub tuned_for: &'static str,
+    pub run_on: &'static str,
+    pub fps: f64,
+    /// FPS relative to running natively on `run_on` with its own programs.
+    pub relative_to_native: f64,
+}
+
+pub fn run(scale: Scale, seed: u64) -> Vec<Fig8Row> {
+    let devices = [DeviceSpec::kryo385(), DeviceSpec::kryo585(), DeviceSpec::mali_g72()];
+    let model = Model::build(ModelKind::MobileNetV2ImageNet, seed);
+
+    // CPrune per device: (final graph, final table) tuned natively.
+    let results: Vec<_> = devices
+        .iter()
+        .map(|spec| {
+            let sim = Simulator::new(spec.clone());
+            let mut oracle = ProxyOracle::new();
+            let cfg = CPruneConfig {
+                max_iterations: scale.cprune_iters(),
+                tune_opts: scale.tune_opts(),
+                seed,
+                target_accuracy: crate::exp::paper_accuracy_budget(ModelKind::MobileNetV2ImageNet),
+                ..Default::default()
+            };
+            cprune(&model, &sim, &mut oracle, &cfg)
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+    for (i, from) in devices.iter().enumerate() {
+        for (j, to) in devices.iter().enumerate() {
+            let sim_to = Simulator::new(to.clone());
+            // run model i (its graph + its tuned programs) on device j
+            let lat = compiler::latency_with_programs(
+                &results[i].final_graph,
+                &results[i].final_table,
+                &sim_to,
+            );
+            let native = results[j].final_latency;
+            rows.push(Fig8Row {
+                tuned_for: from.name,
+                run_on: to.name,
+                fps: 1.0 / lat,
+                relative_to_native: native / lat,
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_beats_cross_device() {
+        let rows = run(Scale::Smoke, 2);
+        assert_eq!(rows.len(), 9);
+        // diagonal (native) cells re-run the same programs; they differ
+        // from the recorded latency only by measurement noise
+        for r in &rows {
+            if r.tuned_for == r.run_on {
+                assert!(
+                    (r.relative_to_native - 1.0).abs() < 0.08,
+                    "diagonal cell off: {r:?}"
+                );
+            }
+        }
+        // every off-diagonal cell is at most native speed (allowing noise)
+        let off: Vec<&Fig8Row> = rows.iter().filter(|r| r.tuned_for != r.run_on).collect();
+        let worse = off.iter().filter(|r| r.relative_to_native < 0.999).count();
+        assert!(
+            worse * 3 >= off.len(),
+            "cross-device execution should usually lose: {rows:?}"
+        );
+    }
+}

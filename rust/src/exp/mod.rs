@@ -1,0 +1,71 @@
+//! Experiment harnesses: one module per paper table/figure.
+//!
+//! Each harness is a pure function returning structured rows, shared by
+//! the `rust/benches/*` regenerators (which print the table/series) and
+//! the `examples/` binaries. DESIGN.md §4 maps experiment ↔ module ↔
+//! bench target; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod ablation_alpha_beta;
+pub mod fig1;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9_10;
+pub mod fig11;
+pub mod table1;
+pub mod table2;
+
+use crate::device::DeviceSpec;
+
+/// Effort scale for harnesses (benches default to `Full`; unit tests and
+/// smoke runs use `Smoke` to stay fast).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Full,
+}
+
+impl Scale {
+    pub fn tune_opts(&self) -> crate::tuner::TuneOptions {
+        match self {
+            Scale::Smoke => crate::tuner::TuneOptions::quick(),
+            Scale::Full => crate::tuner::TuneOptions::default(),
+        }
+    }
+
+    pub fn cprune_iters(&self) -> usize {
+        match self {
+            Scale::Smoke => 8,
+            Scale::Full => 40,
+        }
+    }
+}
+
+/// The short-term-accuracy budget a_g implied by each paper experiment
+/// (the paper's users "provide the accuracy requirement"; these values
+/// make the search stop where the paper's final accuracies landed).
+pub fn paper_accuracy_budget(kind: crate::graph::model_zoo::ModelKind) -> f64 {
+    use crate::graph::model_zoo::ModelKind::*;
+    match kind {
+        ResNet18ImageNet => 0.670,
+        ResNet34ImageNet => 0.710,
+        MobileNetV1ImageNet => 0.685,
+        MobileNetV2ImageNet => 0.695,
+        MnasNet10ImageNet => 0.715,
+        ResNet18Cifar => 0.922,
+        Vgg16Cifar => 0.9280,
+        ResNet8Cifar => 0.0,
+    }
+}
+
+/// The devices of the paper's tables, by short name.
+pub fn device_by_name(name: &str) -> DeviceSpec {
+    match name {
+        "kryo280" => DeviceSpec::kryo280(),
+        "kryo385" => DeviceSpec::kryo385(),
+        "kryo585" => DeviceSpec::kryo585(),
+        "mali" | "mali-g72" => DeviceSpec::mali_g72(),
+        "rtx3080" => DeviceSpec::rtx3080(),
+        other => panic!("unknown device {other}"),
+    }
+}

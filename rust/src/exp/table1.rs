@@ -1,0 +1,134 @@
+//! Table 1 — method comparison on ImageNet-scale models / mobile targets.
+//!
+//! Rows per (model, device): Original (TVM), PQF+TVM, FPGM+TVM,
+//! NetAdapt+TVM, AMC+TVM, CPrune. Shape to reproduce: CPrune posts the
+//! highest FPS increase rate (1.3–2.7×) at a top-1 within ~1.6 pp of the
+//! original; NetAdapt is the closest runner-up; PQF barely moves CPU FPS.
+
+use crate::accuracy::ProxyOracle;
+use crate::baselines::amc::{amc, AmcConfig};
+use crate::baselines::fpgm::fpgm_prune;
+use crate::baselines::netadapt::{netadapt, NetAdaptConfig};
+use crate::baselines::pqf::pqf;
+use crate::baselines::{original_row, Outcome};
+use crate::device::{DeviceSpec, Simulator};
+use crate::exp::Scale;
+use crate::graph::model_zoo::{Model, ModelKind};
+use crate::graph::stats;
+use crate::pruner::{cprune, CPruneConfig};
+use crate::tuner::TuningSession;
+
+#[derive(Debug)]
+pub struct Table1Block {
+    pub model: &'static str,
+    pub device: &'static str,
+    pub rows: Vec<Outcome>,
+}
+
+/// Which (model, device) cells to run; the paper's Table 1 set.
+pub fn paper_cells() -> Vec<(ModelKind, DeviceSpec)> {
+    vec![
+        (ModelKind::ResNet18ImageNet, DeviceSpec::kryo385()),
+        (ModelKind::ResNet18ImageNet, DeviceSpec::mali_g72()),
+        (ModelKind::MobileNetV2ImageNet, DeviceSpec::kryo385()),
+        (ModelKind::MobileNetV2ImageNet, DeviceSpec::mali_g72()),
+        (ModelKind::MnasNet10ImageNet, DeviceSpec::kryo585()),
+    ]
+}
+
+pub fn run_cell(kind: ModelKind, spec: DeviceSpec, scale: Scale, seed: u64) -> Table1Block {
+    let model = Model::build(kind, seed);
+    let device_name = spec.name;
+    let sim = Simulator::new(spec);
+    let session = TuningSession::new(&sim, scale.tune_opts(), seed);
+    let mut oracle = ProxyOracle::new();
+
+    let (orig, base_latency) = original_row(&model, &session);
+    let mut rows = vec![orig];
+
+    rows.push(pqf(&model, &session, &sim, base_latency));
+    rows.push(fpgm_prune(&model, 0.25, &session, &mut oracle, base_latency));
+
+    let na = netadapt(
+        &model,
+        &session,
+        &sim,
+        &mut oracle,
+        &NetAdaptConfig {
+            target_latency_ratio: 0.65,
+            max_iterations: scale.cprune_iters().min(20),
+            ..Default::default()
+        },
+    );
+    rows.push(na.outcome);
+
+    rows.push(amc(
+        &model,
+        &session,
+        &mut oracle,
+        &AmcConfig::default(),
+        base_latency,
+    ));
+
+    let cp = cprune(
+        &model,
+        &sim,
+        &mut ProxyOracle::new(),
+        &CPruneConfig {
+            max_iterations: scale.cprune_iters(),
+            tune_opts: scale.tune_opts(),
+            seed,
+            target_accuracy: crate::exp::paper_accuracy_budget(kind),
+            ..Default::default()
+        },
+    );
+    let (flops, params) = stats::flops_params(&cp.final_graph);
+    rows.push(Outcome {
+        method: "CPrune".into(),
+        fps: cp.final_fps,
+        fps_increase_rate: cp.fps_increase_rate,
+        macs: flops / 2,
+        params,
+        top1: cp.final_top1,
+        top5: cp.final_top5,
+        search_candidates: cp.candidates_tried,
+        main_step_seconds: cp.main_step_seconds,
+    });
+
+    Table1Block { model: kind.name(), device: device_name, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cprune_wins_the_resnet18_kryo385_cell() {
+        let block = run_cell(
+            ModelKind::ResNet18ImageNet,
+            DeviceSpec::kryo385(),
+            Scale::Smoke,
+            7,
+        );
+        assert_eq!(block.rows.len(), 6);
+        let fps_of = |m: &str| {
+            block
+                .rows
+                .iter()
+                .find(|r| r.method.contains(m))
+                .map(|r| r.fps)
+                .unwrap()
+        };
+        let cprune_fps = fps_of("CPrune");
+        let orig_fps = fps_of("Original");
+        let pqf_fps = fps_of("PQF");
+        assert!(cprune_fps > orig_fps, "CPrune must beat Original");
+        assert!(cprune_fps > pqf_fps, "CPrune must beat PQF on CPU");
+        // accuracy stays within a few points of original
+        let cp = block.rows.iter().find(|r| r.method == "CPrune").unwrap();
+        assert!(cp.top1 > 0.6976 - 0.06);
+        // pruned model is smaller
+        let orig = &block.rows[0];
+        assert!(cp.macs < orig.macs && cp.params < orig.params);
+    }
+}

@@ -1,0 +1,91 @@
+//! Graphviz (DOT) export of model graphs and their partition.
+//!
+//! `cprune dot --model resnet8-cifar > g.dot && dot -Tpng g.dot` renders
+//! the Fig. 4-style view: nodes colored by op class, subgraph clusters,
+//! task labels on the anchors.
+
+use super::ops::{Graph, OpKind};
+use super::shape_infer;
+use crate::relay::partition::extract_tasks;
+use std::fmt::Write as _;
+
+/// Render the dataflow graph, clustered by fused subgraph, with task ids.
+pub fn to_dot(g: &Graph) -> String {
+    let shapes = shape_infer::infer(g).expect("graph must shape-infer");
+    let (part, table) = extract_tasks(g);
+    let mut owner = vec![None::<usize>; g.nodes.len()];
+    for sg in &part.subgraphs {
+        for &n in &sg.nodes {
+            owner[n] = Some(sg.id);
+        }
+    }
+
+    let mut out = String::from("digraph model {\n  rankdir=TB;\n  node [shape=box, fontsize=10];\n");
+    for sg in &part.subgraphs {
+        let task = table.task_of_subgraph(sg.id).unwrap_or(usize::MAX);
+        let _ = writeln!(
+            out,
+            "  subgraph cluster_{} {{ label=\"S{} (T{})\"; style=dashed;",
+            sg.id, sg.id, task
+        );
+        for &n in &sg.nodes {
+            let _ = writeln!(out, "    n{};", n);
+        }
+        let _ = writeln!(out, "  }}");
+    }
+    for node in &g.nodes {
+        let color = match node.op {
+            OpKind::Conv2d { .. } => "lightblue",
+            OpKind::Dense { .. } => "lightsalmon",
+            OpKind::BatchNorm { .. } => "lightyellow",
+            OpKind::Add => "palegreen",
+            OpKind::Input { .. } => "gray90",
+            _ => "white",
+        };
+        let s = shapes[node.id];
+        let _ = writeln!(
+            out,
+            "  n{} [label=\"{}\\n{} {:?}\", style=filled, fillcolor={}];",
+            node.id,
+            node.name,
+            node.op.mnemonic(),
+            s,
+            color
+        );
+        for &inp in &node.inputs {
+            let _ = writeln!(out, "  n{} -> n{};", inp, node.id);
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::model_zoo::{Model, ModelKind};
+
+    #[test]
+    fn dot_output_is_wellformed() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let dot = to_dot(&m.graph);
+        assert!(dot.starts_with("digraph model {"));
+        assert!(dot.trim_end().ends_with('}'));
+        // every node appears
+        for node in &m.graph.nodes {
+            assert!(dot.contains(&format!("n{} [label=", node.id)), "{}", node.name);
+        }
+        // at least one cluster per conv anchor
+        assert!(dot.matches("subgraph cluster_").count() >= m.graph.conv_ids().len());
+        // edge count equals sum of input arities
+        let edges: usize = m.graph.nodes.iter().map(|n| n.inputs.len()).sum();
+        assert_eq!(dot.matches(" -> ").count(), edges);
+    }
+
+    #[test]
+    fn dot_labels_tasks() {
+        let m = Model::build(ModelKind::ResNet18ImageNet, 0);
+        let dot = to_dot(&m.graph);
+        assert!(dot.contains("(T0)"));
+    }
+}

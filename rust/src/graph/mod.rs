@@ -1,0 +1,38 @@
+//! DNN graph intermediate representation.
+//!
+//! This is the "front-end" substrate the paper assumes from TVM/Relay: a
+//! dataflow graph of tensor operators with shape inference, FLOPs/params
+//! accounting, a model zoo (the paper's workloads: VGG-16, ResNet-18,
+//! MobileNetV2, MnasNet1.0, plus the CIFAR-scale ResNet-8 that matches the
+//! L2 JAX model), synthetic-but-seeded weights for filter scoring, and the
+//! structured-pruning rewrite that removes output channels from a conv and
+//! fixes up every consumer.
+
+pub mod dot;
+pub mod model_zoo;
+pub mod ops;
+pub mod prune;
+pub mod shape_infer;
+pub mod stats;
+pub mod weights;
+
+pub use model_zoo::{Model, ModelKind};
+pub use ops::{Graph, Node, NodeId, OpKind};
+pub use prune::PruneState;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_models_build_and_infer() {
+        for kind in ModelKind::all() {
+            let m = Model::build(kind, 42);
+            assert!(m.graph.nodes.len() > 5, "{kind:?} too small");
+            let shapes = shape_infer::infer(&m.graph).expect("shape inference");
+            assert_eq!(shapes.len(), m.graph.nodes.len());
+            let (flops, params) = stats::flops_params(&m.graph);
+            assert!(flops > 0 && params > 0, "{kind:?}: flops={flops} params={params}");
+        }
+    }
+}

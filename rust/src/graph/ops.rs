@@ -1,0 +1,217 @@
+//! Operator set and dataflow graph.
+//!
+//! Layout convention is NHWC activations / HWIO conv weights (matches the
+//! L2 JAX model). The op set covers everything in the paper's model zoo:
+//! plain + depthwise + pointwise convolutions, dense, batch-norm, ReLU /
+//! ReLU6, residual add, pooling, and softmax.
+
+/// Index of a node within its graph.
+pub type NodeId = usize;
+
+/// Tensor operator kinds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    /// Network input: (n, h, w, c).
+    Input { shape: [usize; 4] },
+    /// 2-D convolution, NHWC x HWIO. `groups == cin` means depthwise.
+    Conv2d {
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        padding: usize,
+        groups: usize,
+    },
+    /// Fully connected: (features_in, features_out).
+    Dense { cin: usize, cout: usize },
+    /// Folded batch normalization (per-channel scale + shift).
+    BatchNorm { channels: usize },
+    /// Rectifier activations.
+    ReLU,
+    ReLU6,
+    /// Elementwise residual add of two equal-shaped inputs.
+    Add,
+    /// Max pool (kernel, stride).
+    MaxPool { k: usize, stride: usize },
+    /// Global average pool NHWC -> N,1,1,C.
+    GlobalAvgPool,
+    /// Collapse N,1,1,C (or N,H,W,C) to N,(H*W*C).
+    Flatten,
+    Softmax,
+}
+
+impl OpKind {
+    /// Short operator mnemonic (used in structural hashes and debug dumps).
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Input { .. } => "input",
+            OpKind::Conv2d { groups, cin, .. } if *groups == *cin && *groups > 1 => "dwconv2d",
+            OpKind::Conv2d { .. } => "conv2d",
+            OpKind::Dense { .. } => "dense",
+            OpKind::BatchNorm { .. } => "bn",
+            OpKind::ReLU => "relu",
+            OpKind::ReLU6 => "relu6",
+            OpKind::Add => "add",
+            OpKind::MaxPool { .. } => "maxpool",
+            OpKind::GlobalAvgPool => "gavgpool",
+            OpKind::Flatten => "flatten",
+            OpKind::Softmax => "softmax",
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self, OpKind::Conv2d { .. })
+    }
+}
+
+/// A graph node: an operator plus its dataflow inputs.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: OpKind,
+    pub inputs: Vec<NodeId>,
+}
+
+/// Dataflow graph in topological order (builders append in execution order).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph { nodes: Vec::new() }
+    }
+
+    /// Append a node; returns its id. Inputs must already exist.
+    pub fn add(&mut self, name: impl Into<String>, op: OpKind, inputs: Vec<NodeId>) -> NodeId {
+        let id = self.nodes.len();
+        for &i in &inputs {
+            assert!(i < id, "input {i} of node {id} not yet defined");
+        }
+        self.nodes.push(Node {
+            id,
+            name: name.into(),
+            op,
+            inputs,
+        });
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Ids of nodes that consume `id`'s output.
+    pub fn consumers(&self, id: NodeId) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.inputs.contains(&id))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// All convolution node ids, in topological order.
+    pub fn conv_ids(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.op.is_conv())
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Verify topological ordering + arity invariants. Used by tests and
+    /// after every pruning rewrite.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(format!("node {i} has mismatched id {}", n.id));
+            }
+            for &inp in &n.inputs {
+                if inp >= i {
+                    return Err(format!("node {i} ({}) uses forward input {inp}", n.name));
+                }
+            }
+            let arity_ok = match n.op {
+                OpKind::Input { .. } => n.inputs.is_empty(),
+                OpKind::Add => n.inputs.len() == 2,
+                _ => n.inputs.len() == 1,
+            };
+            if !arity_ok {
+                return Err(format!(
+                    "node {i} ({}, {}) has wrong arity {}",
+                    n.name,
+                    n.op.mnemonic(),
+                    n.inputs.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 3] }, vec![]);
+        let c = g.add(
+            "c1",
+            OpKind::Conv2d {
+                kh: 3,
+                kw: 3,
+                cin: 3,
+                cout: 16,
+                stride: 1,
+                padding: 1,
+                groups: 1,
+            },
+            vec![x],
+        );
+        let b = g.add("bn1", OpKind::BatchNorm { channels: 16 }, vec![c]);
+        g.add("r1", OpKind::ReLU, vec![b]);
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = tiny();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.conv_ids(), vec![1]);
+        assert_eq!(g.consumers(1), vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not yet defined")]
+    fn forward_reference_panics() {
+        let mut g = Graph::new();
+        g.add("bad", OpKind::ReLU, vec![3]);
+    }
+
+    #[test]
+    fn arity_validation() {
+        let mut g = tiny();
+        // Add with one input is invalid
+        g.nodes.push(Node {
+            id: 4,
+            name: "bad_add".into(),
+            op: OpKind::Add,
+            inputs: vec![3],
+        });
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn mnemonics() {
+        assert_eq!(
+            OpKind::Conv2d { kh: 3, kw: 3, cin: 32, cout: 32, stride: 1, padding: 1, groups: 32 }
+                .mnemonic(),
+            "dwconv2d"
+        );
+        assert_eq!(OpKind::ReLU6.mnemonic(), "relu6");
+    }
+}

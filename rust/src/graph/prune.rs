@@ -1,0 +1,235 @@
+//! Structured-pruning graph rewrite.
+//!
+//! [`PruneState`] tracks, per prunable conv, how many output channels remain;
+//! [`apply`] rebuilds the graph with those counts, propagating the channel
+//! change into every consumer (BN widths, downstream conv `cin`s, depthwise
+//! chains, dense `cin`s). The result is a *valid standalone graph* — exactly
+//! what the compiler substrate re-partitions and re-tunes each CPrune
+//! iteration (Algorithm 1, line 7).
+
+use super::ops::{Graph, NodeId, OpKind};
+use super::model_zoo::Model;
+use std::collections::BTreeMap;
+
+/// Per-conv remaining output-channel counts (only prunable convs appear).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PruneState {
+    pub cout: BTreeMap<NodeId, usize>,
+}
+
+impl PruneState {
+    /// The unpruned state of a model: every prunable conv at full width.
+    pub fn full(model: &Model) -> PruneState {
+        let mut cout = BTreeMap::new();
+        for &id in &model.prunable {
+            if let OpKind::Conv2d { cout: c, .. } = model.graph.node(id).op {
+                cout.insert(id, c);
+            }
+        }
+        PruneState { cout }
+    }
+
+    /// Remaining channels of a conv (panics if not prunable).
+    pub fn remaining(&self, conv: NodeId) -> usize {
+        self.cout[&conv]
+    }
+
+    /// Shrink `conv` by `k` channels; clamps at a floor of 2 channels and
+    /// returns how many were actually removed.
+    pub fn shrink(&mut self, conv: NodeId, k: usize) -> usize {
+        let c = self.cout.get_mut(&conv).expect("conv is prunable");
+        let removable = c.saturating_sub(2).min(k);
+        *c -= removable;
+        removable
+    }
+
+    /// Fraction of original channels pruned for `conv`, given the original.
+    pub fn pruned_fraction(&self, conv: NodeId, original: usize) -> f64 {
+        1.0 - self.cout[&conv] as f64 / original as f64
+    }
+}
+
+/// Rebuild `base` with overridden conv output-channel counts.
+///
+/// Channel propagation rules:
+/// * conv (regular):  `cin` := input channels, `cout` := override or original
+/// * conv (depthwise): `cin = cout = groups` := input channels
+/// * batch-norm:       width := input channels
+/// * dense:            `cin` := flattened input extent
+/// * everything else passes channels through untouched.
+pub fn apply(base: &Graph, cout_override: &BTreeMap<NodeId, usize>) -> Result<Graph, String> {
+    let mut g = Graph::new();
+    // Shape tracking mirrors shape_infer but over the *rewritten* ops.
+    let mut shapes: Vec<[usize; 4]> = Vec::with_capacity(base.nodes.len());
+    for node in &base.nodes {
+        let inp = |i: usize| shapes[node.inputs[i]];
+        let (op, shape) = match &node.op {
+            OpKind::Input { shape } => (node.op.clone(), *shape),
+            OpKind::Conv2d { kh, kw, cout, stride, padding, groups, cin } => {
+                let [n, h, w, c] = inp(0);
+                let depthwise = *groups == *cin && *groups > 1;
+                let (new_cin, new_cout, new_groups) = if depthwise {
+                    (c, c, c)
+                } else {
+                    let oc = cout_override.get(&node.id).copied().unwrap_or(*cout);
+                    if oc == 0 {
+                        return Err(format!("{}: cannot prune to 0 channels", node.name));
+                    }
+                    (c, oc, 1)
+                };
+                let oh = (h + 2 * padding - kh) / stride + 1;
+                let ow = (w + 2 * padding - kw) / stride + 1;
+                (
+                    OpKind::Conv2d {
+                        kh: *kh,
+                        kw: *kw,
+                        cin: new_cin,
+                        cout: new_cout,
+                        stride: *stride,
+                        padding: *padding,
+                        groups: new_groups,
+                    },
+                    [n, oh, ow, new_cout],
+                )
+            }
+            OpKind::Dense { cout, .. } => {
+                let [n, h, w, c] = inp(0);
+                (OpKind::Dense { cin: h * w * c, cout: *cout }, [n, 1, 1, *cout])
+            }
+            OpKind::BatchNorm { .. } => {
+                let s = inp(0);
+                (OpKind::BatchNorm { channels: s[3] }, s)
+            }
+            OpKind::ReLU | OpKind::ReLU6 | OpKind::Softmax => (node.op.clone(), inp(0)),
+            OpKind::Add => {
+                let a = inp(0);
+                let b = inp(1);
+                if a != b {
+                    return Err(format!(
+                        "{}: pruning broke residual add ({:?} vs {:?}) — \
+                         a residual feeder was pruned",
+                        node.name, a, b
+                    ));
+                }
+                (OpKind::Add, a)
+            }
+            OpKind::MaxPool { k, stride } => {
+                let [n, h, w, c] = inp(0);
+                (node.op.clone(), [n, (h - k) / stride + 1, (w - k) / stride + 1, c])
+            }
+            OpKind::GlobalAvgPool => {
+                let [n, _, _, c] = inp(0);
+                (OpKind::GlobalAvgPool, [n, 1, 1, c])
+            }
+            OpKind::Flatten => {
+                let [n, h, w, c] = inp(0);
+                (OpKind::Flatten, [n, 1, 1, h * w * c])
+            }
+        };
+        shapes.push(shape);
+        g.add(node.name.clone(), op, node.inputs.clone());
+    }
+    g.validate()?;
+    super::shape_infer::infer(&g)?; // double-check consistency
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::model_zoo::{Model, ModelKind};
+    use crate::graph::stats;
+
+    #[test]
+    fn full_state_is_identity() {
+        let m = Model::build(ModelKind::ResNet18ImageNet, 0);
+        let st = PruneState::full(&m);
+        let g = apply(&m.graph, &st.cout).unwrap();
+        let (f0, p0) = stats::flops_params(&m.graph);
+        let (f1, p1) = stats::flops_params(&g);
+        assert_eq!((f0, p0), (f1, p1));
+    }
+
+    #[test]
+    fn pruning_reduces_flops_and_params() {
+        let m = Model::build(ModelKind::ResNet18ImageNet, 0);
+        let mut st = PruneState::full(&m);
+        let conv = m.prunable[2];
+        let removed = st.shrink(conv, 16);
+        assert_eq!(removed, 16);
+        let g = apply(&m.graph, &st.cout).unwrap();
+        let (f0, p0) = stats::flops_params(&m.graph);
+        let (f1, p1) = stats::flops_params(&g);
+        assert!(f1 < f0 && p1 < p0);
+    }
+
+    #[test]
+    fn pruned_graph_consumers_are_fixed_up() {
+        let m = Model::build(ModelKind::Vgg16Cifar, 0);
+        let mut st = PruneState::full(&m);
+        let conv = m.prunable[0]; // first conv, 64 channels
+        st.shrink(conv, 32);
+        let g = apply(&m.graph, &st.cout).unwrap();
+        // next conv must now take 32 input channels
+        let next_conv = g.conv_ids()[1];
+        match g.node(next_conv).op {
+            OpKind::Conv2d { cin, .. } => assert_eq!(cin, 32),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn depthwise_chain_follows_expand_prune() {
+        let m = Model::build(ModelKind::MobileNetV2ImageNet, 0);
+        // find an expand conv (name contains ".expand")
+        let expand = *m
+            .prunable
+            .iter()
+            .find(|&&id| m.graph.node(id).name.contains(".expand"))
+            .unwrap();
+        let mut st = PruneState::full(&m);
+        let orig = st.remaining(expand);
+        st.shrink(expand, orig / 2);
+        let g = apply(&m.graph, &st.cout).unwrap();
+        // the depthwise conv right after must have shrunk to match
+        let dw = g
+            .nodes
+            .iter()
+            .find(|n| {
+                n.name.starts_with(
+                    m.graph.node(expand).name.trim_end_matches(".conv").trim_end_matches(".expand"),
+                ) && n.op.mnemonic() == "dwconv2d"
+            });
+        if let Some(dwn) = dw {
+            if let OpKind::Conv2d { cin, cout, groups, .. } = dwn.op {
+                assert_eq!(cin, orig - orig / 2);
+                assert_eq!(cout, cin);
+                assert_eq!(groups, cin);
+            }
+        }
+        // and the whole graph still validates
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn shrink_clamps_at_floor() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let mut st = PruneState::full(&m);
+        let conv = m.prunable[0];
+        let total = st.remaining(conv);
+        let removed = st.shrink(conv, 10_000);
+        assert_eq!(removed, total - 2);
+        assert_eq!(st.remaining(conv), 2);
+    }
+
+    #[test]
+    fn pruned_fraction() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let mut st = PruneState::full(&m);
+        let conv = m.prunable[0];
+        let orig = st.remaining(conv);
+        st.shrink(conv, orig / 4);
+        let frac = st.pruned_fraction(conv, orig);
+        assert!((frac - 0.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,160 @@
+//! Shape inference over the dataflow graph.
+//!
+//! Every node's output is a 4-D NHWC shape (dense/flatten/softmax use
+//! [n, 1, 1, c]). Inference both feeds the compiler substrate (subgraph
+//! extraction needs concrete extents for the loop nests) and acts as a
+//! validity check after pruning rewrites.
+
+use super::ops::{Graph, OpKind};
+
+/// Output shape per node, NHWC. Dense-ish ops use [n, 1, 1, c].
+pub type Shape = [usize; 4];
+
+/// Infer output shapes for all nodes. Errors on any inconsistency — which
+/// after a pruning rewrite means the rewrite was wrong, so errors here are
+/// load-bearing for the prune tests.
+pub fn infer(g: &Graph) -> Result<Vec<Shape>, String> {
+    let mut shapes: Vec<Shape> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        let shape = match &node.op {
+            OpKind::Input { shape } => *shape,
+            OpKind::Conv2d {
+                kh,
+                kw,
+                cin,
+                cout,
+                stride,
+                padding,
+                groups,
+            } => {
+                let [n, h, w, c] = shapes[node.inputs[0]];
+                if c != *cin {
+                    return Err(format!(
+                        "{}: conv cin={} but input has {} channels",
+                        node.name, cin, c
+                    ));
+                }
+                if cin % groups != 0 || cout % groups != 0 {
+                    return Err(format!("{}: groups {} do not divide channels", node.name, groups));
+                }
+                let oh = (h + 2 * padding).checked_sub(*kh).ok_or_else(|| {
+                    format!("{}: kernel larger than padded input", node.name)
+                })? / stride
+                    + 1;
+                let ow = (w + 2 * padding - kw) / stride + 1;
+                [n, oh, ow, *cout]
+            }
+            OpKind::Dense { cin, cout } => {
+                let [n, h, w, c] = shapes[node.inputs[0]];
+                let feat = h * w * c;
+                if feat != *cin {
+                    return Err(format!(
+                        "{}: dense cin={} but input flattens to {}",
+                        node.name, cin, feat
+                    ));
+                }
+                [n, 1, 1, *cout]
+            }
+            OpKind::BatchNorm { channels } => {
+                let s = shapes[node.inputs[0]];
+                if s[3] != *channels {
+                    return Err(format!(
+                        "{}: bn over {} channels but input has {}",
+                        node.name, channels, s[3]
+                    ));
+                }
+                s
+            }
+            OpKind::ReLU | OpKind::ReLU6 | OpKind::Softmax => shapes[node.inputs[0]],
+            OpKind::Add => {
+                let a = shapes[node.inputs[0]];
+                let b = shapes[node.inputs[1]];
+                if a != b {
+                    return Err(format!(
+                        "{}: add of mismatched shapes {:?} vs {:?}",
+                        node.name, a, b
+                    ));
+                }
+                a
+            }
+            OpKind::MaxPool { k, stride } => {
+                let [n, h, w, c] = shapes[node.inputs[0]];
+                [n, (h - k) / stride + 1, (w - k) / stride + 1, c]
+            }
+            OpKind::GlobalAvgPool => {
+                let [n, _, _, c] = shapes[node.inputs[0]];
+                [n, 1, 1, c]
+            }
+            OpKind::Flatten => {
+                let [n, h, w, c] = shapes[node.inputs[0]];
+                [n, 1, 1, h * w * c]
+            }
+        };
+        shapes.push(shape);
+    }
+    Ok(shapes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::Graph;
+
+    fn conv(kh: usize, cin: usize, cout: usize, stride: usize, padding: usize) -> OpKind {
+        OpKind::Conv2d { kh, kw: kh, cin, cout, stride, padding, groups: 1 }
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 32, 32, 3] }, vec![]);
+        let c1 = g.add("c1", conv(3, 3, 16, 1, 1), vec![x]);
+        let c2 = g.add("c2", conv(3, 16, 32, 2, 1), vec![c1]);
+        let s = infer(&g).unwrap();
+        assert_eq!(s[c1], [1, 32, 32, 16]);
+        assert_eq!(s[c2], [1, 16, 16, 32]);
+    }
+
+    #[test]
+    fn channel_mismatch_is_error() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 4] }, vec![]);
+        g.add("c", conv(3, 8, 16, 1, 1), vec![x]); // cin=8 but input c=4
+        assert!(infer(&g).is_err());
+    }
+
+    #[test]
+    fn add_shape_mismatch_is_error() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 4] }, vec![]);
+        let a = g.add("a", conv(3, 4, 8, 1, 1), vec![x]);
+        let b = g.add("b", conv(3, 4, 8, 2, 1), vec![x]); // different spatial
+        g.add("add", OpKind::Add, vec![a, b]);
+        assert!(infer(&g).is_err());
+    }
+
+    #[test]
+    fn pool_flatten_dense() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 16] }, vec![]);
+        let p = g.add("gap", OpKind::GlobalAvgPool, vec![x]);
+        let f = g.add("fl", OpKind::Flatten, vec![p]);
+        let d = g.add("fc", OpKind::Dense { cin: 16, cout: 10 }, vec![f]);
+        let s = infer(&g).unwrap();
+        assert_eq!(s[p], [1, 1, 1, 16]);
+        assert_eq!(s[f], [1, 1, 1, 16]);
+        assert_eq!(s[d], [1, 1, 1, 10]);
+    }
+
+    #[test]
+    fn depthwise_conv_shape() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 16, 16, 32] }, vec![]);
+        let dw = g.add(
+            "dw",
+            OpKind::Conv2d { kh: 3, kw: 3, cin: 32, cout: 32, stride: 1, padding: 1, groups: 32 },
+            vec![x],
+        );
+        assert_eq!(infer(&g).unwrap()[dw], [1, 16, 16, 32]);
+    }
+}

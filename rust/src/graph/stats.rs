@@ -1,0 +1,109 @@
+//! FLOPs and parameter accounting (Table 1/2 report both).
+//!
+//! FLOPs counts multiply-adds as 2 ops (the convention the paper's numbers
+//! follow: ResNet-18 = 1.81 GFLOPs at 224², MobileNetV2 = 301 MFLOPs…
+//! with the paper actually reporting MACs for the mobile nets; we expose
+//! both so the tables can print either).
+
+use super::ops::{Graph, OpKind};
+use super::shape_infer;
+
+/// (total_flops, total_params) for the whole graph at its builder batch size.
+pub fn flops_params(g: &Graph) -> (u64, u64) {
+    let shapes = shape_infer::infer(g).expect("graph must shape-infer");
+    let mut flops = 0u64;
+    let mut params = 0u64;
+    for node in &g.nodes {
+        let (f, p) = node_cost(g, node.id, &shapes);
+        flops += f;
+        params += p;
+    }
+    (flops, params)
+}
+
+/// MACs (= flops / 2 for the matmul-like ops) — the mobile-papers convention.
+pub fn macs(g: &Graph) -> u64 {
+    flops_params(g).0 / 2
+}
+
+/// (flops, params) of a single node given precomputed shapes.
+pub fn node_cost(g: &Graph, id: usize, shapes: &[shape_infer::Shape]) -> (u64, u64) {
+    let node = g.node(id);
+    match &node.op {
+        OpKind::Conv2d { kh, kw, cin, cout, groups, .. } => {
+            let [n, oh, ow, _] = shapes[id];
+            let cin_g = cin / groups;
+            let macs = (n * oh * ow * cout) as u64 * (kh * kw * cin_g) as u64;
+            let params = (kh * kw * cin_g * cout) as u64 + *cout as u64; // + bn fold
+            (2 * macs, params)
+        }
+        OpKind::Dense { cin, cout } => {
+            let n = shapes[id][0] as u64;
+            let macs = n * (*cin as u64) * (*cout as u64);
+            (2 * macs, (*cin as u64) * (*cout as u64) + *cout as u64)
+        }
+        OpKind::BatchNorm { channels } => {
+            let s = shapes[id];
+            ((s.iter().product::<usize>()) as u64 * 2, (*channels as u64) * 2)
+        }
+        OpKind::ReLU | OpKind::ReLU6 | OpKind::Add | OpKind::Softmax => {
+            ((shapes[id].iter().product::<usize>()) as u64, 0)
+        }
+        OpKind::MaxPool { k, .. } => {
+            let out: u64 = shapes[id].iter().product::<usize>() as u64;
+            (out * (k * k) as u64, 0)
+        }
+        OpKind::GlobalAvgPool => {
+            let inp: u64 = shapes[node.inputs[0]].iter().product::<usize>() as u64;
+            (inp, 0)
+        }
+        OpKind::Input { .. } | OpKind::Flatten => (0, 0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::Graph;
+
+    #[test]
+    fn conv_flops_formula() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 4] }, vec![]);
+        g.add(
+            "c",
+            OpKind::Conv2d { kh: 3, kw: 3, cin: 4, cout: 8, stride: 1, padding: 1, groups: 1 },
+            vec![x],
+        );
+        let (flops, params) = flops_params(&g);
+        // 2 * (1*8*8*8) * (3*3*4) = 36864 flops; 3*3*4*8 + 8 = 296 params
+        assert_eq!(flops, 36_864);
+        assert_eq!(params, 296);
+    }
+
+    #[test]
+    fn depthwise_cost_is_divided_by_groups() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 8] }, vec![]);
+        g.add(
+            "dw",
+            OpKind::Conv2d { kh: 3, kw: 3, cin: 8, cout: 8, stride: 1, padding: 1, groups: 8 },
+            vec![x],
+        );
+        let (flops, params) = flops_params(&g);
+        assert_eq!(flops, 2 * (8 * 8 * 8) as u64 * 9);
+        assert_eq!(params, (9 * 8 + 8) as u64);
+    }
+
+    #[test]
+    fn macs_is_half_of_matmul_flops() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 4, 4, 4] }, vec![]);
+        g.add(
+            "c",
+            OpKind::Conv2d { kh: 1, kw: 1, cin: 4, cout: 4, stride: 1, padding: 0, groups: 1 },
+            vec![x],
+        );
+        assert_eq!(macs(&g), flops_params(&g).0 / 2);
+    }
+}

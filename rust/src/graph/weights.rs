@@ -1,0 +1,180 @@
+//! Synthetic-but-seeded convolution weights for filter scoring.
+//!
+//! The paper scores filters by ℓ1 norm (§3.5, following Li et al.) and the
+//! FPGM baseline scores them by distance to the geometric median. Both need
+//! actual filter vectors. We have no trained ImageNet checkpoints in this
+//! environment, so each conv's filters are drawn from a seeded, layer-scaled
+//! He-normal distribution — preserving the *statistical* properties the
+//! scoring algorithms consume (spread of norms within a layer, scale
+//! differences across layers) while staying fully reproducible.
+//! (Substitution documented in DESIGN.md §2.)
+
+use super::ops::{Graph, OpKind};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Per-conv filter bank: `filters[f]` is the flattened HWI filter vector.
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    /// node id -> filters (cout vectors of kh*kw*cin_per_group floats).
+    pub convs: BTreeMap<usize, Vec<Vec<f32>>>,
+}
+
+impl Weights {
+    /// Generate weights for every conv in the graph.
+    pub fn generate(graph: &Graph, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut convs = BTreeMap::new();
+        for node in &graph.nodes {
+            if let OpKind::Conv2d { kh, kw, cin, cout, groups, .. } = node.op {
+                let mut layer_rng = rng.split(node.id as u64);
+                let fan_in = kh * kw * (cin / groups);
+                let std = (2.0 / fan_in as f32).sqrt();
+                let filters = (0..cout)
+                    .map(|_| (0..fan_in).map(|_| layer_rng.normal() * std).collect())
+                    .collect();
+                convs.insert(node.id, filters);
+            }
+        }
+        Weights { convs }
+    }
+
+    /// ℓ1 norm of each filter of `conv` (the paper's §3.5 criterion).
+    pub fn l1_norms(&self, conv: usize) -> Vec<f32> {
+        self.convs[&conv]
+            .iter()
+            .map(|f| f.iter().map(|w| w.abs()).sum())
+            .collect()
+    }
+
+    /// Distance of each filter to the layer's geometric median, approximated
+    /// by one Weiszfeld step from the arithmetic mean (sufficient for
+    /// ranking; exact GM iteration converges to the same order on these
+    /// distributions). Used by the FPGM baseline.
+    pub fn gm_distances(&self, conv: usize) -> Vec<f32> {
+        let filters = &self.convs[&conv];
+        let dim = filters[0].len();
+        let mut mean = vec![0.0f32; dim];
+        for f in filters {
+            for (m, w) in mean.iter_mut().zip(f) {
+                *m += w;
+            }
+        }
+        for m in &mut mean {
+            *m /= filters.len() as f32;
+        }
+        // one Weiszfeld update
+        let mut num = vec![0.0f32; dim];
+        let mut den = 0.0f32;
+        for f in filters {
+            let d = euclid(f, &mean).max(1e-8);
+            for (n, w) in num.iter_mut().zip(f) {
+                *n += w / d;
+            }
+            den += 1.0 / d;
+        }
+        let gm: Vec<f32> = num.iter().map(|n| n / den).collect();
+        filters.iter().map(|f| euclid(f, &gm)).collect()
+    }
+
+    /// Drop the given filter indices from `conv` (after a pruning decision).
+    pub fn remove_filters(&mut self, conv: usize, remove: &[usize]) {
+        let filters = self.convs.get_mut(&conv).expect("conv has weights");
+        let removed: std::collections::BTreeSet<usize> = remove.iter().copied().collect();
+        *filters = filters
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !removed.contains(i))
+            .map(|(_, f)| f.clone())
+            .collect();
+    }
+
+    /// Indices of the `k` filters with the smallest score (ties broken by
+    /// index for determinism) — the "prune smallest ℓ1 first" rule.
+    pub fn lowest_k(scores: &[f32], k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| {
+            scores[a]
+                .partial_cmp(&scores[b])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k);
+        idx.sort_unstable();
+        idx
+    }
+}
+
+fn euclid(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f32>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::Graph;
+
+    fn graph_with_conv(cout: usize) -> Graph {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 4] }, vec![]);
+        g.add(
+            "c",
+            OpKind::Conv2d { kh: 3, kw: 3, cin: 4, cout, stride: 1, padding: 1, groups: 1 },
+            vec![x],
+        );
+        g
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let g = graph_with_conv(8);
+        let w1 = Weights::generate(&g, 7);
+        let w2 = Weights::generate(&g, 7);
+        assert_eq!(w1.convs[&1], w2.convs[&1]);
+        let w3 = Weights::generate(&g, 8);
+        assert_ne!(w1.convs[&1], w3.convs[&1]);
+    }
+
+    #[test]
+    fn l1_norms_positive_and_spread() {
+        let g = graph_with_conv(16);
+        let w = Weights::generate(&g, 1);
+        let norms = w.l1_norms(1);
+        assert_eq!(norms.len(), 16);
+        assert!(norms.iter().all(|&n| n > 0.0));
+        let (min, max) = norms
+            .iter()
+            .fold((f32::MAX, f32::MIN), |(lo, hi), &n| (lo.min(n), hi.max(n)));
+        assert!(max > min, "norms should vary across filters");
+    }
+
+    #[test]
+    fn gm_distances_len() {
+        let g = graph_with_conv(8);
+        let w = Weights::generate(&g, 2);
+        let d = w.gm_distances(1);
+        assert_eq!(d.len(), 8);
+        assert!(d.iter().all(|&x| x.is_finite() && x >= 0.0));
+    }
+
+    #[test]
+    fn lowest_k_selects_smallest() {
+        let scores = vec![5.0, 1.0, 3.0, 0.5, 4.0];
+        assert_eq!(Weights::lowest_k(&scores, 2), vec![1, 3]);
+        assert_eq!(Weights::lowest_k(&scores, 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn remove_filters_shrinks_bank() {
+        let g = graph_with_conv(8);
+        let mut w = Weights::generate(&g, 3);
+        let before = w.convs[&1].clone();
+        w.remove_filters(1, &[0, 3, 7]);
+        assert_eq!(w.convs[&1].len(), 5);
+        assert_eq!(w.convs[&1][0], before[1]); // filter 1 became first
+    }
+}

@@ -1,0 +1,28 @@
+//! # CPrune — compiler-informed model pruning (reproduction)
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the paper's contribution (the CPrune search,
+//!   `pruner/`) plus every substrate it assumes: a DNN graph IR (`graph/`),
+//!   a Relay-style partitioner (`relay/`), a TVM-style loop-nest IR and
+//!   schedule space (`tir/`), an Ansor-style auto-tuner (`tuner/`), a
+//!   mobile-device latency simulator (`device/`), baseline pruners
+//!   (`baselines/`), accuracy oracles (`accuracy/`), and the end-to-end
+//!   compile pipeline (`compiler/`).
+//! * **L2/L1 (python/, build-time only)** — JAX masked CNN + Pallas GEMM
+//!   kernels, AOT-lowered to HLO text and executed from `runtime/` +
+//!   `train/` via PJRT. Python never runs on the request path.
+
+pub mod accuracy;
+pub mod baselines;
+pub mod cli;
+pub mod compiler;
+pub mod device;
+pub mod exp;
+pub mod graph;
+pub mod pruner;
+pub mod relay;
+pub mod runtime;
+pub mod tir;
+pub mod train;
+pub mod tuner;
+pub mod util;

@@ -1,0 +1,6 @@
+//! `cprune` CLI — leader entrypoint. See `cprune help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(cprune::cli::run(argv));
+}

@@ -1,0 +1,73 @@
+//! The paper's contribution: CPrune (Algorithm 1) and its support pieces.
+//!
+//! * task ordering by pruning impact — §3.3 (lives on `relay::TaskTable`);
+//! * task ↔ subgraph ↔ program table — §3.4 (`relay::TaskTable`);
+//! * iterator-split LCM pruning decision — §3.5
+//!   (`tir::Program::min_filter_prune_step`);
+//! * the iterative search loop — §3.2 ([`cprune::cprune`]).
+
+pub mod cprune;
+pub mod report;
+
+pub use cprune::{cprune, CPruneConfig, CPruneResult, IterationLog};
+
+use crate::accuracy::{Criterion, LayerPrune, PruneSummary};
+use crate::graph::model_zoo::Model;
+use crate::graph::ops::OpKind;
+use crate::graph::prune::PruneState;
+
+/// Build the oracle-facing summary of a pruning state.
+pub fn summarize(model: &Model, state: &PruneState, criterion: Criterion) -> PruneSummary {
+    let convs = model.graph.conv_ids();
+    let n = convs.len().max(1) as f64;
+    let layers = convs
+        .iter()
+        .enumerate()
+        .filter_map(|(pos, &id)| {
+            let orig = match model.graph.node(id).op {
+                OpKind::Conv2d { cout, .. } => cout,
+                _ => return None,
+            };
+            let remaining = state.cout.get(&id).copied().unwrap_or(orig);
+            Some(LayerPrune {
+                conv: id,
+                original_channels: orig,
+                remaining_channels: remaining,
+                depth: (pos as f64 + 1.0) / n,
+            })
+        })
+        .collect();
+    PruneSummary { model: model.kind, layers, criterion }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::model_zoo::ModelKind;
+
+    #[test]
+    fn summarize_covers_every_conv() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let st = PruneState::full(&m);
+        let s = summarize(&m, &st, Criterion::L1Norm);
+        assert_eq!(s.layers.len(), m.graph.conv_ids().len());
+        assert!(s.is_identity());
+        // depths ascend in (0, 1]
+        for w in s.layers.windows(2) {
+            assert!(w[0].depth < w[1].depth);
+        }
+        assert!(s.layers.last().unwrap().depth <= 1.0);
+    }
+
+    #[test]
+    fn summarize_reflects_pruning() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let mut st = PruneState::full(&m);
+        let conv = m.prunable[0];
+        st.shrink(conv, 4);
+        let s = summarize(&m, &st, Criterion::L1Norm);
+        let l = s.layers.iter().find(|l| l.conv == conv).unwrap();
+        assert_eq!(l.original_channels - l.remaining_channels, 4);
+        assert!(!s.is_identity());
+    }
+}

@@ -1,0 +1,99 @@
+//! JSON export of CPrune runs (uses the in-tree JSON writer).
+//!
+//! `cprune prune --out run.json` and the experiment harnesses use this to
+//! persist machine-readable results; the schema is stable and documented
+//! here field-by-field.
+
+use super::cprune::CPruneResult;
+use crate::graph::model_zoo::Model;
+use crate::graph::stats;
+use crate::util::json::Json;
+
+/// Serialize a CPrune run.
+///
+/// Schema:
+/// ```json
+/// {
+///   "model": "...", "device": "...",
+///   "baseline_fps": f, "final_fps": f, "fps_increase_rate": f,
+///   "final_top1": f, "final_top5": f,
+///   "macs": n, "params": n,
+///   "main_step_seconds": f, "candidates_tried": n, "programs_measured": n,
+///   "iterations": [ {"iteration": n, "pruned_convs": [n], "filters_removed": n,
+///                    "latency": f, "fps_rate": f, "short_accuracy": f} ],
+///   "final_channels": { "<conv id>": n }
+/// }
+/// ```
+pub fn to_json(model: &Model, device: &str, r: &CPruneResult) -> Json {
+    let (flops, params) = stats::flops_params(&r.final_graph);
+    let iterations = Json::Arr(
+        r.iterations
+            .iter()
+            .map(|it| {
+                Json::obj(vec![
+                    ("iteration", Json::Num(it.iteration as f64)),
+                    (
+                        "pruned_convs",
+                        Json::Arr(it.pruned_convs.iter().map(|&c| Json::Num(c as f64)).collect()),
+                    ),
+                    ("filters_removed", Json::Num(it.filters_removed as f64)),
+                    ("latency", Json::Num(it.latency)),
+                    ("fps_rate", Json::Num(it.fps_rate)),
+                    ("short_accuracy", Json::Num(it.short_accuracy)),
+                ])
+            })
+            .collect(),
+    );
+    let channels = Json::Obj(
+        r.final_state
+            .cout
+            .iter()
+            .map(|(&conv, &c)| (conv.to_string(), Json::Num(c as f64)))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("model", Json::Str(model.kind.name().to_string())),
+        ("device", Json::Str(device.to_string())),
+        ("baseline_fps", Json::Num(r.baseline.fps())),
+        ("final_fps", Json::Num(r.final_fps)),
+        ("fps_increase_rate", Json::Num(r.fps_increase_rate)),
+        ("final_top1", Json::Num(r.final_top1)),
+        ("final_top5", Json::Num(r.final_top5)),
+        ("macs", Json::Num((flops / 2) as f64)),
+        ("params", Json::Num(params as f64)),
+        ("main_step_seconds", Json::Num(r.main_step_seconds)),
+        ("candidates_tried", Json::Num(r.candidates_tried as f64)),
+        ("programs_measured", Json::Num(r.programs_measured as f64)),
+        ("iterations", iterations),
+        ("final_channels", channels),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::ProxyOracle;
+    use crate::device::{DeviceSpec, Simulator};
+    use crate::graph::model_zoo::ModelKind;
+    use crate::pruner::{cprune, CPruneConfig};
+    use crate::util::json;
+
+    #[test]
+    fn report_roundtrips_through_parser() {
+        let model = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let mut oracle = ProxyOracle::new();
+        let cfg = CPruneConfig { max_iterations: 4, ..Default::default() };
+        let r = cprune(&model, &sim, &mut oracle, &cfg);
+        let j = to_json(&model, sim.spec.name, &r);
+        let text = j.to_string();
+        let parsed = json::parse(&text).expect("report must be valid JSON");
+        assert_eq!(
+            parsed.get("model").unwrap().as_str().unwrap(),
+            model.kind.name()
+        );
+        assert!(parsed.get("final_fps").unwrap().as_f64().unwrap() > 0.0);
+        let iters = parsed.get("iterations").unwrap().as_arr().unwrap();
+        assert_eq!(iters.len(), r.iterations.len());
+    }
+}

@@ -1,0 +1,13 @@
+//! Relay-style graph partitioning and task extraction (§3.4, Fig. 4).
+//!
+//! The compiler front-end splits the DNN graph into *subgraphs* — a conv or
+//! dense anchor plus the elementwise epilogue fused onto it (BN, ReLU,
+//! residual add) — and deduplicates structurally identical subgraphs into
+//! *tasks*: the unit the auto-tuner optimizes once and reuses everywhere.
+//! CPrune's task/subgraph/program table is built on top of this mapping.
+
+pub mod partition;
+pub mod task;
+
+pub use partition::{partition, Subgraph};
+pub use task::{TaskId, TaskInfo, TaskTable};

@@ -1,0 +1,199 @@
+//! Graph → subgraph partitioning.
+//!
+//! Mirrors TVM/Relay operator fusion for the patterns our model zoo
+//! produces: every conv/dense node anchors a subgraph; the chain of
+//! single-consumer elementwise ops hanging off it (batch-norm, ReLU,
+//! ReLU6, residual add, softmax) is fused into the subgraph's epilogue.
+//! Remaining ops (pooling, flatten) are bookkept as `overhead` nodes —
+//! they contribute a fixed small latency in the device model but are not
+//! tunable tasks.
+
+use super::task::{TaskTable};
+use crate::graph::ops::{Graph, NodeId, OpKind};
+use crate::graph::shape_infer;
+use crate::tir::Workload;
+
+/// A fused region: one anchor (conv/dense) + elementwise epilogue.
+#[derive(Clone, Debug)]
+pub struct Subgraph {
+    pub id: usize,
+    pub anchor: NodeId,
+    /// All node ids in the region (anchor first, epilogue in fusion order).
+    pub nodes: Vec<NodeId>,
+    /// The iteration-domain description handed to the tuner.
+    pub workload: Workload,
+}
+
+/// Partition result: subgraphs + non-fused overhead ops.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub subgraphs: Vec<Subgraph>,
+    pub overhead_nodes: Vec<NodeId>,
+}
+
+/// Partition `g` into fused subgraphs (Fig. 4's ①).
+pub fn partition(g: &Graph) -> Partition {
+    let shapes = shape_infer::infer(g).expect("graph must shape-infer");
+    let mut claimed = vec![false; g.nodes.len()];
+    let mut subgraphs = Vec::new();
+
+    for node in &g.nodes {
+        let anchored = matches!(node.op, OpKind::Conv2d { .. } | OpKind::Dense { .. });
+        if !anchored {
+            continue;
+        }
+        let mut nodes = vec![node.id];
+        let mut epilogue: Vec<&'static str> = Vec::new();
+        claimed[node.id] = true;
+
+        // Greedily fuse the single-consumer elementwise chain.
+        let mut cur = node.id;
+        loop {
+            let consumers = g.consumers(cur);
+            if consumers.len() != 1 {
+                break;
+            }
+            let c = consumers[0];
+            let fuse = match g.node(c).op {
+                OpKind::BatchNorm { .. } => Some("bn"),
+                OpKind::ReLU => Some("relu"),
+                OpKind::ReLU6 => Some("relu6"),
+                OpKind::Softmax => Some("softmax"),
+                // A residual add fuses into the branch that *computes* last
+                // (the conv branch); the skip side just feeds a buffer.
+                OpKind::Add => Some("add"),
+                _ => None,
+            };
+            match fuse {
+                Some(tag) if !claimed[c] => {
+                    claimed[c] = true;
+                    nodes.push(c);
+                    epilogue.push(tag);
+                    cur = c;
+                    // after an add, allow one trailing relu (resnet pattern)
+                    if tag == "add" {
+                        let next = g.consumers(cur);
+                        if next.len() == 1 {
+                            if let OpKind::ReLU = g.node(next[0]).op {
+                                claimed[next[0]] = true;
+                                nodes.push(next[0]);
+                                epilogue.push("relu");
+                            }
+                        }
+                        break;
+                    }
+                }
+                _ => break,
+            }
+        }
+
+        let workload = Workload::from_conv(&node.op, shapes[node.id], epilogue);
+        subgraphs.push(Subgraph { id: subgraphs.len(), anchor: node.id, nodes, workload });
+    }
+
+    let overhead_nodes = g
+        .nodes
+        .iter()
+        .filter(|n| !claimed[n.id] && !matches!(n.op, OpKind::Input { .. }))
+        .map(|n| n.id)
+        .collect();
+
+    Partition { subgraphs, overhead_nodes }
+}
+
+/// Partition + deduplicate into the task table (Fig. 4's ④ without the
+/// tuned programs, which the tuner fills in).
+pub fn extract_tasks(g: &Graph) -> (Partition, TaskTable) {
+    let part = partition(g);
+    let mut table = TaskTable::new();
+    for sg in &part.subgraphs {
+        table.add_subgraph(sg.id, &sg.workload);
+    }
+    (part, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::model_zoo::{Model, ModelKind};
+
+    #[test]
+    fn every_conv_and_dense_is_anchored_once() {
+        for kind in [ModelKind::ResNet18ImageNet, ModelKind::MobileNetV2ImageNet] {
+            let m = Model::build(kind, 0);
+            let part = partition(&m.graph);
+            let anchors: Vec<usize> = part.subgraphs.iter().map(|s| s.anchor).collect();
+            let mut expected = m.graph.conv_ids();
+            expected.extend(
+                m.graph
+                    .nodes
+                    .iter()
+                    .filter(|n| matches!(n.op, OpKind::Dense { .. }))
+                    .map(|n| n.id),
+            );
+            assert_eq!(anchors.len(), expected.len(), "{kind:?}");
+            for a in expected {
+                assert!(anchors.contains(&a), "{kind:?}: anchor {a} missing");
+            }
+        }
+    }
+
+    #[test]
+    fn epilogues_capture_bn_relu() {
+        let m = Model::build(ModelKind::Vgg16Cifar, 0);
+        let part = partition(&m.graph);
+        // first VGG conv: conv+bn+relu fused
+        let sg = &part.subgraphs[0];
+        assert_eq!(sg.workload.epilogue, vec!["bn", "relu"]);
+        assert_eq!(sg.nodes.len(), 3);
+    }
+
+    #[test]
+    fn resnet_block_add_fuses_with_trailing_relu() {
+        let m = Model::build(ModelKind::ResNet18ImageNet, 0);
+        let part = partition(&m.graph);
+        // some subgraph must end with ... bn, add, relu (block second conv)
+        assert!(
+            part.subgraphs
+                .iter()
+                .any(|s| s.workload.epilogue == vec!["bn", "add", "relu"]),
+            "no conv+bn+add+relu fusion found"
+        );
+    }
+
+    #[test]
+    fn no_node_claimed_twice() {
+        let m = Model::build(ModelKind::MnasNet10ImageNet, 0);
+        let part = partition(&m.graph);
+        let mut seen = std::collections::BTreeSet::new();
+        for sg in &part.subgraphs {
+            for &n in &sg.nodes {
+                assert!(seen.insert(n), "node {n} in two subgraphs");
+            }
+        }
+    }
+
+    #[test]
+    fn task_dedup_matches_repeated_blocks() {
+        // ResNet-18 has repeated identical blocks → tasks < subgraphs.
+        let m = Model::build(ModelKind::ResNet18ImageNet, 0);
+        let (part, table) = extract_tasks(&m.graph);
+        assert!(table.len() < part.subgraphs.len());
+        // and every subgraph maps to exactly one task
+        let covered: usize = table.tasks().map(|t| t.subgraphs.len()).sum();
+        assert_eq!(covered, part.subgraphs.len());
+    }
+
+    #[test]
+    fn overhead_nodes_are_pools_and_flatten() {
+        let m = Model::build(ModelKind::Vgg16Cifar, 0);
+        let part = partition(&m.graph);
+        for &id in &part.overhead_nodes {
+            let mn = m.graph.node(id).op.mnemonic();
+            assert!(
+                matches!(mn, "maxpool" | "gavgpool" | "flatten"),
+                "unexpected overhead node {mn}"
+            );
+        }
+    }
+}

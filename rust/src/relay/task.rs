@@ -1,0 +1,197 @@
+//! Task table: the task ↔ subgraph ↔ fastest-program relationship (§3.4).
+//!
+//! Structurally identical subgraphs (same workload extents, strides and
+//! epilogue — e.g. Fig. 4's S11 and S14) share one task: the tuner
+//! optimizes the task once and the result applies to all its subgraphs.
+//! After tuning, each task records its fastest [`Program`] and measured
+//! latency; CPrune reads both for task ordering (§3.3) and the pruning
+//! decision (§3.5).
+
+use crate::tir::{Program, Workload};
+
+/// Task index within a [`TaskTable`].
+pub type TaskId = usize;
+
+/// One deduplicated tuning task.
+#[derive(Clone, Debug)]
+pub struct TaskInfo {
+    pub id: TaskId,
+    pub workload: Workload,
+    /// Subgraph ids associated with this task.
+    pub subgraphs: Vec<usize>,
+    /// Fastest program found by tuning (None before tuning).
+    pub best_program: Option<Program>,
+    /// Measured latency of the fastest program, seconds per execution.
+    pub best_latency: Option<f64>,
+}
+
+impl TaskInfo {
+    /// §3.3 pruning impact: task latency × number of associated subgraphs.
+    /// Untuned tasks have zero impact (they cannot be ranked yet).
+    pub fn pruning_impact(&self) -> f64 {
+        self.best_latency.unwrap_or(0.0) * self.subgraphs.len() as f64
+    }
+}
+
+/// The table of ③/④ in Fig. 3: tasks, their subgraphs and best programs.
+#[derive(Clone, Debug, Default)]
+pub struct TaskTable {
+    tasks: Vec<TaskInfo>,
+}
+
+impl TaskTable {
+    pub fn new() -> TaskTable {
+        TaskTable { tasks: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn get(&self, id: TaskId) -> &TaskInfo {
+        &self.tasks[id]
+    }
+
+    pub fn get_mut(&mut self, id: TaskId) -> &mut TaskInfo {
+        &mut self.tasks[id]
+    }
+
+    pub fn tasks(&self) -> impl Iterator<Item = &TaskInfo> {
+        self.tasks.iter()
+    }
+
+    /// Register a subgraph; returns the task it joined (deduplicating by
+    /// workload structural identity).
+    pub fn add_subgraph(&mut self, subgraph_id: usize, workload: &Workload) -> TaskId {
+        if let Some(t) = self.tasks.iter_mut().find(|t| t.workload.same_task(workload)) {
+            t.subgraphs.push(subgraph_id);
+            return t.id;
+        }
+        let id = self.tasks.len();
+        self.tasks.push(TaskInfo {
+            id,
+            workload: workload.clone(),
+            subgraphs: vec![subgraph_id],
+            best_program: None,
+            best_latency: None,
+        });
+        id
+    }
+
+    /// Store a tuning result for a task.
+    pub fn record_tuned(&mut self, id: TaskId, program: Program, latency: f64) {
+        let t = &mut self.tasks[id];
+        t.best_program = Some(program);
+        t.best_latency = Some(latency);
+    }
+
+    /// The task owning a given subgraph id.
+    pub fn task_of_subgraph(&self, subgraph_id: usize) -> Option<TaskId> {
+        self.tasks
+            .iter()
+            .find(|t| t.subgraphs.contains(&subgraph_id))
+            .map(|t| t.id)
+    }
+
+    /// Tasks ordered by descending pruning impact (§3.3). Ties broken by id
+    /// for determinism.
+    pub fn by_pruning_impact(&self) -> Vec<TaskId> {
+        let mut ids: Vec<TaskId> = (0..self.tasks.len()).collect();
+        ids.sort_by(|&a, &b| {
+            self.tasks[b]
+                .pruning_impact()
+                .partial_cmp(&self.tasks[a].pruning_impact())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        ids
+    }
+
+    /// Total model latency: Σ task latency × #subgraphs (every subgraph
+    /// executes once per inference).
+    pub fn model_latency(&self) -> f64 {
+        self.tasks
+            .iter()
+            .map(|t| t.best_latency.unwrap_or(0.0) * t.subgraphs.len() as f64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::OpKind;
+
+    fn wl(ff: usize, oh: usize) -> Workload {
+        Workload::from_conv(
+            &OpKind::Conv2d { kh: 3, kw: 3, cin: 32, cout: ff, stride: 1, padding: 1, groups: 1 },
+            [1, oh, oh, ff],
+            vec!["bn", "relu"],
+        )
+    }
+
+    fn prog(w: &Workload) -> Program {
+        Program::naive(w)
+    }
+
+    #[test]
+    fn dedup_identical_workloads() {
+        let mut t = TaskTable::new();
+        let a = t.add_subgraph(0, &wl(64, 14));
+        let b = t.add_subgraph(1, &wl(64, 14));
+        let c = t.add_subgraph(2, &wl(128, 14));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(a).subgraphs, vec![0, 1]);
+    }
+
+    #[test]
+    fn pruning_impact_ordering_matches_fig3_example() {
+        // Fig. 3: T1 = 0.954 x 2 = 1.908, T2 = 0.473 x 3 = 1.419,
+        // T3 = 1.632 x 1 = 1.632 → order T1, T3, T2.
+        let mut t = TaskTable::new();
+        let w1 = wl(64, 14);
+        let w2 = wl(128, 14);
+        let w3 = wl(256, 14);
+        let t1 = t.add_subgraph(0, &w1);
+        t.add_subgraph(1, &w1);
+        let t2 = t.add_subgraph(2, &w2);
+        t.add_subgraph(3, &w2);
+        t.add_subgraph(4, &w2);
+        let t3 = t.add_subgraph(5, &w3);
+        t.record_tuned(t1, prog(&w1), 0.954);
+        t.record_tuned(t2, prog(&w2), 0.473);
+        t.record_tuned(t3, prog(&w3), 1.632);
+        assert_eq!(t.by_pruning_impact(), vec![t1, t3, t2]);
+    }
+
+    #[test]
+    fn model_latency_weights_by_subgraph_count() {
+        let mut t = TaskTable::new();
+        let w1 = wl(64, 14);
+        let id = t.add_subgraph(0, &w1);
+        t.add_subgraph(1, &w1);
+        t.record_tuned(id, prog(&w1), 2.0);
+        assert_eq!(t.model_latency(), 4.0);
+    }
+
+    #[test]
+    fn task_of_subgraph_lookup() {
+        let mut t = TaskTable::new();
+        let a = t.add_subgraph(7, &wl(64, 14));
+        assert_eq!(t.task_of_subgraph(7), Some(a));
+        assert_eq!(t.task_of_subgraph(99), None);
+    }
+
+    #[test]
+    fn untuned_tasks_have_zero_impact() {
+        let mut t = TaskTable::new();
+        t.add_subgraph(0, &wl(64, 14));
+        assert_eq!(t.get(0).pruning_impact(), 0.0);
+    }
+}

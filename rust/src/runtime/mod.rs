@@ -1,0 +1,99 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 via the PJRT C API). The
+//! interchange format is HLO *text*: jax ≥ 0.5 emits serialized protos
+//! with 64-bit instruction ids that this XLA rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md). Python runs only
+//! at build time (`make artifacts`); this module is the entire request
+//! path.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT client + the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+/// One compiled executable (e.g. `train_step`, `eval_batch`).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<artifact_dir>/<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+
+    /// Path helper for non-HLO artifacts (manifest, params).
+    pub fn artifact(&self, file: &str) -> PathBuf {
+        self.artifact_dir.join(file)
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    /// (aot.py lowers with `return_tuple=True`, so the single output is
+    /// always a tuple — even for one result.)
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        out.to_tuple().context("decomposing output tuple")
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).context("reshaping literal")
+}
+
+/// Build an i32 literal (labels).
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).context("reshaping literal")
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read a literal back to Vec<f32>.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("reading literal as f32")
+}

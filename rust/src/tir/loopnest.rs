@@ -1,0 +1,135 @@
+//! Conv workload description: the iteration domain a task's programs tile.
+
+use crate::graph::ops::OpKind;
+use crate::graph::shape_infer::Shape;
+
+/// The iteration extents of one conv-like task (a fused
+/// conv(+bn+act[+add]) subgraph's anchor computation).
+///
+/// A dense conv iterates `n × oh × ow × ff × (ic/groups) × kh × kw`; the
+/// tuner splits the parallel axes (`oh`, `ow`, `ff`) and reduce axes.
+/// Dense layers are modeled as 1×1 convs over a 1×1 spatial domain.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Workload {
+    pub n: usize,
+    pub oh: usize,
+    pub ow: usize,
+    /// Output channels — the filter dimension CPrune prunes.
+    pub ff: usize,
+    /// Input channels per group (reduce axis).
+    pub ic: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub groups: usize,
+    pub stride: usize,
+    /// Fused epilogue ops (bn/relu/add) — cheap, but they shape the
+    /// structural hash: tasks only merge when epilogues match (§3.4).
+    pub epilogue: Vec<&'static str>,
+}
+
+impl Workload {
+    /// Build from a conv node's op + inferred output shape.
+    pub fn from_conv(op: &OpKind, out_shape: Shape, epilogue: Vec<&'static str>) -> Workload {
+        match *op {
+            OpKind::Conv2d { kh, kw, cin, cout, stride, groups, .. } => Workload {
+                n: out_shape[0],
+                oh: out_shape[1],
+                ow: out_shape[2],
+                ff: cout,
+                ic: cin / groups,
+                kh,
+                kw,
+                groups,
+                stride,
+                epilogue,
+            },
+            OpKind::Dense { cin, cout } => Workload {
+                n: out_shape[0],
+                oh: 1,
+                ow: 1,
+                ff: cout,
+                ic: cin,
+                kh: 1,
+                kw: 1,
+                groups: 1,
+                stride: 1,
+                epilogue,
+            },
+            ref other => panic!("Workload::from_conv on non-conv op {other:?}"),
+        }
+    }
+
+    /// Multiply-accumulates of one execution of the task.
+    pub fn macs(&self) -> u64 {
+        (self.n * self.oh * self.ow * self.ff) as u64 * (self.ic * self.kh * self.kw) as u64
+    }
+
+    /// Bytes of unique data touched (f32): input patch + filters + output.
+    pub fn working_set_bytes(&self) -> u64 {
+        let input = self.n
+            * (self.oh * self.stride + self.kh)
+            * (self.ow * self.stride + self.kw)
+            * self.ic
+            * self.groups;
+        let filters = self.kh * self.kw * self.ic * self.ff;
+        let output = self.n * self.oh * self.ow * self.ff;
+        ((input + filters + output) * 4) as u64
+    }
+
+    /// True when this is a depthwise conv (one filter per input channel).
+    pub fn is_depthwise(&self) -> bool {
+        self.groups > 1 && self.ic == 1
+    }
+
+    /// Structural identity used for task deduplication (§3.4): two
+    /// subgraphs map to the same task iff every extent, stride and
+    /// epilogue op matches. Derives from `PartialEq + Hash` on the struct.
+    pub fn same_task(&self, other: &Workload) -> bool {
+        self == other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv_op() -> OpKind {
+        OpKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: 128, stride: 2, padding: 1, groups: 1 }
+    }
+
+    #[test]
+    fn from_conv_extents() {
+        let w = Workload::from_conv(&conv_op(), [1, 28, 28, 128], vec!["bn", "relu"]);
+        assert_eq!((w.oh, w.ow, w.ff, w.ic, w.kh), (28, 28, 128, 64, 3));
+        assert_eq!(w.macs(), (28 * 28 * 128) as u64 * (64 * 9) as u64);
+    }
+
+    #[test]
+    fn dense_as_1x1() {
+        let w = Workload::from_conv(&OpKind::Dense { cin: 512, cout: 10 }, [1, 1, 1, 10], vec![]);
+        assert_eq!((w.ff, w.ic, w.oh), (10, 512, 1));
+    }
+
+    #[test]
+    fn depthwise_detection() {
+        let op = OpKind::Conv2d { kh: 3, kw: 3, cin: 32, cout: 32, stride: 1, padding: 1, groups: 32 };
+        let w = Workload::from_conv(&op, [1, 14, 14, 32], vec![]);
+        assert!(w.is_depthwise());
+        assert_eq!(w.ic, 1);
+    }
+
+    #[test]
+    fn task_identity_includes_epilogue() {
+        let a = Workload::from_conv(&conv_op(), [1, 28, 28, 128], vec!["bn", "relu"]);
+        let b = Workload::from_conv(&conv_op(), [1, 28, 28, 128], vec!["bn"]);
+        let c = Workload::from_conv(&conv_op(), [1, 28, 28, 128], vec!["bn", "relu"]);
+        assert!(!a.same_task(&b));
+        assert!(a.same_task(&c));
+    }
+
+    #[test]
+    fn working_set_positive() {
+        let w = Workload::from_conv(&conv_op(), [1, 28, 28, 128], vec![]);
+        assert!(w.working_set_bytes() > 0);
+    }
+}

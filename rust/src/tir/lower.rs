@@ -1,0 +1,167 @@
+//! Program rendering: lower a schedule to TVM-style pseudo-code text.
+//!
+//! The paper's Fig. 5 shows generated programs as nested `for` loops with
+//! split iterators (`ff.3`, `ax3`, vectorize/parallel annotations); CPrune
+//! *reads* that structure. This module renders our [`Program`]s the same
+//! way — used by the `program_structure` example, debug logging, and the
+//! docs — and is the ground truth for how split trees map to loops.
+
+use super::loopnest::Workload;
+use super::program::Program;
+use std::fmt::Write as _;
+
+/// Render a program over a workload as nested-loop pseudo-code.
+pub fn render(w: &Workload, p: &Program) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "// task: conv {}x{} cin={} ff={} oh={} ow={} stride={} epilogue={:?}",
+        w.kh, w.kw, w.ic, w.ff, w.oh, w.ow, w.stride, w.epilogue
+    );
+    let _ = writeln!(
+        out,
+        "// schedule: parallel={} vectorize={} unroll={}",
+        p.parallel, p.vectorize, p.unroll
+    );
+
+    let mut depth = 0;
+    let indent = |d: usize| "  ".repeat(d);
+
+    // parallel outer spatial/ff loops
+    let sp = &p.spatial_splits;
+    let ff = &p.ff_splits;
+    let _ = writeln!(
+        out,
+        "{}parallel for sp.0 in 0..{} {{  // spatial outer",
+        indent(depth),
+        sp.first().copied().unwrap_or(1)
+    );
+    depth += 1;
+    let _ = writeln!(
+        out,
+        "{}for ff.0 in 0..{} {{  // filter outer",
+        indent(depth),
+        ff.first().copied().unwrap_or(1)
+    );
+    depth += 1;
+    for (i, f) in sp.iter().enumerate().skip(1) {
+        let _ = writeln!(out, "{}for sp.{} in 0..{} {{", indent(depth), i, f);
+        depth += 1;
+    }
+    for (i, f) in ff.iter().enumerate().skip(1) {
+        let last = i + 1 == ff.len();
+        let ann = if last && p.vectorize > 1 {
+            format!("  // vectorize x{}", p.vectorize)
+        } else {
+            String::new()
+        };
+        let _ = writeln!(out, "{}for ff.{} in 0..{} {{{}", indent(depth), i, f, ann);
+        depth += 1;
+    }
+    for (i, f) in p.ic_splits.iter().enumerate() {
+        let _ = writeln!(out, "{}for ic.{} in 0..{} {{  // reduce", indent(depth), i, f);
+        depth += 1;
+    }
+    let _ = writeln!(
+        out,
+        "{}for kh in 0..{} {{ for kw in 0..{} {{  // unroll x{}",
+        indent(depth),
+        w.kh,
+        w.kw,
+        p.unroll
+    );
+    depth += 1;
+    let _ = writeln!(
+        out,
+        "{}acc[ff] += input[sp, ic, kh, kw] * filter[ff, ic, kh, kw];",
+        indent(depth)
+    );
+    depth -= 1;
+    let _ = writeln!(out, "{}}} }}", indent(depth));
+    for _ in 0..p.ic_splits.len() + ff.len().saturating_sub(1) + sp.len().saturating_sub(1) {
+        depth = depth.saturating_sub(1);
+        let _ = writeln!(out, "{}}}", indent(depth));
+    }
+    // cache-write / layout stage (the ax3 iterator of Fig. 5)
+    let _ = writeln!(out, "{}// cache write (layout stage)", indent(depth));
+    for (i, f) in p.ax3_splits.iter().enumerate() {
+        let _ = writeln!(out, "{}for ax3.{} in 0..{} {{", indent(depth), i, f);
+        depth += 1;
+    }
+    let _ = writeln!(out, "{}output[sp, ax3] = epilogue(acc[ax3]);", indent(depth));
+    for _ in 0..p.ax3_splits.len() {
+        depth = depth.saturating_sub(1);
+        let _ = writeln!(out, "{}}}", indent(depth));
+    }
+    depth = depth.saturating_sub(1);
+    let _ = writeln!(out, "{}}}", indent(depth));
+    depth = depth.saturating_sub(1);
+    let _ = writeln!(out, "{}}}", indent(depth));
+    let _ = writeln!(
+        out,
+        "// min structure-preserving prune step (LCM rule): {}",
+        p.min_filter_prune_step()
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::OpKind;
+
+    fn wl() -> Workload {
+        Workload::from_conv(
+            &OpKind::Conv2d { kh: 7, kw: 7, cin: 512, cout: 512, stride: 1, padding: 3, groups: 1 },
+            [1, 7, 7, 512],
+            vec!["bn", "relu"],
+        )
+    }
+
+    #[test]
+    fn renders_fig5b_like_program() {
+        let p = Program {
+            spatial_splits: vec![49],
+            ff_splits: vec![4, 8, 16],
+            ax3_splits: vec![4, 8, 16],
+            ic_splits: vec![512],
+            parallel: 8,
+            vectorize: 16,
+            unroll: 2,
+        };
+        let text = render(&wl(), &p);
+        assert!(text.contains("for ff.1 in 0..8"));
+        assert!(text.contains("for ff.2 in 0..16 {  // vectorize x16"));
+        assert!(text.contains("for ax3.2 in 0..16"));
+        assert!(text.contains("prune step (LCM rule): 32"));
+    }
+
+    #[test]
+    fn renders_fig5c_like_program() {
+        let p = Program {
+            spatial_splits: vec![49],
+            ff_splits: vec![4, 128],
+            ax3_splits: vec![512, 1],
+            ic_splits: vec![512],
+            parallel: 1,
+            vectorize: 1,
+            unroll: 1,
+        };
+        let text = render(&wl(), &p);
+        assert!(text.contains("for ff.1 in 0..128"));
+        assert!(text.contains("for ax3.0 in 0..512"));
+        assert!(text.contains("prune step (LCM rule): 4"));
+    }
+
+    #[test]
+    fn braces_balance() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..50 {
+            let p = Program::sample(&wl(), &mut rng);
+            let text = render(&wl(), &p);
+            let open = text.matches('{').count();
+            let close = text.matches('}').count();
+            assert_eq!(open, close, "unbalanced braces:\n{text}");
+        }
+    }
+}

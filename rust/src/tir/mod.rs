@@ -1,0 +1,22 @@
+//! Loop-nest tensor IR: the compiler substrate the paper's §3.5 reads.
+//!
+//! A TVM/Ansor schedule for a conv task is, at its core, a set of *split
+//! trees* over the loop iterators plus parallel/vectorize/unroll
+//! annotations. CPrune consumes exactly two pieces of this structure:
+//!
+//! 1. the split trees of the two filter-related iterators (`ff` in the
+//!    compute loop and `ax3` in the layout/cache-write stage — Fig. 5),
+//!    from which it derives the minimum prunable filter step, and
+//! 2. the program's overall arrangement, which must be *preserved* across
+//!    pruning so the compiler regenerates equally-efficient code.
+//!
+//! [`Workload`] describes a conv task's extents; [`Program`] is one
+//! concrete schedule; [`Program::min_filter_prune_step`] is the paper's
+//! LCM rule.
+
+pub mod loopnest;
+pub mod lower;
+pub mod program;
+
+pub use loopnest::Workload;
+pub use program::Program;

@@ -1,0 +1,371 @@
+//! Schedules ("programs") over a conv workload, and the paper's §3.5
+//! minimum-filter-prune-step rule.
+//!
+//! A [`Program`] captures what TVM's generated code looks like for one
+//! task: split trees over the spatial axes, the *two* filter-related
+//! iterators (`ff` in the compute nest, `ax3` in the cache-write/layout
+//! stage — Fig. 5 (b)/(c)), a reduce-axis split, and parallel /
+//! vectorize / unroll annotations.
+
+use super::loopnest::Workload;
+use crate::util::rng::Rng;
+use crate::util::{divisors, lcm};
+
+/// One concrete schedule for a workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    /// Split tree of the fused spatial axis (oh*ow): outer→inner factors.
+    pub spatial_splits: Vec<usize>,
+    /// Split tree of the compute-nest filter iterator `ff` (Fig. 5 (b): 512→[4,8,16]).
+    pub ff_splits: Vec<usize>,
+    /// Split tree of the layout-stage filter iterator `ax3`.
+    pub ax3_splits: Vec<usize>,
+    /// Split tree of the reduce axis ic (kh/kw stay unsplit).
+    pub ic_splits: Vec<usize>,
+    /// Number of outer iterations bound to worker threads / cores.
+    pub parallel: usize,
+    /// Vector width applied to the innermost axis (1 = scalar).
+    pub vectorize: usize,
+    /// Innermost unroll factor.
+    pub unroll: usize,
+}
+
+impl Program {
+    /// The naive untuned schedule (what a "default" / TFLite-like library
+    /// path runs): no tiling beyond the trivial, scalar inner loop.
+    pub fn naive(w: &Workload) -> Program {
+        Program {
+            spatial_splits: vec![w.oh * w.ow],
+            ff_splits: vec![w.ff],
+            ax3_splits: vec![w.ff, 1],
+            ic_splits: vec![w.ic],
+            parallel: 1,
+            vectorize: 1,
+            unroll: 1,
+        }
+    }
+
+    /// Sample a random valid schedule (Ansor-style sketch sampling).
+    pub fn sample(w: &Workload, rng: &mut Rng) -> Program {
+        let spatial = w.oh * w.ow;
+        let prog = Program {
+            spatial_splits: sample_splits(spatial, 3, rng),
+            ff_splits: sample_splits(w.ff, 3, rng),
+            ax3_splits: sample_splits(w.ff, 3, rng),
+            ic_splits: sample_splits(w.ic, 2, rng),
+            parallel: *rng.choose(&[1, 2, 4, 8]),
+            vectorize: *rng.choose(&[1, 4, 8, 16]),
+            unroll: *rng.choose(&[1, 2, 4, 16]),
+        };
+        debug_assert!(prog.validate(w).is_ok());
+        prog
+    }
+
+    /// Mutate one schedule decision (evolutionary-search step).
+    pub fn mutate(&self, w: &Workload, rng: &mut Rng) -> Program {
+        let mut p = self.clone();
+        match rng.below(6) {
+            0 => p.spatial_splits = sample_splits(w.oh * w.ow, 3, rng),
+            1 => p.ff_splits = sample_splits(w.ff, 3, rng),
+            2 => p.ax3_splits = sample_splits(w.ff, 3, rng),
+            3 => p.ic_splits = sample_splits(w.ic, 2, rng),
+            4 => p.parallel = *rng.choose(&[1, 2, 4, 8]),
+            _ => {
+                p.vectorize = *rng.choose(&[1, 4, 8, 16]);
+                p.unroll = *rng.choose(&[1, 2, 4, 16]);
+            }
+        }
+        p
+    }
+
+    /// Check split products against the workload extents.
+    ///
+    /// Split products may *pad*: `extent ≤ Π factors < 2·extent` (TVM
+    /// handles non-dividing tile sizes with tail iterations; the padded
+    /// fraction is wasted work the simulator charges for). Exact products
+    /// are the zero-waste special case.
+    pub fn validate(&self, w: &Workload) -> Result<(), String> {
+        let check = |name: &str, splits: &[usize], extent: usize| {
+            let prod: usize = splits.iter().product();
+            if prod >= extent
+                && prod < 2 * extent.max(1)
+                && !splits.is_empty()
+                && splits.iter().all(|&f| f >= 1)
+            {
+                Ok(())
+            } else {
+                Err(format!("{name} splits {splits:?} do not cover {extent}"))
+            }
+        };
+        check("spatial", &self.spatial_splits, w.oh * w.ow)?;
+        check("ff", &self.ff_splits, w.ff)?;
+        check("ax3", &self.ax3_splits, w.ff)?;
+        check("ic", &self.ic_splits, w.ic)?;
+        Ok(())
+    }
+
+    /// Wasted-work ratios (≥ 1) from padded tiling: (spatial, ff).
+    pub fn waste(&self, w: &Workload) -> (f64, f64) {
+        let ratio = |splits: &[usize], extent: usize| {
+            let prod: usize = splits.iter().product();
+            prod as f64 / extent.max(1) as f64
+        };
+        (
+            ratio(&self.spatial_splits, w.oh * w.ow).max(1.0),
+            ratio(&self.ff_splits, w.ff).max(1.0),
+        )
+    }
+
+    /// §3.5: the minimum number of filters that can be pruned while
+    /// preserving this program's structure.
+    ///
+    /// For each filter iterator, the cheapest structure-preserving
+    /// reduction shrinks the *largest* factor by one unit, removing
+    /// `Π factors / max_factor` filters; the step must satisfy both
+    /// iterators at once, hence the LCM:
+    /// `LCM(Πa/max(a), Πb/max(b))` — Fig. 5 (b) gives LCM(32,32)=32,
+    /// Fig. 5 (c) gives LCM(4,1)=4.
+    pub fn min_filter_prune_step(&self) -> usize {
+        let step = |splits: &[usize]| -> u64 {
+            let prod: u64 = splits.iter().map(|&f| f as u64).product();
+            let max = splits.iter().copied().max().unwrap_or(1) as u64;
+            prod / max
+        };
+        lcm(step(&self.ff_splits), step(&self.ax3_splits)) as usize
+    }
+
+    /// Rewrite the filter split trees for a reduced channel count, keeping
+    /// the tree *shape* (the preserved structure CPrune relies on): the
+    /// largest factor of each tree absorbs the reduction.
+    ///
+    /// Returns `None` if `new_ff` is incompatible with the structure
+    /// (i.e. not reachable by shrinking the max factors).
+    pub fn with_pruned_filters(&self, new_ff: usize) -> Option<Program> {
+        let shrink = |splits: &[usize]| -> Option<Vec<usize>> {
+            let prod: usize = splits.iter().product();
+            if prod == new_ff {
+                return Some(splits.to_vec());
+            }
+            let (max_i, &max_f) = splits
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &f)| f)?;
+            let rest: usize = prod / max_f;
+            if rest == 0 || new_ff % rest != 0 {
+                return None;
+            }
+            let new_max = new_ff / rest;
+            if new_max == 0 {
+                return None;
+            }
+            let mut out = splits.to_vec();
+            out[max_i] = new_max;
+            Some(out)
+        };
+        Some(Program {
+            ff_splits: shrink(&self.ff_splits)?,
+            ax3_splits: shrink(&self.ax3_splits)?,
+            ..self.clone()
+        })
+    }
+
+    /// Inner tile extents (spatial_tile, ff_tile): the innermost factors,
+    /// which determine the register/cache footprint the simulator models.
+    pub fn inner_tile(&self) -> (usize, usize) {
+        (
+            *self.spatial_splits.last().unwrap_or(&1),
+            *self.ff_splits.last().unwrap_or(&1),
+        )
+    }
+}
+
+/// Sample a split of `extent` into exactly `nparts` factors (outer→inner).
+///
+/// Two families, mirroring TVM's split primitive:
+/// * exact divisor chains (zero waste), and
+/// * padded tilings — a power-of-two inner tile with `ceil(extent/tile)`
+///   outer iterations (waste < 2×), which keeps awkward extents (primes,
+///   e.g. a 179-channel pruned conv) tileable.
+pub fn sample_splits(extent: usize, nparts: usize, rng: &mut Rng) -> Vec<usize> {
+    assert!(extent >= 1 && nparts >= 1);
+    if nparts == 1 {
+        return vec![extent];
+    }
+    if rng.f32() < 0.5 {
+        // exact divisor chain
+        let mut rem = extent;
+        let mut out = Vec::with_capacity(nparts);
+        for _ in 0..nparts - 1 {
+            let divs = divisors(rem);
+            let f = *rng.choose(&divs);
+            out.push(f);
+            rem /= f;
+        }
+        out.push(rem);
+        out
+    } else {
+        // padded: choose an inner power-of-two tile ≤ extent, cover the
+        // rest with ceil-division, then split the outer part exactly.
+        let max_pow = (usize::BITS - 1 - extent.leading_zeros()) as usize; // floor(log2)
+        let tile = 1usize << rng.below(max_pow + 1).min(8);
+        let outer = extent.div_ceil(tile);
+        let mut out = sample_splits_exact(outer, nparts - 1, rng);
+        out.push(tile);
+        out
+    }
+}
+
+/// Exact divisor-chain split (helper for the padded family's outer part).
+fn sample_splits_exact(extent: usize, nparts: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut rem = extent;
+    let mut out = Vec::with_capacity(nparts);
+    for _ in 0..nparts.saturating_sub(1) {
+        let divs = divisors(rem);
+        let f = *rng.choose(&divs);
+        out.push(f);
+        rem /= f;
+    }
+    out.push(rem);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::OpKind;
+
+    fn wl(ff: usize) -> Workload {
+        Workload::from_conv(
+            &OpKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: ff, stride: 1, padding: 1, groups: 1 },
+            [1, 14, 14, ff],
+            vec!["bn", "relu"],
+        )
+    }
+
+    #[test]
+    fn paper_fig5b_fast_program_step_is_32() {
+        // ff = ax3 = 4x8x16 over 512 filters → LCM(512/16, 512/16) = 32.
+        let p = Program {
+            spatial_splits: vec![49, 4],
+            ff_splits: vec![4, 8, 16],
+            ax3_splits: vec![4, 8, 16],
+            ic_splits: vec![64],
+            parallel: 8,
+            vectorize: 16,
+            unroll: 2,
+        };
+        assert_eq!(p.min_filter_prune_step(), 32);
+    }
+
+    #[test]
+    fn paper_fig5c_slow_program_step_is_4() {
+        // ff = 4x128, ax3 = 512x1 → LCM(512/128, 512/512) = LCM(4,1) = 4.
+        let p = Program {
+            spatial_splits: vec![196],
+            ff_splits: vec![4, 128],
+            ax3_splits: vec![512, 1],
+            ic_splits: vec![64],
+            parallel: 1,
+            vectorize: 1,
+            unroll: 1,
+        };
+        assert_eq!(p.min_filter_prune_step(), 4);
+    }
+
+    #[test]
+    fn sampled_programs_validate() {
+        let w = wl(128);
+        let mut rng = Rng::new(0);
+        for _ in 0..200 {
+            let p = Program::sample(&w, &mut rng);
+            assert!(p.validate(&w).is_ok());
+            assert!(p.min_filter_prune_step() >= 1);
+        }
+    }
+
+    #[test]
+    fn mutation_stays_valid() {
+        let w = wl(96);
+        let mut rng = Rng::new(1);
+        let mut p = Program::sample(&w, &mut rng);
+        for _ in 0..100 {
+            p = p.mutate(&w, &mut rng);
+            assert!(p.validate(&w).is_ok());
+        }
+    }
+
+    #[test]
+    fn with_pruned_filters_preserves_tree_shape() {
+        let p = Program {
+            spatial_splits: vec![196],
+            ff_splits: vec![4, 8, 16],
+            ax3_splits: vec![4, 8, 16],
+            ic_splits: vec![64],
+            parallel: 4,
+            vectorize: 8,
+            unroll: 1,
+        };
+        // prune one step (32 filters): 512 → 480 = 4x8x15
+        let q = p.with_pruned_filters(480).unwrap();
+        assert_eq!(q.ff_splits, vec![4, 8, 15]);
+        assert_eq!(q.ax3_splits, vec![4, 8, 15]);
+        // incompatible target (not a multiple of 4*8)
+        assert!(p.with_pruned_filters(481).is_none());
+    }
+
+    #[test]
+    fn naive_program_step_is_small() {
+        // Untuned: ff unsplit → step 1; ax3=[ff,1] → step 1 → LCM = 1.
+        let w = wl(512);
+        let p = Program::naive(&w);
+        assert_eq!(p.min_filter_prune_step(), 1);
+    }
+
+    #[test]
+    fn sample_splits_cover_extent_with_bounded_waste() {
+        let mut rng = Rng::new(2);
+        for extent in [1usize, 7, 12, 96, 512, 196, 179] {
+            for nparts in 1..=4 {
+                for _ in 0..50 {
+                    let s = sample_splits(extent, nparts, &mut rng);
+                    let prod = s.iter().product::<usize>();
+                    assert_eq!(s.len(), nparts);
+                    assert!(prod >= extent, "{s:?} does not cover {extent}");
+                    assert!(prod < 2 * extent.max(1), "{s:?} wastes ≥2x over {extent}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prime_extents_remain_tileable() {
+        // A pruned conv can end up with a prime channel count (e.g. 179);
+        // padded tiling must still offer real inner tiles.
+        let mut rng = Rng::new(3);
+        let some_tiled = (0..100).any(|_| {
+            let s = sample_splits(179, 3, &mut rng);
+            *s.last().unwrap() >= 8
+        });
+        assert!(some_tiled, "no padded tiling sampled for prime extent");
+    }
+
+    #[test]
+    fn waste_ratios() {
+        let w = wl(100);
+        let exact = Program::naive(&w);
+        assert_eq!(exact.waste(&w), (1.0, 1.0));
+        let padded = Program {
+            spatial_splits: vec![w.oh * w.ow],
+            ff_splits: vec![13, 8], // 104 covers 100 → 4% waste
+            ax3_splits: vec![100],
+            ic_splits: vec![w.ic],
+            parallel: 1,
+            vectorize: 1,
+            unroll: 1,
+        };
+        assert!(padded.validate(&w).is_ok());
+        let (ws, wf) = padded.waste(&w);
+        assert_eq!(ws, 1.0);
+        assert!((wf - 1.04).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,175 @@
+//! Synthetic CIFAR-like dataset (no dataset downloads in this
+//! environment; DESIGN.md §2).
+//!
+//! Ten classes, each a fixed random 32×32×3 template; a sample is its
+//! class template blended with per-sample noise and a random spatial
+//! jitter. Linearly-nontrivial but learnable: the e2e driver's CNN climbs
+//! well above chance within a few hundred SGD steps, which is all the
+//! short-term-accuracy signal of Algorithm 1 needs.
+
+use crate::util::rng::Rng;
+
+/// An in-memory labeled image set (NHWC f32 in [0,1], i32 labels).
+pub struct Dataset {
+    pub img: usize,
+    pub classes: usize,
+    pub xs: Vec<f32>,
+    pub ys: Vec<i32>,
+    pub n: usize,
+}
+
+impl Dataset {
+    /// Generate `n` samples with the given seed.
+    pub fn synthetic(n: usize, img: usize, classes: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let pix = img * img * 3;
+        // class templates: smooth random fields (low-frequency sums)
+        let templates: Vec<Vec<f32>> = (0..classes)
+            .map(|c| {
+                let mut t_rng = rng.split(c as u64 + 1);
+                let fx = 1.0 + t_rng.f32() * 3.0;
+                let fy = 1.0 + t_rng.f32() * 3.0;
+                let phase = t_rng.f32() * std::f32::consts::TAU;
+                let mut t = vec![0.0f32; pix];
+                for y in 0..img {
+                    for x in 0..img {
+                        for ch in 0..3 {
+                            let v = ((x as f32 * fx / img as f32
+                                + y as f32 * fy / img as f32)
+                                * std::f32::consts::TAU
+                                + phase
+                                + ch as f32 * 1.3)
+                                .sin();
+                            t[(y * img + x) * 3 + ch] = 0.5 + 0.35 * v;
+                        }
+                    }
+                }
+                t
+            })
+            .collect();
+
+        let mut xs = Vec::with_capacity(n * pix);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = (i % classes) as i32;
+            let mut s_rng = rng.split(1000 + i as u64);
+            let tpl = &templates[c as usize];
+            let dx = s_rng.below(5) as isize - 2;
+            let dy = s_rng.below(5) as isize - 2;
+            for y in 0..img {
+                for x in 0..img {
+                    let sy = (y as isize + dy).clamp(0, img as isize - 1) as usize;
+                    let sx = (x as isize + dx).clamp(0, img as isize - 1) as usize;
+                    for ch in 0..3 {
+                        let noise = (s_rng.f32() - 0.5) * 0.25;
+                        let v = tpl[(sy * img + sx) * 3 + ch] + noise;
+                        xs.push(v.clamp(0.0, 1.0));
+                    }
+                }
+            }
+            ys.push(c);
+        }
+        Dataset { img, classes, xs, ys, n }
+    }
+
+    /// Split off the last `n_eval` samples as a held-out set (same class
+    /// templates — the templates are part of the task definition, so train
+    /// and eval must share them).
+    pub fn split(mut self, n_eval: usize) -> (Dataset, Dataset) {
+        assert!(n_eval < self.n);
+        let pix = self.img * self.img * 3;
+        let n_train = self.n - n_eval;
+        let eval_xs = self.xs.split_off(n_train * pix);
+        let eval_ys = self.ys.split_off(n_train);
+        let eval = Dataset {
+            img: self.img,
+            classes: self.classes,
+            xs: eval_xs,
+            ys: eval_ys,
+            n: n_eval,
+        };
+        self.n = n_train;
+        (self, eval)
+    }
+
+    /// Copy batch `idx` (of size `bs`, wrapping) into contiguous buffers.
+    pub fn batch(&self, idx: usize, bs: usize) -> (Vec<f32>, Vec<i32>) {
+        let pix = self.img * self.img * 3;
+        let mut xs = Vec::with_capacity(bs * pix);
+        let mut ys = Vec::with_capacity(bs);
+        for k in 0..bs {
+            let i = (idx * bs + k) % self.n;
+            xs.extend_from_slice(&self.xs[i * pix..(i + 1) * pix]);
+            ys.push(self.ys[i]);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let d = Dataset::synthetic(100, 32, 10, 0);
+        assert_eq!(d.xs.len(), 100 * 32 * 32 * 3);
+        assert_eq!(d.ys.len(), 100);
+        assert!(d.xs.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(d.ys.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Dataset::synthetic(50, 32, 10, 7);
+        let b = Dataset::synthetic(50, 32, 10, 7);
+        assert_eq!(a.xs, b.xs);
+        assert_eq!(a.ys, b.ys);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // mean inter-class template distance must exceed intra-class spread
+        let d = Dataset::synthetic(200, 16, 4, 1);
+        let pix = 16 * 16 * 3;
+        let mean_of = |c: i32| -> Vec<f32> {
+            let idx: Vec<usize> = (0..d.n).filter(|&i| d.ys[i] == c).collect();
+            let mut m = vec![0.0; pix];
+            for &i in &idx {
+                for (j, v) in d.xs[i * pix..(i + 1) * pix].iter().enumerate() {
+                    m[j] += v;
+                }
+            }
+            m.iter().map(|v| v / idx.len() as f32).collect()
+        };
+        let m0 = mean_of(0);
+        let m1 = mean_of(1);
+        let dist: f32 = m0.iter().zip(&m1).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(dist > 1.0, "class means too close: {dist}");
+    }
+
+    #[test]
+    fn batch_wraps() {
+        let d = Dataset::synthetic(10, 8, 2, 0);
+        let (xs, ys) = d.batch(3, 4); // starts at 12 % 10
+        assert_eq!(xs.len(), 4 * 8 * 8 * 3);
+        assert_eq!(ys.len(), 4);
+    }
+}
+
+#[cfg(test)]
+mod split_tests {
+    use super::*;
+
+    #[test]
+    fn split_preserves_totals_and_templates() {
+        let full = Dataset::synthetic(120, 16, 4, 3);
+        let snapshot = full.xs.clone();
+        let (train, eval) = full.split(40);
+        assert_eq!(train.n, 80);
+        assert_eq!(eval.n, 40);
+        assert_eq!(train.xs.len() + eval.xs.len(), snapshot.len());
+        // eval is exactly the tail of the original
+        assert_eq!(eval.xs[..], snapshot[80 * 16 * 16 * 3..]);
+    }
+}

@@ -1,0 +1,278 @@
+//! The training driver: owns parameters on the host, executes the
+//! AOT-compiled `train_step` / `eval_batch` via PJRT, and exposes a *real*
+//! [`AccuracyOracle`] for the CIFAR-scale end-to-end run.
+//!
+//! Structured pruning is applied through the channel masks the L2 model
+//! takes as inputs (static shapes → one artifact for every pruning state).
+//! Mask selection follows the paper: lowest-ℓ1 filters of the *live*
+//! parameters are dropped first.
+
+use super::dataset::Dataset;
+use super::manifest::Manifest;
+use crate::accuracy::{AccuracyOracle, PruneSummary, TrainPhase};
+use crate::runtime::{literal_f32, literal_i32, literal_scalar, to_vec_f32, Executable, Runtime};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+
+/// Training hyper-parameters for the oracle's phases.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub lr: f32,
+    pub short_steps: usize,
+    pub final_steps: usize,
+    pub eval_batches: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { lr: 0.05, short_steps: 40, final_steps: 160, eval_batches: 2 }
+    }
+}
+
+/// Parameter + momentum + mask state living on the Rust side.
+pub struct Trainer {
+    pub manifest: Manifest,
+    train_exe: Executable,
+    eval_exe: Executable,
+    params: Vec<Vec<f32>>,
+    momentum: Vec<Vec<f32>>,
+    /// Mask vectors, in manifest mask order (1.0 = keep).
+    masks: Vec<Vec<f32>>,
+    pub cfg: TrainConfig,
+    pub steps_run: usize,
+}
+
+impl Trainer {
+    /// Load artifacts and initial parameters.
+    pub fn new(rt: &Runtime, cfg: TrainConfig) -> Result<Trainer> {
+        let manifest = Manifest::load(rt.artifact("manifest.json"))?;
+        let params = manifest.load_params(rt.artifact("params_init.bin"))?;
+        let momentum = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let masks = manifest
+            .masks
+            .iter()
+            .map(|m| vec![1.0f32; m.channels])
+            .collect();
+        Ok(Trainer {
+            manifest,
+            train_exe: rt.load("train_step")?,
+            eval_exe: rt.load("eval_batch")?,
+            params,
+            momentum,
+            masks,
+            cfg,
+            steps_run: 0,
+        })
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.params
+            .iter()
+            .zip(&self.manifest.params)
+            .map(|(data, e)| {
+                let dims: Vec<i64> = e.shape.iter().map(|&d| d as i64).collect();
+                literal_f32(data, &dims)
+            })
+            .collect()
+    }
+
+    fn mask_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.masks
+            .iter()
+            .map(|m| literal_f32(m, &[m.len() as i64]))
+            .collect()
+    }
+
+    /// One SGD step; returns the loss.
+    pub fn step(&mut self, xs: &[f32], ys: &[i32], lr: f32) -> Result<f32> {
+        let b = self.manifest.train_batch;
+        let img = self.manifest.img as i64;
+        let mut inputs = self.param_literals()?;
+        for (data, e) in self.momentum.iter().zip(&self.manifest.params) {
+            let dims: Vec<i64> = e.shape.iter().map(|&d| d as i64).collect();
+            inputs.push(literal_f32(data, &dims)?);
+        }
+        inputs.extend(self.mask_literals()?);
+        inputs.push(literal_f32(xs, &[b as i64, img, img, 3])?);
+        inputs.push(literal_i32(ys, &[b as i64])?);
+        inputs.push(literal_scalar(lr));
+
+        let out = self.train_exe.run(&inputs)?;
+        let np = self.manifest.params.len();
+        if out.len() != 2 * np + 1 {
+            return Err(anyhow!("train_step returned {} outputs, want {}", out.len(), 2 * np + 1));
+        }
+        for (i, lit) in out[..np].iter().enumerate() {
+            self.params[i] = to_vec_f32(lit)?;
+        }
+        for (i, lit) in out[np..2 * np].iter().enumerate() {
+            self.momentum[i] = to_vec_f32(lit)?;
+        }
+        let loss = out[2 * np].to_vec::<f32>().context("loss literal")?[0];
+        self.steps_run += 1;
+        Ok(loss)
+    }
+
+    /// Accuracy over `n_batches` eval batches of the dataset.
+    pub fn evaluate(&self, data: &Dataset, n_batches: usize) -> Result<f64> {
+        let b = self.manifest.eval_batch;
+        let img = self.manifest.img as i64;
+        let mut correct = 0.0f64;
+        let mut total = 0.0f64;
+        for i in 0..n_batches {
+            let (xs, ys) = data.batch(i, b);
+            let mut inputs = self.param_literals()?;
+            inputs.extend(self.mask_literals()?);
+            inputs.push(literal_f32(&xs, &[b as i64, img, img, 3])?);
+            inputs.push(literal_i32(&ys, &[b as i64])?);
+            let out = self.eval_exe.run(&inputs)?;
+            correct += out[0].to_vec::<f32>()?[0] as f64;
+            total += b as f64;
+        }
+        Ok(correct / total)
+    }
+
+    /// Train for `steps` over `data`, returning the loss curve.
+    pub fn train(&mut self, data: &Dataset, steps: usize, lr: f32) -> Result<Vec<f32>> {
+        let b = self.manifest.train_batch;
+        let mut losses = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let (xs, ys) = data.batch(self.steps_run + s, b);
+            losses.push(self.step(&xs, &ys, lr)?);
+        }
+        Ok(losses)
+    }
+
+    /// Per-filter ℓ1 norms of a conv's live weights (HWIO layout: the
+    /// filter index is the fastest-varying dimension).
+    pub fn filter_l1(&self, conv_name: &str) -> Result<Vec<f32>> {
+        let w_name = format!("{conv_name}.w");
+        let (idx, entry) = self
+            .manifest
+            .params
+            .iter()
+            .enumerate()
+            .find(|(_, e)| e.name == w_name)
+            .ok_or_else(|| anyhow!("no param {w_name}"))?;
+        let cout = *entry.shape.last().unwrap();
+        let mut norms = vec![0.0f32; cout];
+        for (i, v) in self.params[idx].iter().enumerate() {
+            norms[i % cout] += v.abs();
+        }
+        Ok(norms)
+    }
+
+    /// Apply a pruning state: for each conv keep the `remaining` filters of
+    /// largest live ℓ1 norm (mask the rest to 0). `remaining_by_conv` maps
+    /// manifest conv names (e.g. "b1c1") to channel counts; absent convs
+    /// stay fully unmasked.
+    pub fn set_masks(&mut self, remaining_by_conv: &BTreeMap<String, usize>) -> Result<()> {
+        for (mi, mask_entry) in self.manifest.masks.iter().enumerate() {
+            let conv_name = mask_entry
+                .name
+                .strip_suffix(".mask")
+                .unwrap_or(&mask_entry.name)
+                .to_string();
+            let channels = mask_entry.channels;
+            let keep = remaining_by_conv
+                .get(&conv_name)
+                .copied()
+                .unwrap_or(channels)
+                .min(channels);
+            let mut mask = vec![0.0f32; channels];
+            if keep == channels {
+                mask.iter_mut().for_each(|m| *m = 1.0);
+            } else {
+                let norms = self.filter_l1(&conv_name)?;
+                let mut order: Vec<usize> = (0..channels).collect();
+                order.sort_by(|&a, &b| {
+                    norms[b].partial_cmp(&norms[a]).unwrap().then(a.cmp(&b))
+                });
+                for &f in order.iter().take(keep) {
+                    mask[f] = 1.0;
+                }
+            }
+            self.masks[mi] = mask;
+        }
+        Ok(())
+    }
+
+    /// Snapshot / restore for stateless oracle queries.
+    pub fn snapshot(&self) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>, usize) {
+        (self.params.clone(), self.momentum.clone(), self.masks.clone(), self.steps_run)
+    }
+
+    pub fn restore(&mut self, snap: (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>, usize)) {
+        self.params = snap.0;
+        self.momentum = snap.1;
+        self.masks = snap.2;
+        self.steps_run = snap.3;
+    }
+
+    pub fn mask_vectors(&self) -> &[Vec<f32>] {
+        &self.masks
+    }
+}
+
+/// A real [`AccuracyOracle`]: short-term/final accuracy measured by actual
+/// PJRT training of the masked CNN. Only meaningful for
+/// `ModelKind::ResNet8Cifar` (the e2e workload).
+pub struct TrainedOracle<'a> {
+    pub trainer: &'a mut Trainer,
+    pub train_data: &'a Dataset,
+    pub eval_data: &'a Dataset,
+    /// Graph-node-id → manifest conv name, built from the model.
+    pub conv_names: BTreeMap<usize, String>,
+}
+
+impl<'a> TrainedOracle<'a> {
+    pub fn new(
+        trainer: &'a mut Trainer,
+        train_data: &'a Dataset,
+        eval_data: &'a Dataset,
+        model: &crate::graph::model_zoo::Model,
+    ) -> TrainedOracle<'a> {
+        // graph nodes are named "<conv>.conv"
+        let conv_names = model
+            .graph
+            .conv_ids()
+            .into_iter()
+            .map(|id| {
+                let nm = model.graph.node(id).name.clone();
+                (id, nm.trim_end_matches(".conv").to_string())
+            })
+            .collect();
+        TrainedOracle { trainer, train_data, eval_data, conv_names }
+    }
+
+    fn remaining_map(&self, summary: &PruneSummary) -> BTreeMap<String, usize> {
+        summary
+            .layers
+            .iter()
+            .filter_map(|l| {
+                self.conv_names
+                    .get(&l.conv)
+                    .map(|n| (n.clone(), l.remaining_channels))
+            })
+            .collect()
+    }
+}
+
+impl AccuracyOracle for TrainedOracle<'_> {
+    fn top1(&mut self, summary: &PruneSummary, phase: TrainPhase) -> f64 {
+        let snap = self.trainer.snapshot();
+        let remaining = self.remaining_map(summary);
+        let steps = match phase {
+            TrainPhase::Short => self.trainer.cfg.short_steps,
+            TrainPhase::Final => self.trainer.cfg.final_steps,
+        };
+        let lr = self.trainer.cfg.lr;
+        let result = (|| -> Result<f64> {
+            self.trainer.set_masks(&remaining)?;
+            self.trainer.train(self.train_data, steps, lr)?;
+            self.trainer.evaluate(self.eval_data, self.trainer.cfg.eval_batches)
+        })();
+        self.trainer.restore(snap);
+        result.unwrap_or(0.0)
+    }
+}

@@ -1,0 +1,211 @@
+//! `artifacts/manifest.json` — the AOT calling convention emitted by
+//! `python/compile/aot.py`: parameter order/shapes/offsets, mask shapes,
+//! conv inventory, batch sizes.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Byte offset in params_init.bin.
+    pub offset: usize,
+    pub numel: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct MaskEntry {
+    pub name: String,
+    pub channels: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConvEntry {
+    pub name: String,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub img: usize,
+    pub num_classes: usize,
+    pub params: Vec<ParamEntry>,
+    pub masks: Vec<MaskEntry>,
+    pub convs: Vec<ConvEntry>,
+    pub momentum: f64,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = json::parse(text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let usize_of = |v: &Json, key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing {key}"))
+        };
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                    offset: usize_of(p, "offset")?,
+                    numel: usize_of(p, "numel")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let masks = j
+            .get("masks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing masks"))?
+            .iter()
+            .map(|m| {
+                Ok(MaskEntry {
+                    name: m
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("mask missing name"))?
+                        .to_string(),
+                    channels: m
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .and_then(|a| a.first())
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("mask missing shape"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let convs = j
+            .get("convs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing convs"))?
+            .iter()
+            .map(|c| {
+                Ok(ConvEntry {
+                    name: c
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("conv missing name"))?
+                        .to_string(),
+                    kh: usize_of(c, "kh")?,
+                    kw: usize_of(c, "kw")?,
+                    cin: usize_of(c, "cin")?,
+                    cout: usize_of(c, "cout")?,
+                    stride: usize_of(c, "stride")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            train_batch: usize_of(&j, "train_batch")?,
+            eval_batch: usize_of(&j, "eval_batch")?,
+            img: usize_of(&j, "img")?,
+            num_classes: usize_of(&j, "num_classes")?,
+            params,
+            masks,
+            convs,
+            momentum: j
+                .get("momentum")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("manifest missing momentum"))?,
+        })
+    }
+
+    /// Load the initial parameters binary as per-entry f32 vectors.
+    pub fn load_params(&self, bin_path: impl AsRef<Path>) -> Result<Vec<Vec<f32>>> {
+        let bytes = std::fs::read(bin_path.as_ref())
+            .with_context(|| format!("reading {}", bin_path.as_ref().display()))?;
+        self.params
+            .iter()
+            .map(|p| {
+                let start = p.offset;
+                let end = start + p.numel * 4;
+                let slice = bytes
+                    .get(start..end)
+                    .ok_or_else(|| anyhow!("params_init.bin too short for {}", p.name))?;
+                Ok(slice
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "train_batch": 64, "eval_batch": 200, "img": 32, "num_classes": 10,
+        "momentum": 0.9,
+        "params": [
+            {"name": "stem.w", "shape": [3,3,3,16], "offset": 0, "numel": 432},
+            {"name": "stem.scale", "shape": [16], "offset": 1728, "numel": 16}
+        ],
+        "masks": [{"name": "stem.mask", "shape": [16]}],
+        "convs": [{"name": "stem", "kh":3, "kw":3, "cin":3, "cout":16,
+                   "stride":1, "relu":true}]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.train_batch, 64);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].shape, vec![3, 3, 3, 16]);
+        assert_eq!(m.masks[0].channels, 16);
+        assert_eq!(m.convs[0].cout, 16);
+        assert!((m.momentum - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"train_batch": 1}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert_eq!(m.img, 32);
+            assert_eq!(m.convs.len(), 9);
+            assert_eq!(m.masks.len(), 9);
+            // params: 9 convs x 3 + fc.w + fc.b
+            assert_eq!(m.params.len(), 29);
+            let bin = path.parent().unwrap().join("params_init.bin");
+            let params = m.load_params(&bin).unwrap();
+            assert_eq!(params.len(), m.params.len());
+            for (p, e) in params.iter().zip(&m.params) {
+                assert_eq!(p.len(), e.numel);
+            }
+        }
+    }
+}

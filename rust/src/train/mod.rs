@@ -1,0 +1,17 @@
+//! Rust-driven training over the AOT-compiled PJRT executables.
+//!
+//! The paper's Algorithm 1 needs "short-term train and measure a_s"
+//! (line 11). For ImageNet-scale workloads that is the analytic proxy; for
+//! the CIFAR-scale end-to-end driver it is *real*: this module owns the
+//! parameters/momentum/masks as PJRT literals, streams synthetic CIFAR-like
+//! batches through `train_step.hlo.txt` (whose conv hot-spots are the L1
+//! Pallas GEMM), and evaluates with `eval_batch.hlo.txt`. No Python
+//! anywhere on this path.
+
+pub mod dataset;
+pub mod driver;
+pub mod manifest;
+
+pub use dataset::Dataset;
+pub use driver::{TrainConfig, TrainedOracle, Trainer};
+pub use manifest::Manifest;

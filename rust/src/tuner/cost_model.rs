@@ -1,0 +1,222 @@
+//! Learned cost model: online ridge regression over schedule features.
+//!
+//! Ansor trains a gradient-boosted model on measured programs and uses it
+//! to rank candidates cheaply between measurement batches. We reproduce
+//! the same loop with a ridge regressor on hand-crafted features
+//! (log-latency target). It is intentionally *imperfect* — rankings are
+//! good, absolute values rough — so the search still needs real
+//! measurements, like the paper's pipeline.
+
+use crate::tir::{Program, Workload};
+
+/// Number of features extracted per (workload, program).
+pub const NFEAT: usize = 12;
+
+/// Schedule features. All scale-free or log-scaled so one model serves
+/// every task of a model.
+pub fn features(w: &Workload, p: &Program) -> [f64; NFEAT] {
+    let macs = w.macs() as f64;
+    let (sp_tile, ff_tile) = p.inner_tile();
+    let ic_tile = *p.ic_splits.last().unwrap_or(&1);
+    let outer = (p.spatial_splits.first().copied().unwrap_or(1)
+        * p.ff_splits.first().copied().unwrap_or(1)) as f64;
+    let footprint =
+        4.0 * (sp_tile * ic_tile * w.kh * w.kw + ff_tile * ic_tile * w.kh * w.kw + sp_tile * ff_tile) as f64;
+    let ax3_inner = *p.ax3_splits.last().unwrap_or(&1) as f64;
+    [
+        1.0,                                     // bias
+        macs.ln(),                               // problem size
+        (p.parallel as f64).ln_1p(),             // thread request
+        (p.vectorize as f64).ln_1p(),            // vector width
+        (sp_tile as f64).ln_1p(),                // inner spatial tile
+        (ff_tile as f64).ln_1p(),                // inner filter tile
+        footprint.ln_1p(),                       // cache footprint
+        outer.ln_1p(),                           // parallel grain count
+        ax3_inner.ln_1p(),                       // layout-stage inner extent
+        if ff_tile % p.vectorize.max(1) == 0 { 1.0 } else { 0.0 }, // vec divisibility
+        (p.unroll as f64).ln_1p(),               // unroll
+        (w.working_set_bytes() as f64).ln(),     // memory pressure
+    ]
+}
+
+/// Trait so the search can swap models (learned vs. oracle in tests).
+pub trait CostModel {
+    /// Predicted log-latency (lower = better). Only the *ranking* matters.
+    fn score(&self, w: &Workload, p: &Program) -> f64;
+    /// Feed one measured sample (latency in seconds).
+    fn observe(&mut self, w: &Workload, p: &Program, latency: f64);
+    /// Re-fit after a batch of observations.
+    fn refit(&mut self);
+    /// True once the model has enough data to rank candidates.
+    fn trained(&self) -> bool;
+}
+
+/// Ridge regression on [`features`] → log-latency.
+pub struct LearnedCost {
+    xs: Vec<[f64; NFEAT]>,
+    ys: Vec<f64>,
+    weights: Option<[f64; NFEAT]>,
+    /// L2 regularization strength.
+    lambda: f64,
+}
+
+impl LearnedCost {
+    pub fn new() -> LearnedCost {
+        LearnedCost { xs: Vec::new(), ys: Vec::new(), weights: None, lambda: 1e-3 }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.xs.len()
+    }
+}
+
+impl Default for LearnedCost {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CostModel for LearnedCost {
+    fn score(&self, w: &Workload, p: &Program) -> f64 {
+        match &self.weights {
+            Some(ws) => {
+                let f = features(w, p);
+                f.iter().zip(ws).map(|(a, b)| a * b).sum()
+            }
+            None => 0.0,
+        }
+    }
+
+    fn observe(&mut self, w: &Workload, p: &Program, latency: f64) {
+        self.xs.push(features(w, p));
+        self.ys.push(latency.max(1e-12).ln());
+    }
+
+    fn refit(&mut self) {
+        if self.xs.len() < NFEAT {
+            return; // underdetermined; stay untrained
+        }
+        // Normal equations: (XᵀX + λI) w = Xᵀy, solved by Gaussian
+        // elimination with partial pivoting (NFEAT is tiny).
+        let n = NFEAT;
+        let mut a = vec![vec![0.0f64; n + 1]; n];
+        for (x, &y) in self.xs.iter().zip(&self.ys) {
+            for i in 0..n {
+                for j in 0..n {
+                    a[i][j] += x[i] * x[j];
+                }
+                a[i][n] += x[i] * y;
+            }
+        }
+        for (i, row) in a.iter_mut().enumerate() {
+            row[i] += self.lambda;
+        }
+        if let Some(w) = solve(&mut a) {
+            let mut ws = [0.0; NFEAT];
+            ws.copy_from_slice(&w);
+            self.weights = Some(ws);
+        }
+    }
+
+    fn trained(&self) -> bool {
+        self.weights.is_some()
+    }
+}
+
+/// Solve the augmented system in place; returns x or None if singular.
+fn solve(a: &mut [Vec<f64>]) -> Option<Vec<f64>> {
+    let n = a.len();
+    for col in 0..n {
+        // partial pivot
+        let pivot = (col..n).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+        })?;
+        if a[pivot][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, pivot);
+        for row in 0..n {
+            if row != col {
+                let f = a[row][col] / a[col][col];
+                for k in col..=n {
+                    a[row][k] -= f * a[col][k];
+                }
+            }
+        }
+    }
+    Some((0..n).map(|i| a[i][n] / a[i][i]).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DeviceSpec, Simulator};
+    use crate::graph::ops::OpKind;
+    use crate::util::rng::Rng;
+    use crate::util::stats::spearman;
+
+    fn wl() -> Workload {
+        Workload::from_conv(
+            &OpKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: 128, stride: 1, padding: 1, groups: 1 },
+            [1, 28, 28, 128],
+            vec!["bn", "relu"],
+        )
+    }
+
+    #[test]
+    fn solve_identity() {
+        let mut a = vec![
+            vec![2.0, 0.0, 4.0],
+            vec![0.0, 3.0, 9.0],
+        ];
+        let x = solve(&mut a).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn learned_model_ranks_programs_usefully() {
+        // Train on 200 measured programs, check Spearman correlation of
+        // predictions vs. true latencies on 100 held-out programs.
+        let w = wl();
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let mut rng = Rng::new(5);
+        let mut model = LearnedCost::new();
+        for _ in 0..200 {
+            let p = Program::sample(&w, &mut rng);
+            model.observe(&w, &p, sim.measure(&w, &p, &mut rng));
+        }
+        model.refit();
+        assert!(model.trained());
+        let mut preds = Vec::new();
+        let mut truth = Vec::new();
+        for _ in 0..100 {
+            let p = Program::sample(&w, &mut rng);
+            preds.push(model.score(&w, &p));
+            truth.push(sim.latency(&w, &p).ln());
+        }
+        let rho = spearman(&preds, &truth);
+        assert!(rho > 0.5, "cost model useless: spearman={rho}");
+    }
+
+    #[test]
+    fn untrained_model_scores_zero() {
+        let w = wl();
+        let model = LearnedCost::new();
+        let mut rng = Rng::new(0);
+        assert_eq!(model.score(&w, &Program::sample(&w, &mut rng)), 0.0);
+        assert!(!model.trained());
+    }
+
+    #[test]
+    fn refit_needs_enough_samples() {
+        let w = wl();
+        let mut rng = Rng::new(1);
+        let mut model = LearnedCost::new();
+        for _ in 0..3 {
+            let p = Program::sample(&w, &mut rng);
+            model.observe(&w, &p, 1e-3);
+        }
+        model.refit();
+        assert!(!model.trained());
+    }
+}

@@ -1,0 +1,15 @@
+//! Ansor-style auto-tuner (§2.2's substrate, used by Fig. 3's ②).
+//!
+//! Per task: evolutionary search over the schedule space, guided by a
+//! *learned cost model* (online ridge regression over schedule features,
+//! mirroring Ansor's XGBoost-on-measurements loop) and validated by noisy
+//! simulated measurements. Returns the fastest program + its latency —
+//! exactly the pair CPrune's table stores per task.
+
+pub mod cost_model;
+pub mod search;
+pub mod session;
+
+pub use cost_model::{features, CostModel, LearnedCost};
+pub use search::{tune_task, TuneOptions};
+pub use session::{TuneCache, TuningSession};

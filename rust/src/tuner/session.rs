@@ -1,0 +1,234 @@
+//! Whole-model tuning session: tune every task of a partitioned graph,
+//! with a cross-iteration cache.
+//!
+//! CPrune re-tunes the model after every pruning step (Alg. 1 line 8).
+//! Tasks whose workload did not change hit the cache — the big practical
+//! saving CPrune's selective search enables (Fig. 11's comparison point).
+//! `retune_everything` disables the cache to emulate exhaustive behaviour.
+
+use super::search::{tune_task, TuneOptions, TuneResult};
+use crate::device::Simulator;
+use crate::graph::ops::Graph;
+use crate::relay::partition::extract_tasks;
+use crate::relay::{TaskTable};
+use crate::tir::{Program, Workload};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Cache of tuning results keyed by workload structure.
+#[derive(Default)]
+pub struct TuneCache {
+    map: Mutex<HashMap<Workload, (Program, f64, usize)>>,
+}
+
+impl TuneCache {
+    pub fn new() -> TuneCache {
+        TuneCache::default()
+    }
+
+    pub fn get(&self, w: &Workload) -> Option<(Program, f64, usize)> {
+        self.map.lock().unwrap().get(w).cloned()
+    }
+
+    pub fn put(&self, w: Workload, p: Program, lat: f64, measured: usize) {
+        self.map.lock().unwrap().insert(w, (p, lat, measured));
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Tunes models for one device; owns the cache and the RNG seed policy.
+pub struct TuningSession<'a> {
+    pub sim: &'a Simulator,
+    pub opts: TuneOptions,
+    pub cache: TuneCache,
+    pub seed: u64,
+    /// When false (default) identical workloads reuse cached results
+    /// across pruning iterations.
+    pub retune_everything: bool,
+    /// Cumulative count of programs actually measured (search cost).
+    pub total_measured: std::sync::atomic::AtomicUsize,
+}
+
+impl<'a> TuningSession<'a> {
+    pub fn new(sim: &'a Simulator, opts: TuneOptions, seed: u64) -> TuningSession<'a> {
+        TuningSession {
+            sim,
+            opts,
+            cache: TuneCache::new(),
+            seed,
+            retune_everything: false,
+            total_measured: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    /// Partition + tune all tasks of `graph`. `seed_programs` optionally
+    /// maps a task's workload to a structure-preserving starting program
+    /// (the §3.5 mechanism). Returns the filled task table.
+    ///
+    /// Uncached tasks are tuned in parallel across OS threads (tuning is
+    /// embarrassingly parallel per task and fully deterministic: each task
+    /// derives its RNG stream from its own workload hash, so the schedule
+    /// of threads cannot change any result).
+    pub fn tune_graph(
+        &self,
+        graph: &Graph,
+        seed_programs: &HashMap<Workload, Program>,
+    ) -> TaskTable {
+        let (_, mut table) = extract_tasks(graph);
+        let task_ids: Vec<usize> = table.tasks().map(|t| t.id).collect();
+
+        // Split into cached (serve immediately) and to-tune (parallel).
+        let mut pending: Vec<(usize, Workload)> = Vec::new();
+        for &tid in &task_ids {
+            let w = table.get(tid).workload.clone();
+            if !self.retune_everything {
+                if let Some((p, lat, _)) = self.cache.get(&w) {
+                    table.record_tuned(tid, p, lat);
+                    continue;
+                }
+            }
+            pending.push((tid, w));
+        }
+        if pending.is_empty() {
+            return table;
+        }
+
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(pending.len());
+        let results: Vec<(usize, Program, f64)> = if threads <= 1 || pending.len() == 1 {
+            pending
+                .iter()
+                .map(|(tid, w)| {
+                    let (p, lat) = self.tune_workload(w, seed_programs.get(w));
+                    (*tid, p, lat)
+                })
+                .collect()
+        } else {
+            let chunks: Vec<&[(usize, Workload)]> =
+                pending.chunks(pending.len().div_ceil(threads)).collect();
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = chunks
+                    .into_iter()
+                    .map(|chunk| {
+                        scope.spawn(move || {
+                            chunk
+                                .iter()
+                                .map(|(tid, w)| {
+                                    let (p, lat) =
+                                        self.tune_workload(w, seed_programs.get(w));
+                                    (*tid, p, lat)
+                                })
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("tuner thread panicked"))
+                    .collect()
+            })
+        };
+        for (tid, prog, lat) in results {
+            table.record_tuned(tid, prog, lat);
+        }
+        table
+    }
+
+    /// Tune a single workload (cache-aware).
+    pub fn tune_workload(&self, w: &Workload, seed_prog: Option<&Program>) -> (Program, f64) {
+        if !self.retune_everything {
+            if let Some((p, lat, _)) = self.cache.get(w) {
+                return (p, lat);
+            }
+        }
+        let mut rng = Rng::with_stream(self.seed, hash_workload(w));
+        let TuneResult { best, latency, measured } =
+            tune_task(w, self.sim, &self.opts, &mut rng, seed_prog);
+        self.total_measured
+            .fetch_add(measured, std::sync::atomic::Ordering::Relaxed);
+        self.cache.put(w.clone(), best.clone(), latency, measured);
+        (best, latency)
+    }
+
+    pub fn measured_count(&self) -> usize {
+        self.total_measured.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+/// Stable hash of a workload for RNG stream derivation (not dedup — dedup
+/// uses full equality via the `HashMap`).
+fn hash_workload(w: &Workload) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut h = DefaultHasher::new();
+    w.hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+    use crate::graph::model_zoo::{Model, ModelKind};
+
+    #[test]
+    fn tune_graph_fills_every_task() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo280());
+        let sess = TuningSession::new(&sim, TuneOptions::quick(), 1);
+        let table = sess.tune_graph(&m.graph, &HashMap::new());
+        assert!(table.len() >= 5);
+        for t in table.tasks() {
+            assert!(t.best_program.is_some(), "task {} untuned", t.id);
+            assert!(t.best_latency.unwrap() > 0.0);
+        }
+        assert!(table.model_latency() > 0.0);
+    }
+
+    #[test]
+    fn cache_hits_across_repeat_tuning() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo280());
+        let sess = TuningSession::new(&sim, TuneOptions::quick(), 1);
+        let t1 = sess.tune_graph(&m.graph, &HashMap::new());
+        let measured_after_first = sess.measured_count();
+        let t2 = sess.tune_graph(&m.graph, &HashMap::new());
+        assert_eq!(sess.measured_count(), measured_after_first, "cache missed");
+        assert_eq!(t1.model_latency(), t2.model_latency());
+    }
+
+    #[test]
+    fn retune_everything_bypasses_cache() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo280());
+        let mut sess = TuningSession::new(&sim, TuneOptions::quick(), 1);
+        sess.retune_everything = true;
+        sess.tune_graph(&m.graph, &HashMap::new());
+        let after_first = sess.measured_count();
+        sess.tune_graph(&m.graph, &HashMap::new());
+        assert!(sess.measured_count() > after_first);
+    }
+
+    #[test]
+    fn deterministic_across_sessions() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let a = TuningSession::new(&sim, TuneOptions::quick(), 7)
+            .tune_graph(&m.graph, &HashMap::new())
+            .model_latency();
+        let b = TuningSession::new(&sim, TuneOptions::quick(), 7)
+            .tune_graph(&m.graph, &HashMap::new())
+            .model_latency();
+        assert_eq!(a, b);
+    }
+}

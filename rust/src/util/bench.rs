@@ -1,0 +1,115 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! The `rust/benches/*` targets use `harness = false` and call into this:
+//! warmup + timed iterations, median/mean/stddev reporting, and a
+//! machine-grepable `BENCH <name> <median_ns>` line per benchmark.
+
+use std::time::Instant;
+
+/// Result of a timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "BENCH {:<48} median {:>12.0} ns  mean {:>12.0} ns  sd {:>10.0} ns  ({} iters)",
+            self.name, self.median_ns, self.mean_ns, self.stddev_ns, self.iters
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    summarize(name, &samples)
+}
+
+/// Auto-calibrating variant: picks an iteration count so total time ≈ `budget_ms`.
+pub fn bench_auto<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResult {
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_nanos().max(1) as u64;
+    let iters = ((budget_ms * 1_000_000) / one).clamp(3, 10_000) as usize;
+    bench(name, 1, iters, f)
+}
+
+fn summarize(name: &str, samples: &[f64]) -> BenchResult {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = super::stats::mean(samples);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        median_ns: sorted[sorted.len() / 2],
+        stddev_ns: super::stats::stddev(samples),
+        min_ns: sorted[0],
+        max_ns: *sorted.last().unwrap(),
+    }
+}
+
+/// Print a markdown-style table (used by the fig/table regenerators).
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:<w$} |", c, w = widths.get(i).copied().unwrap_or(8)));
+        }
+        println!("{s}");
+    };
+    line(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    line(&sep);
+    for row in rows {
+        line(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 2, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.median_ns >= 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn bench_auto_runs() {
+        let r = bench_auto("auto", 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+    }
+}

@@ -1,0 +1,64 @@
+//! Small self-contained utilities (the environment is offline, so the usual
+//! crates — `rand`, `serde_json`, `criterion` — are replaced by these).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Least common multiple (used by the §3.5 pruning-step rule).
+pub fn lcm(a: u64, b: u64) -> u64 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    a / gcd(a, b) * b
+}
+
+/// Greatest common divisor (Euclid).
+pub fn gcd(a: u64, b: u64) -> u64 {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        let t = b;
+        b = a % b;
+        a = t;
+    }
+    a
+}
+
+/// All divisors of `n`, ascending.
+pub fn divisors(n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            out.push(i);
+            if i != n / i {
+                out.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcd_lcm_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(32, 32), 32);
+        assert_eq!(lcm(4, 1), 4); // paper §3.5 slow-program example
+        assert_eq!(lcm(0, 5), 0);
+    }
+
+    #[test]
+    fn divisors_of_12() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(16), vec![1, 2, 4, 8, 16]);
+    }
+}

@@ -1,0 +1,43 @@
+//! CLI-level integration: commands run end-to-end and produce the
+//! documented outputs (including the JSON report schema).
+
+use cprune::cli;
+use cprune::util::json;
+
+fn run(args: &[&str]) -> i32 {
+    cli::run(args.iter().map(|s| s.to_string()).collect())
+}
+
+#[test]
+fn help_and_unknown_commands() {
+    assert_eq!(run(&["help"]), 0);
+    assert_eq!(run(&[]), 0);
+    assert_eq!(run(&["frobnicate"]), 2);
+    assert_eq!(run(&["report", "nosuchfig"]), 2);
+}
+
+#[test]
+fn prune_writes_valid_json_report() {
+    let path = std::env::temp_dir().join("cprune_cli_test_report.json");
+    let p = path.to_str().unwrap();
+    let code = run(&[
+        "prune", "--model", "resnet8-cifar", "--device", "kryo385",
+        "--iters", "3", "--out", p,
+    ]);
+    assert_eq!(code, 0);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = json::parse(&text).expect("CLI report must be valid JSON");
+    assert!(j.get("final_fps").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("iterations").unwrap().as_arr().is_some());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn dot_command_succeeds() {
+    assert_eq!(run(&["dot", "--model", "resnet8-cifar"]), 0);
+}
+
+#[test]
+fn report_fig6_smoke() {
+    assert_eq!(run(&["report", "fig6", "--scale", "smoke"]), 0);
+}

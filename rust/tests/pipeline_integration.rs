@@ -1,0 +1,61 @@
+//! Integration across the compiler substrate: every zoo model goes
+//! through partition → task extraction → tuning → compile → FPS on every
+//! mobile device at smoke scale, and CPrune improves each model on at
+//! least one device.
+
+use cprune::accuracy::ProxyOracle;
+use cprune::compiler;
+use cprune::device::{DeviceSpec, Simulator};
+use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::pruner::{cprune as run_cprune, CPruneConfig};
+use cprune::tuner::{TuneOptions, TuningSession};
+use std::collections::HashMap;
+
+#[test]
+fn every_model_compiles_on_every_device() {
+    for kind in ModelKind::all() {
+        let model = Model::build(kind, 0);
+        for spec in DeviceSpec::mobile_targets() {
+            let sim = Simulator::new(spec);
+            let session = TuningSession::new(&sim, TuneOptions::quick(), 1);
+            let tuned = compiler::compile_tuned(&model.graph, &session, &HashMap::new());
+            let fallback = compiler::compile_fallback(&model.graph, &sim);
+            assert!(tuned.fps().is_finite() && tuned.fps() > 0.0, "{kind:?}");
+            assert!(
+                tuned.fps() > fallback.fps() * 0.8,
+                "{kind:?} on {}: tuned {} worse than fallback {}",
+                sim.spec.name,
+                tuned.fps(),
+                fallback.fps()
+            );
+        }
+    }
+}
+
+#[test]
+fn mobile_fps_ordering_is_plausible() {
+    // MobileNetV2 is faster than ResNet-18 on the same CPU (paper Table 1:
+    // 28.2 vs 18.9 FPS); newer CPUs are faster.
+    let sim385 = Simulator::new(DeviceSpec::kryo385());
+    let sess = TuningSession::new(&sim385, TuneOptions::quick(), 2);
+    let r18 = compiler::compile_tuned(
+        &Model::build(ModelKind::ResNet18ImageNet, 0).graph, &sess, &HashMap::new());
+    let mb2 = compiler::compile_tuned(
+        &Model::build(ModelKind::MobileNetV2ImageNet, 0).graph, &sess, &HashMap::new());
+    assert!(mb2.fps() > r18.fps(), "mb2 {} vs r18 {}", mb2.fps(), r18.fps());
+}
+
+#[test]
+fn cprune_improves_resnet18_on_kryo585() {
+    let model = Model::build(ModelKind::ResNet18Cifar, 0);
+    let sim = Simulator::new(DeviceSpec::kryo585());
+    let mut oracle = ProxyOracle::new();
+    let cfg = CPruneConfig {
+        max_iterations: 12,
+        tune_opts: TuneOptions::quick(),
+        ..Default::default()
+    };
+    let r = run_cprune(&model, &sim, &mut oracle, &cfg);
+    assert!(r.fps_increase_rate > 1.2, "rate {}", r.fps_increase_rate);
+    assert!(r.final_top1 > 0.90);
+}

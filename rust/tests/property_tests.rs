@@ -1,0 +1,213 @@
+//! Randomized property tests (hand-rolled quickcheck-style over the
+//! in-tree PCG RNG — proptest is unavailable offline). Each property runs
+//! across many seeded cases; failures print the seed for replay.
+
+use cprune::accuracy::{Criterion, ProxyOracle, TrainPhase};
+use cprune::accuracy::AccuracyOracle;
+use cprune::device::{DeviceSpec, Simulator};
+use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::graph::prune::{apply, PruneState};
+use cprune::graph::shape_infer;
+use cprune::graph::stats;
+use cprune::graph::ops::OpKind;
+use cprune::pruner::summarize;
+use cprune::relay::partition::{extract_tasks, partition};
+use cprune::tir::{Program, Workload};
+use cprune::util::rng::Rng;
+use cprune::util::lcm;
+
+fn random_state(model: &Model, rng: &mut Rng) -> PruneState {
+    let mut st = PruneState::full(model);
+    for &conv in &model.prunable {
+        if rng.f32() < 0.6 {
+            let total = st.remaining(conv);
+            let k = rng.below(total.max(1));
+            st.shrink(conv, k);
+        }
+    }
+    st
+}
+
+#[test]
+fn prop_pruned_graphs_always_shape_infer() {
+    // Any sequence of shrink() calls on prunable convs yields a valid graph.
+    for kind in [ModelKind::Vgg16Cifar, ModelKind::ResNet18ImageNet,
+                 ModelKind::MobileNetV2ImageNet, ModelKind::MnasNet10ImageNet,
+                 ModelKind::ResNet8Cifar] {
+        let model = Model::build(kind, 1);
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(seed);
+            let st = random_state(&model, &mut rng);
+            let g = apply(&model.graph, &st.cout)
+                .unwrap_or_else(|e| panic!("{kind:?} seed {seed}: {e}"));
+            shape_infer::infer(&g).unwrap_or_else(|e| panic!("{kind:?} seed {seed}: {e}"));
+            let (f1, p1) = stats::flops_params(&g);
+            let (f0, p0) = stats::flops_params(&model.graph);
+            assert!(f1 <= f0 && p1 <= p0, "{kind:?} seed {seed}: cost grew");
+        }
+    }
+}
+
+#[test]
+fn prop_partition_is_a_partition() {
+    // Every conv/dense anchored exactly once, on arbitrary pruned graphs.
+    let model = Model::build(ModelKind::MobileNetV2ImageNet, 2);
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(seed);
+        let st = random_state(&model, &mut rng);
+        let g = apply(&model.graph, &st.cout).unwrap();
+        let part = partition(&g);
+        let mut seen = std::collections::BTreeSet::new();
+        for sg in &part.subgraphs {
+            for &n in &sg.nodes {
+                assert!(seen.insert(n), "seed {seed}: node {n} claimed twice");
+            }
+        }
+        let anchors: std::collections::BTreeSet<usize> =
+            part.subgraphs.iter().map(|s| s.anchor).collect();
+        for &c in &g.conv_ids() {
+            assert!(anchors.contains(&c), "seed {seed}: conv {c} unanchored");
+        }
+    }
+}
+
+#[test]
+fn prop_task_dedup_conserves_subgraphs() {
+    for kind in [ModelKind::ResNet18ImageNet, ModelKind::Vgg16Cifar] {
+        let model = Model::build(kind, 3);
+        for seed in 0..10u64 {
+            let mut rng = Rng::new(seed);
+            let st = random_state(&model, &mut rng);
+            let g = apply(&model.graph, &st.cout).unwrap();
+            let (part, table) = extract_tasks(&g);
+            let covered: usize = table.tasks().map(|t| t.subgraphs.len()).sum();
+            assert_eq!(covered, part.subgraphs.len(), "{kind:?} seed {seed}");
+            // each subgraph belongs to exactly one task
+            let mut seen = std::collections::BTreeSet::new();
+            for t in table.tasks() {
+                for &sg in &t.subgraphs {
+                    assert!(seen.insert(sg), "{kind:?} seed {seed}: subgraph {sg} in 2 tasks");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_min_step_formula_matches_direct_lcm() {
+    // min_filter_prune_step == LCM(prod/max over both filter trees).
+    let mut rng = Rng::new(7);
+    for _ in 0..500 {
+        let ff = *rng.choose(&[16usize, 32, 64, 96, 128, 256, 512]);
+        let w = Workload::from_conv(
+            &OpKind::Conv2d { kh: 3, kw: 3, cin: 32, cout: ff, stride: 1, padding: 1, groups: 1 },
+            [1, 14, 14, ff],
+            vec![],
+        );
+        let p = Program::sample(&w, &mut rng);
+        let direct = {
+            let f = |s: &[usize]| {
+                let prod: u64 = s.iter().map(|&x| x as u64).product();
+                prod / s.iter().copied().max().unwrap() as u64
+            };
+            lcm(f(&p.ff_splits), f(&p.ax3_splits)) as usize
+        };
+        assert_eq!(p.min_filter_prune_step(), direct);
+    }
+}
+
+#[test]
+fn prop_structure_preserved_after_step_prune() {
+    // For exact (unpadded) programs, pruning exactly the minimum step keeps
+    // the split-tree shape reconstructible (with_pruned_filters succeeds).
+    let mut rng = Rng::new(11);
+    let mut checked = 0;
+    while checked < 200 {
+        let ff = *rng.choose(&[32usize, 64, 128, 256, 512]);
+        let w = Workload::from_conv(
+            &OpKind::Conv2d { kh: 3, kw: 3, cin: 32, cout: ff, stride: 1, padding: 1, groups: 1 },
+            [1, 14, 14, ff],
+            vec![],
+        );
+        let p = Program::sample(&w, &mut rng);
+        let exact = p.ff_splits.iter().product::<usize>() == ff
+            && p.ax3_splits.iter().product::<usize>() == ff;
+        if !exact {
+            continue;
+        }
+        checked += 1;
+        let step = p.min_filter_prune_step();
+        if step >= ff {
+            continue;
+        }
+        let q = p.with_pruned_filters(ff - step);
+        assert!(
+            q.is_some(),
+            "step prune broke structure: ff={ff} step={step} {:?}/{:?}",
+            p.ff_splits,
+            p.ax3_splits
+        );
+        let q = q.unwrap();
+        assert_eq!(q.ff_splits.len(), p.ff_splits.len());
+        assert_eq!(q.ax3_splits.len(), p.ax3_splits.len());
+    }
+}
+
+#[test]
+fn prop_simulator_sane_on_random_programs() {
+    let mut rng = Rng::new(13);
+    let devices = [DeviceSpec::kryo280(), DeviceSpec::kryo585(), DeviceSpec::mali_g72()];
+    for _ in 0..300 {
+        let ff = 8 + rng.below(512);
+        let oh = 1 + rng.below(56);
+        let w = Workload::from_conv(
+            &OpKind::Conv2d { kh: 3, kw: 3, cin: 16, cout: ff, stride: 1, padding: 1, groups: 1 },
+            [1, oh, oh, ff],
+            vec![],
+        );
+        let p = Program::sample(&w, &mut rng);
+        for spec in &devices {
+            let sim = Simulator::new(spec.clone());
+            let l = sim.latency(&w, &p);
+            assert!(l.is_finite() && l > 0.0, "bad latency {l}");
+            assert!(l >= sim.spec.dispatch_overhead_s);
+        }
+    }
+}
+
+#[test]
+fn prop_proxy_oracle_monotone_in_pruning() {
+    // Strictly more pruning on the same layer never increases accuracy.
+    let model = Model::build(ModelKind::ResNet18ImageNet, 5);
+    let mut oracle = ProxyOracle::new();
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed);
+        let conv = *rng.choose(&model.prunable);
+        let mut light = PruneState::full(&model);
+        let total = light.remaining(conv);
+        let k1 = 1 + rng.below(total / 2);
+        let k2 = k1 + 1 + rng.below(total / 4);
+        light.shrink(conv, k1);
+        let mut heavy = PruneState::full(&model);
+        heavy.shrink(conv, k2);
+        let a_light = oracle.top1(&summarize(&model, &light, Criterion::L1Norm), TrainPhase::Short);
+        let a_heavy = oracle.top1(&summarize(&model, &heavy, Criterion::L1Norm), TrainPhase::Short);
+        assert!(a_heavy <= a_light + 1e-12, "seed {seed}: heavier prune increased accuracy");
+    }
+}
+
+#[test]
+fn prop_shrink_never_below_floor() {
+    let model = Model::build(ModelKind::Vgg16Cifar, 6);
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let mut st = PruneState::full(&model);
+        for _ in 0..50 {
+            let conv = *rng.choose(&model.prunable);
+            st.shrink(conv, 1 + rng.below(64));
+        }
+        for (_, &c) in &st.cout {
+            assert!(c >= 2, "seed {seed}: channel below floor");
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Integration: the full AOT path — HLO-text artifacts produced by
+//! python/compile/aot.py, loaded and executed from Rust via PJRT.
+//! Tests no-op gracefully when `make artifacts` has not run.
+
+use cprune::runtime::{literal_f32, Runtime};
+use cprune::train::{Dataset, TrainConfig, Trainer};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn gemm_kernel_artifact_matches_cpu_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load("kernel_gemm").unwrap();
+    // x: (128,64) ones*0.01, w: (64,32) ones*0.02, scale=1, shift=0, relu
+    let x = vec![0.01f32; 128 * 64];
+    let w = vec![0.02f32; 64 * 32];
+    let scale = vec![1.0f32; 32];
+    let shift = vec![0.0f32; 32];
+    let out = exe
+        .run(&[
+            literal_f32(&x, &[128, 64]).unwrap(),
+            literal_f32(&w, &[64, 32]).unwrap(),
+            literal_f32(&scale, &[32]).unwrap(),
+            literal_f32(&shift, &[32]).unwrap(),
+        ])
+        .unwrap();
+    let vals = out[0].to_vec::<f32>().unwrap();
+    assert_eq!(vals.len(), 128 * 32);
+    // every element = 64 * 0.01 * 0.02 = 0.0128
+    for v in &vals {
+        assert!((v - 0.0128).abs() < 1e-5, "got {v}");
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_from_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).unwrap();
+    let mut trainer = Trainer::new(&rt, TrainConfig::default()).unwrap();
+    let data = Dataset::synthetic(256, 32, 10, 0);
+    let losses = trainer.train(&data, 6, 0.05).unwrap();
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn eval_and_masking_from_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).unwrap();
+    let mut trainer = Trainer::new(&rt, TrainConfig::default()).unwrap();
+    let data = Dataset::synthetic(400, 32, 10, 1);
+    let acc0 = trainer.evaluate(&data, 2).unwrap();
+    assert!((0.0..=1.0).contains(&acc0));
+    // mask half of b3c1's channels; accuracy must still be a valid number
+    let mut remaining = std::collections::BTreeMap::new();
+    remaining.insert("b3c1".to_string(), 32usize);
+    trainer.set_masks(&remaining).unwrap();
+    let masked = trainer.mask_vectors();
+    let b3c1_mask: &Vec<f32> = &masked[6]; // CONV_SPECS order: b3c1 is 7th
+    assert_eq!(b3c1_mask.iter().filter(|&&m| m == 1.0).count(), 32);
+    let acc1 = trainer.evaluate(&data, 2).unwrap();
+    assert!((0.0..=1.0).contains(&acc1));
+}
