@@ -1,0 +1,61 @@
+//! Fleet compilation bench: tune MobileNetV2 for every mobile target in
+//! one FleetSession (pilot-seeded), then repeat warm to show the
+//! persistent cache's programs-measured savings.
+//! Run: cargo bench --bench fleet_tuning
+
+use cprune::device::DeviceSpec;
+use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::tuner::{FleetDeviceResult, FleetOptions, FleetResult, FleetSession, TuneOptions};
+use cprune::util::bench::print_table;
+use std::time::Instant;
+
+fn device_rows(r: &FleetResult) -> Vec<Vec<String>> {
+    r.devices.iter().map(|d| d.table_row()).collect()
+}
+
+fn main() {
+    let model = Model::build(ModelKind::MobileNetV2ImageNet, 42);
+    let mut fleet = FleetSession::new(
+        DeviceSpec::mobile_targets(),
+        FleetOptions { tune: TuneOptions::default(), ..Default::default() },
+        42,
+    );
+
+    let t0 = Instant::now();
+    let cold = fleet.tune_graph(&model.graph);
+    let cold_s = t0.elapsed().as_secs_f64();
+    print_table(
+        "Fleet tuning — MobileNetV2, cold (pilot-seeded cross-device search)",
+        &FleetDeviceResult::TABLE_HEADERS,
+        &device_rows(&cold),
+    );
+
+    let t1 = Instant::now();
+    let warm = fleet.tune_graph(&model.graph);
+    let warm_s = t1.elapsed().as_secs_f64();
+    print_table(
+        "Fleet tuning — MobileNetV2, warm (persistent per-device caches)",
+        &FleetDeviceResult::TABLE_HEADERS,
+        &device_rows(&warm),
+    );
+
+    let saved_pct = if cold.total_measured() > 0 {
+        100.0 * (1.0 - warm.total_measured() as f64 / cold.total_measured() as f64)
+    } else {
+        0.0
+    };
+    println!(
+        "\ncold: {} programs measured in {:.1}s | warm: {} measured in {:.2}s \
+         ({:.0}% hit rate, {} measurements avoided, {:.1}% saved)",
+        cold.total_measured(),
+        cold_s,
+        warm.total_measured(),
+        warm_s,
+        warm.hit_rate() * 100.0,
+        warm.total_measured_saved(),
+        saved_pct
+    );
+    println!("BENCH fleet_cold_seconds {cold_s:.2}");
+    println!("BENCH fleet_warm_seconds {warm_s:.2}");
+    println!("BENCH fleet_measured_saved_pct {saved_pct:.1}");
+}

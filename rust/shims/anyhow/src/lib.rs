@@ -1,0 +1,142 @@
+//! Minimal API-compatible stand-in for the `anyhow` crate.
+//!
+//! The offline build environment cannot fetch crates.io, so the `pjrt`
+//! feature links this shim instead. It covers exactly the surface the
+//! repo's PJRT path uses: [`Error`], [`Result`], the [`anyhow!`] macro,
+//! [`Error::msg`], and the [`Context`] extension trait on `Result` and
+//! `Option`. Error context is flattened into the message eagerly (the real
+//! crate keeps a source chain; nothing in this repo inspects it).
+
+use std::fmt::{self, Debug, Display};
+
+/// A flattened error message. Unlike `std` errors this type deliberately
+/// does NOT implement `std::error::Error`, which is what allows the
+/// blanket `From<E: std::error::Error>` conversion below (same trick as
+/// the real crate).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: Display + Debug + Send + Sync + 'static>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on the real crate prints the whole context chain; ours is
+        // already flattened, so both forms print the same thing.
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::string::ToString::to_string(&$err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Attach context to a fallible value (extension trait on `Result` and
+/// `Option`, mirroring `anyhow::Context`).
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error { msg: context.to_string() })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error { msg: f().to_string() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_forms() {
+        let plain = anyhow!("plain");
+        assert_eq!(plain.to_string(), "plain");
+        let x = 3;
+        let fmt = anyhow!("value {} and {x}", 2);
+        assert_eq!(fmt.to_string(), "value 2 and 3");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        let e = r.context("reading file").unwrap_err();
+        assert_eq!(e.to_string(), "reading file: boom");
+        let n: Option<u8> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(inner().is_err());
+    }
+}

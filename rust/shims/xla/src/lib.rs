@@ -1,0 +1,215 @@
+//! Typed stub of the `xla` crate's PJRT surface (see rust/shims/xla/Cargo.toml).
+//!
+//! Mirrors exactly the API `runtime/` and `train::driver` consume:
+//! `PjRtClient`, `PjRtLoadedExecutable`, `HloModuleProto`,
+//! `XlaComputation`, and `Literal`. Host-side literal plumbing
+//! (construction, reshape, readback) genuinely works; anything that needs
+//! a real PJRT backend (`PjRtClient::cpu`) returns an error explaining
+//! that this build uses the stub.
+
+use std::fmt;
+
+/// Stub error type (the real crate's `Error` is also a plain enum that
+/// implements `std::error::Error`).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT is unavailable: this binary was built against the in-tree \
+         `xla` stub (rust/shims/xla). Point the path dependency at the real \
+         xla crate (xla_extension 0.5.1) to execute AOT artifacts."
+            .to_string(),
+    )
+}
+
+/// Element types a [`Literal`] can hold host-side.
+pub trait NativeType: Copy + Sized {
+    fn make_literal(data: &[Self]) -> Literal;
+    fn read_literal(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: element buffer + dimensions (scalar = empty dims).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::make_literal(data)
+    }
+
+    /// Scalar f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: Data::F32(vec![v]), dims: Vec::new() }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret the buffer with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.len() {
+            return Err(Error(format!(
+                "reshape to {:?} ({} elems) from {} elems",
+                dims,
+                want,
+                self.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Read the buffer back as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read_literal(self)
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they only
+    /// come back from real PJRT execution), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error("stub literal is not a tuple".to_string()))
+    }
+}
+
+impl NativeType for f32 {
+    fn make_literal(data: &[Self]) -> Literal {
+        Literal { data: Data::F32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    fn read_literal(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            Data::I32(_) => Err(Error("literal holds i32, asked for f32".to_string())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn make_literal(data: &[Self]) -> Literal {
+        Literal { data: Data::I32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    fn read_literal(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            Data::F32(_) => Err(Error("literal holds f32, asked for i32".to_string())),
+        }
+    }
+}
+
+/// Parsed HLO module (the stub only retains the text).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file (parsing is deferred to the real backend).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    proto: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: () }
+    }
+}
+
+/// Device-resident buffer handle returned by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs: one buffer list per device. (The
+    /// real crate is generic over the input buffer type; callers here pass
+    /// `Literal`.)
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// A PJRT client for one platform.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The real crate dlopens the PJRT CPU plugin here; the stub cannot.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn client_reports_stub() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("stub"));
+    }
+}

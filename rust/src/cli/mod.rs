@@ -4,9 +4,14 @@
 //! Subcommands:
 //!   prune    — run CPrune on a zoo model for a device
 //!   tune     — auto-tune a model without pruning (the TVM baseline)
+//!   fleet    — tune one model for several devices in one session
 //!   compare  — method comparison for one (model, device) cell
 //!   report   — regenerate a paper experiment (fig1..fig11, table1, table2)
 //!   e2e-info — show the AOT artifact inventory the e2e path consumes
+//!
+//! `prune`/`tune` accept `--cache FILE` and `fleet` accepts
+//! `--cache-dir DIR`: tuned programs persist as versioned JSON, so a
+//! repeated run warm-starts and re-measures (close to) nothing.
 
 use crate::accuracy::ProxyOracle;
 use crate::compiler;
@@ -14,8 +19,10 @@ use crate::device::{DeviceSpec, Simulator};
 use crate::exp::{self, Scale};
 use crate::graph::model_zoo::{Model, ModelKind};
 use crate::graph::stats;
-use crate::pruner::{cprune, CPruneConfig};
-use crate::tuner::{TuneOptions, TuningSession};
+use crate::pruner::{cprune_with_session, CPruneConfig};
+use crate::tuner::{
+    FleetDeviceResult, FleetOptions, FleetSession, TuneCache, TuneOptions, TuningSession,
+};
 use crate::util::bench::print_table;
 use std::collections::HashMap;
 
@@ -64,11 +71,50 @@ pub fn model_by_name(name: &str) -> ModelKind {
     }
 }
 
+/// Build a tuning session, warm-started from `--cache FILE` when the file
+/// exists. `Err` carries the process exit code (corrupt cache files fail
+/// loudly rather than silently re-tuning from cold).
+fn open_session<'a>(
+    sim: &'a Simulator,
+    opts: TuneOptions,
+    seed: u64,
+    cache_path: Option<&String>,
+) -> Result<TuningSession<'a>, i32> {
+    match cache_path {
+        Some(p) if std::path::Path::new(p).exists() => {
+            match TuneCache::load(p, sim.spec.name) {
+                Ok(c) => {
+                    println!("cache: warm-start from {p} ({} programs)", c.len());
+                    Ok(TuningSession::with_cache(sim, opts, seed, c))
+                }
+                Err(e) => {
+                    eprintln!("cache {p}: {e}");
+                    Err(1)
+                }
+            }
+        }
+        _ => Ok(TuningSession::new(sim, opts, seed)),
+    }
+}
+
+/// Persist the session cache when `--cache` was given; returns the exit code.
+fn close_session(session: &TuningSession, cache_path: Option<&String>) -> i32 {
+    if let Some(p) = cache_path {
+        if let Err(e) = session.cache.save(p, session.sim.spec.name) {
+            eprintln!("saving cache {p}: {e}");
+            return 1;
+        }
+        println!("cache: saved {} programs to {p}", session.cache.len());
+    }
+    0
+}
+
 const USAGE: &str = "cprune — compiler-informed model pruning (paper reproduction)
 
 USAGE:
-  cprune prune     [--model M] [--device D] [--target-acc A] [--iters N] [--seed S] [--out FILE.json]
-  cprune tune      [--model M] [--device D] [--seed S]
+  cprune prune     [--model M] [--device D] [--target-acc A] [--iters N] [--seed S] [--out FILE.json] [--cache FILE]
+  cprune tune      [--model M] [--device D] [--seed S] [--cache FILE]
+  cprune fleet     [--model M] [--devices d1,d2,...] [--seed S] [--threads N] [--quick] [--cache-dir DIR]
   cprune compare   [--model M] [--device D] [--seed S]
   cprune report    <fig1|fig6|fig7|fig8|fig9|fig10|fig11|table1|table2> [--scale smoke|full]
   cprune dot       [--model M]                    # graphviz of graph+subgraphs+tasks
@@ -77,7 +123,20 @@ USAGE:
 
   models:  vgg16-cifar resnet18-imagenet resnet18-cifar resnet34 mobilenetv1
            mobilenetv2 mnasnet1.0 resnet8-cifar
-  devices: kryo280 kryo385 kryo585 mali-g72 rtx3080";
+  devices: kryo280 kryo385 kryo585 mali-g72 rtx3080
+
+WARM START:
+  --cache FILE persists tuned programs (versioned JSON) across runs: the
+  first run measures and saves, a repeated identical run loads the cache
+  and re-measures (close to) nothing — watch the 'programs measured' line.
+  `fleet` tunes one model for several devices in a single session: the
+  first device (the pilot) tunes natively and its best programs seed every
+  other device's search; --cache-dir keeps one cache file per device.
+
+FEATURES:
+  The optional `pjrt` cargo feature (cargo build --features pjrt) enables
+  the XLA/PJRT runtime behind `e2e-info`'s artifacts (runtime/, train/).
+  Default builds are pure-Rust, offline and dependency-free.";
 
 pub fn run(argv: Vec<String>) -> i32 {
     let args = parse_args(&argv);
@@ -86,11 +145,16 @@ pub fn run(argv: Vec<String>) -> i32 {
         return 0;
     };
     let seed: u64 = args.flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
-    let device = args
-        .flags
-        .get("device")
-        .map(|d| exp::device_by_name(d))
-        .unwrap_or_else(DeviceSpec::kryo385);
+    let device = match args.flags.get("device") {
+        Some(d) => match exp::try_device_by_name(d) {
+            Some(spec) => spec,
+            None => {
+                eprintln!("unknown device '{d}'. options: {}", exp::DEVICE_NAMES);
+                return 2;
+            }
+        },
+        None => DeviceSpec::kryo385(),
+    };
     let model_kind = args
         .flags
         .get("model")
@@ -116,8 +180,12 @@ pub fn run(argv: Vec<String>) -> i32 {
                 seed,
                 ..Default::default()
             };
+            let session = match open_session(&sim, cfg.tune_opts, seed, args.flags.get("cache")) {
+                Ok(s) => s,
+                Err(code) => return code,
+            };
             let mut oracle = ProxyOracle::new();
-            let r = cprune(&model, &sim, &mut oracle, &cfg);
+            let r = cprune_with_session(&model, &mut oracle, &cfg, &session);
             if let Some(path) = args.flags.get("out") {
                 let j = crate::pruner::report::to_json(&model, sim.spec.name, &r);
                 if let Err(e) = std::fs::write(path, j.to_string()) {
@@ -138,23 +206,108 @@ pub fn run(argv: Vec<String>) -> i32 {
                 p as f64 / 1e6,
                 r.final_top1 * 100.0
             );
-            0
+            println!(
+                "search cost: {} programs measured ({} cache hits avoided {} measurements)",
+                r.programs_measured,
+                session.cache.hits(),
+                session.cache.saved()
+            );
+            close_session(&session, args.flags.get("cache"))
         }
         "tune" => {
             let model = Model::build(model_kind, seed);
             let sim = Simulator::new(device);
-            let session = TuningSession::new(&sim, TuneOptions::default(), seed);
+            let session =
+                match open_session(&sim, TuneOptions::default(), seed, args.flags.get("cache")) {
+                    Ok(s) => s,
+                    Err(code) => return code,
+                };
             let c = compiler::compile_tuned(&model.graph, &session, &HashMap::new());
             let fallback = compiler::compile_fallback(&model.graph, &sim);
             println!(
-                "{} on {}: tuned {:.2} FPS vs library-default {:.2} FPS ({} tasks, {} programs measured)",
+                "{} on {}: tuned {:.2} FPS vs library-default {:.2} FPS ({} tasks, {} programs measured, {} cache hits)",
                 model.kind.name(),
                 sim.spec.name,
                 c.fps(),
                 fallback.fps(),
                 c.table.len(),
-                session.measured_count()
+                session.measured_count(),
+                session.cache.hits()
             );
+            close_session(&session, args.flags.get("cache"))
+        }
+        "fleet" => {
+            let model = Model::build(model_kind, seed);
+            let device_list = args
+                .flags
+                .get("devices")
+                .cloned()
+                .unwrap_or_else(|| "kryo280,kryo385,kryo585,mali-g72".to_string());
+            let mut specs: Vec<DeviceSpec> = Vec::new();
+            for name in device_list.split(',').filter(|s| !s.is_empty()) {
+                match exp::try_device_by_name(name) {
+                    Some(spec) => specs.push(spec),
+                    None => {
+                        eprintln!("unknown device '{name}'. options: {}", exp::DEVICE_NAMES);
+                        return 2;
+                    }
+                }
+            }
+            if specs.is_empty() {
+                eprintln!("--devices needs at least one device");
+                return 2;
+            }
+            let threads = match args.flags.get("threads") {
+                Some(t) => match t.parse() {
+                    Ok(n) => n,
+                    Err(_) => {
+                        eprintln!("--threads wants a number, got '{t}'");
+                        return 2;
+                    }
+                },
+                None => 0,
+            };
+            let opts = FleetOptions {
+                tune: if args.flags.contains_key("quick") {
+                    TuneOptions::quick()
+                } else {
+                    TuneOptions::default()
+                },
+                threads,
+                cross_seed: true,
+            };
+            let mut fleet = FleetSession::new(specs, opts, seed);
+            if let Some(dir) = args.flags.get("cache-dir") {
+                match fleet.load_caches(dir) {
+                    Ok(n) if n > 0 => println!("cache: warm-started {n} device(s) from {dir}"),
+                    Ok(_) => {}
+                    Err(e) => {
+                        eprintln!("cache-dir {dir}: {e}");
+                        return 1;
+                    }
+                }
+            }
+            let r = fleet.tune_graph(&model.graph);
+            let rows: Vec<Vec<String>> = r.devices.iter().map(|d| d.table_row()).collect();
+            print_table(
+                &format!("{} fleet tuning ({} devices)", model.kind.name(), r.devices.len()),
+                &FleetDeviceResult::TABLE_HEADERS,
+                &rows,
+            );
+            println!(
+                "fleet: {} programs measured, {} cache hits ({:.0}% hit rate) avoided {} measurements",
+                r.total_measured(),
+                r.total_cache_hits(),
+                r.hit_rate() * 100.0,
+                r.total_measured_saved()
+            );
+            if let Some(dir) = args.flags.get("cache-dir") {
+                if let Err(e) = fleet.save_caches(dir) {
+                    eprintln!("saving caches to {dir}: {e}");
+                    return 1;
+                }
+                println!("cache: saved {} device cache(s) to {dir}", fleet.num_devices());
+            }
             0
         }
         "compare" => {
@@ -225,7 +378,7 @@ pub fn run(argv: Vec<String>) -> i32 {
                     0
                 }
                 Err(e) => {
-                    eprintln!("manifest error: {e:#}");
+                    eprintln!("manifest error: {e}");
                     1
                 }
             }

@@ -15,6 +15,7 @@ use crate::relay::partition::{extract_tasks, partition};
 use crate::relay::TaskTable;
 use crate::tir::{Program, Workload};
 use crate::tuner::TuningSession;
+use crate::util::rng::stable_hash;
 use std::collections::HashMap;
 
 /// A compiled model: tuned task table + non-tunable overhead.
@@ -115,11 +116,11 @@ pub fn compile_eager(graph: &Graph, sim: &Simulator) -> CompiledModel {
         // per shape from a small menu; performance is erratic across channel
         // counts and UNcorrelated with how well the shape tunes in a
         // search-based compiler — the root cause of Fig. 1's decorrelation.
-        // Model it as a deterministic per-shape efficiency in [0.25, 1].
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        use std::hash::{Hash, Hasher};
-        (w.ff, w.ic, w.oh, w.kh).hash(&mut h);
-        let unit = (h.finish() % 10_000) as f64 / 10_000.0;
+        // Model it as a deterministic per-shape efficiency in [0.25, 1],
+        // derived with the repo's stable hash (DefaultHasher's algorithm is
+        // unspecified across Rust releases, which would shift these golden
+        // latencies on a toolchain upgrade).
+        let unit = (stable_hash(&(w.ff, w.ic, w.oh, w.kh)) % 10_000) as f64 / 10_000.0;
         let kernel_eff = 0.25 + 0.75 * unit;
         let lat = sim.latency(&w, &p) / kernel_eff;
         table.record_tuned(tid, p, lat);
@@ -136,10 +137,8 @@ pub fn compile_eager(graph: &Graph, sim: &Simulator) -> CompiledModel {
     let shapes = shape_infer::infer(graph).expect("graph must shape-infer");
     let mut eager_overhead = 0.0;
     for node in &graph.nodes {
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        use std::hash::{Hash, Hasher};
-        (node.op.mnemonic(), shapes[node.id]).hash(&mut h);
-        let unit = (h.finish() % 10_000) as f64 / 10_000.0;
+        let unit =
+            (stable_hash(&(node.op.mnemonic(), shapes[node.id])) % 10_000) as f64 / 10_000.0;
         eager_overhead += eager_per_op * (0.5 + 1.5 * unit);
     }
     CompiledModel {

@@ -1,13 +1,18 @@
 //! Fig. 8 — target-processor specificity: a CPrune model tuned for device
 //! X runs fastest on X; executing it (with X's programs) on another
 //! processor Y loses most of the gain.
+//!
+//! Built on the fleet layer: a [`FleetSession`] owns the device set, and
+//! its `transfer_matrix` produces the tuned-for × run-on grid.
 
 use crate::accuracy::ProxyOracle;
-use crate::compiler;
-use crate::device::{DeviceSpec, Simulator};
+use crate::device::DeviceSpec;
 use crate::exp::Scale;
 use crate::graph::model_zoo::{Model, ModelKind};
+use crate::graph::ops::Graph;
 use crate::pruner::{cprune, CPruneConfig};
+use crate::relay::TaskTable;
+use crate::tuner::{FleetOptions, FleetSession};
 
 #[derive(Clone, Debug)]
 pub struct Fig8Row {
@@ -19,14 +24,17 @@ pub struct Fig8Row {
 }
 
 pub fn run(scale: Scale, seed: u64) -> Vec<Fig8Row> {
-    let devices = [DeviceSpec::kryo385(), DeviceSpec::kryo585(), DeviceSpec::mali_g72()];
+    let specs = vec![DeviceSpec::kryo385(), DeviceSpec::kryo585(), DeviceSpec::mali_g72()];
     let model = Model::build(ModelKind::MobileNetV2ImageNet, seed);
+    // The fleet only provides the device set + transfer grid here; tuning
+    // budgets come from each cprune run's CPruneConfig below, so the
+    // fleet's own tune options are irrelevant.
+    let fleet = FleetSession::new(specs, FleetOptions::default(), seed);
+    let n = fleet.num_devices();
 
     // CPrune per device: (final graph, final table) tuned natively.
-    let results: Vec<_> = devices
-        .iter()
-        .map(|spec| {
-            let sim = Simulator::new(spec.clone());
+    let results: Vec<_> = (0..n)
+        .map(|i| {
             let mut oracle = ProxyOracle::new();
             let cfg = CPruneConfig {
                 max_iterations: scale.cprune_iters(),
@@ -35,30 +43,29 @@ pub fn run(scale: Scale, seed: u64) -> Vec<Fig8Row> {
                 target_accuracy: crate::exp::paper_accuracy_budget(ModelKind::MobileNetV2ImageNet),
                 ..Default::default()
             };
-            cprune(&model, &sim, &mut oracle, &cfg)
+            cprune(&model, fleet.sim(i), &mut oracle, &cfg)
         })
         .collect();
 
-    let mut rows = Vec::new();
-    for (i, from) in devices.iter().enumerate() {
-        for (j, to) in devices.iter().enumerate() {
-            let sim_to = Simulator::new(to.clone());
-            // run model i (its graph + its tuned programs) on device j
-            let lat = compiler::latency_with_programs(
-                &results[i].final_graph,
-                &results[i].final_table,
-                &sim_to,
-            );
-            let native = results[j].final_latency;
-            rows.push(Fig8Row {
-                tuned_for: from.name,
-                run_on: to.name,
-                fps: 1.0 / lat,
-                relative_to_native: native / lat,
-            });
-        }
-    }
-    rows
+    // Run model i (its graph + its tuned programs) on every device j.
+    let models: Vec<(&Graph, &TaskTable)> = results
+        .iter()
+        .map(|r| (&r.final_graph, &r.final_table))
+        .collect();
+    fleet
+        .transfer_matrix(&models)
+        .into_iter()
+        .enumerate()
+        .map(|(idx, cell)| {
+            let native = results[idx % n].final_latency;
+            Fig8Row {
+                tuned_for: cell.tuned_for,
+                run_on: cell.run_on,
+                fps: 1.0 / cell.latency,
+                relative_to_native: native / cell.latency,
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -58,14 +58,24 @@ pub fn paper_accuracy_budget(kind: crate::graph::model_zoo::ModelKind) -> f64 {
     }
 }
 
-/// The devices of the paper's tables, by short name.
-pub fn device_by_name(name: &str) -> DeviceSpec {
+/// Short device names accepted by [`device_by_name`] (CLI help/errors).
+pub const DEVICE_NAMES: &str = "kryo280 kryo385 kryo585 mali-g72 rtx3080";
+
+/// Non-panicking lookup for user-supplied device names.
+pub fn try_device_by_name(name: &str) -> Option<DeviceSpec> {
     match name {
-        "kryo280" => DeviceSpec::kryo280(),
-        "kryo385" => DeviceSpec::kryo385(),
-        "kryo585" => DeviceSpec::kryo585(),
-        "mali" | "mali-g72" => DeviceSpec::mali_g72(),
-        "rtx3080" => DeviceSpec::rtx3080(),
-        other => panic!("unknown device {other}"),
+        "kryo280" => Some(DeviceSpec::kryo280()),
+        "kryo385" => Some(DeviceSpec::kryo385()),
+        "kryo585" => Some(DeviceSpec::kryo585()),
+        "mali" | "mali-g72" => Some(DeviceSpec::mali_g72()),
+        "rtx3080" => Some(DeviceSpec::rtx3080()),
+        _ => None,
     }
+}
+
+/// The devices of the paper's tables, by short name. Panics on unknown
+/// names — experiment harnesses pass literals; CLI paths should use
+/// [`try_device_by_name`].
+pub fn device_by_name(name: &str) -> DeviceSpec {
+    try_device_by_name(name).unwrap_or_else(|| panic!("unknown device {name}"))
 }

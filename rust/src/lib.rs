@@ -11,6 +11,10 @@
 //! * **L2/L1 (python/, build-time only)** — JAX masked CNN + Pallas GEMM
 //!   kernels, AOT-lowered to HLO text and executed from `runtime/` +
 //!   `train/` via PJRT. Python never runs on the request path.
+//!
+//! The XLA/PJRT-dependent code (`runtime/`, `train::driver`) sits behind
+//! the off-by-default `pjrt` cargo feature (DESIGN.md §6): the default
+//! build is pure-Rust, offline and dependency-free.
 
 pub mod accuracy;
 pub mod baselines;
@@ -21,6 +25,7 @@ pub mod exp;
 pub mod graph;
 pub mod pruner;
 pub mod relay;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tir;
 pub mod train;

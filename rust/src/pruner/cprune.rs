@@ -116,8 +116,24 @@ pub fn cprune(
     oracle: &mut dyn AccuracyOracle,
     cfg: &CPruneConfig,
 ) -> CPruneResult {
-    let t0 = Instant::now();
     let session = TuningSession::new(sim, cfg.tune_opts, cfg.seed);
+    cprune_with_session(model, oracle, cfg, &session)
+}
+
+/// Run CPrune against a caller-owned [`TuningSession`] — the warm-start
+/// entry point: load a persisted [`crate::tuner::TuneCache`] into the
+/// session first and identical workloads skip re-measurement entirely.
+/// The session's own options/seed govern tuning (`cfg.tune_opts` /
+/// `cfg.seed` only matter to sessions built by [`cprune`]); the target
+/// device is the session's simulator.
+pub fn cprune_with_session(
+    model: &Model,
+    oracle: &mut dyn AccuracyOracle,
+    cfg: &CPruneConfig,
+    session: &TuningSession,
+) -> CPruneResult {
+    let t0 = Instant::now();
+    let sim = session.sim;
 
     // -- Line 1: initial tune of M --------------------------------------
     let baseline = compiler::compile_tuned(&model.graph, &session, &HashMap::new());
@@ -391,6 +407,27 @@ mod tests {
         assert_eq!(a.iterations.len(), b.iterations.len());
         assert_eq!(a.final_latency, b.final_latency);
         assert_eq!(a.final_state, b.final_state);
+    }
+
+    #[test]
+    fn warm_started_run_measures_no_new_programs() {
+        // The acceptance path for the persistent cache: a deterministic
+        // re-run against the previous run's cache hits on every workload
+        // (the ≥90%-fewer-measurements criterion, here exactly 100%).
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let cfg = CPruneConfig { max_iterations: 6, ..Default::default() };
+        let cold_session = TuningSession::new(&sim, cfg.tune_opts, cfg.seed);
+        let mut oracle = ProxyOracle::new();
+        let cold = cprune_with_session(&m, &mut oracle, &cfg, &cold_session);
+        assert!(cold.programs_measured > 0);
+        let warm_session =
+            TuningSession::with_cache(&sim, cfg.tune_opts, cfg.seed, cold_session.cache);
+        let mut oracle2 = ProxyOracle::new();
+        let warm = cprune_with_session(&m, &mut oracle2, &cfg, &warm_session);
+        assert_eq!(warm.programs_measured, 0, "warm run re-measured");
+        assert_eq!(warm.final_latency, cold.final_latency);
+        assert_eq!(warm.iterations.len(), cold.iterations.len());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 pub mod cprune;
 pub mod report;
 
-pub use cprune::{cprune, CPruneConfig, CPruneResult, IterationLog};
+pub use cprune::{cprune, cprune_with_session, CPruneConfig, CPruneResult, IterationLog};
 
 use crate::accuracy::{Criterion, LayerPrune, PruneSummary};
 use crate::graph::model_zoo::Model;

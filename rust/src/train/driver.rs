@@ -45,8 +45,13 @@ pub struct Trainer {
 impl Trainer {
     /// Load artifacts and initial parameters.
     pub fn new(rt: &Runtime, cfg: TrainConfig) -> Result<Trainer> {
-        let manifest = Manifest::load(rt.artifact("manifest.json"))?;
-        let params = manifest.load_params(rt.artifact("params_init.bin"))?;
+        // Manifest errors are plain Strings (the parser lives outside the
+        // pjrt feature); lift them into anyhow here.
+        let manifest =
+            Manifest::load(rt.artifact("manifest.json")).map_err(anyhow::Error::msg)?;
+        let params = manifest
+            .load_params(rt.artifact("params_init.bin"))
+            .map_err(anyhow::Error::msg)?;
         let momentum = params.iter().map(|p| vec![0.0; p.len()]).collect();
         let masks = manifest
             .masks

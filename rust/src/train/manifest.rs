@@ -1,10 +1,15 @@
 //! `artifacts/manifest.json` — the AOT calling convention emitted by
 //! `python/compile/aot.py`: parameter order/shapes/offsets, mask shapes,
 //! conv inventory, batch sizes.
+//!
+//! Errors are plain `String`s (like `util::json`): this parser must stay
+//! available in the dependency-free default build — only the PJRT
+//! execution side lives behind the `pjrt` feature.
 
 use crate::util::json::{self, Json};
-use anyhow::{anyhow, Context, Result};
 use std::path::Path;
+
+type Result<T> = std::result::Result<T, String>;
 
 #[derive(Clone, Debug)]
 pub struct ParamEntry {
@@ -46,33 +51,33 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
         let text = std::fs::read_to_string(path.as_ref())
-            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+            .map_err(|e| format!("reading {}: {e}", path.as_ref().display()))?;
         Self::parse(&text)
     }
 
     pub fn parse(text: &str) -> Result<Manifest> {
-        let j = json::parse(text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let j = json::parse(text).map_err(|e| format!("manifest parse: {e}"))?;
         let usize_of = |v: &Json, key: &str| -> Result<usize> {
             v.get(key)
                 .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("manifest missing {key}"))
+                .ok_or_else(|| format!("manifest missing {key}"))
         };
         let params = j
             .get("params")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .ok_or_else(|| format!("manifest missing params"))?
             .iter()
             .map(|p| {
                 Ok(ParamEntry {
                     name: p
                         .get("name")
                         .and_then(Json::as_str)
-                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .ok_or_else(|| format!("param missing name"))?
                         .to_string(),
                     shape: p
                         .get("shape")
                         .and_then(Json::as_arr)
-                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .ok_or_else(|| format!("param missing shape"))?
                         .iter()
                         .filter_map(Json::as_usize)
                         .collect(),
@@ -84,35 +89,35 @@ impl Manifest {
         let masks = j
             .get("masks")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing masks"))?
+            .ok_or_else(|| format!("manifest missing masks"))?
             .iter()
             .map(|m| {
                 Ok(MaskEntry {
                     name: m
                         .get("name")
                         .and_then(Json::as_str)
-                        .ok_or_else(|| anyhow!("mask missing name"))?
+                        .ok_or_else(|| format!("mask missing name"))?
                         .to_string(),
                     channels: m
                         .get("shape")
                         .and_then(Json::as_arr)
                         .and_then(|a| a.first())
                         .and_then(Json::as_usize)
-                        .ok_or_else(|| anyhow!("mask missing shape"))?,
+                        .ok_or_else(|| format!("mask missing shape"))?,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
         let convs = j
             .get("convs")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing convs"))?
+            .ok_or_else(|| format!("manifest missing convs"))?
             .iter()
             .map(|c| {
                 Ok(ConvEntry {
                     name: c
                         .get("name")
                         .and_then(Json::as_str)
-                        .ok_or_else(|| anyhow!("conv missing name"))?
+                        .ok_or_else(|| format!("conv missing name"))?
                         .to_string(),
                     kh: usize_of(c, "kh")?,
                     kw: usize_of(c, "kw")?,
@@ -133,14 +138,14 @@ impl Manifest {
             momentum: j
                 .get("momentum")
                 .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow!("manifest missing momentum"))?,
+                .ok_or_else(|| format!("manifest missing momentum"))?,
         })
     }
 
     /// Load the initial parameters binary as per-entry f32 vectors.
     pub fn load_params(&self, bin_path: impl AsRef<Path>) -> Result<Vec<Vec<f32>>> {
         let bytes = std::fs::read(bin_path.as_ref())
-            .with_context(|| format!("reading {}", bin_path.as_ref().display()))?;
+            .map_err(|e| format!("reading {}: {e}", bin_path.as_ref().display()))?;
         self.params
             .iter()
             .map(|p| {
@@ -148,7 +153,7 @@ impl Manifest {
                 let end = start + p.numel * 4;
                 let slice = bytes
                     .get(start..end)
-                    .ok_or_else(|| anyhow!("params_init.bin too short for {}", p.name))?;
+                    .ok_or_else(|| format!("params_init.bin too short for {}", p.name))?;
                 Ok(slice
                     .chunks_exact(4)
                     .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))

@@ -2,16 +2,22 @@
 //!
 //! The paper's Algorithm 1 needs "short-term train and measure a_s"
 //! (line 11). For ImageNet-scale workloads that is the analytic proxy; for
-//! the CIFAR-scale end-to-end driver it is *real*: this module owns the
+//! the CIFAR-scale end-to-end driver it is *real*: `driver` owns the
 //! parameters/momentum/masks as PJRT literals, streams synthetic CIFAR-like
 //! batches through `train_step.hlo.txt` (whose conv hot-spots are the L1
 //! Pallas GEMM), and evaluates with `eval_batch.hlo.txt`. No Python
 //! anywhere on this path.
+//!
+//! Only `driver` touches XLA, so only it is gated behind the `pjrt`
+//! feature; the synthetic dataset and the AOT manifest parser are plain
+//! Rust and always available (`cprune e2e-info` uses the latter).
 
 pub mod dataset;
+#[cfg(feature = "pjrt")]
 pub mod driver;
 pub mod manifest;
 
 pub use dataset::Dataset;
+#[cfg(feature = "pjrt")]
 pub use driver::{TrainConfig, TrainedOracle, Trainer};
 pub use manifest::Manifest;

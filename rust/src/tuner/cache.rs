@@ -1,0 +1,416 @@
+//! Persistent tuning cache: `Workload → (Program, latency, measured)`.
+//!
+//! CPrune's practical win is amortizing search cost — across pruning
+//! iterations (Fig. 11), across runs, and across devices (Fig. 8). The
+//! in-memory side serves [`super::session::TuningSession`]; the
+//! `save`/`load` side turns a run's results into a versioned JSON file
+//! (via `util::json`; serde is unavailable offline) so repeated `cprune`
+//! invocations and fleet sessions warm-start instead of re-measuring.
+//!
+//! Determinism note: a cache hit returns the exact latency that was
+//! measured when the entry was created, and `Json::Num` round-trips f64
+//! through Rust's shortest-representation formatter, so a warm-started
+//! run reproduces the cold run's numbers bit-for-bit.
+
+use crate::tir::{Program, Workload};
+use crate::util::json::{self, Json};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Format tag of the on-disk header (guards against foreign JSON files).
+pub const CACHE_FORMAT: &str = "cprune-tune-cache";
+/// Bump when the entry schema changes; `load` rejects other versions.
+pub const CACHE_VERSION: u64 = 1;
+
+/// Thread-safe cache of tuning results keyed by workload structure, with
+/// hit/miss accounting for warm-start reporting.
+#[derive(Default)]
+pub struct TuneCache {
+    map: Mutex<HashMap<Workload, (Program, f64, usize)>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    /// Programs-measured the hits avoided re-measuring (Σ `measured` of
+    /// every hit entry) — the Fig. 11 cost metric a warm start saves.
+    saved: AtomicUsize,
+}
+
+impl TuneCache {
+    pub fn new() -> TuneCache {
+        TuneCache::default()
+    }
+
+    pub fn get(&self, w: &Workload) -> Option<(Program, f64, usize)> {
+        let found = self.map.lock().unwrap().get(w).cloned();
+        match &found {
+            Some((_, _, measured)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.saved.fetch_add(*measured, Ordering::Relaxed);
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        found
+    }
+
+    /// Membership probe that does NOT touch the hit/miss counters (for
+    /// bookkeeping questions, not lookups on the tuning path).
+    pub fn contains(&self, w: &Workload) -> bool {
+        self.map.lock().unwrap().contains_key(w)
+    }
+
+    pub fn put(&self, w: Workload, p: Program, lat: f64, measured: usize) {
+        self.map.lock().unwrap().insert(w, (p, lat, measured));
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups served from the cache since construction/load.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that fell through to the tuner.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Program measurements avoided by hits (search-cost savings).
+    pub fn saved(&self) -> usize {
+        self.saved.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of lookups served from the cache (0 when none happened).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits();
+        let total = h + self.misses();
+        if total == 0 {
+            0.0
+        } else {
+            h as f64 / total as f64
+        }
+    }
+
+    /// Serialize to the versioned JSON document. `device` names the target
+    /// the latencies were measured for — entries are device-specific, and
+    /// `load` refuses a file recorded for a different device. Entries are
+    /// sorted by their serialized workload so output is byte-stable.
+    pub fn to_json(&self, device: &str) -> Json {
+        let mut entries: Vec<(String, Json)> = self
+            .map
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(w, (p, lat, measured))| {
+                let wj = workload_to_json(w);
+                let key = wj.to_string();
+                let entry = Json::obj(vec![
+                    ("workload", wj),
+                    ("program", program_to_json(p)),
+                    ("latency", Json::Num(*lat)),
+                    ("measured", Json::Num(*measured as f64)),
+                ]);
+                (key, entry)
+            })
+            .collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        Json::obj(vec![
+            ("format", Json::Str(CACHE_FORMAT.to_string())),
+            ("version", Json::Num(CACHE_VERSION as f64)),
+            ("device", Json::Str(device.to_string())),
+            ("entries", Json::Arr(entries.into_iter().map(|(_, e)| e).collect())),
+        ])
+    }
+
+    /// Parse a document produced by [`TuneCache::to_json`]. When
+    /// `expected_device` is given, a file recorded for a different device
+    /// is rejected — latencies are device-specific, so silently serving
+    /// them to another target would produce wrong-but-plausible results.
+    /// Counters start at zero (they describe the current run).
+    pub fn parse(text: &str, expected_device: Option<&str>) -> Result<TuneCache, String> {
+        let j = json::parse(text)?;
+        match j.get("format").and_then(Json::as_str) {
+            Some(CACHE_FORMAT) => {}
+            other => return Err(format!("not a tune cache (format {other:?})")),
+        }
+        match j.get("version").and_then(Json::as_usize) {
+            Some(v) if v as u64 == CACHE_VERSION => {}
+            other => {
+                return Err(format!(
+                    "unsupported cache version {other:?} (want {CACHE_VERSION})"
+                ))
+            }
+        }
+        let recorded = j
+            .get("device")
+            .and_then(Json::as_str)
+            .ok_or("cache missing device")?;
+        if let Some(expected) = expected_device {
+            if recorded != expected {
+                return Err(format!(
+                    "cache was tuned for '{recorded}', not '{expected}' — \
+                     latencies do not transfer across devices"
+                ));
+            }
+        }
+        let cache = TuneCache::new();
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("cache missing entries")?;
+        for e in entries {
+            let w = workload_from_json(e.get("workload").ok_or("entry missing workload")?)?;
+            let p = program_from_json(e.get("program").ok_or("entry missing program")?)?;
+            let lat = e
+                .get("latency")
+                .and_then(Json::as_f64)
+                .ok_or("entry missing latency")?;
+            let measured = e
+                .get("measured")
+                .and_then(Json::as_usize)
+                .ok_or("entry missing measured")?;
+            cache.map.lock().unwrap().insert(w, (p, lat, measured));
+        }
+        Ok(cache)
+    }
+
+    /// Write the cache to `path` (versioned JSON), recording the device
+    /// the latencies belong to. Writes a sibling temp file first and
+    /// renames it into place, so an interrupted save never leaves a
+    /// truncated cache that would brick later warm starts.
+    pub fn save(&self, path: impl AsRef<Path>, device: &str) -> Result<(), String> {
+        let path = path.as_ref();
+        let mut tmp = path.as_os_str().to_os_string();
+        // pid-unique temp name: concurrent saves to the same path must not
+        // truncate each other's in-progress temp file before the rename.
+        tmp.push(format!(".{}.tmp", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, self.to_json(device).to_string())
+            .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("renaming {} into place: {e}", tmp.display()))
+    }
+
+    /// Load a cache previously written by [`TuneCache::save`], verifying
+    /// it was recorded for `expected_device`.
+    pub fn load(path: impl AsRef<Path>, expected_device: &str) -> Result<TuneCache, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text, Some(expected_device)).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+fn num(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+fn nums(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| num(x)).collect())
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("missing field {key}"))
+}
+
+fn usize_list(j: &Json, key: &str) -> Result<Vec<usize>, String> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("missing list {key}"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| format!("non-integer in {key}")))
+        .collect()
+}
+
+/// Epilogue tags come from the fixed fusion vocabulary in
+/// `relay::partition`; map parsed strings back onto the `'static` strs the
+/// `Workload` type carries (unknown tags — future fusions — are leaked,
+/// which costs bytes once per distinct tag per process).
+fn intern_epilogue(tag: &str) -> &'static str {
+    match tag {
+        "bn" => "bn",
+        "relu" => "relu",
+        "relu6" => "relu6",
+        "softmax" => "softmax",
+        "add" => "add",
+        other => Box::leak(other.to_string().into_boxed_str()),
+    }
+}
+
+fn workload_to_json(w: &Workload) -> Json {
+    Json::obj(vec![
+        ("n", num(w.n)),
+        ("oh", num(w.oh)),
+        ("ow", num(w.ow)),
+        ("ff", num(w.ff)),
+        ("ic", num(w.ic)),
+        ("kh", num(w.kh)),
+        ("kw", num(w.kw)),
+        ("groups", num(w.groups)),
+        ("stride", num(w.stride)),
+        (
+            "epilogue",
+            Json::Arr(w.epilogue.iter().map(|t| Json::Str(t.to_string())).collect()),
+        ),
+    ])
+}
+
+fn workload_from_json(j: &Json) -> Result<Workload, String> {
+    let epilogue = j
+        .get("epilogue")
+        .and_then(Json::as_arr)
+        .ok_or("workload missing epilogue")?
+        .iter()
+        .map(|v| {
+            v.as_str()
+                .map(intern_epilogue)
+                .ok_or_else(|| "non-string epilogue tag".to_string())
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(Workload {
+        n: usize_field(j, "n")?,
+        oh: usize_field(j, "oh")?,
+        ow: usize_field(j, "ow")?,
+        ff: usize_field(j, "ff")?,
+        ic: usize_field(j, "ic")?,
+        kh: usize_field(j, "kh")?,
+        kw: usize_field(j, "kw")?,
+        groups: usize_field(j, "groups")?,
+        stride: usize_field(j, "stride")?,
+        epilogue,
+    })
+}
+
+fn program_to_json(p: &Program) -> Json {
+    Json::obj(vec![
+        ("spatial_splits", nums(&p.spatial_splits)),
+        ("ff_splits", nums(&p.ff_splits)),
+        ("ax3_splits", nums(&p.ax3_splits)),
+        ("ic_splits", nums(&p.ic_splits)),
+        ("parallel", num(p.parallel)),
+        ("vectorize", num(p.vectorize)),
+        ("unroll", num(p.unroll)),
+    ])
+}
+
+fn program_from_json(j: &Json) -> Result<Program, String> {
+    Ok(Program {
+        spatial_splits: usize_list(j, "spatial_splits")?,
+        ff_splits: usize_list(j, "ff_splits")?,
+        ax3_splits: usize_list(j, "ax3_splits")?,
+        ic_splits: usize_list(j, "ic_splits")?,
+        parallel: usize_field(j, "parallel")?,
+        vectorize: usize_field(j, "vectorize")?,
+        unroll: usize_field(j, "unroll")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::OpKind;
+
+    fn wl(ff: usize) -> Workload {
+        Workload::from_conv(
+            &OpKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: ff, stride: 1, padding: 1, groups: 1 },
+            [1, 14, 14, ff],
+            vec!["bn", "relu"],
+        )
+    }
+
+    fn prog() -> Program {
+        Program {
+            spatial_splits: vec![49, 4],
+            ff_splits: vec![4, 8, 4],
+            ax3_splits: vec![16, 8],
+            ic_splits: vec![64],
+            parallel: 4,
+            vectorize: 8,
+            unroll: 2,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_entries_exactly() {
+        let cache = TuneCache::new();
+        cache.put(wl(128), prog(), 0.001234567890123, 42);
+        cache.put(wl(96), Program::naive(&wl(96)), 3.5e-5, 7);
+        let text = cache.to_json("devA").to_string();
+        let back = TuneCache::parse(&text, Some("devA")).unwrap();
+        assert_eq!(back.len(), 2);
+        let (p, lat, measured) = back.get(&wl(128)).unwrap();
+        assert_eq!(p, prog());
+        assert_eq!(lat, 0.001234567890123);
+        assert_eq!(measured, 42);
+        // epilogue interning must keep task identity intact
+        let (_, lat2, _) = back.get(&wl(96)).unwrap();
+        assert_eq!(lat2, 3.5e-5);
+    }
+
+    #[test]
+    fn serialized_form_is_stable() {
+        let a = TuneCache::new();
+        let b = TuneCache::new();
+        for &ff in &[64, 128, 256, 96] {
+            a.put(wl(ff), prog(), ff as f64, ff);
+            b.put(wl(ff), prog(), ff as f64, ff);
+        }
+        assert_eq!(a.to_json("d").to_string(), b.to_json("d").to_string());
+    }
+
+    #[test]
+    fn rejects_foreign_and_versioned_documents() {
+        let ok = r#"{"format":"cprune-tune-cache","version":1,"device":"d","entries":[]}"#;
+        assert!(TuneCache::parse("{}", None).is_err());
+        assert!(
+            TuneCache::parse(r#"{"format":"other","version":1,"device":"d","entries":[]}"#, None)
+                .is_err()
+        );
+        assert!(TuneCache::parse(
+            r#"{"format":"cprune-tune-cache","version":999,"device":"d","entries":[]}"#,
+            None
+        )
+        .is_err());
+        assert!(TuneCache::parse(ok, None).is_ok());
+        assert!(TuneCache::parse(ok, Some("d")).is_ok());
+        // device mismatch: latencies must not silently transfer
+        assert!(TuneCache::parse(ok, Some("other-device")).is_err());
+        assert!(TuneCache::parse("not json", None).is_err());
+    }
+
+    #[test]
+    fn hit_miss_and_savings_accounting() {
+        let cache = TuneCache::new();
+        cache.put(wl(128), prog(), 1.0, 30);
+        assert!(cache.get(&wl(128)).is_some());
+        assert!(cache.get(&wl(128)).is_some());
+        assert!(cache.get(&wl(64)).is_none());
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.saved(), 60);
+        assert!((cache.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn save_load_via_disk() {
+        let cache = TuneCache::new();
+        cache.put(wl(128), prog(), 0.25, 12);
+        let path = std::env::temp_dir().join("cprune_cache_unit_test.json");
+        cache.save(&path, "devA").unwrap();
+        let back = TuneCache::load(&path, "devA").unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.get(&wl(128)).unwrap().1, 0.25);
+        assert!(TuneCache::load(&path, "devB").is_err(), "wrong-device load accepted");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,432 @@
+//! Fleet compilation: tune one graph for N devices in one session.
+//!
+//! The north-star deployment tunes a model for a whole *fleet* of device
+//! types, not one phone. Two structural savings make that affordable:
+//!
+//! 1. **Persistent caches** — each device keeps its own [`TuneCache`]
+//!    across `tune_graph` calls and (via `save_caches`/`load_caches`)
+//!    across process runs, so repeated fleet compilations warm-start.
+//! 2. **Cross-device seeding** — the first device in the fleet (the
+//!    *pilot*) tunes natively; its best program per workload then seeds
+//!    every other device's search, generalizing the paper's §3.5
+//!    structure-preserving seed and the Fig. 8 observation that a tuned
+//!    program is a strong (if not optimal) starting point elsewhere.
+//!
+//! Determinism: per-device sessions derive per-workload RNG streams, the
+//! pilot runs before every follower, and followers only read the pilot's
+//! (fixed) results — so the outcome is identical at any thread budget.
+
+use super::cache::TuneCache;
+use super::search::TuneOptions;
+use super::session::{resolve_thread_budget, TuningSession};
+use crate::compiler::{self, CompiledModel};
+use crate::device::{DeviceSpec, Simulator};
+use crate::graph::ops::Graph;
+use crate::relay::TaskTable;
+use crate::tir::{Program, Workload};
+use crate::util::rng::stable_hash;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Fleet-wide knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetOptions {
+    /// Per-task tuning budget (shared by every device).
+    pub tune: TuneOptions,
+    /// Total worker-thread budget shared across the fleet (0 = all cores).
+    pub threads: usize,
+    /// Seed follower devices with the pilot's best programs.
+    pub cross_seed: bool,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions { tune: TuneOptions::default(), threads: 0, cross_seed: true }
+    }
+}
+
+/// Outcome of one device's tune within a fleet run.
+#[derive(Clone, Debug)]
+pub struct FleetDeviceResult {
+    pub device: &'static str,
+    pub table: TaskTable,
+    /// End-to-end model latency (seconds) and FPS on this device.
+    pub latency: f64,
+    pub fps: f64,
+    pub tasks: usize,
+    /// Programs actually measured for this device in this run.
+    pub measured: usize,
+    /// Task lookups served by this device's persistent cache this run.
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    /// Measurements those hits avoided (Fig. 11's cost metric).
+    pub measured_saved: usize,
+    /// Workloads whose search *this run* was seeded by the pilot device
+    /// (0 on warm runs where everything came from the cache).
+    pub seeded: usize,
+}
+
+impl FleetDeviceResult {
+    /// Column headers matching [`FleetDeviceResult::table_row`] (shared by
+    /// the CLI `fleet` table and the `fleet_tuning` bench).
+    pub const TABLE_HEADERS: [&'static str; 7] =
+        ["device", "FPS", "latency ms", "tasks", "measured", "cache hits", "seeded"];
+
+    /// Render this device's result as one `print_table` row.
+    pub fn table_row(&self) -> Vec<String> {
+        vec![
+            self.device.to_string(),
+            format!("{:.2}", self.fps),
+            format!("{:.2}", self.latency * 1e3),
+            self.tasks.to_string(),
+            self.measured.to_string(),
+            self.cache_hits.to_string(),
+            self.seeded.to_string(),
+        ]
+    }
+}
+
+/// One fleet compilation's per-device results.
+#[derive(Debug)]
+pub struct FleetResult {
+    pub devices: Vec<FleetDeviceResult>,
+}
+
+impl FleetResult {
+    pub fn total_measured(&self) -> usize {
+        self.devices.iter().map(|d| d.measured).sum()
+    }
+
+    pub fn total_cache_hits(&self) -> usize {
+        self.devices.iter().map(|d| d.cache_hits).sum()
+    }
+
+    pub fn total_measured_saved(&self) -> usize {
+        self.devices.iter().map(|d| d.measured_saved).sum()
+    }
+
+    /// Fraction of task lookups served from persistent caches.
+    pub fn hit_rate(&self) -> f64 {
+        let hits = self.total_cache_hits();
+        let total: usize = hits + self.devices.iter().map(|d| d.cache_misses).sum::<usize>();
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+}
+
+/// One cell of the cross-device execution grid (Fig. 8): programs tuned
+/// for `tuned_for`, executed on `run_on`.
+#[derive(Clone, Debug)]
+pub struct TransferCell {
+    pub tuned_for: &'static str,
+    pub run_on: &'static str,
+    pub latency: f64,
+}
+
+/// A persistent multi-device tuning service: N simulators, N caches, one
+/// shared thread budget and seed policy.
+pub struct FleetSession {
+    sims: Vec<Simulator>,
+    /// Per-device persistent caches (index-aligned with the device specs).
+    pub caches: Vec<TuneCache>,
+    pub opts: FleetOptions,
+    pub seed: u64,
+}
+
+impl FleetSession {
+    pub fn new(specs: Vec<DeviceSpec>, opts: FleetOptions, seed: u64) -> FleetSession {
+        assert!(!specs.is_empty(), "fleet needs at least one device");
+        let caches = specs.iter().map(|_| TuneCache::new()).collect();
+        let sims = specs.into_iter().map(Simulator::new).collect();
+        FleetSession { sims, caches, opts, seed }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.sims.len()
+    }
+
+    /// The simulator for device `i` (pilot = 0).
+    pub fn sim(&self, i: usize) -> &Simulator {
+        &self.sims[i]
+    }
+
+    /// Tune `graph` for every device. The pilot (device 0) tunes first
+    /// with the whole thread budget; followers then tune concurrently,
+    /// splitting the budget, each seeded with the pilot's best programs.
+    pub fn tune_graph(&mut self, graph: &Graph) -> FleetResult {
+        let n = self.sims.len();
+        let budget = resolve_thread_budget(self.opts.threads);
+
+        let caches = std::mem::take(&mut self.caches);
+        let mut sessions: Vec<TuningSession<'_>> = Vec::with_capacity(n);
+        for (i, (sim, cache)) in self.sims.iter().zip(caches).enumerate() {
+            let mut s =
+                TuningSession::with_cache(sim, self.opts.tune, device_seed(self.seed, i), cache);
+            s.threads = budget;
+            sessions.push(s);
+        }
+        let before: Vec<(usize, usize, usize)> = sessions
+            .iter()
+            .map(|s| (s.cache.hits(), s.cache.misses(), s.cache.saved()))
+            .collect();
+
+        // Phase 1 — pilot tunes natively.
+        let pilot = compiler::compile_tuned(graph, &sessions[0], &HashMap::new());
+        let mut seeds: HashMap<Workload, Program> = HashMap::new();
+        if self.opts.cross_seed {
+            for t in pilot.table.tasks() {
+                if let Some(p) = &t.best_program {
+                    seeds.insert(t.workload.clone(), p.clone());
+                }
+            }
+        }
+
+        // How many of each follower's *upcoming* searches the pilot seeds:
+        // seed programs for workloads the follower does not already have
+        // cached. Computed before phase 2 fills the caches (and via
+        // `contains`, so the hit/miss counters stay honest).
+        let seeded_counts: Vec<usize> = sessions
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                if i == 0 {
+                    0
+                } else {
+                    seeds.keys().filter(|w| !s.cache.contains(w)).count()
+                }
+            })
+            .collect();
+
+        // Phase 2 — followers share the budget, pilot-seeded.
+        let mut compiled: Vec<Option<CompiledModel>> = (0..n).map(|_| None).collect();
+        compiled[0] = Some(pilot);
+        if n > 1 {
+            let workers = budget.min(n - 1).max(1);
+            let per_session = (budget / workers).max(1);
+            for s in sessions[1..].iter_mut() {
+                s.threads = per_session;
+            }
+            if workers <= 1 {
+                for (i, slot) in compiled.iter_mut().enumerate().skip(1) {
+                    *slot = Some(compiler::compile_tuned(graph, &sessions[i], &seeds));
+                }
+            } else {
+                let sessions_ref = &sessions;
+                let seeds_ref = &seeds;
+                let results: Vec<(usize, CompiledModel)> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = (0..workers)
+                        .map(|k| {
+                            scope.spawn(move || {
+                                let mut out = Vec::new();
+                                let mut i = 1 + k;
+                                while i < n {
+                                    out.push((
+                                        i,
+                                        compiler::compile_tuned(
+                                            graph,
+                                            &sessions_ref[i],
+                                            seeds_ref,
+                                        ),
+                                    ));
+                                    i += workers;
+                                }
+                                out
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .flat_map(|h| h.join().expect("fleet worker panicked"))
+                        .collect()
+                });
+                for (i, c) in results {
+                    compiled[i] = Some(c);
+                }
+            }
+        }
+
+        let mut devices = Vec::with_capacity(n);
+        for (i, (sess, c)) in sessions.iter().zip(compiled).enumerate() {
+            let c = c.expect("every device compiled");
+            devices.push(FleetDeviceResult {
+                device: self.sims[i].spec.name,
+                latency: c.latency(),
+                fps: c.fps(),
+                tasks: c.table.len(),
+                measured: sess.measured_count(),
+                cache_hits: sess.cache.hits() - before[i].0,
+                cache_misses: sess.cache.misses() - before[i].1,
+                measured_saved: sess.cache.saved() - before[i].2,
+                seeded: seeded_counts[i],
+                table: c.table,
+            });
+        }
+        self.caches = sessions.into_iter().map(|s| s.cache).collect();
+        FleetResult { devices }
+    }
+
+    /// The Fig. 8 grid: for each tuned model i (graph + task table, tuned
+    /// natively for device i) evaluate it on every device j with i's
+    /// programs. `models` must be index-aligned with the fleet's devices.
+    pub fn transfer_matrix(&self, models: &[(&Graph, &TaskTable)]) -> Vec<TransferCell> {
+        assert_eq!(models.len(), self.sims.len(), "one model per fleet device");
+        let mut cells = Vec::with_capacity(models.len() * self.sims.len());
+        for (i, (graph, table)) in models.iter().enumerate() {
+            for sim in &self.sims {
+                cells.push(TransferCell {
+                    tuned_for: self.sims[i].spec.name,
+                    run_on: sim.spec.name,
+                    latency: compiler::latency_with_programs(graph, table, sim),
+                });
+            }
+        }
+        cells
+    }
+
+    /// Load per-device caches from `dir` (files named by [`cache_file_name`]).
+    /// Missing files are fine (cold devices); returns how many loaded.
+    pub fn load_caches(&mut self, dir: impl AsRef<Path>) -> Result<usize, String> {
+        let dir = dir.as_ref();
+        let mut loaded = 0;
+        for (i, sim) in self.sims.iter().enumerate() {
+            let path = dir.join(cache_file_name(sim.spec.name));
+            if path.exists() {
+                self.caches[i] = TuneCache::load(&path, sim.spec.name)?;
+                loaded += 1;
+            }
+        }
+        Ok(loaded)
+    }
+
+    /// Persist every device's cache into `dir` (created if absent).
+    pub fn save_caches(&self, dir: impl AsRef<Path>) -> Result<(), String> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
+        for (i, sim) in self.sims.iter().enumerate() {
+            self.caches[i].save(dir.join(cache_file_name(sim.spec.name)), sim.spec.name)?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-device session seed: the pilot keeps the fleet seed (so a
+/// single-device fleet reproduces a plain [`TuningSession`] run), followers
+/// get stable derived streams.
+fn device_seed(seed: u64, index: usize) -> u64 {
+    if index == 0 {
+        seed
+    } else {
+        stable_hash(&(seed, index as u64))
+    }
+}
+
+/// Filesystem-safe cache file name for a device ("Kryo 385 (Galaxy S9)" →
+/// "kryo-385-galaxy-s9.cache.json").
+pub fn cache_file_name(device_name: &str) -> String {
+    let mut slug = String::with_capacity(device_name.len());
+    for c in device_name.chars() {
+        if c.is_ascii_alphanumeric() {
+            slug.push(c.to_ascii_lowercase());
+        } else if !slug.ends_with('-') {
+            slug.push('-');
+        }
+    }
+    format!("{}.cache.json", slug.trim_matches('-'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::model_zoo::{Model, ModelKind};
+
+    fn specs3() -> Vec<DeviceSpec> {
+        vec![DeviceSpec::kryo385(), DeviceSpec::kryo585(), DeviceSpec::mali_g72()]
+    }
+
+    #[test]
+    fn fleet_tunes_every_device() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let mut fleet = FleetSession::new(
+            specs3(),
+            FleetOptions { tune: TuneOptions::quick(), ..Default::default() },
+            1,
+        );
+        let r = fleet.tune_graph(&m.graph);
+        assert_eq!(r.devices.len(), 3);
+        for d in &r.devices {
+            assert!(d.fps > 0.0 && d.fps.is_finite(), "{}: bad fps", d.device);
+            assert!(d.tasks >= 5);
+            assert!(d.measured > 0, "{}: cold run measured nothing", d.device);
+        }
+        // followers were seeded with the pilot's programs
+        assert!(r.devices[1].seeded > 0);
+        assert_eq!(r.devices[0].seeded, 0);
+    }
+
+    #[test]
+    fn single_device_fleet_matches_plain_session() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let mut fleet = FleetSession::new(
+            vec![DeviceSpec::kryo385()],
+            FleetOptions { tune: TuneOptions::quick(), ..Default::default() },
+            7,
+        );
+        let r = fleet.tune_graph(&m.graph);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let sess = TuningSession::new(&sim, TuneOptions::quick(), 7);
+        let table = sess.tune_graph(&m.graph, &HashMap::new());
+        assert_eq!(r.devices[0].table.model_latency(), table.model_latency());
+    }
+
+    #[test]
+    fn second_fleet_run_is_all_hits() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let mut fleet = FleetSession::new(
+            specs3(),
+            FleetOptions { tune: TuneOptions::quick(), ..Default::default() },
+            2,
+        );
+        let cold = fleet.tune_graph(&m.graph);
+        assert!(cold.total_measured() > 0);
+        let warm = fleet.tune_graph(&m.graph);
+        assert_eq!(warm.total_measured(), 0, "warm fleet run re-measured");
+        assert!(warm.hit_rate() > 0.999, "hit rate {}", warm.hit_rate());
+        assert!(warm.total_measured_saved() >= cold.total_measured());
+        for (c, w) in cold.devices.iter().zip(&warm.devices) {
+            assert_eq!(c.latency, w.latency, "{} drifted across runs", c.device);
+            assert_eq!(w.seeded, 0, "{}: warm run claims seeding happened", w.device);
+        }
+    }
+
+    #[test]
+    fn transfer_matrix_shape_and_diagonal() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let mut fleet = FleetSession::new(
+            specs3(),
+            FleetOptions { tune: TuneOptions::quick(), ..Default::default() },
+            3,
+        );
+        let r = fleet.tune_graph(&m.graph);
+        let models: Vec<(&Graph, &TaskTable)> =
+            r.devices.iter().map(|d| (&m.graph, &d.table)).collect();
+        let cells = fleet.transfer_matrix(&models);
+        assert_eq!(cells.len(), 9);
+        for (idx, c) in cells.iter().enumerate() {
+            assert!(c.latency > 0.0);
+            assert_eq!(c.tuned_for, fleet.sim(idx / 3).spec.name);
+            assert_eq!(c.run_on, fleet.sim(idx % 3).spec.name);
+        }
+    }
+
+    #[test]
+    fn cache_file_names_are_sane() {
+        assert_eq!(cache_file_name("Kryo 385 (Galaxy S9)"), "kryo-385-galaxy-s9.cache.json");
+        assert_eq!(
+            cache_file_name("Mali-G72 (Galaxy S9 GPU)"),
+            "mali-g72-galaxy-s9-gpu.cache.json"
+        );
+    }
+}

@@ -5,11 +5,20 @@
 //! mirroring Ansor's XGBoost-on-measurements loop) and validated by noisy
 //! simulated measurements. Returns the fastest program + its latency —
 //! exactly the pair CPrune's table stores per task.
+//!
+//! On top of the per-device [`TuningSession`] sit the persistence and
+//! fleet layers (DESIGN.md §5): [`TuneCache`] serializes results across
+//! runs, and [`FleetSession`] tunes one graph for many devices with
+//! cross-device seeding.
 
+pub mod cache;
 pub mod cost_model;
+pub mod fleet;
 pub mod search;
 pub mod session;
 
+pub use cache::TuneCache;
 pub use cost_model::{features, CostModel, LearnedCost};
+pub use fleet::{FleetDeviceResult, FleetOptions, FleetResult, FleetSession};
 pub use search::{tune_task, TuneOptions};
-pub use session::{TuneCache, TuningSession};
+pub use session::TuningSession;

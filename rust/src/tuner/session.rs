@@ -1,48 +1,20 @@
 //! Whole-model tuning session: tune every task of a partitioned graph,
-//! with a cross-iteration cache.
+//! with a cross-iteration (and, via [`TuneCache::save`], cross-run) cache.
 //!
 //! CPrune re-tunes the model after every pruning step (Alg. 1 line 8).
 //! Tasks whose workload did not change hit the cache — the big practical
 //! saving CPrune's selective search enables (Fig. 11's comparison point).
 //! `retune_everything` disables the cache to emulate exhaustive behaviour.
 
+use super::cache::TuneCache;
 use super::search::{tune_task, TuneOptions, TuneResult};
 use crate::device::Simulator;
 use crate::graph::ops::Graph;
 use crate::relay::partition::extract_tasks;
-use crate::relay::{TaskTable};
+use crate::relay::TaskTable;
 use crate::tir::{Program, Workload};
-use crate::util::rng::Rng;
+use crate::util::rng::{stable_hash, Rng};
 use std::collections::HashMap;
-use std::sync::Mutex;
-
-/// Cache of tuning results keyed by workload structure.
-#[derive(Default)]
-pub struct TuneCache {
-    map: Mutex<HashMap<Workload, (Program, f64, usize)>>,
-}
-
-impl TuneCache {
-    pub fn new() -> TuneCache {
-        TuneCache::default()
-    }
-
-    pub fn get(&self, w: &Workload) -> Option<(Program, f64, usize)> {
-        self.map.lock().unwrap().get(w).cloned()
-    }
-
-    pub fn put(&self, w: Workload, p: Program, lat: f64, measured: usize) {
-        self.map.lock().unwrap().insert(w, (p, lat, measured));
-    }
-
-    pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-}
 
 /// Tunes models for one device; owns the cache and the RNG seed policy.
 pub struct TuningSession<'a> {
@@ -53,18 +25,33 @@ pub struct TuningSession<'a> {
     /// When false (default) identical workloads reuse cached results
     /// across pruning iterations.
     pub retune_everything: bool,
+    /// Worker-thread budget for `tune_graph` (0 = all available cores).
+    /// Thread count never changes results: each task derives its RNG
+    /// stream from its own workload hash.
+    pub threads: usize,
     /// Cumulative count of programs actually measured (search cost).
     pub total_measured: std::sync::atomic::AtomicUsize,
 }
 
 impl<'a> TuningSession<'a> {
     pub fn new(sim: &'a Simulator, opts: TuneOptions, seed: u64) -> TuningSession<'a> {
+        Self::with_cache(sim, opts, seed, TuneCache::new())
+    }
+
+    /// Warm-start from an existing (e.g. [`TuneCache::load`]ed) cache.
+    pub fn with_cache(
+        sim: &'a Simulator,
+        opts: TuneOptions,
+        seed: u64,
+        cache: TuneCache,
+    ) -> TuningSession<'a> {
         TuningSession {
             sim,
             opts,
-            cache: TuneCache::new(),
+            cache,
             seed,
             retune_everything: false,
+            threads: 0,
             total_measured: std::sync::atomic::AtomicUsize::new(0),
         }
     }
@@ -101,15 +88,17 @@ impl<'a> TuningSession<'a> {
             return table;
         }
 
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-            .min(pending.len());
+        let budget = resolve_thread_budget(self.threads);
+        let threads = budget.min(pending.len()).max(1);
+        // `pending` workloads already missed the cache above (and tasks are
+        // deduplicated), so tune them directly — probing again through
+        // `tune_workload` would double-count every miss in the hit-rate
+        // accounting.
         let results: Vec<(usize, Program, f64)> = if threads <= 1 || pending.len() == 1 {
             pending
                 .iter()
                 .map(|(tid, w)| {
-                    let (p, lat) = self.tune_workload(w, seed_programs.get(w));
+                    let (p, lat) = self.tune_uncached(w, seed_programs.get(w));
                     (*tid, p, lat)
                 })
                 .collect()
@@ -125,7 +114,7 @@ impl<'a> TuningSession<'a> {
                                 .iter()
                                 .map(|(tid, w)| {
                                     let (p, lat) =
-                                        self.tune_workload(w, seed_programs.get(w));
+                                        self.tune_uncached(w, seed_programs.get(w));
                                     (*tid, p, lat)
                                 })
                                 .collect::<Vec<_>>()
@@ -151,6 +140,12 @@ impl<'a> TuningSession<'a> {
                 return (p, lat);
             }
         }
+        self.tune_uncached(w, seed_prog)
+    }
+
+    /// Tune without consulting the cache (the caller already established a
+    /// miss); still records the result.
+    fn tune_uncached(&self, w: &Workload, seed_prog: Option<&Program>) -> (Program, f64) {
         let mut rng = Rng::with_stream(self.seed, hash_workload(w));
         let TuneResult { best, latency, measured } =
             tune_task(w, self.sim, &self.opts, &mut rng, seed_prog);
@@ -165,14 +160,27 @@ impl<'a> TuningSession<'a> {
     }
 }
 
+/// Resolve a worker-thread knob: 0 means "all available cores" (shared by
+/// [`TuningSession`] and the fleet layer so the fallback policy cannot
+/// diverge between them).
+pub(crate) fn resolve_thread_budget(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    } else {
+        threads
+    }
+}
+
 /// Stable hash of a workload for RNG stream derivation (not dedup — dedup
-/// uses full equality via the `HashMap`).
+/// uses full equality via the `HashMap`). Uses the repo's FNV-1a
+/// [`stable_hash`], NOT `DefaultHasher`: the latter's algorithm is
+/// unspecified across Rust releases, which would silently re-seed every
+/// search (breaking replays and persisted-cache golden latencies) on a
+/// toolchain upgrade.
 fn hash_workload(w: &Workload) -> u64 {
-    use std::collections::hash_map::DefaultHasher;
-    use std::hash::{Hash, Hasher};
-    let mut h = DefaultHasher::new();
-    w.hash(&mut h);
-    h.finish()
+    stable_hash(w)
 }
 
 #[cfg(test)]
@@ -205,6 +213,7 @@ mod tests {
         let t2 = sess.tune_graph(&m.graph, &HashMap::new());
         assert_eq!(sess.measured_count(), measured_after_first, "cache missed");
         assert_eq!(t1.model_latency(), t2.model_latency());
+        assert!(sess.cache.hits() >= t2.len(), "hits not accounted");
     }
 
     #[test]
@@ -230,5 +239,32 @@ mod tests {
             .tune_graph(&m.graph, &HashMap::new())
             .model_latency();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn thread_budget_does_not_change_results() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let mut one = TuningSession::new(&sim, TuneOptions::quick(), 3);
+        one.threads = 1;
+        let mut many = TuningSession::new(&sim, TuneOptions::quick(), 3);
+        many.threads = 8;
+        let a = one.tune_graph(&m.graph, &HashMap::new());
+        let b = many.tune_graph(&m.graph, &HashMap::new());
+        assert_eq!(a.model_latency(), b.model_latency());
+        assert_eq!(one.measured_count(), many.measured_count());
+    }
+
+    #[test]
+    fn warm_start_from_preloaded_cache_measures_nothing() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let cold = TuningSession::new(&sim, TuneOptions::quick(), 5);
+        let t_cold = cold.tune_graph(&m.graph, &HashMap::new());
+        assert!(cold.measured_count() > 0);
+        let warm = TuningSession::with_cache(&sim, TuneOptions::quick(), 5, cold.cache);
+        let t_warm = warm.tune_graph(&m.graph, &HashMap::new());
+        assert_eq!(warm.measured_count(), 0, "warm start re-measured");
+        assert_eq!(t_cold.model_latency(), t_warm.model_latency());
     }
 }

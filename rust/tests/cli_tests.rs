@@ -41,3 +41,69 @@ fn dot_command_succeeds() {
 fn report_fig6_smoke() {
     assert_eq!(run(&["report", "fig6", "--scale", "smoke"]), 0);
 }
+
+#[test]
+fn tune_warm_starts_from_cache_file() {
+    let path = std::env::temp_dir().join("cprune_cli_test_tune.cache.json");
+    let p = path.to_str().unwrap();
+    let _ = std::fs::remove_file(&path);
+    let args = ["tune", "--model", "resnet8-cifar", "--device", "kryo385", "--cache", p];
+    assert_eq!(run(&args), 0);
+    assert!(path.exists(), "cache file not written");
+    // second run loads the cache (exit 0; the warm path is covered
+    // quantitatively in tests/fleet_tests.rs and the tuner unit tests)
+    assert_eq!(run(&args), 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn fleet_tunes_three_devices() {
+    assert_eq!(
+        run(&["fleet", "--model", "resnet8-cifar", "--devices", "kryo280,kryo385,kryo585",
+              "--quick"]),
+        0
+    );
+}
+
+#[test]
+fn fleet_cache_dir_roundtrip() {
+    let dir = std::env::temp_dir().join("cprune_cli_test_fleet_caches");
+    let _ = std::fs::remove_dir_all(&dir);
+    let d = dir.to_str().unwrap();
+    let args = ["fleet", "--model", "resnet8-cifar", "--devices", "kryo385,mali-g72",
+                "--quick", "--cache-dir", d];
+    assert_eq!(run(&args), 0);
+    assert!(dir.read_dir().unwrap().count() >= 2, "per-device caches not written");
+    assert_eq!(run(&args), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cache_for_another_device_is_refused() {
+    let path = std::env::temp_dir().join("cprune_cli_test_xdev.cache.json");
+    let p = path.to_str().unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(
+        run(&["tune", "--model", "resnet8-cifar", "--device", "kryo385", "--cache", p]),
+        0
+    );
+    // same cache file, different device: must fail loudly, not serve
+    // kryo385 latencies as kryo585 results
+    assert_eq!(
+        run(&["tune", "--model", "resnet8-cifar", "--device", "kryo585", "--cache", p]),
+        1
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupt_cache_fails_loudly() {
+    let path = std::env::temp_dir().join("cprune_cli_test_corrupt.cache.json");
+    std::fs::write(&path, "not json at all").unwrap();
+    let p = path.to_str().unwrap();
+    assert_eq!(
+        run(&["tune", "--model", "resnet8-cifar", "--device", "kryo385", "--cache", p]),
+        1
+    );
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,93 @@
+//! Integration: the fleet compilation layer — persistent TuneCache
+//! round-trips through disk, and FleetSession results are independent of
+//! the thread budget.
+
+use cprune::device::{DeviceSpec, Simulator};
+use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::tuner::{FleetOptions, FleetSession, TuneCache, TuneOptions, TuningSession};
+use std::collections::HashMap;
+
+fn specs3() -> Vec<DeviceSpec> {
+    vec![DeviceSpec::kryo385(), DeviceSpec::kryo585(), DeviceSpec::mali_g72()]
+}
+
+#[test]
+fn cache_roundtrip_warm_starts_a_fresh_session() {
+    // tune → persist → a fresh session loads → zero new programs measured.
+    let m = Model::build(ModelKind::ResNet8Cifar, 0);
+    let sim = Simulator::new(DeviceSpec::kryo385());
+    let cold = TuningSession::new(&sim, TuneOptions::quick(), 11);
+    let t_cold = cold.tune_graph(&m.graph, &HashMap::new());
+    assert!(cold.measured_count() > 0);
+
+    let path = std::env::temp_dir().join("cprune_fleet_test_roundtrip.cache.json");
+    cold.cache.save(&path, sim.spec.name).unwrap();
+
+    // wrong-device loads are refused; the right device round-trips
+    assert!(TuneCache::load(&path, "some other device").is_err());
+    let loaded = TuneCache::load(&path, sim.spec.name).unwrap();
+    assert_eq!(loaded.len(), cold.cache.len());
+    let warm = TuningSession::with_cache(&sim, TuneOptions::quick(), 11, loaded);
+    let t_warm = warm.tune_graph(&m.graph, &HashMap::new());
+    assert_eq!(warm.measured_count(), 0, "persisted cache missed");
+    assert_eq!(t_cold.model_latency(), t_warm.model_latency());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn fleet_results_identical_at_1_and_n_threads() {
+    let m = Model::build(ModelKind::ResNet8Cifar, 0);
+    let run = |threads: usize| {
+        let mut fleet = FleetSession::new(
+            specs3(),
+            FleetOptions { tune: TuneOptions::quick(), threads, cross_seed: true },
+            4,
+        );
+        fleet.tune_graph(&m.graph)
+    };
+    let serial = run(1);
+    let parallel = run(8);
+    assert_eq!(serial.devices.len(), parallel.devices.len());
+    for (a, b) in serial.devices.iter().zip(&parallel.devices) {
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.latency, b.latency, "{}: thread budget changed results", a.device);
+        assert_eq!(a.measured, b.measured, "{}: measured drifted", a.device);
+        assert_eq!(a.table.model_latency(), b.table.model_latency());
+    }
+    assert_eq!(serial.total_measured(), parallel.total_measured());
+}
+
+#[test]
+fn fleet_caches_roundtrip_through_directory() {
+    let m = Model::build(ModelKind::ResNet8Cifar, 0);
+    let dir = std::env::temp_dir().join("cprune_fleet_test_cachedir");
+    let opts = || FleetOptions { tune: TuneOptions::quick(), ..Default::default() };
+
+    let mut cold = FleetSession::new(specs3(), opts(), 9);
+    let r_cold = cold.tune_graph(&m.graph);
+    assert!(r_cold.total_measured() > 0);
+    cold.save_caches(&dir).unwrap();
+
+    let mut warm = FleetSession::new(specs3(), opts(), 9);
+    assert_eq!(warm.load_caches(&dir).unwrap(), 3);
+    let r_warm = warm.tune_graph(&m.graph);
+    assert_eq!(r_warm.total_measured(), 0, "fleet warm start re-measured");
+    for (c, w) in r_cold.devices.iter().zip(&r_warm.devices) {
+        assert_eq!(c.latency, w.latency, "{} drifted through persistence", c.device);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_cache_files_are_rejected() {
+    let path = std::env::temp_dir().join("cprune_fleet_test_corrupt.cache.json");
+    std::fs::write(
+        &path,
+        "{\"format\":\"cprune-tune-cache\",\"version\":99,\"device\":\"d\",\"entries\":[]}",
+    )
+    .unwrap();
+    assert!(TuneCache::load(&path, "d").is_err());
+    std::fs::write(&path, "definitely not json").unwrap();
+    assert!(TuneCache::load(&path, "d").is_err());
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,6 +1,10 @@
 //! Integration: the full AOT path — HLO-text artifacts produced by
 //! python/compile/aot.py, loaded and executed from Rust via PJRT.
 //! Tests no-op gracefully when `make artifacts` has not run.
+//!
+//! The whole file is gated on the `pjrt` feature (and needs the *real*
+//! xla crate linked in place of the rust/shims/xla stub to do anything).
+#![cfg(feature = "pjrt")]
 
 use cprune::runtime::{literal_f32, Runtime};
 use cprune::train::{Dataset, TrainConfig, Trainer};
