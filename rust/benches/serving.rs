@@ -1,0 +1,34 @@
+//! Serving-layer bench: regenerate the throughput-vs-SLO table from
+//! per-device CPrune Pareto frontiers, and time the simulator itself.
+//! Run: cargo bench --bench serving
+
+use cprune::exp::{serving, Scale};
+use cprune::util::bench::print_table;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = serving::run(Scale::Full, 42);
+    let total_s = t0.elapsed().as_secs_f64();
+
+    print_table(
+        "Serving — ResNet-8 fleet, throughput vs. SLO (Pareto-frontier policy)",
+        &serving::ServingRow::TABLE_HEADERS,
+        &rows.iter().map(|r| r.table_row()).collect::<Vec<_>>(),
+    );
+
+    // Grepable summary: the tightest-SLO / highest-load corner and the
+    // best sustained throughput across the sweep.
+    let peak = rows
+        .iter()
+        .max_by(|a, b| a.throughput_rps.total_cmp(&b.throughput_rps))
+        .expect("sweep is non-empty");
+    let worst = rows
+        .iter()
+        .max_by(|a, b| a.violation_rate.total_cmp(&b.violation_rate))
+        .expect("sweep is non-empty");
+    println!("\nBENCH serving_peak_throughput_rps {:.1}", peak.throughput_rps);
+    println!("BENCH serving_peak_p99_ms {:.2}", peak.p99_ms);
+    println!("BENCH serving_worst_violation_pct {:.2}", worst.violation_rate * 100.0);
+    println!("BENCH serving_sweep_seconds {total_s:.2}");
+}

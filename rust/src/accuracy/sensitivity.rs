@@ -77,7 +77,7 @@ pub fn frontier(
             (p.conv_name.clone(), saved / lost)
         })
         .collect();
-    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    rows.sort_by(|a, b| b.1.total_cmp(&a.1));
     rows
 }
 

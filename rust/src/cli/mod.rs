@@ -5,6 +5,7 @@
 //!   prune    — run CPrune on a zoo model for a device
 //!   tune     — auto-tune a model without pruning (the TVM baseline)
 //!   fleet    — tune one model for several devices in one session
+//!   serve    — simulate SLO-bound traffic against the Pareto frontier
 //!   compare  — method comparison for one (model, device) cell
 //!   report   — regenerate a paper experiment (fig1..fig11, table1, table2)
 //!   e2e-info — show the AOT artifact inventory the e2e path consumes
@@ -20,6 +21,7 @@ use crate::exp::{self, Scale};
 use crate::graph::model_zoo::{Model, ModelKind};
 use crate::graph::stats;
 use crate::pruner::{cprune_with_session, CPruneConfig};
+use crate::serve::{Registry, ServeOptions, Simulator as ServeSimulator};
 use crate::tuner::{
     FleetDeviceResult, FleetOptions, FleetSession, TuneCache, TuneOptions, TuningSession,
 };
@@ -97,6 +99,43 @@ fn open_session<'a>(
     }
 }
 
+/// Parse `--devices d1,d2,...` (falling back to `default`) into specs,
+/// shared by `fleet` and `serve`. `Err` carries the process exit code —
+/// unknown names and empty lists already printed their diagnostics.
+fn parse_devices(args: &Args, default: &str) -> Result<Vec<DeviceSpec>, i32> {
+    let device_list = args
+        .flags
+        .get("devices")
+        .cloned()
+        .unwrap_or_else(|| default.to_string());
+    let mut specs: Vec<DeviceSpec> = Vec::new();
+    for name in device_list.split(',').filter(|s| !s.is_empty()) {
+        match exp::try_device_by_name(name) {
+            Some(spec) => specs.push(spec),
+            None => {
+                eprintln!("unknown device '{name}'. options: {}", exp::DEVICE_NAMES);
+                return Err(2);
+            }
+        }
+    }
+    if specs.is_empty() {
+        eprintln!("--devices needs at least one device");
+        return Err(2);
+    }
+    Ok(specs)
+}
+
+/// Parse `--key value` as a `T`, falling back to `default` when the flag
+/// is absent; `Err` carries a user-facing message for malformed values.
+fn flag_or<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T, String> {
+    match args.flags.get(key) {
+        Some(v) => v
+            .parse()
+            .map_err(|_| format!("--{key} wants a number, got '{v}'")),
+        None => Ok(default),
+    }
+}
+
 /// Persist the session cache when `--cache` was given; returns the exit code.
 fn close_session(session: &TuningSession, cache_path: Option<&String>) -> i32 {
     if let Some(p) = cache_path {
@@ -115,6 +154,9 @@ USAGE:
   cprune prune     [--model M] [--device D] [--target-acc A] [--iters N] [--seed S] [--out FILE.json] [--cache FILE]
   cprune tune      [--model M] [--device D] [--seed S] [--cache FILE]
   cprune fleet     [--model M] [--devices d1,d2,...] [--seed S] [--threads N] [--quick] [--cache-dir DIR]
+  cprune serve     [--model M] [--devices d1,d2,...] [--rps R] [--requests N] [--slo-ms T]
+                   [--accuracy-floor A] [--trace-seed S] [--max-batch B] [--iters N]
+                   [--registry FILE] [--seed S]
   cprune compare   [--model M] [--device D] [--seed S]
   cprune report    <fig1|fig6|fig7|fig8|fig9|fig10|fig11|table1|table2> [--scale smoke|full]
   cprune dot       [--model M]                    # graphviz of graph+subgraphs+tasks
@@ -132,6 +174,16 @@ WARM START:
   `fleet` tunes one model for several devices in a single session: the
   first device (the pilot) tunes natively and its best programs seed every
   other device's search; --cache-dir keeps one cache file per device.
+
+SERVING:
+  `serve` runs CPrune per device (unless --registry already holds the
+  frontier), publishes each run's latency/accuracy Pareto set to the
+  registry, then replays a seeded synthetic trace through the serving
+  simulator: batching queue, per-device dispatch, and an SLO-aware policy
+  that serves the fastest frontier model meeting --accuracy-floor and
+  degrades down the frontier under load. Reports p50/p95/p99 latency,
+  throughput and SLO-violation rate — byte-identical across runs with the
+  same seeds. --registry FILE persists the Pareto sets (versioned JSON).
 
 FEATURES:
   The optional `pjrt` cargo feature (cargo build --features pjrt) enables
@@ -238,25 +290,10 @@ pub fn run(argv: Vec<String>) -> i32 {
         }
         "fleet" => {
             let model = Model::build(model_kind, seed);
-            let device_list = args
-                .flags
-                .get("devices")
-                .cloned()
-                .unwrap_or_else(|| "kryo280,kryo385,kryo585,mali-g72".to_string());
-            let mut specs: Vec<DeviceSpec> = Vec::new();
-            for name in device_list.split(',').filter(|s| !s.is_empty()) {
-                match exp::try_device_by_name(name) {
-                    Some(spec) => specs.push(spec),
-                    None => {
-                        eprintln!("unknown device '{name}'. options: {}", exp::DEVICE_NAMES);
-                        return 2;
-                    }
-                }
-            }
-            if specs.is_empty() {
-                eprintln!("--devices needs at least one device");
-                return 2;
-            }
+            let specs = match parse_devices(&args, "kryo280,kryo385,kryo585,mali-g72") {
+                Ok(s) => s,
+                Err(code) => return code,
+            };
             let threads = match args.flags.get("threads") {
                 Some(t) => match t.parse() {
                     Ok(n) => n,
@@ -309,6 +346,97 @@ pub fn run(argv: Vec<String>) -> i32 {
                 println!("cache: saved {} device cache(s) to {dir}", fleet.num_devices());
             }
             0
+        }
+        "serve" => {
+            let specs = match parse_devices(&args, "kryo385,kryo585") {
+                Ok(s) => s,
+                Err(code) => return code,
+            };
+            let parsed = (|| -> Result<(ServeOptions, usize), String> {
+                let opts = ServeOptions {
+                    rps: flag_or(&args, "rps", 50.0)?,
+                    requests: flag_or(&args, "requests", 2000)?,
+                    slo_ms: flag_or(&args, "slo-ms", 50.0)?,
+                    accuracy_floor: flag_or(&args, "accuracy-floor", 0.0)?,
+                    trace_seed: flag_or(&args, "trace-seed", seed)?,
+                    max_batch: flag_or(&args, "max-batch", 8)?,
+                };
+                Ok((opts, flag_or(&args, "iters", 6)?))
+            })();
+            let (opts, iters) = match parsed {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let model = Model::build(model_kind, seed);
+            let model_name = model.kind.name();
+
+            // Frontier per device: from the registry file when it already
+            // holds one, otherwise produced by a CPrune run and published.
+            let registry_path = args.flags.get("registry");
+            let mut registry = match registry_path {
+                Some(p) if std::path::Path::new(p).exists() => match Registry::load(p) {
+                    Ok(r) => {
+                        println!("registry: warm-start from {p} ({} frontiers)", r.len());
+                        r
+                    }
+                    Err(e) => {
+                        eprintln!("registry {p}: {e}");
+                        return 1;
+                    }
+                },
+                _ => Registry::new(),
+            };
+            for spec in &specs {
+                if registry.get(model_name, spec.name).is_some() {
+                    continue;
+                }
+                let sim = Simulator::new(spec.clone());
+                let cfg = CPruneConfig {
+                    max_iterations: iters,
+                    tune_opts: TuneOptions::quick(),
+                    seed,
+                    ..Default::default()
+                };
+                let session = TuningSession::new(&sim, cfg.tune_opts, seed);
+                let mut oracle = ProxyOracle::new();
+                let r = cprune_with_session(&model, &mut oracle, &cfg, &session);
+                let n = registry.publish(model_name, spec.name, &r.pareto);
+                println!(
+                    "registry: published {n}-point frontier for {model_name} on {}",
+                    spec.name
+                );
+            }
+            if let Some(p) = registry_path {
+                if let Err(e) = registry.save(p) {
+                    eprintln!("saving registry {p}: {e}");
+                    return 1;
+                }
+                println!("registry: saved {} frontiers to {p}", registry.len());
+            }
+
+            let mut ssim = ServeSimulator::new(opts);
+            for spec in &specs {
+                let set = registry
+                    .get(model_name, spec.name)
+                    .expect("frontier published above");
+                if let Err(e) = ssim.add_device(spec.name, set) {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            }
+            match ssim.run() {
+                Ok(report) => {
+                    print!("{}", report.render());
+                    0
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    1
+                }
+            }
         }
         "compare" => {
             let block = exp::table1::run_cell(model_kind, device, Scale::Smoke, seed);

@@ -252,9 +252,7 @@ mod tests {
             cands
                 .iter()
                 .enumerate()
-                .min_by(|(_, a), (_, b)| {
-                    sim.latency(&w, a).partial_cmp(&sim.latency(&w, b)).unwrap()
-                })
+                .min_by(|(_, a), (_, b)| sim.latency(&w, a).total_cmp(&sim.latency(&w, b)))
                 .unwrap()
                 .0
         };
@@ -271,7 +269,7 @@ mod tests {
         let best_for = |sim: &Simulator| {
             cands
                 .iter()
-                .min_by(|a, b| sim.latency(&w, a).partial_cmp(&sim.latency(&w, b)).unwrap())
+                .min_by(|a, b| sim.latency(&w, a).total_cmp(&sim.latency(&w, b)))
                 .unwrap()
                 .clone()
         };

@@ -67,7 +67,7 @@ pub fn run(scale: Scale, n_variants: usize, seed: u64) -> Fig1Result {
     let argmax = |f: &dyn Fn(&VariantRow) -> f64| -> usize {
         rows.iter()
             .filter(|r| r.meets_gate)
-            .max_by(|a, b| f(a).partial_cmp(&f(b)).unwrap())
+            .max_by(|a, b| f(a).total_cmp(&f(b)))
             .map(|r| r.id)
             .unwrap_or(0)
     };

@@ -1,4 +1,5 @@
-//! Experiment harnesses: one module per paper table/figure.
+//! Experiment harnesses: one module per paper table/figure, plus the
+//! north-star serving sweep (`serving`, DESIGN.md §8).
 //!
 //! Each harness is a pure function returning structured rows, shared by
 //! the `rust/benches/*` regenerators (which print the table/series) and
@@ -12,6 +13,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9_10;
 pub mod fig11;
+pub mod serving;
 pub mod table1;
 pub mod table2;
 

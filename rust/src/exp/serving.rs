@@ -1,0 +1,161 @@
+//! Serving experiment: the throughput-vs-SLO grid (DESIGN.md §8).
+//!
+//! Not a paper figure — this is the first north-star experiment: build
+//! the per-device Pareto frontiers once (one CPrune run per device),
+//! then sweep request rate × latency SLO through the serving simulator
+//! and report what each operating point costs in tail latency, SLO
+//! violations and served accuracy. The `serving` bench regenerates the
+//! table.
+
+use super::Scale;
+use crate::accuracy::ProxyOracle;
+use crate::device::{DeviceSpec, Simulator};
+use crate::graph::model_zoo::{Model, ModelKind};
+use crate::pruner::{cprune_with_session, CPruneConfig};
+use crate::serve::{Registry, ServeOptions, Simulator as ServeSimulator};
+use crate::tuner::TuningSession;
+
+/// One (rps, SLO) operating point of the sweep.
+#[derive(Clone, Debug)]
+pub struct ServingRow {
+    pub rps: f64,
+    pub slo_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub throughput_rps: f64,
+    pub violation_rate: f64,
+    pub served_accuracy: f64,
+    /// Fraction of requests served below the preferred accuracy point.
+    pub degraded_frac: f64,
+}
+
+impl ServingRow {
+    /// Column headers matching [`ServingRow::table_row`].
+    pub const TABLE_HEADERS: [&'static str; 9] = [
+        "rps", "SLO ms", "p50 ms", "p95 ms", "p99 ms", "tput rps", "viol %", "acc", "degr %",
+    ];
+
+    pub fn table_row(&self) -> Vec<String> {
+        vec![
+            format!("{:.0}", self.rps),
+            format!("{:.0}", self.slo_ms),
+            format!("{:.2}", self.p50_ms),
+            format!("{:.2}", self.p95_ms),
+            format!("{:.2}", self.p99_ms),
+            format!("{:.1}", self.throughput_rps),
+            format!("{:.2}", self.violation_rate * 100.0),
+            format!("{:.4}", self.served_accuracy),
+            format!("{:.2}", self.degraded_frac * 100.0),
+        ]
+    }
+}
+
+/// The devices the sweep serves across.
+pub fn device_set(scale: Scale) -> Vec<DeviceSpec> {
+    match scale {
+        Scale::Smoke => vec![DeviceSpec::kryo385(), DeviceSpec::kryo585()],
+        Scale::Full => DeviceSpec::mobile_targets(),
+    }
+}
+
+/// One CPrune run per device, frontiers published to a fresh registry.
+pub fn build_registry(scale: Scale, seed: u64) -> (Registry, &'static str) {
+    let kind = ModelKind::ResNet8Cifar;
+    let model = Model::build(kind, seed);
+    let mut registry = Registry::new();
+    for spec in device_set(scale) {
+        let sim = Simulator::new(spec);
+        let cfg = CPruneConfig {
+            max_iterations: scale.cprune_iters(),
+            tune_opts: scale.tune_opts(),
+            seed,
+            ..Default::default()
+        };
+        let session = TuningSession::new(&sim, cfg.tune_opts, seed);
+        let mut oracle = ProxyOracle::new();
+        let r = cprune_with_session(&model, &mut oracle, &cfg, &session);
+        registry.publish(kind.name(), sim.spec.name, &r.pareto);
+    }
+    (registry, kind.name())
+}
+
+/// Sweep request rate × SLO against the registry's frontiers.
+pub fn run(scale: Scale, seed: u64) -> Vec<ServingRow> {
+    let (registry, model_name) = build_registry(scale, seed);
+    let specs = device_set(scale);
+    // A floor just under the best frontier accuracy: the policy prefers
+    // the most accurate deployable point and has room to degrade.
+    let floor = registry
+        .entries()
+        .filter_map(|(_, _, set)| set.most_accurate().map(|c| c.accuracy))
+        .fold(f64::INFINITY, f64::min)
+        * 0.995;
+    let (rps_list, slo_list, requests) = match scale {
+        Scale::Smoke => (vec![50.0, 200.0], vec![20.0, 60.0], 600),
+        Scale::Full => (
+            vec![25.0, 50.0, 100.0, 200.0, 400.0],
+            vec![10.0, 25.0, 50.0, 100.0],
+            4000,
+        ),
+    };
+    let mut rows = Vec::with_capacity(rps_list.len() * slo_list.len());
+    for &slo_ms in &slo_list {
+        for &rps in &rps_list {
+            let opts = ServeOptions {
+                rps,
+                requests,
+                slo_ms,
+                accuracy_floor: floor,
+                trace_seed: seed,
+                max_batch: 8,
+            };
+            let mut sim = ServeSimulator::new(opts);
+            for spec in &specs {
+                let set = registry
+                    .get(model_name, spec.name)
+                    .expect("build_registry covers every device");
+                sim.add_device(spec.name, set).expect("frontier is non-empty");
+            }
+            let r = sim.run().expect("simulator has lanes");
+            rows.push(ServingRow {
+                rps,
+                slo_ms,
+                p50_ms: r.p50_ms,
+                p95_ms: r.p95_ms,
+                p99_ms: r.p99_ms,
+                throughput_rps: r.throughput_rps,
+                violation_rate: r.violation_rate,
+                served_accuracy: r.mean_served_accuracy,
+                degraded_frac: r.degraded_requests as f64 / r.requests as f64,
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_sweep_produces_sane_rows() {
+        let rows = run(Scale::Smoke, 0);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.p50_ms > 0.0 && r.p50_ms.is_finite());
+            assert!(r.p50_ms <= r.p95_ms && r.p95_ms <= r.p99_ms);
+            assert!(r.throughput_rps > 0.0 && r.throughput_rps.is_finite());
+            assert!((0.0..=1.0).contains(&r.violation_rate));
+            assert!((0.0..=1.0).contains(&r.degraded_frac));
+            assert!(r.served_accuracy > 0.0 && r.served_accuracy <= 1.0);
+        }
+        // the sweep is deterministic end-to-end
+        let again = run(Scale::Smoke, 0);
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.table_row(), b.table_row());
+            assert_eq!(a.p99_ms, b.p99_ms);
+            assert_eq!(a.violation_rate, b.violation_rate);
+        }
+    }
+}

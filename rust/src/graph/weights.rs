@@ -93,12 +93,7 @@ impl Weights {
     /// index for determinism) — the "prune smallest ℓ1 first" rule.
     pub fn lowest_k(scores: &[f32], k: usize) -> Vec<usize> {
         let mut idx: Vec<usize> = (0..scores.len()).collect();
-        idx.sort_by(|&a, &b| {
-            scores[a]
-                .partial_cmp(&scores[b])
-                .unwrap()
-                .then(a.cmp(&b))
-        });
+        idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]).then(a.cmp(&b)));
         idx.truncate(k);
         idx.sort_unstable();
         idx

@@ -6,8 +6,12 @@
 //!   a Relay-style partitioner (`relay/`), a TVM-style loop-nest IR and
 //!   schedule space (`tir/`), an Ansor-style auto-tuner (`tuner/`), a
 //!   mobile-device latency simulator (`device/`), baseline pruners
-//!   (`baselines/`), accuracy oracles (`accuracy/`), and the end-to-end
-//!   compile pipeline (`compiler/`).
+//!   (`baselines/`), accuracy oracles (`accuracy/`), the end-to-end
+//!   compile pipeline (`compiler/`), and the serving layer (`serve/`,
+//!   DESIGN.md §8): the Pareto-set registry of deployable checkpoints
+//!   each CPrune run now emits, and the deterministic serving simulator
+//!   that dispatches SLO-bound traffic across a device fleet from those
+//!   frontiers.
 //! * **L2/L1 (python/, build-time only)** — JAX masked CNN + Pallas GEMM
 //!   kernels, AOT-lowered to HLO text and executed from `runtime/` +
 //!   `train/` via PJRT. Python never runs on the request path.
@@ -27,6 +31,7 @@ pub mod pruner;
 pub mod relay;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod tir;
 pub mod train;
 pub mod tuner;

@@ -20,6 +20,7 @@ use crate::graph::prune::{apply, PruneState};
 use crate::graph::weights::Weights;
 use crate::relay::partition::partition;
 use crate::relay::TaskTable;
+use crate::serve::{Checkpoint, ParetoSet};
 use crate::tir::{Program, Workload};
 use crate::tuner::{TuneOptions, TuningSession};
 use std::collections::{BTreeSet, HashMap};
@@ -101,6 +102,12 @@ pub struct CPruneResult {
     pub final_top1: f64,
     pub final_top5: f64,
     pub iterations: Vec<IterationLog>,
+    /// The non-dominated latency/accuracy frontier of the run: the
+    /// tuned-but-unpruned baseline plus every accepted iteration's
+    /// deployable checkpoint (DESIGN.md §8). This is what
+    /// [`crate::serve::Registry`] publishes and the serving simulator
+    /// picks models from.
+    pub pareto: ParetoSet,
     /// Wall-clock seconds spent in the Main step (Fig. 9/11's cost metric).
     pub main_step_seconds: f64,
     /// Total candidate models tuned+measured during the search.
@@ -164,6 +171,17 @@ pub fn cprune_with_session(
     let mut banned: BTreeSet<NodeId> = BTreeSet::new();
     let mut iterations: Vec<IterationLog> = Vec::new();
     let mut candidates_tried = 0usize;
+    // Iteration-0 checkpoint: the unpruned model is always a deployable
+    // fallback — the slowest, highest-accuracy end of the frontier. Uses
+    // the same latency chain the acceptance gates compare against so the
+    // frontier is internally consistent in the w/o-tuning ablation too.
+    let mut pareto = ParetoSet::new();
+    pareto.insert(Checkpoint {
+        iteration: 0,
+        latency: gate_baseline,
+        accuracy: a_p,
+        channels: state.cout.clone(),
+    });
 
     // -- Lines 2–16: main loop -------------------------------------------
     'outer: for iter_no in 0..cfg.max_iterations {
@@ -287,6 +305,14 @@ pub fn cprune_with_session(
                 table = cand.table;
                 l_t = cfg.beta * l_m;
                 a_p = a_s;
+                // Snapshot the accepted candidate as a deployable
+                // checkpoint; the frontier keeps it iff non-dominated.
+                pareto.insert(Checkpoint {
+                    iteration: iter_no + 1,
+                    latency: l_m,
+                    accuracy: a_s,
+                    channels: state.cout.clone(),
+                });
                 iterations.push(IterationLog {
                     iteration: iter_no + 1,
                     pruned_convs: targets.clone(),
@@ -327,6 +353,7 @@ pub fn cprune_with_session(
         final_top1,
         final_top5,
         iterations,
+        pareto,
         main_step_seconds,
         candidates_tried,
         programs_measured: session.measured_count(),
@@ -397,6 +424,42 @@ mod tests {
         let (_, r) = run(ModelKind::ResNet8Cifar, &cfg);
         assert!(r.iterations.is_empty());
         assert!((r.fps_increase_rate - 1.0).abs() < 0.35);
+    }
+
+    #[test]
+    fn pareto_frontier_tracks_accepted_iterations() {
+        let cfg = CPruneConfig { max_iterations: 12, ..Default::default() };
+        let (m, r) = run(ModelKind::ResNet8Cifar, &cfg);
+        // baseline + accepted iterations, minus any dominated points
+        assert!(!r.pareto.is_empty());
+        assert!(r.pareto.len() <= r.iterations.len() + 1);
+        // the frontier's fast end is an accepted candidate, not slower
+        // than the final accepted latency chain
+        let fastest = r.pareto.fastest().unwrap();
+        if let Some(last) = r.iterations.last() {
+            assert_eq!(fastest.latency, last.latency);
+            assert_eq!(fastest.iteration, last.iteration);
+        }
+        // the slow end is the unpruned baseline (iteration 0)
+        let slow = r.pareto.most_accurate().unwrap();
+        assert!(slow.accuracy >= fastest.accuracy);
+        // every checkpoint instantiates to a valid deployable graph
+        for c in r.pareto.points() {
+            let g = c.instantiate(&m).expect("checkpoint must instantiate");
+            assert_eq!(g.conv_ids().len(), m.graph.conv_ids().len());
+        }
+        // non-dominated and sorted in both objectives
+        for w in r.pareto.points().windows(2) {
+            assert!(w[0].latency < w[1].latency);
+            assert!(w[0].accuracy < w[1].accuracy);
+        }
+
+        // the floor-blocked search still exposes a one-point frontier
+        let strict = CPruneConfig { target_accuracy: 0.999, ..Default::default() };
+        let (_, r2) = run(ModelKind::ResNet8Cifar, &strict);
+        assert!(r2.iterations.is_empty());
+        assert_eq!(r2.pareto.len(), 1);
+        assert_eq!(r2.pareto.fastest().unwrap().iteration, 0);
     }
 
     #[test]

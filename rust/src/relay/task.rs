@@ -104,8 +104,7 @@ impl TaskTable {
         ids.sort_by(|&a, &b| {
             self.tasks[b]
                 .pruning_impact()
-                .partial_cmp(&self.tasks[a].pruning_impact())
-                .unwrap()
+                .total_cmp(&self.tasks[a].pruning_impact())
                 .then(a.cmp(&b))
         });
         ids

@@ -1,0 +1,30 @@
+//! The serving layer: Pareto-set model registry + deterministic serving
+//! simulator (DESIGN.md §8).
+//!
+//! CPrune's whole premise is that the compiler-measured latency/accuracy
+//! trade-off should drive which model you run — so the search's accepted
+//! iterations are not intermediate garbage, they are the deployment
+//! candidates. This module keeps them and serves from them:
+//!
+//! * [`pareto`] — [`Checkpoint`] (a deployable snapshot of an accepted
+//!   iteration) and [`ParetoSet`] (the non-dominated latency/accuracy
+//!   frontier a [`crate::pruner::CPruneResult`] now exposes);
+//! * [`registry`] — [`Registry`], frontiers per `(model, device)` pair
+//!   with versioned-JSON persistence following the
+//!   [`crate::tuner::cache`] conventions;
+//! * [`sim`] — [`Simulator`], a seeded discrete-event loop (Poisson
+//!   arrivals, batching queue, work-conserving dispatch across
+//!   [`crate::tuner::FleetSession`] devices, SLO-aware frontier
+//!   degradation) reporting p50/p95/p99 latency, throughput and
+//!   SLO-violation rate via [`crate::util::stats`].
+//!
+//! `cprune serve` wires this end-to-end; `exp::serving` sweeps the
+//! throughput-vs-SLO grid the `serving` bench regenerates.
+
+pub mod pareto;
+pub mod registry;
+pub mod sim;
+
+pub use pareto::{Checkpoint, ParetoSet};
+pub use registry::{Registry, REGISTRY_FORMAT, REGISTRY_VERSION};
+pub use sim::{ServeOptions, ServeReport, Simulator};

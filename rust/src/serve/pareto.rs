@@ -1,0 +1,261 @@
+//! The latency/accuracy Pareto frontier of a CPrune run (DESIGN.md §8).
+//!
+//! Algorithm 1 walks a chain of accepted candidates, each strictly faster
+//! and usually slightly less accurate than the last — exactly the
+//! deployment candidates NetAdapt-style progressive pruning emits. Instead
+//! of discarding everything but the final model, every accepted iteration
+//! snapshots a [`Checkpoint`] (enough to rebuild the deployable graph) and
+//! [`ParetoSet`] keeps the non-dominated subset: the serving layer then
+//! picks a point per request-class instead of shipping one fixed model.
+
+use crate::graph::model_zoo::Model;
+use crate::graph::ops::{Graph, NodeId};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One deployable model snapshot from an accepted CPrune iteration.
+///
+/// The pruned graph itself is not stored — `channels` is the accepted
+/// [`crate::graph::prune::PruneState`]'s per-conv remaining-channel map,
+/// and [`Checkpoint::instantiate`] rebuilds the graph from the base model
+/// deterministically. That keeps checkpoints cheap to hold, merge and
+/// persist while remaining fully deployable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Accepted iteration number (0 = the tuned-but-unpruned baseline).
+    pub iteration: usize,
+    /// Measured latency l_m on the target device, seconds.
+    pub latency: f64,
+    /// Short-term top-1 accuracy a_s at acceptance time.
+    pub accuracy: f64,
+    /// Remaining output channels per prunable conv.
+    pub channels: BTreeMap<NodeId, usize>,
+}
+
+impl Checkpoint {
+    /// True iff `self` is at least as good in both objectives and strictly
+    /// better in one (lower latency, higher accuracy).
+    pub fn dominates(&self, other: &Checkpoint) -> bool {
+        self.latency <= other.latency
+            && self.accuracy >= other.accuracy
+            && (self.latency < other.latency || self.accuracy > other.accuracy)
+    }
+
+    /// Rebuild the deployable pruned graph from the base `model`.
+    pub fn instantiate(&self, model: &Model) -> Result<Graph, String> {
+        crate::graph::prune::apply(&model.graph, &self.channels)
+    }
+
+    fn to_json(&self) -> Json {
+        let channels = Json::Obj(
+            self.channels
+                .iter()
+                .map(|(&conv, &c)| (conv.to_string(), Json::Num(c as f64)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("iteration", Json::Num(self.iteration as f64)),
+            ("latency", Json::Num(self.latency)),
+            ("accuracy", Json::Num(self.accuracy)),
+            ("channels", channels),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Checkpoint, String> {
+        let mut channels = BTreeMap::new();
+        match j.get("channels") {
+            Some(Json::Obj(m)) => {
+                for (k, v) in m {
+                    let conv: NodeId =
+                        k.parse().map_err(|_| format!("bad conv id '{k}' in checkpoint"))?;
+                    let c = v.as_usize().ok_or("non-integer channel count")?;
+                    channels.insert(conv, c);
+                }
+            }
+            _ => return Err("checkpoint missing channels".into()),
+        }
+        Ok(Checkpoint {
+            iteration: j
+                .get("iteration")
+                .and_then(Json::as_usize)
+                .ok_or("checkpoint missing iteration")?,
+            latency: j
+                .get("latency")
+                .and_then(Json::as_f64)
+                .ok_or("checkpoint missing latency")?,
+            accuracy: j
+                .get("accuracy")
+                .and_then(Json::as_f64)
+                .ok_or("checkpoint missing accuracy")?,
+            channels,
+        })
+    }
+}
+
+/// The non-dominated latency/accuracy frontier of a run.
+///
+/// Invariant: points are mutually non-dominated and sorted by ascending
+/// latency — which, on a frontier, means ascending accuracy too (a slower
+/// point survives only by being more accurate).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ParetoSet {
+    points: Vec<Checkpoint>,
+}
+
+impl ParetoSet {
+    pub fn new() -> ParetoSet {
+        ParetoSet::default()
+    }
+
+    /// Offer a checkpoint to the frontier. Returns `false` when it was
+    /// rejected (dominated by an existing point, an exact duplicate, or
+    /// carrying non-finite objectives); dominated incumbents are evicted.
+    pub fn insert(&mut self, c: Checkpoint) -> bool {
+        if !c.latency.is_finite() || !c.accuracy.is_finite() {
+            return false;
+        }
+        if self
+            .points
+            .iter()
+            .any(|p| p.dominates(&c) || (p.latency == c.latency && p.accuracy == c.accuracy))
+        {
+            return false;
+        }
+        self.points.retain(|p| !c.dominates(p));
+        let pos = self.points.partition_point(|p| p.latency < c.latency);
+        self.points.insert(pos, c);
+        true
+    }
+
+    /// Frontier points, fastest (lowest-accuracy) first.
+    pub fn points(&self) -> &[Checkpoint] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The lowest-latency point on the frontier.
+    pub fn fastest(&self) -> Option<&Checkpoint> {
+        self.points.first()
+    }
+
+    /// The highest-accuracy (slowest) point on the frontier.
+    pub fn most_accurate(&self) -> Option<&Checkpoint> {
+        self.points.last()
+    }
+
+    /// The fastest point whose accuracy meets `floor` — the serving
+    /// policy's preferred model. `None` when no point qualifies.
+    pub fn fastest_meeting(&self, floor: f64) -> Option<&Checkpoint> {
+        self.points.iter().find(|c| c.accuracy >= floor)
+    }
+
+    /// Fold another frontier into this one (used by
+    /// [`crate::serve::Registry`] to merge runs of the same pair).
+    pub fn merge(&mut self, other: &ParetoSet) {
+        for c in &other.points {
+            self.insert(c.clone());
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "points",
+            Json::Arr(self.points.iter().map(Checkpoint::to_json).collect()),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ParetoSet, String> {
+        let mut set = ParetoSet::new();
+        let points = j
+            .get("points")
+            .and_then(Json::as_arr)
+            .ok_or("pareto set missing points")?;
+        for p in points {
+            set.insert(Checkpoint::from_json(p)?);
+        }
+        Ok(set)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cp(iteration: usize, latency: f64, accuracy: f64) -> Checkpoint {
+        Checkpoint { iteration, latency, accuracy, channels: BTreeMap::new() }
+    }
+
+    #[test]
+    fn frontier_keeps_only_non_dominated_points() {
+        let mut s = ParetoSet::new();
+        assert!(s.insert(cp(0, 0.010, 0.90)));
+        assert!(s.insert(cp(1, 0.005, 0.88)));
+        // dominated: slower AND less accurate than point 0
+        assert!(!s.insert(cp(2, 0.020, 0.85)));
+        // dominates point 1: same latency, higher accuracy
+        assert!(s.insert(cp(3, 0.005, 0.89)));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.fastest().unwrap().iteration, 3);
+        assert_eq!(s.most_accurate().unwrap().iteration, 0);
+        // sorted ascending in both objectives
+        for w in s.points().windows(2) {
+            assert!(w[0].latency < w[1].latency);
+            assert!(w[0].accuracy < w[1].accuracy);
+        }
+    }
+
+    #[test]
+    fn duplicates_and_non_finite_points_are_rejected() {
+        let mut s = ParetoSet::new();
+        assert!(s.insert(cp(0, 0.010, 0.90)));
+        assert!(!s.insert(cp(1, 0.010, 0.90)), "exact duplicate accepted");
+        assert!(!s.insert(cp(2, f64::NAN, 0.95)));
+        assert!(!s.insert(cp(3, 0.001, f64::INFINITY)));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn fastest_meeting_walks_up_the_frontier() {
+        let mut s = ParetoSet::new();
+        s.insert(cp(0, 0.002, 0.80));
+        s.insert(cp(1, 0.005, 0.85));
+        s.insert(cp(2, 0.020, 0.92));
+        assert_eq!(s.fastest_meeting(0.0).unwrap().iteration, 0);
+        assert_eq!(s.fastest_meeting(0.84).unwrap().iteration, 1);
+        assert_eq!(s.fastest_meeting(0.90).unwrap().iteration, 2);
+        assert!(s.fastest_meeting(0.99).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_the_frontier() {
+        let mut s = ParetoSet::new();
+        let mut channels = BTreeMap::new();
+        channels.insert(3usize, 48usize);
+        channels.insert(11, 96);
+        s.insert(Checkpoint { iteration: 4, latency: 0.00123456789, accuracy: 0.9125, channels });
+        s.insert(cp(0, 0.0101, 0.93));
+        let back = ParetoSet::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // byte-stable serialization (registry files must not churn)
+        assert_eq!(back.to_json().to_string(), s.to_json().to_string());
+    }
+
+    #[test]
+    fn merge_unions_two_frontiers() {
+        let mut a = ParetoSet::new();
+        a.insert(cp(0, 0.010, 0.90));
+        let mut b = ParetoSet::new();
+        b.insert(cp(1, 0.004, 0.91)); // dominates a's point
+        b.insert(cp(2, 0.002, 0.70));
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.most_accurate().unwrap().iteration, 1);
+    }
+}

@@ -1,0 +1,219 @@
+//! Pareto-set model registry: frontiers per (model, device) pair with
+//! versioned-JSON persistence (DESIGN.md §8).
+//!
+//! The serving layer never asks "which single model did the search
+//! return" — it asks "what frontier do I hold for this model on this
+//! device". The registry is that lookup, following the
+//! [`crate::tuner::cache`] persistence conventions: a `format`/`version`
+//! header that rejects foreign documents loudly, entries sorted on write
+//! so files are byte-stable, and temp-file + rename saves so an
+//! interrupted write never leaves a truncated registry behind.
+//!
+//! Unlike a tune cache, one registry file spans *many* devices — each
+//! entry's key carries the device name, so no `expected_device` guard is
+//! needed on load.
+
+use super::pareto::ParetoSet;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Format tag of the on-disk header (guards against foreign JSON files).
+pub const REGISTRY_FORMAT: &str = "cprune-pareto-registry";
+/// Bump when the entry schema changes; `parse` rejects other versions.
+pub const REGISTRY_VERSION: u64 = 1;
+
+/// Pareto frontiers keyed by `(model, device)`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Registry {
+    sets: BTreeMap<(String, String), ParetoSet>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Merge `set` into the frontier stored for `(model, device)` —
+    /// repeated runs union their frontiers rather than overwriting.
+    /// Returns the frontier size after the merge.
+    pub fn publish(&mut self, model: &str, device: &str, set: &ParetoSet) -> usize {
+        let entry = self
+            .sets
+            .entry((model.to_string(), device.to_string()))
+            .or_default();
+        entry.merge(set);
+        entry.len()
+    }
+
+    pub fn get(&self, model: &str, device: &str) -> Option<&ParetoSet> {
+        self.sets.get(&(model.to_string(), device.to_string()))
+    }
+
+    /// Number of (model, device) pairs held.
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
+    /// All entries as `(model, device, frontier)`, in key order.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &ParetoSet)> {
+        self.sets.iter().map(|((m, d), s)| (m.as_str(), d.as_str(), s))
+    }
+
+    /// Serialize to the versioned JSON document. The `sets` map is a
+    /// `BTreeMap`, so output order (and therefore the file's bytes) is
+    /// stable across runs.
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .sets
+            .iter()
+            .map(|((model, device), set)| {
+                Json::obj(vec![
+                    ("model", Json::Str(model.clone())),
+                    ("device", Json::Str(device.clone())),
+                    ("pareto", set.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::Str(REGISTRY_FORMAT.to_string())),
+            ("version", Json::Num(REGISTRY_VERSION as f64)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Parse a document produced by [`Registry::to_json`].
+    pub fn parse(text: &str) -> Result<Registry, String> {
+        let j = json::parse(text)?;
+        match j.get("format").and_then(Json::as_str) {
+            Some(REGISTRY_FORMAT) => {}
+            other => return Err(format!("not a pareto registry (format {other:?})")),
+        }
+        match j.get("version").and_then(Json::as_usize) {
+            Some(v) if v as u64 == REGISTRY_VERSION => {}
+            other => {
+                return Err(format!(
+                    "unsupported registry version {other:?} (want {REGISTRY_VERSION})"
+                ))
+            }
+        }
+        let mut reg = Registry::new();
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("registry missing entries")?;
+        for e in entries {
+            let model = e
+                .get("model")
+                .and_then(Json::as_str)
+                .ok_or("entry missing model")?;
+            let device = e
+                .get("device")
+                .and_then(Json::as_str)
+                .ok_or("entry missing device")?;
+            let set = ParetoSet::from_json(e.get("pareto").ok_or("entry missing pareto")?)?;
+            reg.publish(model, device, &set);
+        }
+        Ok(reg)
+    }
+
+    /// Write the registry to `path` (temp-file + rename, like
+    /// [`crate::tuner::TuneCache::save`]).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        let path = path.as_ref();
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(format!(".{}.tmp", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, self.to_json().to_string())
+            .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("renaming {} into place: {e}", tmp.display()))
+    }
+
+    /// Load a registry previously written by [`Registry::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Registry, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::pareto::Checkpoint;
+    use std::collections::BTreeMap;
+
+    fn cp(iteration: usize, latency: f64, accuracy: f64) -> Checkpoint {
+        Checkpoint { iteration, latency, accuracy, channels: BTreeMap::new() }
+    }
+
+    fn sample_set() -> ParetoSet {
+        let mut s = ParetoSet::new();
+        s.insert(cp(0, 0.010, 0.93));
+        s.insert(cp(2, 0.004, 0.91));
+        s
+    }
+
+    #[test]
+    fn publish_merges_instead_of_overwriting() {
+        let mut reg = Registry::new();
+        assert_eq!(reg.publish("m", "d", &sample_set()), 2);
+        let mut more = ParetoSet::new();
+        more.insert(cp(5, 0.002, 0.90));
+        assert_eq!(reg.publish("m", "d", &more), 3);
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get("m", "d").unwrap().len(), 3);
+        assert!(reg.get("m", "other").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_and_stable_bytes() {
+        let mut reg = Registry::new();
+        reg.publish("resnet-8", "devB", &sample_set());
+        reg.publish("resnet-8", "devA", &sample_set());
+        let text = reg.to_json().to_string();
+        let back = Registry::parse(&text).unwrap();
+        assert_eq!(back, reg);
+        assert_eq!(back.to_json().to_string(), text);
+        // entries come out in key order (devA before devB)
+        let devices: Vec<&str> = back.entries().map(|(_, d, _)| d).collect();
+        assert_eq!(devices, vec!["devA", "devB"]);
+    }
+
+    #[test]
+    fn rejects_foreign_and_versioned_documents() {
+        assert!(Registry::parse("{}").is_err());
+        assert!(Registry::parse("not json").is_err());
+        assert!(
+            Registry::parse(r#"{"format":"other","version":1,"entries":[]}"#).is_err()
+        );
+        assert!(Registry::parse(
+            r#"{"format":"cprune-pareto-registry","version":999,"entries":[]}"#
+        )
+        .is_err());
+        // a tune-cache file must not silently load as a registry
+        assert!(Registry::parse(
+            r#"{"format":"cprune-tune-cache","version":1,"device":"d","entries":[]}"#
+        )
+        .is_err());
+        let ok = r#"{"format":"cprune-pareto-registry","version":1,"entries":[]}"#;
+        assert!(Registry::parse(ok).unwrap().is_empty());
+    }
+
+    #[test]
+    fn save_load_via_disk() {
+        let mut reg = Registry::new();
+        reg.publish("m", "d", &sample_set());
+        let path = std::env::temp_dir().join("cprune_registry_unit_test.json");
+        reg.save(&path).unwrap();
+        let back = Registry::load(&path).unwrap();
+        assert_eq!(back, reg);
+        let _ = std::fs::remove_file(&path);
+    }
+}

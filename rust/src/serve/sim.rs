@@ -1,0 +1,414 @@
+//! Deterministic discrete-event serving simulator (DESIGN.md §8).
+//!
+//! Answers the deployment question the Pareto registry exists for: given
+//! the frontiers CPrune produced for every device of a fleet, what
+//! latency distribution, throughput and SLO-violation rate does a given
+//! request load see? The model:
+//!
+//! * **Arrivals** — a seeded Poisson process (exponential inter-arrival
+//!   gaps from [`Rng`]), so a trace is a pure function of
+//!   `(trace_seed, rps, requests)`.
+//! * **Batching queue** — one global FIFO; a dispatch takes up to
+//!   `max_batch` requests that have already arrived when service starts.
+//!   Batched execution amortizes dispatch and weight traffic: a batch of
+//!   `b` costs `latency · (1 + 0.5·(b−1))`, i.e. each extra request costs
+//!   half a solo run.
+//! * **Dispatch** — work-conserving across device lanes: each batch goes
+//!   to the lane that frees earliest (ties to the lowest lane index).
+//! * **SLO-aware policy** — per lane, prefer the *fastest* frontier
+//!   point meeting the accuracy floor; while the batch's oldest request
+//!   would still miss the SLO, degrade down the frontier to faster,
+//!   less-accurate checkpoints (never past the fastest point). Load
+//!   sheds accuracy before it sheds latency.
+//!
+//! Everything is pure arithmetic over the trace — no wall clock, no
+//! threads — so a report is byte-identical across runs and across the
+//! `threads` budget of whatever tuning produced the frontiers.
+
+use super::pareto::ParetoSet;
+use super::registry::Registry;
+use crate::tuner::FleetSession;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use std::fmt::Write as _;
+
+/// Marginal cost of each request beyond the first in a batch, as a
+/// fraction of a solo execution (see module docs).
+const BATCH_MARGINAL: f64 = 0.5;
+
+/// Serving-simulation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Mean arrival rate of the synthetic trace, requests/second.
+    pub rps: f64,
+    /// Trace length in requests.
+    pub requests: usize,
+    /// Per-request latency SLO (arrival → completion), milliseconds.
+    pub slo_ms: f64,
+    /// Accuracy the policy serves when the SLO allows it; under load it
+    /// degrades below this floor rather than miss the SLO.
+    pub accuracy_floor: f64,
+    /// Seed of the arrival trace (independent of tuning seeds).
+    pub trace_seed: u64,
+    /// Maximum requests per dispatched batch.
+    pub max_batch: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            rps: 50.0,
+            requests: 2000,
+            slo_ms: 50.0,
+            accuracy_floor: 0.0,
+            trace_seed: 0,
+            max_batch: 8,
+        }
+    }
+}
+
+struct Lane {
+    name: String,
+    frontier: ParetoSet,
+    /// Index into the frontier of the fastest point meeting the accuracy
+    /// floor (the policy's preferred model on this lane).
+    preferred: usize,
+}
+
+/// Aggregate statistics of one simulated trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeReport {
+    pub opts_rps: f64,
+    pub slo_ms: f64,
+    pub accuracy_floor: f64,
+    pub max_batch: usize,
+    pub requests: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    /// Completed requests per second over the trace's makespan.
+    pub throughput_rps: f64,
+    pub slo_violations: usize,
+    pub violation_rate: f64,
+    /// Mean accuracy of the checkpoints requests were actually served by.
+    pub mean_served_accuracy: f64,
+    /// Requests served by a point faster (less accurate) than the lane's
+    /// preferred model because the SLO was under pressure.
+    pub degraded_requests: usize,
+    pub batches: usize,
+    pub mean_batch: f64,
+    /// Requests served per device lane, in lane order.
+    pub per_device: Vec<(String, usize)>,
+}
+
+impl ServeReport {
+    /// Render the report as a fixed-format block. Every field prints with
+    /// a fixed precision from deterministic inputs, so two runs with the
+    /// same seed produce byte-identical text (the CLI prints exactly
+    /// this).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "serve: {} requests @ {:.1} rps, SLO {:.1} ms, accuracy floor {:.3}, max batch {}",
+            self.requests, self.opts_rps, self.slo_ms, self.accuracy_floor, self.max_batch
+        );
+        let _ = writeln!(
+            out,
+            "latency: p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  mean {:.3} ms",
+            self.p50_ms, self.p95_ms, self.p99_ms, self.mean_ms
+        );
+        let _ = writeln!(
+            out,
+            "throughput: {:.2} rps in {} batches (mean batch {:.2})",
+            self.throughput_rps, self.batches, self.mean_batch
+        );
+        let _ = writeln!(
+            out,
+            "slo: {} violations ({:.2}%) | served accuracy {:.4} | degraded {} requests ({:.2}%)",
+            self.slo_violations,
+            self.violation_rate * 100.0,
+            self.mean_served_accuracy,
+            self.degraded_requests,
+            100.0 * self.degraded_requests as f64 / self.requests.max(1) as f64
+        );
+        for (name, served) in &self.per_device {
+            let _ = writeln!(
+                out,
+                "lane {name}: {served} requests ({:.1}%)",
+                100.0 * *served as f64 / self.requests.max(1) as f64
+            );
+        }
+        out
+    }
+}
+
+/// The serving simulator: device lanes + knobs. Build with
+/// [`Simulator::new`] + [`Simulator::add_device`] (or
+/// [`Simulator::across_fleet`]), then [`Simulator::run`] as many times as
+/// needed — `run` never mutates the simulator, so repeated runs replay
+/// the identical trace.
+pub struct Simulator {
+    lanes: Vec<Lane>,
+    opts: ServeOptions,
+}
+
+impl Simulator {
+    pub fn new(opts: ServeOptions) -> Simulator {
+        Simulator { lanes: Vec::new(), opts }
+    }
+
+    /// Add a device lane serving from `frontier`. Rejects empty frontiers
+    /// (a lane with nothing deployable cannot serve).
+    pub fn add_device(&mut self, name: &str, frontier: &ParetoSet) -> Result<(), String> {
+        if frontier.is_empty() {
+            return Err(format!("device '{name}': empty Pareto frontier"));
+        }
+        let preferred = frontier
+            .points()
+            .iter()
+            .position(|c| c.accuracy >= self.opts.accuracy_floor)
+            // no point meets the floor: serve the most accurate one
+            .unwrap_or(frontier.len() - 1);
+        self.lanes.push(Lane { name: name.to_string(), frontier: frontier.clone(), preferred });
+        Ok(())
+    }
+
+    /// Build a simulator whose lanes are the devices of `fleet`, each
+    /// serving the registry's frontier for `model` on that device.
+    pub fn across_fleet(
+        fleet: &FleetSession,
+        registry: &Registry,
+        model: &str,
+        opts: ServeOptions,
+    ) -> Result<Simulator, String> {
+        let mut sim = Simulator::new(opts);
+        for i in 0..fleet.num_devices() {
+            let device = fleet.sim(i).spec.name;
+            let set = registry.get(model, device).ok_or_else(|| {
+                format!("registry holds no Pareto set for ({model}, {device})")
+            })?;
+            sim.add_device(device, set)?;
+        }
+        Ok(sim)
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Simulate one trace and aggregate the statistics.
+    pub fn run(&self) -> Result<ServeReport, String> {
+        if self.lanes.is_empty() {
+            return Err("serving simulator has no device lanes".into());
+        }
+        if !(self.opts.rps.is_finite() && self.opts.rps > 0.0) {
+            return Err(format!("--rps must be positive, got {}", self.opts.rps));
+        }
+        let n = self.opts.requests.max(1);
+        let max_batch = self.opts.max_batch.max(1);
+        let slo_s = self.opts.slo_ms / 1e3;
+
+        // -- Arrivals: seeded Poisson process ------------------------------
+        let mut rng = Rng::new(self.opts.trace_seed);
+        let mut arrivals = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        for _ in 0..n {
+            t += -(1.0 - rng.f64()).ln() / self.opts.rps;
+            arrivals.push(t);
+        }
+
+        // -- Event loop ----------------------------------------------------
+        let mut free_at = vec![0.0f64; self.lanes.len()];
+        let mut served = vec![0usize; self.lanes.len()];
+        let mut sojourn_ms = Vec::with_capacity(n);
+        let mut slo_violations = 0usize;
+        let mut degraded_requests = 0usize;
+        let mut accuracy_sum = 0.0f64;
+        let mut batches = 0usize;
+        let mut makespan = 0.0f64;
+        let mut i = 0usize;
+        while i < n {
+            // `min_by` keeps the FIRST of equally-minimum elements
+            // (std::cmp::min_by returns its first argument on Equal), so
+            // free-lane ties deterministically go to the lowest index.
+            let lane_idx = (0..self.lanes.len())
+                .min_by(|&a, &b| free_at[a].total_cmp(&free_at[b]))
+                .expect("at least one lane");
+            let lane = &self.lanes[lane_idx];
+            let start = arrivals[i].max(free_at[lane_idx]);
+
+            // Batch: everything already queued when service starts.
+            let mut end = i + 1;
+            while end < n && end - i < max_batch && arrivals[end] <= start {
+                end += 1;
+            }
+            let batch = end - i;
+
+            // Policy: degrade down the frontier while the oldest request
+            // in the batch would miss the SLO.
+            let points = lane.frontier.points();
+            let mut k = lane.preferred;
+            loop {
+                let service = batch_service(points[k].latency, batch);
+                if start + service - arrivals[i] <= slo_s || k == 0 {
+                    break;
+                }
+                k -= 1;
+            }
+            let service = batch_service(points[k].latency, batch);
+            let done = start + service;
+            for r in i..end {
+                let s_ms = (done - arrivals[r]) * 1e3;
+                sojourn_ms.push(s_ms);
+                if s_ms > self.opts.slo_ms {
+                    slo_violations += 1;
+                }
+                if k < lane.preferred {
+                    degraded_requests += 1;
+                }
+                accuracy_sum += points[k].accuracy;
+            }
+            served[lane_idx] += batch;
+            free_at[lane_idx] = done;
+            makespan = makespan.max(done);
+            batches += 1;
+            i = end;
+        }
+
+        Ok(ServeReport {
+            opts_rps: self.opts.rps,
+            slo_ms: self.opts.slo_ms,
+            accuracy_floor: self.opts.accuracy_floor,
+            max_batch,
+            requests: n,
+            p50_ms: stats::percentile(&sojourn_ms, 50.0),
+            p95_ms: stats::percentile(&sojourn_ms, 95.0),
+            p99_ms: stats::percentile(&sojourn_ms, 99.0),
+            mean_ms: stats::mean(&sojourn_ms),
+            throughput_rps: n as f64 / makespan,
+            slo_violations,
+            violation_rate: slo_violations as f64 / n as f64,
+            mean_served_accuracy: accuracy_sum / n as f64,
+            degraded_requests,
+            batches,
+            mean_batch: n as f64 / batches as f64,
+            per_device: self
+                .lanes
+                .iter()
+                .zip(&served)
+                .map(|(l, &s)| (l.name.clone(), s))
+                .collect(),
+        })
+    }
+}
+
+/// Service time of a `b`-request batch with per-request base `latency`.
+fn batch_service(latency: f64, b: usize) -> f64 {
+    latency * (1.0 + BATCH_MARGINAL * (b - 1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::pareto::Checkpoint;
+    use std::collections::BTreeMap;
+
+    fn cp(iteration: usize, latency: f64, accuracy: f64) -> Checkpoint {
+        Checkpoint { iteration, latency, accuracy, channels: BTreeMap::new() }
+    }
+
+    /// 3-point frontier: 2 ms @ 0.80, 5 ms @ 0.85, 20 ms @ 0.92.
+    fn frontier() -> ParetoSet {
+        let mut s = ParetoSet::new();
+        s.insert(cp(2, 0.002, 0.80));
+        s.insert(cp(1, 0.005, 0.85));
+        s.insert(cp(0, 0.020, 0.92));
+        s
+    }
+
+    fn sim(rps: f64, slo_ms: f64, floor: f64) -> Simulator {
+        let mut sim = Simulator::new(ServeOptions {
+            rps,
+            requests: 800,
+            slo_ms,
+            accuracy_floor: floor,
+            trace_seed: 7,
+            max_batch: 8,
+        });
+        sim.add_device("devA", &frontier()).unwrap();
+        sim
+    }
+
+    #[test]
+    fn repeated_runs_are_byte_identical() {
+        let s = sim(80.0, 30.0, 0.90);
+        let a = s.run().unwrap();
+        let b = s.run().unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.render(), b.render());
+        // a different trace seed produces a different trace
+        let mut other = Simulator::new(ServeOptions { trace_seed: 8, ..ServeOptions::default() });
+        other.add_device("devA", &frontier()).unwrap();
+        assert_ne!(other.run().unwrap().render(), a.render());
+    }
+
+    #[test]
+    fn light_load_serves_the_preferred_model_within_slo() {
+        // 5 rps against a 20 ms model: no queueing to speak of.
+        let r = sim(5.0, 100.0, 0.90).run().unwrap();
+        assert_eq!(r.degraded_requests, 0);
+        assert_eq!(r.slo_violations, 0);
+        assert!((r.mean_served_accuracy - 0.92).abs() < 1e-12);
+        // ≈ the 20 ms service time (less one ulp of float rounding)
+        assert!(r.p50_ms >= 19.9, "sojourn below pure service time");
+        assert!(r.p99_ms <= 100.0);
+    }
+
+    #[test]
+    fn overload_degrades_down_the_frontier_and_batches() {
+        // 400 rps against a 20 ms preferred model on one lane is far past
+        // capacity; the policy must shed accuracy and batch heavily.
+        let heavy = sim(400.0, 30.0, 0.90).run().unwrap();
+        let light = sim(5.0, 100.0, 0.90).run().unwrap();
+        assert!(heavy.degraded_requests > 0, "no degradation under overload");
+        assert!(heavy.mean_served_accuracy < light.mean_served_accuracy);
+        assert!(heavy.mean_batch > 1.5, "batching never kicked in");
+        assert!(heavy.throughput_rps > light.throughput_rps);
+    }
+
+    #[test]
+    fn extra_lanes_raise_throughput_and_cut_tail_latency() {
+        let one = sim(300.0, 30.0, 0.90).run().unwrap();
+        let mut two = Simulator::new(ServeOptions {
+            rps: 300.0,
+            requests: 800,
+            slo_ms: 30.0,
+            accuracy_floor: 0.90,
+            trace_seed: 7,
+            max_batch: 8,
+        });
+        two.add_device("devA", &frontier()).unwrap();
+        two.add_device("devB", &frontier()).unwrap();
+        let two = two.run().unwrap();
+        assert!(two.p99_ms < one.p99_ms, "second lane did not help the tail");
+        assert!(two.violation_rate <= one.violation_rate);
+        let lane_total: usize = two.per_device.iter().map(|(_, s)| s).sum();
+        assert_eq!(lane_total, two.requests);
+        assert!(two.per_device.iter().all(|(_, s)| *s > 0), "a lane sat idle");
+    }
+
+    #[test]
+    fn floor_above_frontier_serves_most_accurate_point() {
+        let r = sim(5.0, 1000.0, 0.99).run().unwrap();
+        assert!((r.mean_served_accuracy - 0.92).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_frontier_and_no_lanes_are_rejected() {
+        let mut s = Simulator::new(ServeOptions::default());
+        assert!(s.run().is_err(), "ran with no lanes");
+        assert!(s.add_device("devA", &ParetoSet::new()).is_err());
+    }
+}

@@ -191,7 +191,7 @@ impl Trainer {
                 let norms = self.filter_l1(&conv_name)?;
                 let mut order: Vec<usize> = (0..channels).collect();
                 order.sort_by(|&a, &b| {
-                    norms[b].partial_cmp(&norms[a]).unwrap().then(a.cmp(&b))
+                    norms[b].total_cmp(&norms[a]).then(a.cmp(&b))
                 });
                 for &f in order.iter().take(keep) {
                     mask[f] = 1.0;

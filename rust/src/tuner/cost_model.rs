@@ -128,9 +128,7 @@ fn solve(a: &mut [Vec<f64>]) -> Option<Vec<f64>> {
     let n = a.len();
     for col in 0..n {
         // partial pivot
-        let pivot = (col..n).max_by(|&i, &j| {
-            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
-        })?;
+        let pivot = (col..n).max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))?;
         if a[pivot][col].abs() < 1e-12 {
             return None;
         }

@@ -79,8 +79,7 @@ pub fn tune_task(
             order.sort_by(|&a, &b| {
                 model
                     .score(w, &population[a])
-                    .partial_cmp(&model.score(w, &population[b]))
-                    .unwrap()
+                    .total_cmp(&model.score(w, &population[b]))
             });
         } else {
             rng.shuffle(&mut order);
@@ -112,7 +111,7 @@ pub fn tune_task(
 
         // Evolve: keep elites (by measured latency), refill with mutants
         // of elites + fresh randoms.
-        measured.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        measured.sort_by(|a, b| a.1.total_cmp(&b.1));
         measured.dedup_by(|a, b| a.0 == b.0);
         let elites: Vec<Program> = measured.iter().take(8).map(|(p, _)| p.clone()).collect();
         population.clear();

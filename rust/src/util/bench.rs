@@ -52,13 +52,21 @@ pub fn bench_auto<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResu
 
 fn summarize(name: &str, samples: &[f64]) -> BenchResult {
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let mean = super::stats::mean(samples);
+    let n = sorted.len();
+    // True median: even-length sample sets average the two middle
+    // elements (taking sorted[n/2] alone biased the BENCH line upward).
+    let median = if n % 2 == 0 {
+        (sorted[n / 2 - 1] + sorted[n / 2]) / 2.0
+    } else {
+        sorted[n / 2]
+    };
     BenchResult {
         name: name.to_string(),
-        iters: samples.len(),
+        iters: n,
         mean_ns: mean,
-        median_ns: sorted[sorted.len() / 2],
+        median_ns: median,
         stddev_ns: super::stats::stddev(samples),
         min_ns: sorted[0],
         max_ns: *sorted.last().unwrap(),
@@ -103,6 +111,25 @@ mod tests {
         assert_eq!(r.iters, 50);
         assert!(r.median_ns >= 0.0);
         assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn median_averages_middle_pair_for_even_lengths() {
+        // Regression: the BENCH line used to report the upper-middle
+        // element (3.0 here) as the median of an even-length set.
+        let even = summarize("even", &[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(even.median_ns, 2.5);
+        let odd = summarize("odd", &[3.0, 1.0, 2.0]);
+        assert_eq!(odd.median_ns, 2.0);
+        assert_eq!(even.min_ns, 1.0);
+        assert_eq!(even.max_ns, 4.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_the_summary() {
+        let r = summarize("nan", &[1.0, f64::NAN, 2.0]);
+        assert_eq!(r.min_ns, 1.0);
+        assert!(r.max_ns.is_nan(), "NaN sorts last under total_cmp");
     }
 
     #[test]

@@ -59,13 +59,6 @@ impl Json {
         }
     }
 
-    /// Serialize (compact).
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -117,6 +110,17 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization; `.to_string()` comes via the blanket
+/// `ToString` impl (an inherent `to_string` would shadow it — clippy's
+/// `inherent_to_string` lint).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -17,13 +17,16 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// p-th percentile (linear interpolation), p in [0, 100].
+/// p-th percentile (linear interpolation). `p` is clamped to [0, 100]
+/// (out-of-range ranks would index past the sample vector); NaN samples
+/// sort last via `total_cmp` instead of panicking the harness.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
+    let p = p.clamp(0.0, 100.0);
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -66,7 +69,7 @@ pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
 
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut out = vec![0.0; xs.len()];
     // average ranks for ties
     let mut i = 0;
@@ -102,6 +105,31 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_p() {
+        // p > 100 used to compute a rank past len-1 and index out of
+        // bounds; p < 0 silently extrapolated below the minimum.
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, 150.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0 + 1e-9), 3.0);
+        assert_eq!(percentile(&xs, -20.0), 1.0);
+        assert_eq!(percentile(&[], 150.0), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // partial_cmp(..).unwrap() used to panic the whole experiment
+        // harness on a single NaN sample; total_cmp sorts NaN last.
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        // the rank transform behind spearman must not panic either
+        let r = ranks(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(r.len(), 3);
+        let _ = spearman(&[1.0, f64::NAN, 3.0], &[1.0, 2.0, 3.0]);
     }
 
     #[test]

@@ -66,6 +66,34 @@ fn fleet_tunes_three_devices() {
 }
 
 #[test]
+fn serve_runs_end_to_end_and_persists_the_registry() {
+    let path = std::env::temp_dir().join("cprune_cli_test_serve_registry.json");
+    let p = path.to_str().unwrap();
+    let _ = std::fs::remove_file(&path);
+    let args = [
+        "serve", "--model", "resnet8-cifar", "--devices", "kryo385",
+        "--iters", "3", "--rps", "200", "--requests", "300",
+        "--slo-ms", "25", "--accuracy-floor", "0.78", "--registry", p,
+    ];
+    assert_eq!(run(&args), 0);
+    assert!(path.exists(), "registry file not written");
+    // second run warm-starts from the persisted Pareto sets
+    assert_eq!(run(&args), 0);
+    // the file is the documented versioned format
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = json::parse(&text).unwrap();
+    assert_eq!(j.get("format").unwrap().as_str(), Some("cprune-pareto-registry"));
+    assert_eq!(j.get("version").unwrap().as_usize(), Some(1));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn serve_rejects_bad_flags() {
+    assert_eq!(run(&["serve", "--devices", "nosuchdevice"]), 2);
+    assert_eq!(run(&["serve", "--rps", "not-a-number"]), 2);
+}
+
+#[test]
 fn fleet_cache_dir_roundtrip() {
     let dir = std::env::temp_dir().join("cprune_cli_test_fleet_caches");
     let _ = std::fs::remove_dir_all(&dir);

@@ -1,0 +1,146 @@
+//! Integration: the serving layer end-to-end — CPrune runs publish
+//! Pareto frontiers into a registry, the registry round-trips through
+//! disk, and the serving simulator's statistics are identical across
+//! runs and across tuning thread budgets (mirroring the tuner's
+//! `thread_budget_does_not_change_results` contract at the next layer
+//! up).
+
+use cprune::accuracy::ProxyOracle;
+use cprune::device::{DeviceSpec, Simulator};
+use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::pruner::{cprune_with_session, CPruneConfig};
+use cprune::serve::{Registry, ServeOptions, ServeReport, Simulator as ServeSimulator};
+use cprune::tuner::{TuneOptions, TuningSession};
+
+fn specs2() -> Vec<DeviceSpec> {
+    vec![DeviceSpec::kryo385(), DeviceSpec::kryo585()]
+}
+
+/// One CPrune run per device at the given tuning thread budget, frontiers
+/// published into a fresh registry.
+fn registry_with_threads(threads: usize) -> (Registry, &'static str) {
+    let kind = ModelKind::ResNet8Cifar;
+    let model = Model::build(kind, 0);
+    let mut registry = Registry::new();
+    for spec in specs2() {
+        let sim = Simulator::new(spec);
+        let cfg = CPruneConfig {
+            max_iterations: 6,
+            tune_opts: TuneOptions::quick(),
+            seed: 0,
+            ..Default::default()
+        };
+        let mut session = TuningSession::new(&sim, cfg.tune_opts, 0);
+        session.threads = threads;
+        let mut oracle = ProxyOracle::new();
+        let r = cprune_with_session(&model, &mut oracle, &cfg, &session);
+        assert!(!r.pareto.is_empty(), "{}: empty frontier", sim.spec.name);
+        registry.publish(kind.name(), sim.spec.name, &r.pareto);
+    }
+    (registry, kind.name())
+}
+
+fn simulate(registry: &Registry, model: &str) -> ServeReport {
+    let mut sim = ServeSimulator::new(ServeOptions {
+        rps: 150.0,
+        requests: 1000,
+        slo_ms: 40.0,
+        accuracy_floor: 0.78,
+        trace_seed: 3,
+        max_batch: 8,
+    });
+    for spec in specs2() {
+        sim.add_device(spec.name, registry.get(model, spec.name).unwrap()).unwrap();
+    }
+    sim.run().unwrap()
+}
+
+#[test]
+fn serving_stats_identical_across_runs_and_thread_budgets() {
+    let (reg_serial, model) = registry_with_threads(1);
+    let (reg_parallel, _) = registry_with_threads(8);
+    assert_eq!(reg_serial, reg_parallel, "thread budget changed the frontiers");
+
+    let a = simulate(&reg_serial, model);
+    let b = simulate(&reg_serial, model); // same registry, fresh trace replay
+    let c = simulate(&reg_parallel, model); // frontiers tuned at 8 threads
+    assert_eq!(a.p50_ms, b.p50_ms);
+    assert_eq!(a.p95_ms, b.p95_ms);
+    assert_eq!(a.p99_ms, b.p99_ms);
+    assert_eq!(a.slo_violations, b.slo_violations);
+    assert_eq!(a, b);
+    assert_eq!(a, c, "tuning thread budget leaked into serving stats");
+    // the printed report is byte-identical too (the CLI's contract)
+    assert_eq!(a.render(), c.render());
+}
+
+#[test]
+fn across_fleet_matches_manually_wired_lanes() {
+    use cprune::tuner::{FleetOptions, FleetSession};
+    let (registry, model) = registry_with_threads(1);
+    let fleet = FleetSession::new(specs2(), FleetOptions::default(), 0);
+    let opts = ServeOptions {
+        rps: 150.0,
+        requests: 1000,
+        slo_ms: 40.0,
+        accuracy_floor: 0.78,
+        trace_seed: 3,
+        max_batch: 8,
+    };
+    let from_fleet = ServeSimulator::across_fleet(&fleet, &registry, model, opts)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(from_fleet, simulate(&registry, model), "fleet wiring changed the lanes");
+    // a model the registry has never seen is refused loudly
+    assert!(ServeSimulator::across_fleet(&fleet, &registry, "no-such-model", opts).is_err());
+}
+
+#[test]
+fn registry_roundtrips_cprune_frontiers_through_disk() {
+    let (registry, model) = registry_with_threads(1);
+    let path = std::env::temp_dir().join("cprune_serve_test_registry.json");
+    registry.save(&path).unwrap();
+    let loaded = Registry::load(&path).unwrap();
+    assert_eq!(loaded, registry);
+    // serving from the loaded registry reproduces the in-memory stats
+    assert_eq!(simulate(&loaded, model).render(), simulate(&registry, model).render());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tighter_slo_never_raises_served_accuracy() {
+    // The SLO-aware policy degrades down the frontier under pressure: a
+    // tighter SLO can only push more requests onto faster, less accurate
+    // checkpoints. Hand-built identical frontiers on both lanes keep the
+    // comparison independent of how traffic splits across lanes.
+    use cprune::serve::{Checkpoint, ParetoSet};
+    use std::collections::BTreeMap;
+    let mut frontier = ParetoSet::new();
+    for (it, lat, acc) in [(2, 0.002, 0.80), (1, 0.005, 0.85), (0, 0.020, 0.92)] {
+        frontier.insert(Checkpoint {
+            iteration: it,
+            latency: lat,
+            accuracy: acc,
+            channels: BTreeMap::new(),
+        });
+    }
+    let run_with_slo = |slo_ms: f64| {
+        let mut sim = ServeSimulator::new(ServeOptions {
+            rps: 300.0,
+            requests: 1000,
+            slo_ms,
+            accuracy_floor: 0.90,
+            trace_seed: 3,
+            max_batch: 8,
+        });
+        sim.add_device("laneA", &frontier).unwrap();
+        sim.add_device("laneB", &frontier).unwrap();
+        sim.run().unwrap()
+    };
+    let tight = run_with_slo(5.0);
+    let loose = run_with_slo(500.0);
+    assert!(tight.mean_served_accuracy < loose.mean_served_accuracy);
+    assert!(tight.degraded_requests > loose.degraded_requests);
+    assert!(tight.p99_ms < loose.p99_ms, "degrading did not buy latency");
+}
