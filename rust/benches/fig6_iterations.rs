@@ -23,9 +23,9 @@ fn main() {
     );
     println!(
         "\nfinal: {:.2}x FPS rate (paper: 1.96x), final top-1 {:.2}% / top-5 {:.2}% (paper: 88.34% top-5)",
-        r.result.fps_increase_rate,
-        r.result.final_top1 * 100.0,
-        r.result.final_top5 * 100.0
+        r.outcome.fps_increase_rate,
+        r.outcome.top1 * 100.0,
+        r.outcome.top5 * 100.0
     );
     println!("BENCH fig6_total_seconds {:.1}", t0.elapsed().as_secs_f64());
 }

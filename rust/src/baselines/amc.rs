@@ -8,12 +8,13 @@
 //! reward AMC optimizes (accuracy with a log-FLOPs bonus) subject to the
 //! remaining budget. Documented as a substitution in DESIGN.md §2.
 
-use super::{evaluate, Outcome};
+use super::Outcome;
 use crate::accuracy::{AccuracyOracle, Criterion, TrainPhase};
 use crate::graph::model_zoo::Model;
 use crate::graph::prune::{apply, PruneState};
 use crate::graph::stats;
 use crate::graph::weights::Weights;
+use crate::run::{Amc, Pruner, RunContext};
 use crate::tuner::TuningSession;
 
 /// AMC configuration.
@@ -34,13 +35,12 @@ impl Default for AmcConfig {
     }
 }
 
-pub fn amc(
-    model: &Model,
-    session: &TuningSession,
-    oracle: &mut dyn AccuracyOracle,
-    cfg: &AmcConfig,
-    baseline_latency: f64,
-) -> Outcome {
+/// The greedy layer-wise search: walk layers in order, pick each layer's
+/// sparsity from the grid to maximize the AMC reward under the remaining
+/// MACs budget. Pure policy — latency never enters (which is exactly why
+/// Table 1 shows AMC trailing the hardware-aware searches on FPS).
+pub(crate) fn amc_search(ctx: &mut RunContext, cfg: &AmcConfig) -> PruneState {
+    let model = ctx.model;
     let (orig_flops, _) = stats::flops_params(&model.graph);
     let target_flops = orig_flops as f64 * cfg.macs_budget;
 
@@ -63,10 +63,8 @@ pub fn amc(
             }
             let Ok(g) = apply(&model.graph, &cand_state.cout) else { continue };
             let (flops, _) = stats::flops_params(&g);
-            let acc = oracle.top1(
-                &crate::pruner::summarize(model, &cand_state, Criterion::L1Norm),
-                TrainPhase::Short,
-            );
+            let cand_summary = crate::pruner::summarize(model, &cand_state, Criterion::L1Norm);
+            let acc = ctx.oracle.top1(&cand_summary, TrainPhase::Short);
             let excess = (flops as f64 / target_flops - 1.0).max(0.0);
             let reward = acc - 2.0 * excess;
             if best.as_ref().map(|(r, ..)| reward > *r).unwrap_or(true) {
@@ -78,16 +76,20 @@ pub fn amc(
             weights = w;
         }
     }
+    state
+}
 
-    evaluate(
-        model,
-        &state,
-        session,
-        oracle,
-        Criterion::L1Norm,
-        "AMC+TVM",
-        baseline_latency,
-    )
+/// Legacy free-function entry point — a thin shim over the [`Amc`]
+/// pruner (DESIGN.md §9).
+pub fn amc(
+    model: &Model,
+    session: &TuningSession,
+    oracle: &mut dyn AccuracyOracle,
+    cfg: &AmcConfig,
+    baseline_latency: f64,
+) -> Outcome {
+    let mut ctx = RunContext::standalone(model, session, oracle).with_baseline(baseline_latency);
+    Amc::with(cfg.clone()).run(&mut ctx).to_outcome()
 }
 
 #[cfg(test)]

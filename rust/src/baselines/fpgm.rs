@@ -5,13 +5,15 @@
 //! which is exactly why the paper's Table 1 shows it trailing CPrune on
 //! FPS despite decent accuracy.
 
-use super::{evaluate, uniform_prune, Outcome};
-use crate::accuracy::{AccuracyOracle, Criterion};
+use super::Outcome;
+use crate::accuracy::AccuracyOracle;
 use crate::graph::model_zoo::Model;
+use crate::run::{Fpgm, Pruner, RunContext};
 use crate::tuner::TuningSession;
 
 /// The ratio FPGM's paper uses for ResNets (40% of filters scored, ~30%
-/// pruned effective); we expose it as a parameter.
+/// pruned effective); we expose it as a parameter. Thin shim over the
+/// [`Fpgm`] pruner (DESIGN.md §9).
 pub fn fpgm_prune(
     model: &Model,
     ratio: f64,
@@ -19,16 +21,8 @@ pub fn fpgm_prune(
     oracle: &mut dyn AccuracyOracle,
     baseline_latency: f64,
 ) -> Outcome {
-    let state = uniform_prune(model, ratio, Criterion::GeomMedian, 0);
-    evaluate(
-        model,
-        &state,
-        session,
-        oracle,
-        Criterion::GeomMedian,
-        "FPGM+TVM",
-        baseline_latency,
-    )
+    let mut ctx = RunContext::standalone(model, session, oracle).with_baseline(baseline_latency);
+    Fpgm::at(ratio).run(&mut ctx).to_outcome()
 }
 
 #[cfg(test)]

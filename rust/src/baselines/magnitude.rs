@@ -1,14 +1,16 @@
 //! Uniform-ratio magnitude (ℓ1) pruning — and the random-pruning variant
 //! used to generate Fig. 1's twenty pruned VGG-16 models.
 
-use super::{evaluate, uniform_prune, Outcome};
-use crate::accuracy::{AccuracyOracle, Criterion};
+use super::Outcome;
+use crate::accuracy::AccuracyOracle;
 use crate::graph::model_zoo::Model;
 use crate::graph::prune::PruneState;
+use crate::run::{Magnitude, Pruner, RunContext};
 use crate::tuner::TuningSession;
 use crate::util::rng::Rng;
 
-/// One-shot ℓ1 pruning at a fixed ratio, then final fine-tune.
+/// One-shot ℓ1 pruning at a fixed ratio, then final fine-tune. Thin shim
+/// over the [`Magnitude`] pruner (DESIGN.md §9).
 pub fn magnitude_prune(
     model: &Model,
     ratio: f64,
@@ -16,16 +18,8 @@ pub fn magnitude_prune(
     oracle: &mut dyn AccuracyOracle,
     baseline_latency: f64,
 ) -> Outcome {
-    let state = uniform_prune(model, ratio, Criterion::L1Norm, 0);
-    evaluate(
-        model,
-        &state,
-        session,
-        oracle,
-        Criterion::L1Norm,
-        &format!("Magnitude(l1)@{ratio:.0e}"),
-        baseline_latency,
-    )
+    let mut ctx = RunContext::standalone(model, session, oracle).with_baseline(baseline_latency);
+    Magnitude::at(ratio).run(&mut ctx).to_outcome()
 }
 
 /// A randomly pruned model variant (Fig. 1). The paper's 20 variants all

@@ -11,6 +11,13 @@
 //! * [`netadapt`] — NetAdapt's per-layer empirical measurement loop
 //!   (the exhaustive-search comparison of Fig. 11);
 //! * [`pqf`] — permute-quantize-finetune, a non-structural comparator.
+//!
+//! Every baseline also runs behind the uniform [`crate::run::Pruner`]
+//! trait (selected by name via [`crate::run::pruner_by_name`]); the free
+//! functions in these modules are thin shims over those trait impls, so
+//! both spellings produce byte-identical results for a fixed seed
+//! (DESIGN.md §9). [`evaluate`] remains the legacy shared tail the run
+//! layer's finalizer mirrors step for step.
 
 pub mod amc;
 pub mod fpgm;

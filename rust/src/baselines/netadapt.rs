@@ -13,16 +13,22 @@
 //! latency lookup is our device simulator via tuned compilation (NetAdapt
 //! uses lookup tables of measured layer latencies), and short-term
 //! accuracy is the shared oracle.
+//!
+//! The search itself lives in [`netadapt_run`], narrated through the
+//! run layer's event stream; [`netadapt`] is the legacy free-function
+//! shim over it (DESIGN.md §9).
 
 use super::Outcome;
 use crate::accuracy::{AccuracyOracle, Criterion, TrainPhase};
-use crate::compiler;
 use crate::device::Simulator;
 use crate::graph::model_zoo::Model;
 use crate::graph::prune::{apply, PruneState};
-use crate::graph::stats;
 use crate::graph::weights::Weights;
+use crate::pruner::IterationLog;
+use crate::run::{finalize, PruneOutcome, RejectReason, RunContext, RunEvent, SearchEnd};
+use crate::serve::Checkpoint;
 use crate::tuner::TuningSession;
+use crate::{compiler, pruner};
 use std::collections::HashMap;
 use std::time::Instant;
 
@@ -59,32 +65,47 @@ pub struct NetAdaptResult {
     pub candidates_tried: usize,
 }
 
-pub fn netadapt(
-    model: &Model,
-    session: &TuningSession,
-    sim: &Simulator,
-    oracle: &mut dyn AccuracyOracle,
-    cfg: &NetAdaptConfig,
-) -> NetAdaptResult {
+/// The observed search: runs against the context's model/session/oracle,
+/// emitting the typed event stream (every measured layer candidate, the
+/// accepted iteration, the deployable checkpoint). The outcome's
+/// `channels` map carries the final pruning state.
+pub(crate) fn netadapt_run(ctx: &mut RunContext, cfg: &NetAdaptConfig) -> PruneOutcome {
     let t0 = Instant::now();
-    let base = compiler::compile_tuned(&model.graph, session, &HashMap::new());
-    let base_latency = base.latency();
+    let model = ctx.model;
+    let session = ctx.session;
+    let base_latency = ctx.baseline_latency();
     let target = base_latency * cfg.target_latency_ratio;
 
     let mut state = PruneState::full(model);
     let mut weights = model.weights.clone();
     let mut cur_latency = base_latency;
     let mut candidates = 0usize;
-    let mut iterations = 0usize;
+    let mut iterations: Vec<IterationLog> = Vec::new();
+    let mut checkpoints: Vec<Checkpoint> = Vec::new();
+
+    // The unpruned model anchors the slow/accurate end of the frontier,
+    // exactly like CPrune's iteration-0 checkpoint.
+    let initial_summary = pruner::summarize(model, &state, Criterion::L1Norm);
+    let base_accuracy = ctx.oracle.top1(&initial_summary, TrainPhase::Short);
+    let baseline_checkpoint = Checkpoint {
+        iteration: 0,
+        latency: base_latency,
+        accuracy: base_accuracy,
+        channels: state.cout.clone(),
+    };
+    ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: baseline_checkpoint.clone() });
+    checkpoints.push(baseline_checkpoint);
 
     for _ in 0..cfg.max_iterations {
         if cur_latency <= target {
             break;
         }
+        let iter_no = iterations.len() + 1;
         let budget = cur_latency * (1.0 - cfg.step_ratio);
 
-        // Exhaustive per-layer candidate generation.
-        let mut best: Option<(f64, PruneState, Weights, f64)> = None; // (acc, state, weights, lat)
+        // Exhaustive per-layer candidate generation:
+        // (acc, state, weights, latency, conv, filters_removed).
+        let mut best: Option<(f64, PruneState, Weights, f64, usize, usize)> = None;
         for &conv in &model.prunable {
             let remaining = state.remaining(conv);
             if remaining <= 2 {
@@ -93,7 +114,7 @@ pub fn netadapt(
             // Grow the pruned count until the measured latency meets the
             // budget (the paper walks its layer lookup table the same way).
             let mut k = (remaining / 8).max(1);
-            let mut found: Option<(PruneState, Weights, f64)> = None;
+            let mut found: Option<(PruneState, Weights, f64, usize)> = None;
             while k < remaining - 1 {
                 let mut cand_state = state.clone();
                 let mut cand_weights = weights.clone();
@@ -103,53 +124,113 @@ pub fn netadapt(
                 let Ok(g) = apply(&model.graph, &cand_state.cout) else { break };
                 let lat = compiler::compile_tuned(&g, session, &HashMap::new()).latency();
                 candidates += 1;
+                ctx.emit(&RunEvent::CandidateMeasured {
+                    iteration: iter_no,
+                    latency: lat,
+                    latency_target: budget,
+                    candidates_tried: candidates,
+                });
                 if lat <= budget {
-                    found = Some((cand_state, cand_weights, lat));
+                    found = Some((cand_state, cand_weights, lat, k));
                     break;
                 }
+                ctx.emit(&RunEvent::IterationRejected {
+                    iteration: iter_no,
+                    latency: lat,
+                    latency_target: budget,
+                    short_accuracy: None,
+                    accuracy_gate: None,
+                    reason: RejectReason::LatencyGate,
+                });
                 k = (k * 2).min(remaining - 1);
-                let _ = sim; // measurement goes through the tuned compile path
             }
-            if let Some((cand_state, cand_weights, lat)) = found {
-                let acc = oracle.top1(
-                    &crate::pruner::summarize(model, &cand_state, Criterion::L1Norm),
-                    TrainPhase::Short,
-                );
-                if acc >= cfg.min_short_accuracy
-                    && best.as_ref().map(|(a, ..)| acc > *a).unwrap_or(true)
-                {
-                    best = Some((acc, cand_state, cand_weights, lat));
+            if let Some((cand_state, cand_weights, lat, k)) = found {
+                let cand_summary = pruner::summarize(model, &cand_state, Criterion::L1Norm);
+                let acc = ctx.oracle.top1(&cand_summary, TrainPhase::Short);
+                if acc < cfg.min_short_accuracy {
+                    ctx.emit(&RunEvent::IterationRejected {
+                        iteration: iter_no,
+                        latency: lat,
+                        latency_target: budget,
+                        short_accuracy: Some(acc),
+                        accuracy_gate: Some(cfg.min_short_accuracy),
+                        reason: RejectReason::AccuracyGate,
+                    });
+                } else if best.as_ref().map(|(a, ..)| acc > *a).unwrap_or(true) {
+                    best = Some((acc, cand_state, cand_weights, lat, conv, k));
                 }
             }
         }
 
         match best {
-            Some((_, s, w, lat)) => {
+            Some((acc, s, w, lat, conv, k)) => {
                 state = s;
                 weights = w;
                 cur_latency = lat;
-                iterations += 1;
+                ctx.emit(&RunEvent::IterationAccepted {
+                    iteration: iter_no,
+                    latency: lat,
+                    latency_target: budget,
+                    short_accuracy: acc,
+                    accuracy_gate: cfg.min_short_accuracy,
+                    filters_removed: k,
+                });
+                let checkpoint = Checkpoint {
+                    iteration: iter_no,
+                    latency: lat,
+                    accuracy: acc,
+                    channels: state.cout.clone(),
+                };
+                ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: checkpoint.clone() });
+                checkpoints.push(checkpoint);
+                iterations.push(IterationLog {
+                    iteration: iter_no,
+                    pruned_convs: vec![conv],
+                    filters_removed: k,
+                    latency: lat,
+                    fps_rate: base_latency / lat,
+                    short_accuracy: acc,
+                    candidates_tried: candidates,
+                });
             }
             None => break, // no layer can meet the budget
         }
     }
 
-    let graph = apply(&model.graph, &state.cout).expect("valid pruned graph");
-    let compiled = compiler::compile_tuned(&graph, session, &HashMap::new());
-    let (flops, params) = stats::flops_params(&graph);
-    let summary = crate::pruner::summarize(model, &state, Criterion::L1Norm);
-    let outcome = Outcome {
-        method: "NetAdapt+TVM".into(),
-        fps: compiled.fps(),
-        fps_increase_rate: base_latency / compiled.latency(),
-        macs: flops / 2,
-        params,
-        top1: oracle.top1(&summary, TrainPhase::Final),
-        top5: oracle.top5(&summary, TrainPhase::Final),
-        search_candidates: candidates,
-        main_step_seconds: t0.elapsed().as_secs_f64(),
-    };
-    NetAdaptResult { outcome, state, iterations, candidates_tried: candidates }
+    finalize(
+        ctx,
+        SearchEnd {
+            pruner: "netadapt",
+            method: "NetAdapt+TVM".to_string(),
+            state,
+            criterion: Criterion::L1Norm,
+            search_candidates: candidates,
+            main_step_seconds: t0.elapsed().as_secs_f64(),
+            iterations,
+            checkpoints,
+        },
+    )
+}
+
+/// Legacy free-function entry point — a thin shim over [`netadapt_run`]
+/// with no observers. `sim` is unused (measurement goes through the
+/// session's tuned compile path) and kept for signature stability.
+pub fn netadapt(
+    model: &Model,
+    session: &TuningSession,
+    sim: &Simulator,
+    oracle: &mut dyn AccuracyOracle,
+    cfg: &NetAdaptConfig,
+) -> NetAdaptResult {
+    let _ = sim;
+    let mut ctx = RunContext::standalone(model, session, oracle);
+    let po = netadapt_run(&mut ctx, cfg);
+    NetAdaptResult {
+        iterations: po.iterations.len(),
+        candidates_tried: po.search_candidates,
+        state: PruneState { cout: po.channels.clone() },
+        outcome: po.to_outcome(),
+    }
 }
 
 #[cfg(test)]
@@ -176,5 +257,27 @@ mod tests {
         assert!(r.iterations >= 1);
         // exhaustive: candidates ≥ iterations (one per layer per iter at least)
         assert!(r.candidates_tried >= r.iterations);
+    }
+
+    #[test]
+    fn netadapt_frontier_covers_every_accepted_iteration() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 2);
+        let mut oracle = ProxyOracle::new();
+        let cfg = NetAdaptConfig {
+            target_latency_ratio: 0.8,
+            max_iterations: 6,
+            ..Default::default()
+        };
+        let mut ctx = RunContext::standalone(&m, &session, &mut oracle);
+        let po = netadapt_run(&mut ctx, &cfg);
+        // frontier: baseline + accepted iterations + final, minus dominated
+        assert!(!po.pareto.is_empty());
+        assert!(po.pareto.len() <= po.iterations.len() + 2);
+        for w in po.pareto.points().windows(2) {
+            assert!(w[0].latency < w[1].latency);
+            assert!(w[0].accuracy < w[1].accuracy);
+        }
     }
 }

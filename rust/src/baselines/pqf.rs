@@ -10,12 +10,11 @@
 //! cost (codebook quantization hurts more than structured ℓ1 pruning).
 
 use super::Outcome;
-use crate::compiler;
+use crate::accuracy::ProxyOracle;
 use crate::device::{DeviceKind, Simulator};
 use crate::graph::model_zoo::Model;
-use crate::graph::stats;
+use crate::run::{Pqf, Pruner, RunContext};
 use crate::tuner::TuningSession;
-use std::collections::HashMap;
 
 /// Latency multiplier of PQF-compressed execution vs. f32 on this device
 /// kind (from the paper's Table 1 measurements).
@@ -30,27 +29,21 @@ pub fn latency_multiplier(kind: DeviceKind) -> f64 {
 pub const TOP1_DROP: f64 = 0.0302;
 pub const TOP5_DROP: f64 = 0.0192;
 
+/// Legacy free-function entry point — a thin shim over the [`Pqf`]
+/// pruner (DESIGN.md §9). `sim` is unused (the device kind comes from
+/// the session's simulator) and kept for signature stability; PQF needs
+/// no oracle, so the shim supplies a throwaway one.
 pub fn pqf(
     model: &Model,
     session: &TuningSession,
     sim: &Simulator,
     baseline_latency: f64,
 ) -> Outcome {
-    let compiled = compiler::compile_tuned(&model.graph, session, &HashMap::new());
-    let latency = compiled.latency() * latency_multiplier(sim.spec.kind);
-    let (flops, params) = stats::flops_params(&model.graph);
-    let (b1, b5) = model.kind.base_accuracy();
-    Outcome {
-        method: "PQF+TVM".into(),
-        fps: 1.0 / latency,
-        fps_increase_rate: baseline_latency / latency,
-        macs: flops / 2, // structure unchanged (tables print "-")
-        params,
-        top1: (b1 - TOP1_DROP).max(0.0),
-        top5: (b5 - TOP5_DROP).max(0.0),
-        search_candidates: 0,
-        main_step_seconds: 0.0,
-    }
+    let _ = sim;
+    let mut oracle = ProxyOracle::new();
+    let mut ctx =
+        RunContext::standalone(model, session, &mut oracle).with_baseline(baseline_latency);
+    Pqf.run(&mut ctx).to_outcome()
 }
 
 #[cfg(test)]

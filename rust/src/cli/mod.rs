@@ -2,6 +2,8 @@
 //! this offline environment).
 //!
 //! Subcommands:
+//!   run      — run any pruner (CPrune or a baseline) by name, with the
+//!              typed event stream (DESIGN.md §9)
 //!   prune    — run CPrune on a zoo model for a device
 //!   tune     — auto-tune a model without pruning (the TVM baseline)
 //!   fleet    — tune one model for several devices in one session
@@ -10,50 +12,84 @@
 //!   report   — regenerate a paper experiment (fig1..fig11, table1, table2)
 //!   e2e-info — show the AOT artifact inventory the e2e path consumes
 //!
-//! `prune`/`tune` accept `--cache FILE` and `fleet` accepts
+//! `run`/`prune`/`tune` accept `--cache FILE` and `fleet` accepts
 //! `--cache-dir DIR`: tuned programs persist as versioned JSON, so a
 //! repeated run warm-starts and re-measures (close to) nothing.
 
-use crate::accuracy::ProxyOracle;
 use crate::compiler;
 use crate::device::{DeviceSpec, Simulator};
 use crate::exp::{self, Scale};
 use crate::graph::model_zoo::{Model, ModelKind};
-use crate::graph::stats;
-use crate::pruner::{cprune_with_session, CPruneConfig};
+use crate::run::{
+    pruner_by_name, CPrune, JsonlSink, ProgressPrinter, RegistryPublisher, RunBuilder,
+    PRUNER_NAMES,
+};
 use crate::serve::{Registry, ServeOptions, Simulator as ServeSimulator};
 use crate::tuner::{
     FleetDeviceResult, FleetOptions, FleetSession, TuneCache, TuneOptions, TuningSession,
 };
 use crate::util::bench::print_table;
+use std::cell::RefCell;
 use std::collections::HashMap;
+use std::rc::Rc;
 
-/// Parsed flags: `--key value` pairs plus positional arguments.
+/// Parsed flags: `--key value` / `--key=value` pairs plus positional
+/// arguments.
 pub struct Args {
     pub positional: Vec<String>,
     pub flags: HashMap<String, String>,
 }
 
-pub fn parse_args(argv: &[String]) -> Args {
+/// True for the flag names this CLI can ever define: letters, digits and
+/// hyphens. Anything else after `--` is almost certainly a value that
+/// lost its flag (e.g. `--events --foo.jsonl`), and silently turning it
+/// into a boolean flag would swallow it.
+fn is_flag_name(s: &str) -> bool {
+    !s.is_empty() && s.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'-')
+}
+
+/// Parse `argv` into positionals and `--key value` / `--key=value`
+/// flags. A bare `--key` not followed by a value parses as the boolean
+/// `"true"`; values that themselves begin with `--` must be attached
+/// with `=` (`--events=--weird.jsonl`). A lone `--` ends flag parsing.
+pub fn parse_args(argv: &[String]) -> Result<Args, String> {
     let mut positional = Vec::new();
     let mut flags = HashMap::new();
     let mut i = 0;
     while i < argv.len() {
         let a = &argv[i];
-        if let Some(key) = a.strip_prefix("--") {
-            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                flags.insert(key.to_string(), argv[i + 1].clone());
-                i += 2;
-            } else {
-                flags.insert(key.to_string(), "true".to_string());
+        if a == "--" {
+            positional.extend(argv[i + 1..].iter().cloned());
+            break;
+        }
+        if let Some(body) = a.strip_prefix("--") {
+            if let Some((key, value)) = body.split_once('=') {
+                if !is_flag_name(key) {
+                    return Err(format!("malformed flag '{a}'"));
+                }
+                flags.insert(key.to_string(), value.to_string());
                 i += 1;
+            } else {
+                if !is_flag_name(body) {
+                    return Err(format!(
+                        "'{a}' is not a valid flag; to pass it as a value, attach it \
+                         with '=': --<flag>={a}"
+                    ));
+                }
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(body.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(body.to_string(), "true".to_string());
+                    i += 1;
+                }
             }
         } else {
             positional.push(a.clone());
             i += 1;
         }
     }
-    Args { positional, flags }
+    Ok(Args { positional, flags })
 }
 
 pub fn model_by_name(name: &str) -> ModelKind {
@@ -136,6 +172,52 @@ fn flag_or<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T
     }
 }
 
+/// Shared wiring of the `run`/`prune` subcommands: a [`RunBuilder`] from
+/// the common flags (`--iters`, `--target-acc`, `--seed`, `--cache`,
+/// `--events`). `Err` carries the process exit code — diagnostics are
+/// already printed.
+fn run_builder_from_flags(
+    args: &Args,
+    model_kind: ModelKind,
+    device: &DeviceSpec,
+    seed: u64,
+) -> Result<RunBuilder, i32> {
+    let iters = match flag_or(args, "iters", 20usize) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}");
+            return Err(2);
+        }
+    };
+    let mut builder = RunBuilder::new(model_kind)
+        .device_spec(device.clone())
+        .seed(seed)
+        .tune_opts(TuneOptions::quick())
+        .max_iterations(iters);
+    if let Some(v) = args.flags.get("target-acc") {
+        match v.parse::<f64>() {
+            Ok(a) => builder = builder.accuracy_budget(a),
+            Err(_) => {
+                eprintln!("--target-acc wants a number, got '{v}'");
+                return Err(2);
+            }
+        }
+    }
+    if let Some(path) = args.flags.get("cache") {
+        builder = builder.cache(path);
+    }
+    if let Some(path) = args.flags.get("events") {
+        match JsonlSink::create(path) {
+            Ok(sink) => builder = builder.observer(Box::new(sink)),
+            Err(e) => {
+                eprintln!("{e}");
+                return Err(1);
+            }
+        }
+    }
+    Ok(builder)
+}
+
 /// Persist the session cache when `--cache` was given; returns the exit code.
 fn close_session(session: &TuningSession, cache_path: Option<&String>) -> i32 {
     if let Some(p) = cache_path {
@@ -151,21 +233,37 @@ fn close_session(session: &TuningSession, cache_path: Option<&String>) -> i32 {
 const USAGE: &str = "cprune — compiler-informed model pruning (paper reproduction)
 
 USAGE:
-  cprune prune     [--model M] [--device D] [--target-acc A] [--iters N] [--seed S] [--out FILE.json] [--cache FILE]
+  cprune run       [--pruner P] [--model M] [--device D] [--target-acc A] [--iters N] [--seed S]
+                   [--cache FILE] [--events FILE.jsonl] [--registry FILE] [--verbose] [--quiet]
+  cprune prune     [--model M] [--device D] [--target-acc A] [--iters N] [--seed S] [--out FILE.json]
+                   [--cache FILE] [--events FILE.jsonl]
   cprune tune      [--model M] [--device D] [--seed S] [--cache FILE]
   cprune fleet     [--model M] [--devices d1,d2,...] [--seed S] [--threads N] [--quick] [--cache-dir DIR]
   cprune serve     [--model M] [--devices d1,d2,...] [--rps R] [--requests N] [--slo-ms T]
                    [--accuracy-floor A] [--trace-seed S] [--max-batch B] [--iters N]
-                   [--registry FILE] [--seed S]
+                   [--registry FILE] [--no-search] [--seed S]
   cprune compare   [--model M] [--device D] [--seed S]
   cprune report    <fig1|fig6|fig7|fig8|fig9|fig10|fig11|table1|table2> [--scale smoke|full]
   cprune dot       [--model M]                    # graphviz of graph+subgraphs+tasks
   cprune calibrate [--device D]                   # fit sim scale to paper anchors
   cprune e2e-info
 
+  pruners: cprune magnitude fpgm netadapt amc pqf
   models:  vgg16-cifar resnet18-imagenet resnet18-cifar resnet34 mobilenetv1
            mobilenetv2 mnasnet1.0 resnet8-cifar
   devices: kryo280 kryo385 kryo585 mali-g72 rtx3080
+
+  Flags take '--key value' or '--key=value'; values that begin with '--'
+  must use the '=' form.
+
+RUN:
+  `run` executes any pruning algorithm through the uniform run layer
+  (DESIGN.md §9): --pruner selects it by name, --events streams the typed
+  event log (one JSON object per line, schema 'cprune-run-events' v1),
+  --registry auto-publishes every emitted checkpoint frontier for the
+  serving layer, and the default progress printer narrates baseline
+  tuning, accepted/rejected iterations and task bans (--quiet silences
+  it, --verbose adds per-candidate measurements).
 
 WARM START:
   --cache FILE persists tuned programs (versioned JSON) across runs: the
@@ -177,13 +275,14 @@ WARM START:
 
 SERVING:
   `serve` runs CPrune per device (unless --registry already holds the
-  frontier), publishes each run's latency/accuracy Pareto set to the
-  registry, then replays a seeded synthetic trace through the serving
-  simulator: batching queue, per-device dispatch, and an SLO-aware policy
-  that serves the fastest frontier model meeting --accuracy-floor and
-  degrades down the frontier under load. Reports p50/p95/p99 latency,
-  throughput and SLO-violation rate — byte-identical across runs with the
-  same seeds. --registry FILE persists the Pareto sets (versioned JSON).
+  frontier, or --no-search forbids backfilling), publishes each run's
+  latency/accuracy Pareto set to the registry, then replays a seeded
+  synthetic trace through the serving simulator: batching queue,
+  per-device dispatch, and an SLO-aware policy that serves the fastest
+  frontier model meeting --accuracy-floor and degrades down the frontier
+  under load. Reports p50/p95/p99 latency, throughput and SLO-violation
+  rate — byte-identical across runs with the same seeds. --registry FILE
+  persists the Pareto sets (versioned JSON).
 
 FEATURES:
   The optional `pjrt` cargo feature (cargo build --features pjrt) enables
@@ -191,7 +290,13 @@ FEATURES:
   Default builds are pure-Rust, offline and dependency-free.";
 
 pub fn run(argv: Vec<String>) -> i32 {
-    let args = parse_args(&argv);
+    let args = match parse_args(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let Some(cmd) = args.positional.first() else {
         println!("{USAGE}");
         return 0;
@@ -214,57 +319,135 @@ pub fn run(argv: Vec<String>) -> i32 {
         .unwrap_or(ModelKind::ResNet18ImageNet);
 
     match cmd.as_str() {
-        "prune" => {
-            let model = Model::build(model_kind, seed);
-            let sim = Simulator::new(device);
-            let cfg = CPruneConfig {
-                target_accuracy: args
-                    .flags
-                    .get("target-acc")
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or(0.0),
-                max_iterations: args
-                    .flags
-                    .get("iters")
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or(20),
-                tune_opts: TuneOptions::quick(),
-                seed,
-                ..Default::default()
+        "run" => {
+            let pruner_name = args
+                .flags
+                .get("pruner")
+                .map(String::as_str)
+                .unwrap_or("cprune");
+            let Some(pruner) = pruner_by_name(pruner_name) else {
+                eprintln!("unknown pruner '{pruner_name}'. options: {PRUNER_NAMES}");
+                return 2;
             };
-            let session = match open_session(&sim, cfg.tune_opts, seed, args.flags.get("cache")) {
-                Ok(s) => s,
+            let mut builder = match run_builder_from_flags(&args, model_kind, &device, seed) {
+                Ok(b) => b,
                 Err(code) => return code,
             };
-            let mut oracle = ProxyOracle::new();
-            let r = cprune_with_session(&model, &mut oracle, &cfg, &session);
+            if !args.flags.contains_key("quiet") {
+                let printer = if args.flags.contains_key("verbose") {
+                    ProgressPrinter::new().verbose()
+                } else {
+                    ProgressPrinter::new()
+                };
+                builder = builder.observer(Box::new(printer));
+            }
+            if let Some(path) = args.flags.get("registry") {
+                let registry = if std::path::Path::new(path).exists() {
+                    match Registry::load(path) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            eprintln!("registry {path}: {e}");
+                            return 1;
+                        }
+                    }
+                } else {
+                    Registry::new()
+                };
+                let publisher = RegistryPublisher::shared(
+                    Rc::new(RefCell::new(registry)),
+                    model_kind.name(),
+                    device.name,
+                )
+                .saving_to(path);
+                builder = builder.observer(Box::new(publisher));
+            }
+            let mut run = match builder.build() {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            let out = match run.execute(pruner.as_ref()) {
+                Ok(o) => o,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            println!(
+                "{} on {} via {}: {:.2}x FPS ({:.1} -> {:.1}), {:.0}M MACs, {:.2}M params, top-1 {:.2}%",
+                out.model,
+                out.device,
+                out.method,
+                out.fps_increase_rate,
+                1.0 / out.baseline_latency,
+                out.final_fps,
+                out.macs as f64 / 1e6,
+                out.params as f64 / 1e6,
+                out.top1 * 100.0
+            );
+            println!(
+                "search cost: {} candidates, {} programs measured ({} cache hits avoided {} measurements)",
+                out.search_candidates,
+                out.programs_measured,
+                run.cache().hits(),
+                run.cache().saved()
+            );
+            if let Some(path) = args.flags.get("events") {
+                println!("events: wrote {path}");
+            }
+            if let Some(path) = args.flags.get("registry") {
+                println!("registry: published {}-point frontier to {path}", out.pareto.len());
+            }
+            0
+        }
+        "prune" => {
+            let builder = match run_builder_from_flags(&args, model_kind, &device, seed) {
+                Ok(b) => b,
+                Err(code) => return code,
+            };
+            let mut run = match builder.build() {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            let pruner = CPrune::default();
+            let out = match run.execute(&pruner) {
+                Ok(o) => o,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
             if let Some(path) = args.flags.get("out") {
-                let j = crate::pruner::report::to_json(&model, sim.spec.name, &r);
+                let j = crate::pruner::report::outcome_to_json(&out);
                 if let Err(e) = std::fs::write(path, j.to_string()) {
                     eprintln!("writing {path}: {e}");
                     return 1;
                 }
                 println!("wrote {path}");
             }
-            let (f, p) = stats::flops_params(&r.final_graph);
             println!(
                 "{} on {}: {:.2}x FPS ({:.1} -> {:.1}), {:.0}M MACs, {:.2}M params, top-1 {:.2}%",
-                model.kind.name(),
-                sim.spec.name,
-                r.fps_increase_rate,
-                r.baseline.fps(),
-                r.final_fps,
-                f as f64 / 2e6,
-                p as f64 / 1e6,
-                r.final_top1 * 100.0
+                out.model,
+                out.device,
+                out.fps_increase_rate,
+                1.0 / out.baseline_latency,
+                out.final_fps,
+                out.macs as f64 / 1e6,
+                out.params as f64 / 1e6,
+                out.top1 * 100.0
             );
             println!(
                 "search cost: {} programs measured ({} cache hits avoided {} measurements)",
-                r.programs_measured,
-                session.cache.hits(),
-                session.cache.saved()
+                out.programs_measured,
+                run.cache().hits(),
+                run.cache().saved()
             );
-            close_session(&session, args.flags.get("cache"))
+            0
         }
         "tune" => {
             let model = Model::build(model_kind, seed);
@@ -370,12 +553,13 @@ pub fn run(argv: Vec<String>) -> i32 {
                     return 2;
                 }
             };
-            let model = Model::build(model_kind, seed);
-            let model_name = model.kind.name();
+            let model_name = model_kind.name();
 
             // Frontier per device: from the registry file when it already
-            // holds one, otherwise produced by a CPrune run and published.
+            // holds one, otherwise produced by a CPrune run and published
+            // (unless --no-search forbids backfilling).
             let registry_path = args.flags.get("registry");
+            let no_search = args.flags.contains_key("no-search");
             let mut registry = match registry_path {
                 Some(p) if std::path::Path::new(p).exists() => match Registry::load(p) {
                     Ok(r) => {
@@ -390,20 +574,30 @@ pub fn run(argv: Vec<String>) -> i32 {
                 _ => Registry::new(),
             };
             for spec in &specs {
-                if registry.get(model_name, spec.name).is_some() {
+                if no_search || registry.get(model_name, spec.name).is_some() {
                     continue;
                 }
-                let sim = Simulator::new(spec.clone());
-                let cfg = CPruneConfig {
-                    max_iterations: iters,
-                    tune_opts: TuneOptions::quick(),
-                    seed,
-                    ..Default::default()
+                let mut run = match RunBuilder::new(model_kind)
+                    .device_spec(spec.clone())
+                    .seed(seed)
+                    .tune_opts(TuneOptions::quick())
+                    .max_iterations(iters)
+                    .build()
+                {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 1;
+                    }
                 };
-                let session = TuningSession::new(&sim, cfg.tune_opts, seed);
-                let mut oracle = ProxyOracle::new();
-                let r = cprune_with_session(&model, &mut oracle, &cfg, &session);
-                let n = registry.publish(model_name, spec.name, &r.pareto);
+                let out = match run.execute(&CPrune::default()) {
+                    Ok(o) => o,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 1;
+                    }
+                };
+                let n = registry.publish(model_name, spec.name, &out.pareto);
                 println!(
                     "registry: published {n}-point frontier for {model_name} on {}",
                     spec.name
@@ -419,9 +613,15 @@ pub fn run(argv: Vec<String>) -> i32 {
 
             let mut ssim = ServeSimulator::new(opts);
             for spec in &specs {
-                let set = registry
-                    .get(model_name, spec.name)
-                    .expect("frontier published above");
+                let Some(set) = registry.get(model_name, spec.name) else {
+                    eprintln!(
+                        "registry has no frontier for {model_name} on {}; run without \
+                         --no-search to let `cprune serve` build it, or publish one first \
+                         with `cprune run --registry <FILE> --device {}`",
+                        spec.name, spec.name
+                    );
+                    return 1;
+                };
                 if let Err(e) = ssim.add_device(spec.name, set) {
                     eprintln!("{e}");
                     return 1;
@@ -602,17 +802,62 @@ fn report(which: &str, scale: Scale, seed: u64) -> i32 {
 mod tests {
     use super::*;
 
+    fn parse(argv: &[&str]) -> Result<Args, String> {
+        let argv: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        parse_args(&argv)
+    }
+
     #[test]
     fn parse_args_flags_and_positionals() {
-        let argv: Vec<String> = ["prune", "--model", "resnet18", "--iters", "5", "--verbose"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
-        let a = parse_args(&argv);
+        let a = parse(&["prune", "--model", "resnet18", "--iters", "5", "--verbose"]).unwrap();
         assert_eq!(a.positional, vec!["prune"]);
         assert_eq!(a.flags.get("model").unwrap(), "resnet18");
         assert_eq!(a.flags.get("iters").unwrap(), "5");
         assert_eq!(a.flags.get("verbose").unwrap(), "true");
+    }
+
+    #[test]
+    fn parse_args_supports_key_equals_value() {
+        let a = parse(&["run", "--model=resnet18", "--iters=5", "--events=out.jsonl"]).unwrap();
+        assert_eq!(a.flags.get("model").unwrap(), "resnet18");
+        assert_eq!(a.flags.get("iters").unwrap(), "5");
+        assert_eq!(a.flags.get("events").unwrap(), "out.jsonl");
+        // empty value and values containing '=' survive
+        let a = parse(&["run", "--out=", "--expr=a=b"]).unwrap();
+        assert_eq!(a.flags.get("out").unwrap(), "");
+        assert_eq!(a.flags.get("expr").unwrap(), "a=b");
+    }
+
+    #[test]
+    fn parse_args_equals_syntax_carries_values_that_begin_with_dashes() {
+        let a = parse(&["run", "--events=--weird.jsonl"]).unwrap();
+        assert_eq!(a.flags.get("events").unwrap(), "--weird.jsonl");
+    }
+
+    #[test]
+    fn parse_args_rejects_flag_lookalike_values_instead_of_swallowing_them() {
+        // Legacy behavior silently made `--events` a boolean and invented a
+        // `foo.jsonl` flag; now it is a loud error pointing at '='.
+        let e = parse(&["run", "--events", "--foo.jsonl"]).unwrap_err();
+        assert!(e.contains("--foo.jsonl"), "{e}");
+        assert!(e.contains("="), "{e}");
+        // adjacent valid flags still parse as booleans
+        let a = parse(&["run", "--quiet", "--quick"]).unwrap();
+        assert_eq!(a.flags.get("quiet").unwrap(), "true");
+        assert_eq!(a.flags.get("quick").unwrap(), "true");
+    }
+
+    #[test]
+    fn parse_args_double_dash_ends_flag_parsing() {
+        let a = parse(&["run", "--seed", "3", "--", "--not-a-flag", "pos"]).unwrap();
+        assert_eq!(a.flags.get("seed").unwrap(), "3");
+        assert_eq!(a.positional, vec!["run", "--not-a-flag", "pos"]);
+    }
+
+    #[test]
+    fn parse_args_rejects_malformed_flags() {
+        assert!(parse(&["run", "--ev!l=x"]).is_err());
+        assert!(parse(&["run", "--=x"]).is_err());
     }
 
     #[test]

@@ -7,12 +7,15 @@
 //! paper's chosen values sit on: loose α over-prunes accuracy, tight α
 //! stops early; β near 1 creeps (many candidates), small β overshoots
 //! (few, aggressive steps that the accuracy gate then rejects).
+//!
+//! Every grid cell is one [`CPrune`] execution on a single shared
+//! [`RunBuilder`] wiring (DESIGN.md §9) — the warm tune cache makes the
+//! 12-cell sweep far cheaper than 12 cold searches.
 
-use crate::accuracy::ProxyOracle;
-use crate::device::{DeviceSpec, Simulator};
 use crate::exp::Scale;
-use crate::graph::model_zoo::{Model, ModelKind};
-use crate::pruner::{cprune, CPruneConfig};
+use crate::graph::model_zoo::ModelKind;
+use crate::pruner::CPruneConfig;
+use crate::run::{CPrune, RunBuilder};
 
 #[derive(Clone, Debug)]
 pub struct AlphaBetaCell {
@@ -25,10 +28,14 @@ pub struct AlphaBetaCell {
 }
 
 pub fn run(scale: Scale, seed: u64) -> Vec<AlphaBetaCell> {
-    let model = Model::build(ModelKind::ResNet18Cifar, seed);
-    let sim = Simulator::new(DeviceSpec::kryo585());
     let alphas = [0.90, 0.95, 0.98, 0.995];
     let betas = [0.90, 0.97, 0.995];
+    let mut run = RunBuilder::new(ModelKind::ResNet18Cifar)
+        .device("kryo585")
+        .seed(seed)
+        .tune_opts(scale.tune_opts())
+        .build()
+        .expect("zoo model + known device");
     let mut out = Vec::new();
     for &alpha in &alphas {
         for &beta in &betas {
@@ -41,15 +48,14 @@ pub fn run(scale: Scale, seed: u64) -> Vec<AlphaBetaCell> {
                 target_accuracy: 0.90,
                 ..Default::default()
             };
-            let mut oracle = ProxyOracle::new();
-            let r = cprune(&model, &sim, &mut oracle, &cfg);
+            let r = run.execute(&CPrune::with_cfg(cfg)).expect("sweep cell");
             out.push(AlphaBetaCell {
                 alpha,
                 beta,
                 fps_rate: r.fps_increase_rate,
-                final_top1: r.final_top1,
+                final_top1: r.top1,
                 iterations: r.iterations.len(),
-                candidates: r.candidates_tried,
+                candidates: r.search_candidates,
             });
         }
     }

@@ -3,14 +3,15 @@
 //! Paper shape: CPrune's prioritized, selective task search costs ~10 %
 //! of the exhaustive per-layer measurement loop in Main-step time while
 //! reaching similar or better FPS.
+//!
+//! Both searches run through the uniform [`crate::run::Pruner`] trait on
+//! one [`RunBuilder`] wiring (DESIGN.md §9).
 
-use crate::accuracy::ProxyOracle;
-use crate::baselines::netadapt::{netadapt, NetAdaptConfig};
-use crate::device::{DeviceSpec, Simulator};
+use crate::baselines::netadapt::NetAdaptConfig;
 use crate::exp::Scale;
-use crate::graph::model_zoo::{Model, ModelKind};
-use crate::pruner::{cprune, CPruneConfig};
-use crate::tuner::TuningSession;
+use crate::graph::model_zoo::ModelKind;
+use crate::pruner::CPruneConfig;
+use crate::run::{CPrune, NetAdapt, RunBuilder};
 
 #[derive(Debug)]
 pub struct Fig11Result {
@@ -24,37 +25,39 @@ pub struct Fig11Result {
 }
 
 pub fn run(scale: Scale, seed: u64) -> Fig11Result {
-    let model = Model::build(ModelKind::ResNet18ImageNet, seed);
-    let sim = Simulator::new(DeviceSpec::kryo585());
+    let kind = ModelKind::ResNet18ImageNet;
+    let mut run = RunBuilder::new(kind)
+        .device("kryo585")
+        .seed(seed)
+        .tune_opts(scale.tune_opts())
+        .build()
+        .expect("zoo model + known device");
 
-    let mut oracle = ProxyOracle::new();
     let cfg = CPruneConfig {
         max_iterations: scale.cprune_iters(),
         tune_opts: scale.tune_opts(),
         seed,
-        target_accuracy: crate::exp::paper_accuracy_budget(ModelKind::ResNet18ImageNet),
+        target_accuracy: crate::exp::paper_accuracy_budget(kind),
         ..Default::default()
     };
-    let cp = cprune(&model, &sim, &mut oracle, &cfg);
+    let cp = run.execute(&CPrune::with_cfg(cfg)).expect("cprune run");
 
     // Exhaustive: NetAdapt driven to a comparable latency target.
     let target_ratio = (1.0 / cp.fps_increase_rate).clamp(0.3, 0.95);
-    let session = TuningSession::new(&sim, scale.tune_opts(), seed);
-    let mut oracle = ProxyOracle::new();
     let na_cfg = NetAdaptConfig {
         target_latency_ratio: target_ratio,
         max_iterations: scale.cprune_iters(),
         ..Default::default()
     };
-    let na = netadapt(&model, &session, &sim, &mut oracle, &na_cfg);
+    let na = run.execute(&NetAdapt::with(na_cfg)).expect("netadapt run");
 
     Fig11Result {
         cprune_fps: cp.final_fps,
-        exhaustive_fps: na.outcome.fps,
-        cprune_candidates: cp.candidates_tried,
-        exhaustive_candidates: na.candidates_tried,
+        exhaustive_fps: na.final_fps,
+        cprune_candidates: cp.search_candidates,
+        exhaustive_candidates: na.search_candidates,
         cprune_seconds: cp.main_step_seconds,
-        exhaustive_seconds: na.outcome.main_step_seconds,
+        exhaustive_seconds: na.main_step_seconds,
     }
 }
 

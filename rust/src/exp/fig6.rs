@@ -5,36 +5,39 @@
 //! accuracy decays gently; around iteration 6 the rate passes ~1.3× while
 //! accuracy is still ≥ 89 % top-5-equivalent.
 
-use crate::accuracy::ProxyOracle;
-use crate::device::{DeviceSpec, Simulator};
 use crate::exp::Scale;
-use crate::graph::model_zoo::{Model, ModelKind};
-use crate::pruner::{cprune, CPruneConfig, CPruneResult};
+use crate::graph::model_zoo::ModelKind;
+use crate::pruner::CPruneConfig;
+use crate::run::{CPrune, PruneOutcome, RunBuilder};
 
 pub struct Fig6Result {
-    pub result: CPruneResult,
+    pub outcome: PruneOutcome,
     /// (iteration, fps_rate, short_top1) series.
     pub series: Vec<(usize, f64, f64)>,
 }
 
 pub fn run(scale: Scale, seed: u64) -> Fig6Result {
-    let model = Model::build(ModelKind::ResNet18ImageNet, seed);
-    let sim = Simulator::new(DeviceSpec::kryo385());
-    let mut oracle = ProxyOracle::new();
+    let kind = ModelKind::ResNet18ImageNet;
+    let mut run = RunBuilder::new(kind)
+        .device("kryo385")
+        .seed(seed)
+        .tune_opts(scale.tune_opts())
+        .build()
+        .expect("zoo model + known device");
     let cfg = CPruneConfig {
         max_iterations: scale.cprune_iters(),
         tune_opts: scale.tune_opts(),
         seed,
-        target_accuracy: crate::exp::paper_accuracy_budget(ModelKind::ResNet18ImageNet),
+        target_accuracy: crate::exp::paper_accuracy_budget(kind),
         ..Default::default()
     };
-    let result = cprune(&model, &sim, &mut oracle, &cfg);
-    let series = result
+    let outcome = run.execute(&CPrune::with_cfg(cfg)).expect("cprune run");
+    let series = outcome
         .iterations
         .iter()
         .map(|it| (it.iteration, it.fps_rate, it.short_accuracy))
         .collect();
-    Fig6Result { result, series }
+    Fig6Result { outcome, series }
 }
 
 #[cfg(test)]
@@ -53,6 +56,6 @@ mod tests {
         for (_, _, acc) in &r.series {
             assert!(*acc > 0.55 && *acc <= 0.6976 + 1e-9);
         }
-        assert!(r.result.fps_increase_rate > 1.1);
+        assert!(r.outcome.fps_increase_rate > 1.1);
     }
 }

@@ -4,15 +4,17 @@
 //! FPS of (a) library-default schedules, (b) auto-tuned original model,
 //! (c) CPrune's pruned+tuned model. Paper shape: (c) > (b) > (a), with
 //! (c)/(b) between ~1.3× and ~2.7×.
+//!
+//! One [`RunBuilder`] per cell: (a) is a fallback compile of the run's
+//! model, (b) the run's original row, (c) the CPrune execution — no
+//! hand-wired session/oracle plumbing (DESIGN.md §9).
 
-use crate::accuracy::ProxyOracle;
 use crate::compiler;
-use crate::device::{DeviceSpec, Simulator};
+use crate::device::DeviceSpec;
 use crate::exp::Scale;
-use crate::graph::model_zoo::{Model, ModelKind};
-use crate::pruner::{cprune, CPruneConfig};
-use crate::tuner::TuningSession;
-use std::collections::HashMap;
+use crate::graph::model_zoo::ModelKind;
+use crate::pruner::CPruneConfig;
+use crate::run::{CPrune, RunBuilder};
 
 #[derive(Clone, Debug)]
 pub struct Fig7Row {
@@ -34,13 +36,15 @@ pub fn run(scale: Scale, seed: u64) -> Vec<Fig7Row> {
     cells
         .into_iter()
         .map(|(kind, spec)| {
-            let model = Model::build(kind, seed);
             let device_name = spec.name;
-            let sim = Simulator::new(spec);
-            let session = TuningSession::new(&sim, scale.tune_opts(), seed);
-            let fps_tflite = compiler::compile_fallback(&model.graph, &sim).fps();
-            let fps_tvm = compiler::compile_tuned(&model.graph, &session, &HashMap::new()).fps();
-            let mut oracle = ProxyOracle::new();
+            let mut run = RunBuilder::new(kind)
+                .device_spec(spec)
+                .seed(seed)
+                .tune_opts(scale.tune_opts())
+                .build()
+                .expect("zoo model + known device");
+            let fps_tflite = compiler::compile_fallback(&run.model.graph, &run.sim).fps();
+            let (orig, _) = run.original_row();
             let cfg = CPruneConfig {
                 max_iterations: scale.cprune_iters(),
                 tune_opts: scale.tune_opts(),
@@ -48,12 +52,12 @@ pub fn run(scale: Scale, seed: u64) -> Vec<Fig7Row> {
                 target_accuracy: crate::exp::paper_accuracy_budget(kind),
                 ..Default::default()
             };
-            let res = cprune(&model, &sim, &mut oracle, &cfg);
+            let res = run.execute(&CPrune::with_cfg(cfg)).expect("cprune run");
             Fig7Row {
                 model: kind.name(),
                 device: device_name,
                 fps_tflite,
-                fps_tvm,
+                fps_tvm: orig.fps,
                 fps_cprune: res.final_fps,
             }
         })
@@ -67,20 +71,22 @@ mod tests {
     #[test]
     fn fig7_ordering_holds_per_cell() {
         // One smoke cell is enough for the unit test; the bench does all.
-        let model = Model::build(ModelKind::ResNet18ImageNet, 1);
-        let sim = Simulator::new(DeviceSpec::kryo385());
-        let session = TuningSession::new(&sim, Scale::Smoke.tune_opts(), 1);
-        let tflite = compiler::compile_fallback(&model.graph, &sim).fps();
-        let tvm = compiler::compile_tuned(&model.graph, &session, &HashMap::new()).fps();
+        let mut run = RunBuilder::new(ModelKind::ResNet18ImageNet)
+            .device("kryo385")
+            .seed(1)
+            .build()
+            .unwrap();
+        let tflite = compiler::compile_fallback(&run.model.graph, &run.sim).fps();
+        let (orig, _) = run.original_row();
+        let tvm = orig.fps;
         assert!(tvm > tflite, "tuned {tvm} <= library {tflite}");
-        let mut oracle = ProxyOracle::new();
         let cfg = CPruneConfig {
             max_iterations: 6,
             tune_opts: Scale::Smoke.tune_opts(),
             seed: 1,
             ..Default::default()
         };
-        let res = cprune(&model, &sim, &mut oracle, &cfg);
+        let res = run.execute(&CPrune::with_cfg(cfg)).unwrap();
         assert!(res.final_fps > tvm * 0.98, "cprune {} vs tvm {tvm}", res.final_fps);
     }
 }

@@ -3,16 +3,21 @@
 //! processor Y loses most of the gain.
 //!
 //! Built on the fleet layer: a [`FleetSession`] owns the device set, and
-//! its `transfer_matrix` produces the tuned-for × run-on grid.
+//! its `transfer_matrix` produces the tuned-for × run-on grid. The
+//! per-device searches run through [`CPrune::run_full`] — the one caller
+//! that needs the full [`crate::pruner::CPruneResult`] (final graph *and*
+//! tuned task table) rather than the uniform outcome, because the
+//! transfer matrix replays each device's tuned programs elsewhere.
 
 use crate::accuracy::ProxyOracle;
 use crate::device::DeviceSpec;
 use crate::exp::Scale;
 use crate::graph::model_zoo::{Model, ModelKind};
 use crate::graph::ops::Graph;
-use crate::pruner::{cprune, CPruneConfig};
+use crate::pruner::CPruneConfig;
 use crate::relay::TaskTable;
-use crate::tuner::{FleetOptions, FleetSession};
+use crate::run::{CPrune, RunContext};
+use crate::tuner::{FleetOptions, FleetSession, TuningSession};
 
 #[derive(Clone, Debug)]
 pub struct Fig8Row {
@@ -27,23 +32,26 @@ pub fn run(scale: Scale, seed: u64) -> Vec<Fig8Row> {
     let specs = vec![DeviceSpec::kryo385(), DeviceSpec::kryo585(), DeviceSpec::mali_g72()];
     let model = Model::build(ModelKind::MobileNetV2ImageNet, seed);
     // The fleet only provides the device set + transfer grid here; tuning
-    // budgets come from each cprune run's CPruneConfig below, so the
-    // fleet's own tune options are irrelevant.
+    // budgets come from each run's session below, so the fleet's own tune
+    // options are irrelevant.
     let fleet = FleetSession::new(specs, FleetOptions::default(), seed);
     let n = fleet.num_devices();
 
     // CPrune per device: (final graph, final table) tuned natively.
+    let cfg = CPruneConfig {
+        max_iterations: scale.cprune_iters(),
+        tune_opts: scale.tune_opts(),
+        seed,
+        target_accuracy: crate::exp::paper_accuracy_budget(ModelKind::MobileNetV2ImageNet),
+        ..Default::default()
+    };
+    let pruner = CPrune::with_cfg(cfg.clone());
     let results: Vec<_> = (0..n)
         .map(|i| {
+            let session = TuningSession::new(fleet.sim(i), cfg.tune_opts, seed);
             let mut oracle = ProxyOracle::new();
-            let cfg = CPruneConfig {
-                max_iterations: scale.cprune_iters(),
-                tune_opts: scale.tune_opts(),
-                seed,
-                target_accuracy: crate::exp::paper_accuracy_budget(ModelKind::MobileNetV2ImageNet),
-                ..Default::default()
-            };
-            cprune(&model, fleet.sim(i), &mut oracle, &cfg)
+            let mut ctx = RunContext::standalone(&model, &session, &mut oracle);
+            pruner.run_full(&mut ctx)
         })
         .collect();
 

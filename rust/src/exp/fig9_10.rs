@@ -3,12 +3,14 @@
 //! Fig. 9: associated-subgraphs pruning vs single-subgraph pruning —
 //! relative Main-step time cost and final FPS (+accuracy, Table 2).
 //! Fig. 10: with vs without tuning during the Main step — final FPS gap.
+//!
+//! The three variants are just differently configured [`CPrune`] pruners
+//! looped over one [`RunBuilder`] wiring (DESIGN.md §9).
 
-use crate::accuracy::ProxyOracle;
-use crate::device::{DeviceSpec, Simulator};
 use crate::exp::Scale;
-use crate::graph::model_zoo::{Model, ModelKind};
-use crate::pruner::{cprune, CPruneConfig, CPruneResult};
+use crate::graph::model_zoo::ModelKind;
+use crate::pruner::CPruneConfig;
+use crate::run::{CPrune, PruneOutcome, RunBuilder};
 
 #[derive(Debug)]
 pub struct AblationRow {
@@ -20,20 +22,18 @@ pub struct AblationRow {
     pub candidates_tried: usize,
 }
 
-fn row(variant: &'static str, r: &CPruneResult) -> AblationRow {
+fn row(variant: &'static str, r: &PruneOutcome) -> AblationRow {
     AblationRow {
         variant,
         fps: r.final_fps,
         fps_increase_rate: r.fps_increase_rate,
-        top1: r.final_top1,
+        top1: r.top1,
         main_step_seconds: r.main_step_seconds,
-        candidates_tried: r.candidates_tried,
+        candidates_tried: r.search_candidates,
     }
 }
 
 pub fn run(scale: Scale, seed: u64) -> Vec<AblationRow> {
-    let model = Model::build(ModelKind::ResNet18Cifar, seed);
-    let sim = Simulator::new(DeviceSpec::kryo585());
     // Fixed search effort: Fig. 9 compares strategies at equal budget.
     let budget = match scale {
         Scale::Smoke => 25,
@@ -47,34 +47,31 @@ pub fn run(scale: Scale, seed: u64) -> Vec<AblationRow> {
         max_candidates: budget,
         ..Default::default()
     };
+    let variants: [(&'static str, CPruneConfig); 3] = [
+        ("CPrune", base_cfg.clone()),
+        (
+            "CPrune (single subgraph)",
+            CPruneConfig { associated_subgraphs: false, ..base_cfg.clone() },
+        ),
+        (
+            "CPrune (w/o tuning)",
+            CPruneConfig { with_tuning: false, ..base_cfg },
+        ),
+    ];
 
-    let mut rows = Vec::new();
-    // CPrune (associated subgraphs, with tuning)
-    let mut oracle = ProxyOracle::new();
-    let full = cprune(&model, &sim, &mut oracle, &base_cfg);
-    rows.push(row("CPrune", &full));
-
-    // single-subgraph pruning (Fig. 9 comparison)
-    let mut oracle = ProxyOracle::new();
-    let single = cprune(
-        &model,
-        &sim,
-        &mut oracle,
-        &CPruneConfig { associated_subgraphs: false, ..base_cfg.clone() },
-    );
-    rows.push(row("CPrune (single subgraph)", &single));
-
-    // no tuning during main step (Fig. 10 comparison)
-    let mut oracle = ProxyOracle::new();
-    let untuned = cprune(
-        &model,
-        &sim,
-        &mut oracle,
-        &CPruneConfig { with_tuning: false, ..base_cfg },
-    );
-    rows.push(row("CPrune (w/o tuning)", &untuned));
-
-    rows
+    let mut run = RunBuilder::new(ModelKind::ResNet18Cifar)
+        .device("kryo585")
+        .seed(seed)
+        .tune_opts(scale.tune_opts())
+        .build()
+        .expect("zoo model + known device");
+    variants
+        .into_iter()
+        .map(|(variant, cfg)| {
+            let out = run.execute(&CPrune::with_cfg(cfg)).expect("ablation run");
+            row(variant, &out)
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -5,6 +5,15 @@
 //! the `rust/benches/*` regenerators (which print the table/series) and
 //! the `examples/` binaries. DESIGN.md §4 maps experiment ↔ module ↔
 //! bench target; EXPERIMENTS.md records paper-vs-measured.
+//!
+//! Harnesses build their wiring through the run layer (DESIGN.md §9):
+//! a [`crate::run::RunBuilder`] per (model, device) cell and a loop over
+//! [`crate::run::Pruner`] implementations instead of per-algorithm
+//! plumbing — `table1`/`table2` compare methods through the one trait,
+//! `serving` auto-publishes frontiers via
+//! [`crate::run::RegistryPublisher`], and `fig8` uses
+//! [`crate::run::CPrune::run_full`] where the transfer matrix needs the
+//! full task table.
 
 pub mod ablation_alpha_beta;
 pub mod fig1;

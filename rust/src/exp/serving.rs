@@ -8,12 +8,12 @@
 //! table.
 
 use super::Scale;
-use crate::accuracy::ProxyOracle;
-use crate::device::{DeviceSpec, Simulator};
-use crate::graph::model_zoo::{Model, ModelKind};
-use crate::pruner::{cprune_with_session, CPruneConfig};
+use crate::device::DeviceSpec;
+use crate::graph::model_zoo::ModelKind;
+use crate::run::{CPrune, RegistryPublisher, RunBuilder};
 use crate::serve::{Registry, ServeOptions, Simulator as ServeSimulator};
-use crate::tuner::TuningSession;
+use std::cell::RefCell;
+use std::rc::Rc;
 
 /// One (rps, SLO) operating point of the sweep.
 #[derive(Clone, Debug)]
@@ -59,24 +59,32 @@ pub fn device_set(scale: Scale) -> Vec<DeviceSpec> {
     }
 }
 
-/// One CPrune run per device, frontiers published to a fresh registry.
+/// One CPrune run per device, frontiers auto-published to a shared
+/// registry by the [`RegistryPublisher`] observer as each checkpoint is
+/// emitted (DESIGN.md §9) — the frontier is servable while the searches
+/// are still running, not just after.
 pub fn build_registry(scale: Scale, seed: u64) -> (Registry, &'static str) {
     let kind = ModelKind::ResNet8Cifar;
-    let model = Model::build(kind, seed);
-    let mut registry = Registry::new();
+    let shared = Rc::new(RefCell::new(Registry::new()));
     for spec in device_set(scale) {
-        let sim = Simulator::new(spec);
-        let cfg = CPruneConfig {
-            max_iterations: scale.cprune_iters(),
-            tune_opts: scale.tune_opts(),
-            seed,
-            ..Default::default()
-        };
-        let session = TuningSession::new(&sim, cfg.tune_opts, seed);
-        let mut oracle = ProxyOracle::new();
-        let r = cprune_with_session(&model, &mut oracle, &cfg, &session);
-        registry.publish(kind.name(), sim.spec.name, &r.pareto);
+        let device_name = spec.name;
+        let mut run = RunBuilder::new(kind)
+            .device_spec(spec)
+            .seed(seed)
+            .tune_opts(scale.tune_opts())
+            .max_iterations(scale.cprune_iters())
+            .observer(Box::new(RegistryPublisher::shared(
+                shared.clone(),
+                kind.name(),
+                device_name,
+            )))
+            .build()
+            .expect("zoo model + known device");
+        run.execute(&CPrune::default()).expect("cprune run");
     }
+    let registry = Rc::try_unwrap(shared)
+        .expect("publishers dropped with their runs")
+        .into_inner();
     (registry, kind.name())
 }
 

@@ -4,19 +4,19 @@
 //! NetAdapt+TVM, AMC+TVM, CPrune. Shape to reproduce: CPrune posts the
 //! highest FPS increase rate (1.3–2.7×) at a top-1 within ~1.6 pp of the
 //! original; NetAdapt is the closest runner-up; PQF barely moves CPU FPS.
+//!
+//! Every method runs through the uniform [`Pruner`] trait on one shared
+//! [`RunBuilder`] wiring — the per-cell loop has no per-algorithm
+//! branches (DESIGN.md §9).
 
-use crate::accuracy::ProxyOracle;
-use crate::baselines::amc::{amc, AmcConfig};
-use crate::baselines::fpgm::fpgm_prune;
-use crate::baselines::netadapt::{netadapt, NetAdaptConfig};
-use crate::baselines::pqf::pqf;
-use crate::baselines::{original_row, Outcome};
-use crate::device::{DeviceSpec, Simulator};
+use crate::baselines::amc::AmcConfig;
+use crate::baselines::netadapt::NetAdaptConfig;
+use crate::baselines::Outcome;
+use crate::device::DeviceSpec;
 use crate::exp::Scale;
-use crate::graph::model_zoo::{Model, ModelKind};
-use crate::graph::stats;
-use crate::pruner::{cprune, CPruneConfig};
-use crate::tuner::TuningSession;
+use crate::graph::model_zoo::ModelKind;
+use crate::pruner::CPruneConfig;
+use crate::run::{Amc, CPrune, Fpgm, NetAdapt, Pqf, Pruner, RunBuilder};
 
 #[derive(Debug)]
 pub struct Table1Block {
@@ -36,64 +36,42 @@ pub fn paper_cells() -> Vec<(ModelKind, DeviceSpec)> {
     ]
 }
 
-pub fn run_cell(kind: ModelKind, spec: DeviceSpec, scale: Scale, seed: u64) -> Table1Block {
-    let model = Model::build(kind, seed);
-    let device_name = spec.name;
-    let sim = Simulator::new(spec);
-    let session = TuningSession::new(&sim, scale.tune_opts(), seed);
-    let mut oracle = ProxyOracle::new();
-
-    let (orig, base_latency) = original_row(&model, &session);
-    let mut rows = vec![orig];
-
-    rows.push(pqf(&model, &session, &sim, base_latency));
-    rows.push(fpgm_prune(&model, 0.25, &session, &mut oracle, base_latency));
-
-    let na = netadapt(
-        &model,
-        &session,
-        &sim,
-        &mut oracle,
-        &NetAdaptConfig {
+/// The method lineup of one Table-1 cell, in row order.
+fn methods(kind: ModelKind, scale: Scale, seed: u64) -> Vec<Box<dyn Pruner>> {
+    vec![
+        Box::new(Pqf),
+        Box::new(Fpgm::at(0.25)),
+        Box::new(NetAdapt::with(NetAdaptConfig {
             target_latency_ratio: 0.65,
             max_iterations: scale.cprune_iters().min(20),
             ..Default::default()
-        },
-    );
-    rows.push(na.outcome);
-
-    rows.push(amc(
-        &model,
-        &session,
-        &mut oracle,
-        &AmcConfig::default(),
-        base_latency,
-    ));
-
-    let cp = cprune(
-        &model,
-        &sim,
-        &mut ProxyOracle::new(),
-        &CPruneConfig {
+        })),
+        Box::new(Amc::with(AmcConfig::default())),
+        Box::new(CPrune::with_cfg(CPruneConfig {
             max_iterations: scale.cprune_iters(),
             tune_opts: scale.tune_opts(),
             seed,
             target_accuracy: crate::exp::paper_accuracy_budget(kind),
             ..Default::default()
-        },
-    );
-    let (flops, params) = stats::flops_params(&cp.final_graph);
-    rows.push(Outcome {
-        method: "CPrune".into(),
-        fps: cp.final_fps,
-        fps_increase_rate: cp.fps_increase_rate,
-        macs: flops / 2,
-        params,
-        top1: cp.final_top1,
-        top5: cp.final_top5,
-        search_candidates: cp.candidates_tried,
-        main_step_seconds: cp.main_step_seconds,
-    });
+        })),
+    ]
+}
+
+pub fn run_cell(kind: ModelKind, spec: DeviceSpec, scale: Scale, seed: u64) -> Table1Block {
+    let device_name = spec.name;
+    let mut run = RunBuilder::new(kind)
+        .device_spec(spec)
+        .seed(seed)
+        .tune_opts(scale.tune_opts())
+        .build()
+        .expect("zoo model + known device");
+
+    let (orig, _) = run.original_row();
+    let mut rows = vec![orig];
+    for pruner in methods(kind, scale, seed) {
+        let out = run.execute(pruner.as_ref()).expect("pruner run");
+        rows.push(out.to_outcome());
+    }
 
     Table1Block { model: kind.name(), device: device_name, rows }
 }

@@ -4,15 +4,17 @@
 //! Paper shape: Kryo 280 → 3.24×, Kryo 585 → 2.31×; w/o tuning only
 //! 1.43×; single-subgraph pruning 1.97× — with top-1 within ~0.7 pp of
 //! the 94.37 % original.
+//!
+//! All rows run through the uniform [`crate::run::Pruner`] trait on one
+//! [`RunBuilder`] per device; the ablations are just relabeled
+//! [`CPrune`] configs looped over like any other pruner (DESIGN.md §9).
 
-use crate::accuracy::ProxyOracle;
-use crate::baselines::{original_row, Outcome};
-use crate::device::{DeviceSpec, Simulator};
+use crate::baselines::Outcome;
+use crate::device::DeviceSpec;
 use crate::exp::Scale;
-use crate::graph::model_zoo::{Model, ModelKind};
-use crate::graph::stats;
-use crate::pruner::{cprune, CPruneConfig, CPruneResult};
-use crate::tuner::TuningSession;
+use crate::graph::model_zoo::ModelKind;
+use crate::pruner::CPruneConfig;
+use crate::run::{CPrune, Run, RunBuilder};
 
 #[derive(Debug)]
 pub struct Table2Block {
@@ -20,92 +22,72 @@ pub struct Table2Block {
     pub rows: Vec<Outcome>,
 }
 
-fn outcome_of(method: &str, cp: &CPruneResult) -> Outcome {
-    let (flops, params) = stats::flops_params(&cp.final_graph);
-    Outcome {
-        method: method.into(),
-        fps: cp.final_fps,
-        fps_increase_rate: cp.fps_increase_rate,
-        macs: flops / 2,
-        params,
-        top1: cp.final_top1,
-        top5: cp.final_top5,
-        search_candidates: cp.candidates_tried,
-        main_step_seconds: cp.main_step_seconds,
+fn cifar_run(spec: DeviceSpec, scale: Scale, seed: u64) -> Run {
+    RunBuilder::new(ModelKind::ResNet18Cifar)
+        .device_spec(spec)
+        .seed(seed)
+        .tune_opts(scale.tune_opts())
+        .build()
+        .expect("zoo model + known device")
+}
+
+fn cifar_cfg(scale: Scale, seed: u64) -> CPruneConfig {
+    CPruneConfig {
+        max_iterations: scale.cprune_iters(),
+        tune_opts: scale.tune_opts(),
+        seed,
+        // CIFAR tolerates deep pruning (paper prunes to 29% of MACs)
+        alpha: 0.97,
+        target_accuracy: crate::exp::paper_accuracy_budget(ModelKind::ResNet18Cifar),
+        ..Default::default()
     }
 }
 
 pub fn run(scale: Scale, seed: u64) -> Vec<Table2Block> {
-    let model = Model::build(ModelKind::ResNet18Cifar, seed);
     let mut blocks = Vec::new();
 
     // Kryo 280: plain CPrune row.
     {
-        let sim = Simulator::new(DeviceSpec::kryo280());
-        let session = TuningSession::new(&sim, scale.tune_opts(), seed);
-        let (orig, _) = original_row(&model, &session);
-        let cfg = CPruneConfig {
-            max_iterations: scale.cprune_iters(),
-            tune_opts: scale.tune_opts(),
-            seed,
-            // CIFAR tolerates deep pruning (paper prunes to 29% of MACs)
-            alpha: 0.97,
-            target_accuracy: crate::exp::paper_accuracy_budget(ModelKind::ResNet18Cifar),
-            ..Default::default()
-        };
-        let cp = cprune(&model, &sim, &mut ProxyOracle::new(), &cfg);
+        let mut run = cifar_run(DeviceSpec::kryo280(), scale, seed);
+        let (orig, _) = run.original_row();
+        let cp = run
+            .execute(&CPrune::with_cfg(cifar_cfg(scale, seed)))
+            .expect("cprune run");
         blocks.push(Table2Block {
             device: "Kryo 280",
-            rows: vec![orig, outcome_of("CPrune", &cp)],
+            rows: vec![orig, cp.to_outcome()],
         });
     }
 
     // Kryo 585: CPrune + both ablations.
     {
-        let sim = Simulator::new(DeviceSpec::kryo585());
-        let session = TuningSession::new(&sim, scale.tune_opts(), seed);
-        let (orig, _) = original_row(&model, &session);
-        let base = CPruneConfig {
-            max_iterations: scale.cprune_iters(),
-            tune_opts: scale.tune_opts(),
-            seed,
-            alpha: 0.97,
-            target_accuracy: crate::exp::paper_accuracy_budget(ModelKind::ResNet18Cifar),
-            ..Default::default()
-        };
-        let cp = cprune(&model, &sim, &mut ProxyOracle::new(), &base);
-        let wo_tuning = cprune(
-            &model,
-            &sim,
-            &mut ProxyOracle::new(),
-            // same search effort as the tuned run (Fig. 10's comparison)
-            &CPruneConfig {
+        let mut run = cifar_run(DeviceSpec::kryo585(), scale, seed);
+        let (orig, _) = run.original_row();
+        let base = cifar_cfg(scale, seed);
+        let cp = run
+            .execute(&CPrune::with_cfg(base.clone()))
+            .expect("cprune run");
+        // Both ablations get the same search effort the tuned associated
+        // run consumed (Figs. 9/10's fixed-budget comparisons).
+        let ablations = [
+            CPrune::with_cfg(CPruneConfig {
                 with_tuning: false,
-                max_candidates: cp.candidates_tried,
+                max_candidates: cp.search_candidates,
                 ..base.clone()
-            },
-        );
-        let single = cprune(
-            &model,
-            &sim,
-            &mut ProxyOracle::new(),
-            // same candidate budget the associated run consumed: Fig. 9's
-            // fixed-effort comparison
-            &CPruneConfig {
+            })
+            .with_label("CPrune (w/o tuning)"),
+            CPrune::with_cfg(CPruneConfig {
                 associated_subgraphs: false,
-                max_candidates: cp.candidates_tried,
+                max_candidates: cp.search_candidates,
                 ..base
-            },
-        );
-        blocks.push(Table2Block {
-            device: "Kryo 585",
-            rows: vec![
-                orig,
-                outcome_of("CPrune", &cp),
-                outcome_of("CPrune (w/o tuning)", &wo_tuning),
-                outcome_of("CPrune (single subgraph pruning)", &single),
-            ],
-        });
+            })
+            .with_label("CPrune (single subgraph pruning)"),
+        ];
+        let mut rows = vec![orig, cp.to_outcome()];
+        for pruner in &ablations {
+            rows.push(run.execute(pruner).expect("ablation run").to_outcome());
+        }
+        blocks.push(Table2Block { device: "Kryo 585", rows });
     }
     blocks
 }
@@ -126,5 +108,9 @@ mod tests {
             // CIFAR accuracy cost is small
             assert!(cp.top1 > 0.9437 - 0.04, "{}: top1 {}", b.device, cp.top1);
         }
+        // the Kryo 585 block carries both ablation rows
+        assert_eq!(blocks[1].rows.len(), 4);
+        assert!(blocks[1].rows[2].method.contains("w/o tuning"));
+        assert!(blocks[1].rows[3].method.contains("single subgraph"));
     }
 }

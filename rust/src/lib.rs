@@ -7,11 +7,15 @@
 //!   schedule space (`tir/`), an Ansor-style auto-tuner (`tuner/`), a
 //!   mobile-device latency simulator (`device/`), baseline pruners
 //!   (`baselines/`), accuracy oracles (`accuracy/`), the end-to-end
-//!   compile pipeline (`compiler/`), and the serving layer (`serve/`,
+//!   compile pipeline (`compiler/`), the serving layer (`serve/`,
 //!   DESIGN.md §8): the Pareto-set registry of deployable checkpoints
 //!   each CPrune run now emits, and the deterministic serving simulator
 //!   that dispatches SLO-bound traffic across a device fleet from those
-//!   frontiers.
+//!   frontiers — and the run layer (`run/`, DESIGN.md §9): the uniform
+//!   [`run::Pruner`] trait over CPrune and all five baselines, the
+//!   fluent [`run::RunBuilder`] wiring (model/device/tuning/seed/cache/
+//!   budget), and the typed [`run::RunEvent`] stream with JSONL, CLI
+//!   progress and registry-publisher observers.
 //! * **L2/L1 (python/, build-time only)** — JAX masked CNN + Pallas GEMM
 //!   kernels, AOT-lowered to HLO text and executed from `runtime/` +
 //!   `train/` via PJRT. Python never runs on the request path.
@@ -29,6 +33,7 @@ pub mod exp;
 pub mod graph;
 pub mod pruner;
 pub mod relay;
+pub mod run;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod serve;

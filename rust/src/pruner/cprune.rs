@@ -20,6 +20,7 @@ use crate::graph::prune::{apply, PruneState};
 use crate::graph::weights::Weights;
 use crate::relay::partition::partition;
 use crate::relay::TaskTable;
+use crate::run::{RejectReason, RunContext, RunEvent};
 use crate::serve::{Checkpoint, ParetoSet};
 use crate::tir::{Program, Workload};
 use crate::tuner::{TuneOptions, TuningSession};
@@ -133,18 +134,33 @@ pub fn cprune(
 /// The session's own options/seed govern tuning (`cfg.tune_opts` /
 /// `cfg.seed` only matter to sessions built by [`cprune`]); the target
 /// device is the session's simulator.
+///
+/// Thin shim over [`cprune_run`] with no observers; prefer
+/// [`crate::run::RunBuilder`] + [`crate::run::CPrune`] for new call
+/// sites — same algorithm, same results, plus the typed event stream.
 pub fn cprune_with_session(
     model: &Model,
     oracle: &mut dyn AccuracyOracle,
     cfg: &CPruneConfig,
     session: &TuningSession,
 ) -> CPruneResult {
+    let mut ctx = RunContext::standalone(model, session, oracle);
+    cprune_run(&mut ctx, cfg)
+}
+
+/// The observed entry point: Algorithm 1 narrating every baseline tune,
+/// candidate measurement, gate decision, task ban and emitted checkpoint
+/// through the context's [`crate::run::RunObserver`]s (DESIGN.md §9).
+pub fn cprune_run(ctx: &mut RunContext, cfg: &CPruneConfig) -> CPruneResult {
     let t0 = Instant::now();
+    let model = ctx.model;
+    let session = ctx.session;
     let sim = session.sim;
 
     // -- Line 1: initial tune of M --------------------------------------
-    let baseline = compiler::compile_tuned(&model.graph, &session, &HashMap::new());
+    let baseline = compiler::compile_tuned(&model.graph, session, &HashMap::new());
     let base_latency = baseline.latency();
+    ctx.set_baseline(base_latency, baseline.fps());
     // The latency-gate chain must compare like with like: in the w/o-tuning
     // ablation candidates are measured with default schedules, so the chain
     // starts from the default-schedule baseline (the final model still gets
@@ -164,10 +180,8 @@ pub fn cprune_with_session(
         compiler::compile_fallback(&model.graph, sim).table
     };
     let mut l_t = cfg.beta * gate_baseline;
-    let mut a_p = oracle.top1(
-        &super::summarize(model, &state, cfg.criterion),
-        TrainPhase::Short,
-    );
+    let initial_summary = super::summarize(model, &state, cfg.criterion);
+    let mut a_p = ctx.oracle.top1(&initial_summary, TrainPhase::Short);
     let mut banned: BTreeSet<NodeId> = BTreeSet::new();
     let mut iterations: Vec<IterationLog> = Vec::new();
     let mut candidates_tried = 0usize;
@@ -176,12 +190,14 @@ pub fn cprune_with_session(
     // the same latency chain the acceptance gates compare against so the
     // frontier is internally consistent in the w/o-tuning ablation too.
     let mut pareto = ParetoSet::new();
-    pareto.insert(Checkpoint {
+    let baseline_checkpoint = Checkpoint {
         iteration: 0,
         latency: gate_baseline,
         accuracy: a_p,
         channels: state.cout.clone(),
-    });
+    };
+    ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: baseline_checkpoint.clone() });
+    pareto.insert(baseline_checkpoint);
 
     // -- Lines 2–16: main loop -------------------------------------------
     'outer: for iter_no in 0..cfg.max_iterations {
@@ -214,6 +230,10 @@ pub fn cprune_with_session(
             let remaining = state.remaining(anchors[0]);
             if remaining <= 2 || remaining.saturating_sub(step) < 2 {
                 banned.insert(anchors[0]);
+                ctx.emit(&RunEvent::TaskBanned {
+                    conv: anchors[0],
+                    reason: "channel_floor".to_string(),
+                });
                 continue;
             }
 
@@ -251,11 +271,22 @@ pub fn cprune_with_session(
                 }
                 if removed_total == 0 {
                     banned.insert(anchors[0]);
+                    ctx.emit(&RunEvent::TaskBanned {
+                        conv: anchors[0],
+                        reason: "no_channels_removed".to_string(),
+                    });
                     break;
                 }
-                let Ok(cand_graph) = apply(&model.graph, &cand_state.cout) else {
-                    banned.insert(anchors[0]);
-                    break;
+                let cand_graph = match apply(&model.graph, &cand_state.cout) {
+                    Ok(g) => g,
+                    Err(_) => {
+                        banned.insert(anchors[0]);
+                        ctx.emit(&RunEvent::TaskBanned {
+                            conv: anchors[0],
+                            reason: "invalid_graph".to_string(),
+                        });
+                        break;
+                    }
                 };
 
                 // -- Lines 7–9: extract tasks, tune, measure l_m -----------
@@ -269,32 +300,64 @@ pub fn cprune_with_session(
                     seeds.insert(w2, adj);
                 }
                 let cand = if cfg.with_tuning {
-                    compiler::compile_tuned(&cand_graph, &session, &seeds)
+                    compiler::compile_tuned(&cand_graph, session, &seeds)
                 } else {
                     compiler::compile_fallback(&cand_graph, sim)
                 };
                 let l_m = cand.latency();
                 candidates_tried += 1;
+                ctx.emit(&RunEvent::CandidateMeasured {
+                    iteration: iter_no + 1,
+                    latency: l_m,
+                    latency_target: l_t,
+                    candidates_tried,
+                });
                 if candidates_tried > cfg.max_candidates {
                     break 'outer;
                 }
 
                 // -- Line 10: latency gate ---------------------------------
                 if l_m >= l_t {
+                    ctx.emit(&RunEvent::IterationRejected {
+                        iteration: iter_no + 1,
+                        latency: l_m,
+                        latency_target: l_t,
+                        short_accuracy: None,
+                        accuracy_gate: None,
+                        reason: RejectReason::LatencyGate,
+                    });
                     continue; // escalate the step multiple
                 }
 
                 // -- Lines 11–12: short-term train, accuracy gate -----------
-                let a_s = oracle.top1(
-                    &super::summarize(model, &cand_state, cfg.criterion),
-                    TrainPhase::Short,
-                );
+                let cand_summary = super::summarize(model, &cand_state, cfg.criterion);
+                let a_s = ctx.oracle.top1(&cand_summary, TrainPhase::Short);
                 if a_s < cfg.alpha * a_p {
                     banned.insert(anchors[0]);
+                    ctx.emit(&RunEvent::IterationRejected {
+                        iteration: iter_no + 1,
+                        latency: l_m,
+                        latency_target: l_t,
+                        short_accuracy: Some(a_s),
+                        accuracy_gate: Some(cfg.alpha * a_p),
+                        reason: RejectReason::AccuracyGate,
+                    });
+                    ctx.emit(&RunEvent::TaskBanned {
+                        conv: anchors[0],
+                        reason: "accuracy_gate".to_string(),
+                    });
                     break; // a bigger prune would only be less accurate
                 }
                 if a_s <= cfg.target_accuracy {
                     // Accepting would blow the budget a_g: stop here.
+                    ctx.emit(&RunEvent::IterationRejected {
+                        iteration: iter_no + 1,
+                        latency: l_m,
+                        latency_target: l_t,
+                        short_accuracy: Some(a_s),
+                        accuracy_gate: Some(cfg.target_accuracy),
+                        reason: RejectReason::AccuracyBudget,
+                    });
                     break 'outer;
                 }
 
@@ -303,16 +366,28 @@ pub fn cprune_with_session(
                 weights = cand_weights;
                 graph = cand_graph;
                 table = cand.table;
+                ctx.emit(&RunEvent::IterationAccepted {
+                    iteration: iter_no + 1,
+                    latency: l_m,
+                    latency_target: l_t,
+                    short_accuracy: a_s,
+                    accuracy_gate: cfg.alpha * a_p,
+                    filters_removed: removed_total,
+                });
                 l_t = cfg.beta * l_m;
                 a_p = a_s;
                 // Snapshot the accepted candidate as a deployable
                 // checkpoint; the frontier keeps it iff non-dominated.
-                pareto.insert(Checkpoint {
+                let accepted_checkpoint = Checkpoint {
                     iteration: iter_no + 1,
                     latency: l_m,
                     accuracy: a_s,
                     channels: state.cout.clone(),
+                };
+                ctx.emit(&RunEvent::CheckpointEmitted {
+                    checkpoint: accepted_checkpoint.clone(),
                 });
+                pareto.insert(accepted_checkpoint);
                 iterations.push(IterationLog {
                     iteration: iter_no + 1,
                     pruned_convs: targets.clone(),
@@ -336,11 +411,11 @@ pub fn cprune_with_session(
     let main_step_seconds = t0.elapsed().as_secs_f64();
 
     // -- Line 17: final training + tuning ----------------------------------
-    let final_compiled = compiler::compile_tuned(&graph, &session, &HashMap::new());
+    let final_compiled = compiler::compile_tuned(&graph, session, &HashMap::new());
     let final_latency = final_compiled.latency();
     let summary = super::summarize(model, &state, cfg.criterion);
-    let final_top1 = oracle.top1(&summary, TrainPhase::Final);
-    let final_top5 = oracle.top5(&summary, TrainPhase::Final);
+    let final_top1 = ctx.oracle.top1(&summary, TrainPhase::Final);
+    let final_top5 = ctx.oracle.top5(&summary, TrainPhase::Final);
 
     CPruneResult {
         final_graph: graph,

@@ -5,11 +5,16 @@
 //! * iterator-split LCM pruning decision — §3.5
 //!   (`tir::Program::min_filter_prune_step`);
 //! * the iterative search loop — §3.2 ([`cprune::cprune`]).
+//!
+//! The search also runs behind the uniform [`crate::run::Pruner`] trait
+//! (as [`crate::run::CPrune`]) with a typed event stream; the free
+//! functions here are thin shims over [`cprune::cprune_run`]
+//! (DESIGN.md §9).
 
 pub mod cprune;
 pub mod report;
 
-pub use cprune::{cprune, cprune_with_session, CPruneConfig, CPruneResult, IterationLog};
+pub use cprune::{cprune, cprune_run, cprune_with_session, CPruneConfig, CPruneResult, IterationLog};
 
 use crate::accuracy::{Criterion, LayerPrune, PruneSummary};
 use crate::graph::model_zoo::Model;

@@ -4,10 +4,33 @@
 //! persist machine-readable results; the schema is stable and documented
 //! here field-by-field.
 
-use super::cprune::CPruneResult;
+use super::cprune::{CPruneResult, IterationLog};
 use crate::graph::model_zoo::Model;
 use crate::graph::stats;
+use crate::run::PruneOutcome;
 use crate::util::json::Json;
+
+/// Serialize the per-iteration series (shared by both report flavors).
+fn iterations_json(iterations: &[IterationLog]) -> Json {
+    Json::Arr(
+        iterations
+            .iter()
+            .map(|it| {
+                Json::obj(vec![
+                    ("iteration", Json::Num(it.iteration as f64)),
+                    (
+                        "pruned_convs",
+                        Json::Arr(it.pruned_convs.iter().map(|&c| Json::Num(c as f64)).collect()),
+                    ),
+                    ("filters_removed", Json::Num(it.filters_removed as f64)),
+                    ("latency", Json::Num(it.latency)),
+                    ("fps_rate", Json::Num(it.fps_rate)),
+                    ("short_accuracy", Json::Num(it.short_accuracy)),
+                ])
+            })
+            .collect(),
+    )
+}
 
 /// Serialize a CPrune run.
 ///
@@ -26,24 +49,7 @@ use crate::util::json::Json;
 /// ```
 pub fn to_json(model: &Model, device: &str, r: &CPruneResult) -> Json {
     let (flops, params) = stats::flops_params(&r.final_graph);
-    let iterations = Json::Arr(
-        r.iterations
-            .iter()
-            .map(|it| {
-                Json::obj(vec![
-                    ("iteration", Json::Num(it.iteration as f64)),
-                    (
-                        "pruned_convs",
-                        Json::Arr(it.pruned_convs.iter().map(|&c| Json::Num(c as f64)).collect()),
-                    ),
-                    ("filters_removed", Json::Num(it.filters_removed as f64)),
-                    ("latency", Json::Num(it.latency)),
-                    ("fps_rate", Json::Num(it.fps_rate)),
-                    ("short_accuracy", Json::Num(it.short_accuracy)),
-                ])
-            })
-            .collect(),
-    );
+    let iterations = iterations_json(&r.iterations);
     let channels = Json::Obj(
         r.final_state
             .cout
@@ -65,6 +71,36 @@ pub fn to_json(model: &Model, device: &str, r: &CPruneResult) -> Json {
         ("candidates_tried", Json::Num(r.candidates_tried as f64)),
         ("programs_measured", Json::Num(r.programs_measured as f64)),
         ("iterations", iterations),
+        ("final_channels", channels),
+    ])
+}
+
+/// Serialize a [`PruneOutcome`] (any pruner under the run layer) to the
+/// same schema as [`to_json`], plus `pruner`/`method` tags. For a CPrune
+/// run the shared fields carry identical values to the legacy report.
+pub fn outcome_to_json(out: &PruneOutcome) -> Json {
+    let channels = Json::Obj(
+        out.channels
+            .iter()
+            .map(|(&conv, &c)| (conv.to_string(), Json::Num(c as f64)))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("pruner", Json::Str(out.pruner.clone())),
+        ("method", Json::Str(out.method.clone())),
+        ("model", Json::Str(out.model.clone())),
+        ("device", Json::Str(out.device.clone())),
+        ("baseline_fps", Json::Num(1.0 / out.baseline_latency)),
+        ("final_fps", Json::Num(out.final_fps)),
+        ("fps_increase_rate", Json::Num(out.fps_increase_rate)),
+        ("final_top1", Json::Num(out.top1)),
+        ("final_top5", Json::Num(out.top5)),
+        ("macs", Json::Num(out.macs as f64)),
+        ("params", Json::Num(out.params as f64)),
+        ("main_step_seconds", Json::Num(out.main_step_seconds)),
+        ("candidates_tried", Json::Num(out.search_candidates as f64)),
+        ("programs_measured", Json::Num(out.programs_measured as f64)),
+        ("iterations", iterations_json(&out.iterations)),
         ("final_channels", channels),
     ])
 }

@@ -1,0 +1,280 @@
+//! Fluent construction of pruning runs (DESIGN.md §9).
+//!
+//! [`RunBuilder`] owns the cross-cutting wiring that every experiment
+//! harness, CLI path and bench used to hand-assemble: the model, the
+//! target device, the tuning budget, the RNG seed, an optional warm-start
+//! cache file, the accuracy budget, the oracle and the observers.
+//!
+//! ```no_run
+//! use cprune::graph::model_zoo::ModelKind;
+//! use cprune::run::{CPrune, RunBuilder};
+//!
+//! let mut run = RunBuilder::new(ModelKind::ResNet18Cifar)
+//!     .device("kryo585")
+//!     .seed(7)
+//!     .cache("kryo585.cache.json")
+//!     .build()
+//!     .unwrap();
+//! let outcome = run.execute(&CPrune::default()).unwrap();
+//! println!("{:.2}x FPS", outcome.fps_increase_rate);
+//! ```
+
+use super::{PruneOutcome, Pruner, RunContext, RunObserver};
+use crate::accuracy::{AccuracyOracle, ProxyOracle};
+use crate::device::{DeviceSpec, Simulator};
+use crate::graph::model_zoo::{Model, ModelKind};
+use crate::tuner::{TuneCache, TuneOptions, TuningSession};
+use std::path::PathBuf;
+
+/// Builder for a [`Run`]. Defaults: Kryo 385, [`TuneOptions::quick`],
+/// seed 0, a jitter-free [`ProxyOracle`], no cache, no observers.
+pub struct RunBuilder {
+    kind: ModelKind,
+    device: DeviceSpec,
+    device_error: Option<String>,
+    tune_opts: TuneOptions,
+    seed: u64,
+    cache_path: Option<PathBuf>,
+    accuracy_budget: Option<f64>,
+    max_iterations: Option<usize>,
+    observers: Vec<Box<dyn RunObserver>>,
+    oracle: Option<Box<dyn AccuracyOracle>>,
+}
+
+impl RunBuilder {
+    pub fn new(kind: ModelKind) -> RunBuilder {
+        RunBuilder {
+            kind,
+            device: DeviceSpec::kryo385(),
+            device_error: None,
+            tune_opts: TuneOptions::quick(),
+            seed: 0,
+            cache_path: None,
+            accuracy_budget: None,
+            max_iterations: None,
+            observers: Vec::new(),
+            oracle: None,
+        }
+    }
+
+    /// Target device by short name (`kryo280`, `kryo385`, `kryo585`,
+    /// `mali-g72`, `rtx3080`); unknown names fail at [`build`](Self::build).
+    pub fn device(mut self, name: &str) -> RunBuilder {
+        match crate::exp::try_device_by_name(name) {
+            Some(spec) => self.device = spec,
+            None => {
+                self.device_error = Some(format!(
+                    "unknown device '{name}'. options: {}",
+                    crate::exp::DEVICE_NAMES
+                ))
+            }
+        }
+        self
+    }
+
+    /// Target device by explicit spec.
+    pub fn device_spec(mut self, spec: DeviceSpec) -> RunBuilder {
+        self.device = spec;
+        self
+    }
+
+    /// Tuning effort per task (defaults to [`TuneOptions::quick`]).
+    pub fn tune_opts(mut self, opts: TuneOptions) -> RunBuilder {
+        self.tune_opts = opts;
+        self
+    }
+
+    /// Seed for model weights and every tuning/measurement RNG stream.
+    pub fn seed(mut self, seed: u64) -> RunBuilder {
+        self.seed = seed;
+        self
+    }
+
+    /// Warm-start cache file: loaded (if present) at build time, saved
+    /// back after every [`Run::execute`].
+    pub fn cache(mut self, path: impl Into<PathBuf>) -> RunBuilder {
+        self.cache_path = Some(path.into());
+        self
+    }
+
+    /// Accuracy budget `a_g` override for the iterative searches
+    /// (CPrune's `target_accuracy`, NetAdapt's short-accuracy floor).
+    /// One-shot pruners (magnitude/FPGM/AMC/PQF) have no accuracy knob
+    /// and ignore it.
+    pub fn accuracy_budget(mut self, floor: f64) -> RunBuilder {
+        self.accuracy_budget = Some(floor);
+        self
+    }
+
+    /// Iteration-cap override for the iterative searches (CPrune,
+    /// NetAdapt); one-shot pruners ignore it.
+    pub fn max_iterations(mut self, iters: usize) -> RunBuilder {
+        self.max_iterations = Some(iters);
+        self
+    }
+
+    /// Register an observer for the run's event stream (repeatable).
+    pub fn observer(mut self, obs: Box<dyn RunObserver>) -> RunBuilder {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Replace the default jitter-free [`ProxyOracle`].
+    pub fn oracle(mut self, oracle: Box<dyn AccuracyOracle>) -> RunBuilder {
+        self.oracle = Some(oracle);
+        self
+    }
+
+    /// Build the model and device simulator, loading the warm-start cache
+    /// when its file exists. Fails on unknown device names and corrupt
+    /// cache files (loudly, rather than silently re-tuning from cold).
+    pub fn build(self) -> Result<Run, String> {
+        if let Some(e) = self.device_error {
+            return Err(e);
+        }
+        let cache = match &self.cache_path {
+            Some(p) if p.exists() => TuneCache::load(p, self.device.name)?,
+            _ => TuneCache::new(),
+        };
+        let model = Model::build(self.kind, self.seed);
+        Ok(Run {
+            model,
+            sim: Simulator::new(self.device),
+            tune_opts: self.tune_opts,
+            seed: self.seed,
+            cache_path: self.cache_path,
+            cache,
+            accuracy_budget: self.accuracy_budget,
+            max_iterations: self.max_iterations,
+            observers: self.observers,
+            oracle: self.oracle.unwrap_or_else(|| Box::new(ProxyOracle::new())),
+        })
+    }
+}
+
+/// A fully wired run: execute any [`Pruner`] (repeatedly — the tune
+/// cache carries over between executions, so comparing several
+/// algorithms on one `Run` warm-starts the shared workloads exactly like
+/// the legacy shared-session harnesses did).
+pub struct Run {
+    pub model: Model,
+    pub sim: Simulator,
+    tune_opts: TuneOptions,
+    seed: u64,
+    cache_path: Option<PathBuf>,
+    cache: TuneCache,
+    accuracy_budget: Option<f64>,
+    max_iterations: Option<usize>,
+    observers: Vec<Box<dyn RunObserver>>,
+    oracle: Box<dyn AccuracyOracle>,
+}
+
+impl Run {
+    /// Execute `pruner` against this run's wiring. Emits the
+    /// [`crate::run::RunEvent::Finished`] event after the pruner returns,
+    /// then persists the tune cache when a cache path was configured.
+    pub fn execute(&mut self, pruner: &dyn Pruner) -> Result<PruneOutcome, String> {
+        let cache = std::mem::take(&mut self.cache);
+        let session = TuningSession::with_cache(&self.sim, self.tune_opts, self.seed, cache);
+        let outcome = {
+            let mut ctx = RunContext::new(
+                &self.model,
+                &session,
+                &mut *self.oracle,
+                self.observers.as_mut_slice(),
+            );
+            ctx.accuracy_budget = self.accuracy_budget;
+            ctx.max_iterations = self.max_iterations;
+            pruner.run(&mut ctx)
+        };
+        let finished = outcome.finished_event();
+        for obs in self.observers.iter_mut() {
+            obs.on_event(&finished);
+        }
+        self.cache = session.cache;
+        if let Some(path) = &self.cache_path {
+            self.cache.save(path, self.sim.spec.name)?;
+        }
+        // A broken observer (sink write error, registry save failure)
+        // fails the run loudly — a truncated event log or unpersisted
+        // frontier must not look like success.
+        if let Some(e) = self.observers.iter().find_map(|o| o.failure()) {
+            return Err(e);
+        }
+        Ok(outcome)
+    }
+
+    /// The legacy "Original (TVM)" reference row plus its latency —
+    /// measured on this run's session/cache, so a following
+    /// [`execute`](Self::execute) reuses every tuned program.
+    pub fn original_row(&mut self) -> (crate::baselines::Outcome, f64) {
+        let cache = std::mem::take(&mut self.cache);
+        let session = TuningSession::with_cache(&self.sim, self.tune_opts, self.seed, cache);
+        let row = crate::baselines::original_row(&self.model, &session);
+        self.cache = session.cache;
+        row
+    }
+
+    /// The tune cache in its current (post-execution) state.
+    pub fn cache(&self) -> &TuneCache {
+        &self.cache
+    }
+
+    /// Observers registered on this run (e.g. to inspect a
+    /// [`crate::run::RegistryPublisher`] after executing).
+    pub fn observers(&self) -> &[Box<dyn RunObserver>] {
+        &self.observers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::run::CPrune;
+
+    #[test]
+    fn unknown_device_fails_at_build() {
+        let err = match RunBuilder::new(ModelKind::ResNet8Cifar).device("galaxy-s10").build() {
+            Err(e) => e,
+            Ok(_) => panic!("unknown device must fail"),
+        };
+        assert!(err.contains("galaxy-s10"), "{err}");
+    }
+
+    #[test]
+    fn execute_carries_the_cache_across_runs() {
+        let mut run = RunBuilder::new(ModelKind::ResNet8Cifar)
+            .device("kryo385")
+            .max_iterations(3)
+            .build()
+            .unwrap();
+        let first = run.execute(&CPrune::default()).unwrap();
+        assert!(first.programs_measured > 0);
+        let second = run.execute(&CPrune::default()).unwrap();
+        assert_eq!(second.programs_measured, 0, "second run should be all cache hits");
+        assert_eq!(first.final_latency, second.final_latency);
+        assert_eq!(first.channels, second.channels);
+    }
+
+    #[test]
+    fn cache_file_round_trips_through_builder() {
+        let path = std::env::temp_dir().join("cprune_run_builder_cache_test.json");
+        let _ = std::fs::remove_file(&path);
+        let mut cold = RunBuilder::new(ModelKind::ResNet8Cifar)
+            .max_iterations(2)
+            .cache(&path)
+            .build()
+            .unwrap();
+        let a = cold.execute(&CPrune::default()).unwrap();
+        assert!(a.programs_measured > 0);
+        let mut warm = RunBuilder::new(ModelKind::ResNet8Cifar)
+            .max_iterations(2)
+            .cache(&path)
+            .build()
+            .unwrap();
+        let b = warm.execute(&CPrune::default()).unwrap();
+        assert_eq!(b.programs_measured, 0, "warm builder re-measured");
+        assert_eq!(a.final_latency, b.final_latency);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,602 @@
+//! The typed event stream of a pruning run (DESIGN.md §9).
+//!
+//! Every [`crate::run::Pruner`] narrates its search through [`RunEvent`]s
+//! delivered to the [`RunObserver`]s registered on the
+//! [`crate::run::RunBuilder`]. Three observers ship with the crate:
+//!
+//! * [`JsonlSink`] — one JSON object per line, versioned schema
+//!   ([`EVENTS_FORMAT`] v[`EVENTS_VERSION`], same header conventions as
+//!   [`crate::tuner::TuneCache`] files);
+//! * [`ProgressPrinter`] — human-readable live progress on stdout
+//!   (what `cprune run` shows by default);
+//! * [`RegistryPublisher`] — pushes every [`RunEvent::CheckpointEmitted`]
+//!   frontier point into a [`crate::serve::Registry`], so a run's
+//!   deployable checkpoints become servable the moment they are accepted.
+//!
+//! Events are borrowed (`&RunEvent`) by observers and never mutated, so
+//! one event fan-outs to any number of sinks.
+
+use crate::graph::ops::NodeId;
+use crate::serve::{Checkpoint, Registry};
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::io::Write;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// Format tag written on the first line of a [`JsonlSink`] log.
+pub const EVENTS_FORMAT: &str = "cprune-run-events";
+/// Bump when the event schema changes; consumers reject other versions.
+pub const EVENTS_VERSION: u64 = 1;
+
+/// Why a measured candidate was not accepted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// `l_m >= l_t`: the candidate missed the latency target (Alg. 1
+    /// line 10) — the search escalates the pruning step and retries.
+    LatencyGate,
+    /// `a_s < α·a_p`: the short-term accuracy gate failed (line 11) —
+    /// the task is banned for the rest of the run.
+    AccuracyGate,
+    /// `a_s ≤ a_g`: accepting would exhaust the user's accuracy budget —
+    /// the run stops.
+    AccuracyBudget,
+}
+
+impl RejectReason {
+    /// Stable string used by the JSONL schema.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RejectReason::LatencyGate => "latency_gate",
+            RejectReason::AccuracyGate => "accuracy_gate",
+            RejectReason::AccuracyBudget => "accuracy_budget",
+        }
+    }
+}
+
+/// One typed event of a pruning run.
+///
+/// The JSONL serialization ([`RunEvent::to_json`]) is versioned
+/// ([`EVENTS_VERSION`]) and pinned by a golden-file test; treat field
+/// changes as schema bumps.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RunEvent {
+    /// The tuned-but-unpruned reference model was compiled and measured
+    /// (Alg. 1 line 1) — the denominator of every FPS-increase rate.
+    BaselineTuned { latency: f64, fps: f64 },
+    /// A candidate model was compiled and measured against the current
+    /// latency target.
+    CandidateMeasured {
+        iteration: usize,
+        latency: f64,
+        latency_target: f64,
+        candidates_tried: usize,
+    },
+    /// A candidate passed both gates and became the new current model.
+    IterationAccepted {
+        iteration: usize,
+        latency: f64,
+        latency_target: f64,
+        short_accuracy: f64,
+        /// The gate value `α·a_p` the short-term accuracy was held to.
+        accuracy_gate: f64,
+        filters_removed: usize,
+    },
+    /// A candidate failed a gate. The accuracy fields are `None` for
+    /// latency-gate rejections (the candidate is rejected before any
+    /// short-term training happens).
+    IterationRejected {
+        iteration: usize,
+        latency: f64,
+        latency_target: f64,
+        short_accuracy: Option<f64>,
+        accuracy_gate: Option<f64>,
+        reason: RejectReason,
+    },
+    /// A task (identified by its anchor conv) was banned from further
+    /// pruning (Alg. 1 line 12).
+    TaskBanned { conv: NodeId, reason: String },
+    /// A deployable checkpoint was offered to the run's Pareto frontier.
+    CheckpointEmitted { checkpoint: Checkpoint },
+    /// The run finished; fields mirror the returned
+    /// [`crate::run::PruneOutcome`].
+    Finished {
+        pruner: String,
+        method: String,
+        model: String,
+        device: String,
+        final_latency: f64,
+        final_fps: f64,
+        fps_increase_rate: f64,
+        top1: f64,
+        top5: f64,
+        macs: u64,
+        params: u64,
+        iterations: usize,
+        search_candidates: usize,
+        pareto_points: usize,
+    },
+}
+
+impl RunEvent {
+    /// Stable kind tag used by the JSONL schema.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RunEvent::BaselineTuned { .. } => "baseline_tuned",
+            RunEvent::CandidateMeasured { .. } => "candidate_measured",
+            RunEvent::IterationAccepted { .. } => "iteration_accepted",
+            RunEvent::IterationRejected { .. } => "iteration_rejected",
+            RunEvent::TaskBanned { .. } => "task_banned",
+            RunEvent::CheckpointEmitted { .. } => "checkpoint_emitted",
+            RunEvent::Finished { .. } => "finished",
+        }
+    }
+
+    /// Serialize to the versioned JSONL object (`event` carries
+    /// [`RunEvent::kind`]; keys come out sorted — the writer is
+    /// byte-stable).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("event", Json::Str(self.kind().to_string()))];
+        match self {
+            RunEvent::BaselineTuned { latency, fps } => {
+                pairs.push(("latency", Json::Num(*latency)));
+                pairs.push(("fps", Json::Num(*fps)));
+            }
+            RunEvent::CandidateMeasured {
+                iteration,
+                latency,
+                latency_target,
+                candidates_tried,
+            } => {
+                pairs.push(("iteration", Json::Num(*iteration as f64)));
+                pairs.push(("latency", Json::Num(*latency)));
+                pairs.push(("latency_target", Json::Num(*latency_target)));
+                pairs.push(("candidates_tried", Json::Num(*candidates_tried as f64)));
+            }
+            RunEvent::IterationAccepted {
+                iteration,
+                latency,
+                latency_target,
+                short_accuracy,
+                accuracy_gate,
+                filters_removed,
+            } => {
+                pairs.push(("iteration", Json::Num(*iteration as f64)));
+                pairs.push(("latency", Json::Num(*latency)));
+                pairs.push(("latency_target", Json::Num(*latency_target)));
+                pairs.push(("short_accuracy", Json::Num(*short_accuracy)));
+                pairs.push(("accuracy_gate", Json::Num(*accuracy_gate)));
+                pairs.push(("filters_removed", Json::Num(*filters_removed as f64)));
+            }
+            RunEvent::IterationRejected {
+                iteration,
+                latency,
+                latency_target,
+                short_accuracy,
+                accuracy_gate,
+                reason,
+            } => {
+                pairs.push(("iteration", Json::Num(*iteration as f64)));
+                pairs.push(("latency", Json::Num(*latency)));
+                pairs.push(("latency_target", Json::Num(*latency_target)));
+                pairs.push((
+                    "short_accuracy",
+                    short_accuracy.map(Json::Num).unwrap_or(Json::Null),
+                ));
+                pairs.push((
+                    "accuracy_gate",
+                    accuracy_gate.map(Json::Num).unwrap_or(Json::Null),
+                ));
+                pairs.push(("reason", Json::Str(reason.as_str().to_string())));
+            }
+            RunEvent::TaskBanned { conv, reason } => {
+                pairs.push(("conv", Json::Num(*conv as f64)));
+                pairs.push(("reason", Json::Str(reason.clone())));
+            }
+            RunEvent::CheckpointEmitted { checkpoint } => {
+                pairs.push(("checkpoint", checkpoint.to_json()));
+            }
+            RunEvent::Finished {
+                pruner,
+                method,
+                model,
+                device,
+                final_latency,
+                final_fps,
+                fps_increase_rate,
+                top1,
+                top5,
+                macs,
+                params,
+                iterations,
+                search_candidates,
+                pareto_points,
+            } => {
+                pairs.push(("pruner", Json::Str(pruner.clone())));
+                pairs.push(("method", Json::Str(method.clone())));
+                pairs.push(("model", Json::Str(model.clone())));
+                pairs.push(("device", Json::Str(device.clone())));
+                pairs.push(("final_latency", Json::Num(*final_latency)));
+                pairs.push(("final_fps", Json::Num(*final_fps)));
+                pairs.push(("fps_increase_rate", Json::Num(*fps_increase_rate)));
+                pairs.push(("top1", Json::Num(*top1)));
+                pairs.push(("top5", Json::Num(*top5)));
+                pairs.push(("macs", Json::Num(*macs as f64)));
+                pairs.push(("params", Json::Num(*params as f64)));
+                pairs.push(("iterations", Json::Num(*iterations as f64)));
+                pairs.push(("search_candidates", Json::Num(*search_candidates as f64)));
+                pairs.push(("pareto_points", Json::Num(*pareto_points as f64)));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    /// The header object a [`JsonlSink`] writes as its first line.
+    pub fn header_json() -> Json {
+        Json::obj(vec![
+            ("format", Json::Str(EVENTS_FORMAT.to_string())),
+            ("version", Json::Num(EVENTS_VERSION as f64)),
+        ])
+    }
+}
+
+/// Receives every event of a run, in order.
+pub trait RunObserver {
+    fn on_event(&mut self, event: &RunEvent);
+
+    /// A failure the observer hit while consuming events (e.g. a sink
+    /// write error). Checked by [`crate::run::Run::execute`] after the
+    /// [`RunEvent::Finished`] dispatch so broken sinks fail the run
+    /// loudly instead of silently truncating their output.
+    fn failure(&self) -> Option<String> {
+        None
+    }
+}
+
+/// Observer that discards everything (the default for the legacy
+/// free-function entry points).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullObserver;
+
+impl RunObserver for NullObserver {
+    fn on_event(&mut self, _event: &RunEvent) {}
+}
+
+/// JSONL sink: a `{format, version}` header line, then one JSON object
+/// per event. Flushes on [`RunEvent::Finished`] and on drop.
+pub struct JsonlSink {
+    out: Box<dyn Write>,
+    /// First write error, if any (subsequent events are dropped).
+    error: Option<String>,
+}
+
+impl JsonlSink {
+    /// Create (truncate) `path` and write the schema header.
+    pub fn create(path: impl Into<PathBuf>) -> Result<JsonlSink, String> {
+        let path = path.into();
+        let f = std::fs::File::create(&path)
+            .map_err(|e| format!("creating {}: {e}", path.display()))?;
+        Ok(Self::to_writer(Box::new(std::io::BufWriter::new(f))))
+    }
+
+    /// Wrap an arbitrary writer (tests use an in-memory buffer).
+    pub fn to_writer(out: Box<dyn Write>) -> JsonlSink {
+        let mut sink = JsonlSink { out, error: None };
+        sink.write_line(&RunEvent::header_json());
+        sink
+    }
+
+    fn write_line(&mut self, j: &Json) {
+        if self.error.is_some() {
+            return;
+        }
+        if let Err(e) = writeln!(self.out, "{j}") {
+            self.error = Some(e.to_string());
+        }
+    }
+
+    /// First write error hit by the sink, if any.
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+}
+
+impl RunObserver for JsonlSink {
+    fn on_event(&mut self, event: &RunEvent) {
+        self.write_line(&event.to_json());
+        if matches!(event, RunEvent::Finished { .. }) {
+            if let Err(e) = self.out.flush() {
+                if self.error.is_none() {
+                    self.error = Some(e.to_string());
+                }
+            }
+        }
+    }
+
+    fn failure(&self) -> Option<String> {
+        self.error.as_ref().map(|e| format!("events sink: {e}"))
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+/// Human-readable progress lines on stdout. Quiet by default about the
+/// per-candidate noise; `verbose()` prints every measurement/rejection.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProgressPrinter {
+    verbose: bool,
+}
+
+impl ProgressPrinter {
+    pub fn new() -> ProgressPrinter {
+        ProgressPrinter::default()
+    }
+
+    /// Also print [`RunEvent::CandidateMeasured`] and latency-gate
+    /// rejections (one line per compiled candidate).
+    pub fn verbose(mut self) -> ProgressPrinter {
+        self.verbose = true;
+        self
+    }
+}
+
+impl RunObserver for ProgressPrinter {
+    fn on_event(&mut self, event: &RunEvent) {
+        match event {
+            RunEvent::BaselineTuned { latency, fps } => {
+                println!("[run] baseline tuned: {:.2} ms ({fps:.1} FPS)", latency * 1e3);
+            }
+            RunEvent::CandidateMeasured {
+                iteration,
+                latency,
+                latency_target,
+                candidates_tried,
+            } if self.verbose => {
+                println!(
+                    "[run] iter {iteration}: candidate #{candidates_tried} {:.2} ms (target {:.2} ms)",
+                    latency * 1e3,
+                    latency_target * 1e3
+                );
+            }
+            RunEvent::IterationAccepted {
+                iteration,
+                latency,
+                short_accuracy,
+                accuracy_gate,
+                filters_removed,
+                ..
+            } => {
+                println!(
+                    "[run] iter {iteration}: accepted {:.2} ms, a_s {:.4} (gate {:.4}), -{filters_removed} filters",
+                    latency * 1e3,
+                    short_accuracy,
+                    accuracy_gate
+                );
+            }
+            RunEvent::IterationRejected { iteration, reason, .. }
+                if self.verbose || *reason != RejectReason::LatencyGate =>
+            {
+                println!("[run] iter {iteration}: rejected ({})", reason.as_str());
+            }
+            RunEvent::TaskBanned { conv, reason } => {
+                println!("[run] banned task anchored at conv {conv} ({reason})");
+            }
+            RunEvent::Finished {
+                method,
+                fps_increase_rate,
+                top1,
+                iterations,
+                pareto_points,
+                ..
+            } => {
+                println!(
+                    "[run] finished: {method} {fps_increase_rate:.2}x FPS, top-1 {:.2}%, {iterations} iterations, {pareto_points}-point frontier",
+                    top1 * 100.0
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Auto-publisher: folds every emitted checkpoint into a shared
+/// [`Registry`] under a fixed `(model, device)` key, and (optionally)
+/// saves the registry to disk when the run finishes.
+///
+/// Because [`crate::serve::ParetoSet`] insertion is order-independent
+/// (dominated points are evicted whichever side arrives first), the
+/// frontier this publisher accumulates is exactly the run's final
+/// `PruneOutcome::pareto`.
+pub struct RegistryPublisher {
+    registry: Rc<RefCell<Registry>>,
+    model: String,
+    device: String,
+    save_path: Option<PathBuf>,
+    /// First save error, if any (reported via [`RunObserver::failure`]).
+    error: Option<String>,
+}
+
+impl RegistryPublisher {
+    /// Publish into a fresh registry owned by this publisher.
+    pub fn new(model: &str, device: &str) -> RegistryPublisher {
+        Self::shared(Rc::new(RefCell::new(Registry::new())), model, device)
+    }
+
+    /// Publish into a registry shared with the caller (and possibly with
+    /// other runs' publishers).
+    pub fn shared(
+        registry: Rc<RefCell<Registry>>,
+        model: &str,
+        device: &str,
+    ) -> RegistryPublisher {
+        RegistryPublisher {
+            registry,
+            model: model.to_string(),
+            device: device.to_string(),
+            save_path: None,
+            error: None,
+        }
+    }
+
+    /// Also save the registry to `path` when the run finishes.
+    pub fn saving_to(mut self, path: impl Into<PathBuf>) -> RegistryPublisher {
+        self.save_path = Some(path.into());
+        self
+    }
+
+    /// Handle to the registry being published into.
+    pub fn registry(&self) -> Rc<RefCell<Registry>> {
+        self.registry.clone()
+    }
+}
+
+impl RunObserver for RegistryPublisher {
+    fn on_event(&mut self, event: &RunEvent) {
+        match event {
+            RunEvent::CheckpointEmitted { checkpoint } => {
+                let mut one = crate::serve::ParetoSet::new();
+                one.insert(checkpoint.clone());
+                self.registry
+                    .borrow_mut()
+                    .publish(&self.model, &self.device, &one);
+            }
+            RunEvent::Finished { .. } => {
+                if let Some(path) = &self.save_path {
+                    if let Err(e) = self.registry.borrow().save(path) {
+                        if self.error.is_none() {
+                            self.error = Some(format!("registry publisher: {e}"));
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn failure(&self) -> Option<String> {
+        self.error.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn every_event_serializes_to_parseable_json_with_kind_tag() {
+        let events = vec![
+            RunEvent::BaselineTuned { latency: 0.25, fps: 4.0 },
+            RunEvent::CandidateMeasured {
+                iteration: 1,
+                latency: 0.125,
+                latency_target: 0.25,
+                candidates_tried: 3,
+            },
+            RunEvent::IterationAccepted {
+                iteration: 1,
+                latency: 0.125,
+                latency_target: 0.25,
+                short_accuracy: 0.5,
+                accuracy_gate: 0.25,
+                filters_removed: 8,
+            },
+            RunEvent::IterationRejected {
+                iteration: 2,
+                latency: 0.5,
+                latency_target: 0.25,
+                short_accuracy: None,
+                accuracy_gate: None,
+                reason: RejectReason::LatencyGate,
+            },
+            RunEvent::TaskBanned { conv: 7, reason: "accuracy_gate".into() },
+            RunEvent::CheckpointEmitted {
+                checkpoint: Checkpoint {
+                    iteration: 1,
+                    latency: 0.125,
+                    accuracy: 0.5,
+                    channels: BTreeMap::new(),
+                },
+            },
+            RunEvent::Finished {
+                pruner: "cprune".into(),
+                method: "CPrune".into(),
+                model: "m".into(),
+                device: "d".into(),
+                final_latency: 0.125,
+                final_fps: 8.0,
+                fps_increase_rate: 2.0,
+                top1: 0.5,
+                top5: 0.75,
+                macs: 100,
+                params: 10,
+                iterations: 1,
+                search_candidates: 3,
+                pareto_points: 2,
+            },
+        ];
+        for ev in &events {
+            let text = ev.to_json().to_string();
+            let back = json::parse(&text).expect("event line must parse");
+            assert_eq!(
+                back.get("event").and_then(Json::as_str),
+                Some(ev.kind()),
+                "missing kind tag in {text}"
+            );
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_writes_header_then_events() {
+        use std::io::Cursor;
+        // Write into a shared buffer we can inspect after the sink drops.
+        struct Shared(Rc<RefCell<Cursor<Vec<u8>>>>);
+        impl Write for Shared {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.borrow_mut().write(buf)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let buf = Rc::new(RefCell::new(Cursor::new(Vec::new())));
+        {
+            let mut sink = JsonlSink::to_writer(Box::new(Shared(buf.clone())));
+            sink.on_event(&RunEvent::BaselineTuned { latency: 0.5, fps: 2.0 });
+            assert!(sink.error().is_none());
+        }
+        let bytes = buf.borrow().get_ref().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let header = json::parse(lines[0]).unwrap();
+        assert_eq!(header.get("format").and_then(Json::as_str), Some(EVENTS_FORMAT));
+        assert_eq!(header.get("version").and_then(Json::as_usize), Some(1));
+        let ev = json::parse(lines[1]).unwrap();
+        assert_eq!(ev.get("event").and_then(Json::as_str), Some("baseline_tuned"));
+    }
+
+    #[test]
+    fn registry_publisher_accumulates_checkpoints() {
+        let mut publisher = RegistryPublisher::new("m", "d");
+        let reg = publisher.registry();
+        for (it, lat, acc) in [(0, 0.5, 0.75), (1, 0.25, 0.5), (2, 0.125, 0.25)] {
+            publisher.on_event(&RunEvent::CheckpointEmitted {
+                checkpoint: Checkpoint {
+                    iteration: it,
+                    latency: lat,
+                    accuracy: acc,
+                    channels: BTreeMap::new(),
+                },
+            });
+        }
+        let reg = reg.borrow();
+        let set = reg.get("m", "d").expect("frontier published");
+        assert_eq!(set.len(), 3); // mutually non-dominated chain
+    }
+}

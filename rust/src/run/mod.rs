@@ -1,0 +1,331 @@
+//! The run layer: one [`Pruner`] trait, one [`RunBuilder`], one typed
+//! event stream for every pruning run (DESIGN.md §9).
+//!
+//! The paper's headline result is a *comparison* — CPrune against
+//! magnitude, FPGM, NetAdapt, AMC and PQF under identical device, tuning
+//! and accuracy budgets. This module is where that uniformity lives:
+//!
+//! * [`Pruner`] — the one interface every algorithm implements
+//!   ([`pruners::CPrune`] plus all five baselines), selectable by name
+//!   via [`pruner_by_name`];
+//! * [`PruneOutcome`] — the one result type, unifying
+//!   [`crate::pruner::CPruneResult`] and [`crate::baselines::Outcome`]:
+//!   final latency/FPS, top-1/top-5, the channel map, and a
+//!   [`ParetoSet`] frontier (one-shot baselines emit their end state as
+//!   a one-point frontier, so *everything* is servable through
+//!   [`crate::serve::Registry`]);
+//! * [`RunContext`] — the cross-cutting wiring (model, tuning session,
+//!   accuracy oracle, observers) a pruner runs against;
+//! * [`RunBuilder`]/[`Run`] (in [`builder`]) — fluent construction of
+//!   that wiring: model, device, tune budget, seed, warm-start cache
+//!   path, accuracy budget, observers;
+//! * [`RunEvent`]/[`RunObserver`] (in [`events`]) — the typed event
+//!   stream with three shipped observers (JSONL sink, CLI progress
+//!   printer, registry auto-publisher).
+//!
+//! The legacy free functions (`pruner::cprune`, `baselines::*`) remain
+//! as thin shims over the trait, so both spellings stay byte-identical
+//! for a fixed seed (pinned by `tests/run_api_tests.rs`).
+
+pub mod builder;
+pub mod events;
+pub mod pruners;
+
+pub use builder::{Run, RunBuilder};
+pub use events::{
+    JsonlSink, NullObserver, ProgressPrinter, RegistryPublisher, RejectReason, RunEvent,
+    RunObserver, EVENTS_FORMAT, EVENTS_VERSION,
+};
+pub use pruners::{pruner_by_name, Amc, CPrune, Fpgm, Magnitude, NetAdapt, Pqf, PRUNER_NAMES};
+
+use crate::accuracy::{AccuracyOracle, Criterion, TrainPhase};
+use crate::baselines::Outcome;
+use crate::compiler;
+use crate::graph::model_zoo::Model;
+use crate::graph::ops::NodeId;
+use crate::graph::prune::PruneState;
+use crate::graph::stats;
+use crate::pruner::IterationLog;
+use crate::serve::{Checkpoint, ParetoSet};
+use crate::tuner::TuningSession;
+use std::collections::{BTreeMap, HashMap};
+
+/// A pruning algorithm runnable under the uniform run layer.
+///
+/// Implementations narrate their search through [`RunContext::emit`] and
+/// return a [`PruneOutcome`]; the surrounding [`Run`] appends the
+/// [`RunEvent::Finished`] event so every observer sees a complete stream
+/// regardless of which algorithm ran.
+pub trait Pruner {
+    /// Registry name (`cprune`, `magnitude`, `fpgm`, `netadapt`, `amc`,
+    /// `pqf`) — what `cprune run --pruner <name>` selects.
+    fn name(&self) -> &str;
+
+    /// Run the algorithm against the context's model/session/oracle.
+    fn run(&self, ctx: &mut RunContext) -> PruneOutcome;
+}
+
+/// Everything a [`Pruner`] needs to run: the model, the device-bound
+/// tuning session, the accuracy oracle, optional budget overrides, and
+/// the observers receiving the event stream.
+///
+/// Built by [`Run::execute`]; the legacy free functions build a bare one
+/// via [`RunContext::standalone`].
+pub struct RunContext<'s> {
+    pub model: &'s Model,
+    pub session: &'s TuningSession<'s>,
+    pub oracle: &'s mut dyn AccuracyOracle,
+    /// Overrides the pruner's own accuracy budget (`a_g`) when set.
+    pub accuracy_budget: Option<f64>,
+    /// Overrides the pruner's own iteration cap when set.
+    pub max_iterations: Option<usize>,
+    baseline_latency: Option<f64>,
+    observers: &'s mut [Box<dyn RunObserver>],
+}
+
+impl<'s> RunContext<'s> {
+    /// Full wiring (what [`Run::execute`] builds).
+    pub fn new(
+        model: &'s Model,
+        session: &'s TuningSession<'s>,
+        oracle: &'s mut dyn AccuracyOracle,
+        observers: &'s mut [Box<dyn RunObserver>],
+    ) -> RunContext<'s> {
+        RunContext {
+            model,
+            session,
+            oracle,
+            accuracy_budget: None,
+            max_iterations: None,
+            baseline_latency: None,
+            observers,
+        }
+    }
+
+    /// Observer-less context for the legacy free-function shims.
+    pub fn standalone(
+        model: &'s Model,
+        session: &'s TuningSession<'s>,
+        oracle: &'s mut dyn AccuracyOracle,
+    ) -> RunContext<'s> {
+        Self::new(model, session, oracle, &mut [])
+    }
+
+    /// Pre-seed the baseline latency (legacy shims receive it as an
+    /// argument instead of measuring it) — [`RunContext::baseline_latency`]
+    /// then returns this value without compiling anything.
+    pub fn with_baseline(mut self, latency: f64) -> RunContext<'s> {
+        self.baseline_latency = Some(latency);
+        self
+    }
+
+    /// Short device name of the session's target.
+    pub fn device(&self) -> &'static str {
+        self.session.sim.spec.name
+    }
+
+    /// Deliver an event to every observer, in registration order.
+    pub fn emit(&mut self, event: &RunEvent) {
+        for obs in self.observers.iter_mut() {
+            obs.on_event(event);
+        }
+    }
+
+    /// Latency of the tuned-but-unpruned model on this session's device —
+    /// the denominator of every FPS-increase rate. Measured (and the
+    /// [`RunEvent::BaselineTuned`] event emitted) at most once per context.
+    pub fn baseline_latency(&mut self) -> f64 {
+        if let Some(l) = self.baseline_latency {
+            return l;
+        }
+        let compiled = compiler::compile_tuned(&self.model.graph, self.session, &HashMap::new());
+        let latency = compiled.latency();
+        self.set_baseline(latency, compiled.fps());
+        latency
+    }
+
+    /// Record an externally measured baseline and emit
+    /// [`RunEvent::BaselineTuned`] (CPrune measures the baseline itself
+    /// as Alg. 1 line 1).
+    pub fn set_baseline(&mut self, latency: f64, fps: f64) {
+        self.baseline_latency = Some(latency);
+        self.emit(&RunEvent::BaselineTuned { latency, fps });
+    }
+}
+
+/// The uniform result of any [`Pruner`] run — what Table 1/2 print per
+/// row and what the serving layer publishes.
+#[derive(Clone, Debug)]
+pub struct PruneOutcome {
+    /// Registry name of the algorithm ([`Pruner::name`]).
+    pub pruner: String,
+    /// Display label (Table 1/2's method column, e.g. `"FPGM+TVM"`).
+    pub method: String,
+    pub model: String,
+    pub device: String,
+    /// Tuned-but-unpruned latency (seconds) the rate is relative to.
+    pub baseline_latency: f64,
+    pub final_latency: f64,
+    pub final_fps: f64,
+    pub fps_increase_rate: f64,
+    /// MACs of the final model (the tables' "FLOPS" column convention).
+    pub macs: u64,
+    pub params: u64,
+    pub top1: f64,
+    pub top5: f64,
+    /// Remaining output channels per prunable conv — enough to rebuild
+    /// the deployable graph via [`crate::graph::prune::apply`].
+    pub channels: BTreeMap<NodeId, usize>,
+    /// The run's non-dominated latency/accuracy frontier. One-shot
+    /// baselines contribute a single point; iterative searches (CPrune,
+    /// NetAdapt) contribute every accepted iteration.
+    pub pareto: ParetoSet,
+    /// Accepted iterations (empty for one-shot baselines).
+    pub iterations: Vec<IterationLog>,
+    /// Candidate models compiled+measured during the search (0 = one-shot).
+    pub search_candidates: usize,
+    /// Wall-clock seconds of the search's main step.
+    pub main_step_seconds: f64,
+    /// Programs measured by the tuner on this context's session.
+    pub programs_measured: usize,
+}
+
+impl PruneOutcome {
+    /// Collapse to the legacy Table-1 row type.
+    pub fn to_outcome(&self) -> Outcome {
+        Outcome {
+            method: self.method.clone(),
+            fps: self.final_fps,
+            fps_increase_rate: self.fps_increase_rate,
+            macs: self.macs,
+            params: self.params,
+            top1: self.top1,
+            top5: self.top5,
+            search_candidates: self.search_candidates,
+            main_step_seconds: self.main_step_seconds,
+        }
+    }
+
+    /// The [`RunEvent::Finished`] event mirroring this outcome.
+    pub fn finished_event(&self) -> RunEvent {
+        RunEvent::Finished {
+            pruner: self.pruner.clone(),
+            method: self.method.clone(),
+            model: self.model.clone(),
+            device: self.device.clone(),
+            final_latency: self.final_latency,
+            final_fps: self.final_fps,
+            fps_increase_rate: self.fps_increase_rate,
+            top1: self.top1,
+            top5: self.top5,
+            macs: self.macs,
+            params: self.params,
+            iterations: self.iterations.len(),
+            search_candidates: self.search_candidates,
+            pareto_points: self.pareto.len(),
+        }
+    }
+}
+
+/// What a finished search hands to [`finalize`]: the end state plus the
+/// per-algorithm counters the shared evaluation cannot know.
+pub(crate) struct SearchEnd {
+    pub pruner: &'static str,
+    pub method: String,
+    pub state: PruneState,
+    pub criterion: Criterion,
+    pub search_candidates: usize,
+    pub main_step_seconds: f64,
+    pub iterations: Vec<IterationLog>,
+    /// Checkpoints already emitted during the search (iterative
+    /// algorithms); the final end-state checkpoint is added here.
+    pub checkpoints: Vec<Checkpoint>,
+}
+
+/// Shared tail of every structural pruner: rebuild the pruned graph,
+/// compile+measure it tuned, query the oracle's final accuracies, emit
+/// the end-state checkpoint, and assemble the [`PruneOutcome`].
+///
+/// Mirrors the legacy [`crate::baselines::evaluate`] step for step so
+/// trait runs reproduce free-function runs bit-for-bit.
+pub(crate) fn finalize(ctx: &mut RunContext, end: SearchEnd) -> PruneOutcome {
+    let model = ctx.model;
+    let session = ctx.session;
+    let baseline_latency = ctx.baseline_latency();
+    let graph =
+        crate::graph::prune::apply(&model.graph, &end.state.cout).expect("valid pruned graph");
+    let compiled = compiler::compile_tuned(&graph, session, &HashMap::new());
+    let (flops, params) = stats::flops_params(&graph);
+    let summary = crate::pruner::summarize(model, &end.state, end.criterion);
+    let top1 = ctx.oracle.top1(&summary, TrainPhase::Final);
+    let top5 = ctx.oracle.top5(&summary, TrainPhase::Final);
+    let final_latency = compiled.latency();
+
+    let mut pareto = ParetoSet::new();
+    for c in &end.checkpoints {
+        pareto.insert(c.clone());
+    }
+    let final_checkpoint = Checkpoint {
+        iteration: end.iterations.len().max(1),
+        latency: final_latency,
+        accuracy: top1,
+        channels: end.state.cout.clone(),
+    };
+    ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: final_checkpoint.clone() });
+    pareto.insert(final_checkpoint);
+
+    PruneOutcome {
+        pruner: end.pruner.to_string(),
+        method: end.method,
+        model: model.kind.name().to_string(),
+        device: ctx.device().to_string(),
+        baseline_latency,
+        final_latency,
+        final_fps: compiled.fps(),
+        fps_increase_rate: baseline_latency / final_latency,
+        macs: flops / 2,
+        params,
+        top1,
+        top5,
+        channels: end.state.cout,
+        pareto,
+        iterations: end.iterations,
+        search_candidates: end.search_candidates,
+        main_step_seconds: end.main_step_seconds,
+        programs_measured: session.measured_count(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::ProxyOracle;
+    use crate::device::{DeviceSpec, Simulator};
+    use crate::graph::model_zoo::ModelKind;
+    use crate::tuner::TuneOptions;
+
+    #[test]
+    fn standalone_context_measures_baseline_once() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 0);
+        let mut oracle = ProxyOracle::new();
+        let mut ctx = RunContext::standalone(&m, &session, &mut oracle);
+        let a = ctx.baseline_latency();
+        let b = ctx.baseline_latency();
+        assert!(a > 0.0 && a.is_finite());
+        assert_eq!(a, b);
+        assert_eq!(ctx.device(), "kryo385");
+    }
+
+    #[test]
+    fn with_baseline_short_circuits_measurement() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 0);
+        let mut oracle = ProxyOracle::new();
+        let mut ctx = RunContext::standalone(&m, &session, &mut oracle).with_baseline(0.125);
+        assert_eq!(ctx.baseline_latency(), 0.125);
+        assert_eq!(session.measured_count(), 0, "pre-seeded baseline must not tune");
+    }
+}

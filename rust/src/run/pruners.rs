@@ -1,0 +1,361 @@
+//! [`Pruner`] implementations: CPrune plus the five baselines, and the
+//! string registry the CLI and experiment harnesses select them from.
+//!
+//! Each implementation delegates to the algorithm's home module
+//! (`pruner::cprune`, `baselines::*`) — the legacy free functions there
+//! are thin shims over these trait impls, so both spellings produce
+//! byte-identical results for a fixed seed.
+
+use super::{finalize, PruneOutcome, Pruner, RunContext, RunEvent, SearchEnd};
+use crate::accuracy::Criterion;
+use crate::baselines::amc::{amc_search, AmcConfig};
+use crate::baselines::netadapt::{netadapt_run, NetAdaptConfig};
+use crate::baselines::pqf::{latency_multiplier, TOP1_DROP, TOP5_DROP};
+use crate::baselines::uniform_prune;
+use crate::compiler;
+use crate::graph::prune::PruneState;
+use crate::graph::stats;
+use crate::pruner::{cprune_run, CPruneConfig, CPruneResult};
+use crate::serve::{Checkpoint, ParetoSet};
+use std::collections::HashMap;
+
+/// Space-separated registry names (CLI help text).
+pub const PRUNER_NAMES: &str = "cprune magnitude fpgm netadapt amc pqf";
+
+/// Look up a pruner by registry name, with its paper-default
+/// configuration. `None` for unknown names.
+pub fn pruner_by_name(name: &str) -> Option<Box<dyn Pruner>> {
+    match name {
+        "cprune" => Some(Box::new(CPrune::default())),
+        "magnitude" | "l1" => Some(Box::new(Magnitude::at(0.3))),
+        "fpgm" => Some(Box::new(Fpgm::at(0.25))),
+        "netadapt" => Some(Box::new(NetAdapt::default())),
+        "amc" => Some(Box::new(Amc::default())),
+        "pqf" => Some(Box::new(Pqf)),
+        _ => None,
+    }
+}
+
+/// The paper's contribution behind the uniform interface.
+///
+/// `cfg.tune_opts` and `cfg.seed` only matter to sessions built by the
+/// legacy [`crate::pruner::cprune`] entry point — under a
+/// [`crate::run::Run`] the session's own options and seed govern tuning.
+/// The context's `accuracy_budget` / `max_iterations` overrides (set via
+/// [`crate::run::RunBuilder`]) take precedence over the config's.
+pub struct CPrune {
+    pub cfg: CPruneConfig,
+    label: String,
+}
+
+impl Default for CPrune {
+    fn default() -> Self {
+        Self::with_cfg(CPruneConfig::default())
+    }
+}
+
+impl CPrune {
+    pub fn with_cfg(cfg: CPruneConfig) -> CPrune {
+        CPrune { cfg, label: "CPrune".to_string() }
+    }
+
+    /// Override the display label (Table 2's ablation rows).
+    pub fn with_label(mut self, label: &str) -> CPrune {
+        self.label = label.to_string();
+        self
+    }
+
+    fn effective_cfg(&self, ctx: &RunContext) -> CPruneConfig {
+        let mut cfg = self.cfg.clone();
+        if let Some(a) = ctx.accuracy_budget {
+            cfg.target_accuracy = a;
+        }
+        if let Some(n) = ctx.max_iterations {
+            cfg.max_iterations = n;
+        }
+        cfg
+    }
+
+    /// Run CPrune and keep the full [`CPruneResult`] (final graph and
+    /// task table included) — for callers like the Fig. 8 transfer
+    /// matrix that need more than the uniform [`PruneOutcome`].
+    pub fn run_full(&self, ctx: &mut RunContext) -> CPruneResult {
+        let cfg = self.effective_cfg(ctx);
+        cprune_run(ctx, &cfg)
+    }
+}
+
+impl Pruner for CPrune {
+    fn name(&self) -> &str {
+        "cprune"
+    }
+
+    fn run(&self, ctx: &mut RunContext) -> PruneOutcome {
+        let r = self.run_full(ctx);
+        let (flops, params) = stats::flops_params(&r.final_graph);
+        PruneOutcome {
+            pruner: self.name().to_string(),
+            method: self.label.clone(),
+            model: ctx.model.kind.name().to_string(),
+            device: ctx.device().to_string(),
+            baseline_latency: r.baseline.latency(),
+            final_latency: r.final_latency,
+            final_fps: r.final_fps,
+            fps_increase_rate: r.fps_increase_rate,
+            macs: flops / 2,
+            params,
+            top1: r.final_top1,
+            top5: r.final_top5,
+            channels: r.final_state.cout,
+            pareto: r.pareto,
+            iterations: r.iterations,
+            search_candidates: r.candidates_tried,
+            main_step_seconds: r.main_step_seconds,
+            programs_measured: r.programs_measured,
+        }
+    }
+}
+
+/// One-shot uniform ℓ1 pruning at a fixed ratio.
+pub struct Magnitude {
+    pub ratio: f64,
+}
+
+impl Magnitude {
+    pub fn at(ratio: f64) -> Magnitude {
+        Magnitude { ratio }
+    }
+}
+
+impl Pruner for Magnitude {
+    fn name(&self) -> &str {
+        "magnitude"
+    }
+
+    fn run(&self, ctx: &mut RunContext) -> PruneOutcome {
+        let state = uniform_prune(ctx.model, self.ratio, Criterion::L1Norm, 0);
+        finalize(
+            ctx,
+            SearchEnd {
+                pruner: "magnitude",
+                method: format!("Magnitude(l1)@{:.0e}", self.ratio),
+                state,
+                criterion: Criterion::L1Norm,
+                search_candidates: 0,
+                main_step_seconds: 0.0,
+                iterations: Vec::new(),
+                checkpoints: Vec::new(),
+            },
+        )
+    }
+}
+
+/// One-shot geometric-median pruning (He et al., CVPR 2019).
+pub struct Fpgm {
+    pub ratio: f64,
+}
+
+impl Fpgm {
+    pub fn at(ratio: f64) -> Fpgm {
+        Fpgm { ratio }
+    }
+}
+
+impl Pruner for Fpgm {
+    fn name(&self) -> &str {
+        "fpgm"
+    }
+
+    fn run(&self, ctx: &mut RunContext) -> PruneOutcome {
+        let state = uniform_prune(ctx.model, self.ratio, Criterion::GeomMedian, 0);
+        finalize(
+            ctx,
+            SearchEnd {
+                pruner: "fpgm",
+                method: "FPGM+TVM".to_string(),
+                state,
+                criterion: Criterion::GeomMedian,
+                search_candidates: 0,
+                main_step_seconds: 0.0,
+                iterations: Vec::new(),
+                checkpoints: Vec::new(),
+            },
+        )
+    }
+}
+
+/// NetAdapt's per-layer empirical measurement loop (Yang et al., 2018).
+/// The context's `max_iterations` / `accuracy_budget` overrides map onto
+/// the config's iteration cap and short-accuracy floor.
+#[derive(Default)]
+pub struct NetAdapt {
+    pub cfg: NetAdaptConfig,
+}
+
+impl NetAdapt {
+    pub fn with(cfg: NetAdaptConfig) -> NetAdapt {
+        NetAdapt { cfg }
+    }
+}
+
+impl Pruner for NetAdapt {
+    fn name(&self) -> &str {
+        "netadapt"
+    }
+
+    fn run(&self, ctx: &mut RunContext) -> PruneOutcome {
+        let mut cfg = self.cfg.clone();
+        if let Some(n) = ctx.max_iterations {
+            cfg.max_iterations = n;
+        }
+        if let Some(a) = ctx.accuracy_budget {
+            cfg.min_short_accuracy = a;
+        }
+        netadapt_run(ctx, &cfg)
+    }
+}
+
+/// Greedy AMC (He et al., 2018): per-layer sparsity from a grid under a
+/// MACs budget, maximizing the same accuracy-with-FLOPs-bonus reward.
+#[derive(Default)]
+pub struct Amc {
+    pub cfg: AmcConfig,
+}
+
+impl Amc {
+    pub fn with(cfg: AmcConfig) -> Amc {
+        Amc { cfg }
+    }
+}
+
+impl Pruner for Amc {
+    fn name(&self) -> &str {
+        "amc"
+    }
+
+    fn run(&self, ctx: &mut RunContext) -> PruneOutcome {
+        let state = amc_search(ctx, &self.cfg);
+        finalize(
+            ctx,
+            SearchEnd {
+                pruner: "amc",
+                method: "AMC+TVM".to_string(),
+                state,
+                criterion: Criterion::L1Norm,
+                search_candidates: 0,
+                main_step_seconds: 0.0,
+                iterations: Vec::new(),
+                checkpoints: Vec::new(),
+            },
+        )
+    }
+}
+
+/// PQF (Martinez et al., 2021): non-structural permute-quantize-finetune.
+/// The network shape is unchanged; the outcome models the device-kind
+/// dependent decode overhead and the paper's reported accuracy cost.
+pub struct Pqf;
+
+impl Pruner for Pqf {
+    fn name(&self) -> &str {
+        "pqf"
+    }
+
+    fn run(&self, ctx: &mut RunContext) -> PruneOutcome {
+        let model = ctx.model;
+        let session = ctx.session;
+        let baseline_latency = ctx.baseline_latency();
+        let compiled = compiler::compile_tuned(&model.graph, session, &HashMap::new());
+        let latency = compiled.latency() * latency_multiplier(session.sim.spec.kind);
+        let (flops, params) = stats::flops_params(&model.graph);
+        let (b1, b5) = model.kind.base_accuracy();
+        let top1 = (b1 - TOP1_DROP).max(0.0);
+        let top5 = (b5 - TOP5_DROP).max(0.0);
+        let channels = PruneState::full(model).cout;
+        let checkpoint = Checkpoint {
+            iteration: 1,
+            latency,
+            accuracy: top1,
+            channels: channels.clone(),
+        };
+        ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: checkpoint.clone() });
+        let mut pareto = ParetoSet::new();
+        pareto.insert(checkpoint);
+        PruneOutcome {
+            pruner: self.name().to_string(),
+            method: "PQF+TVM".to_string(),
+            model: model.kind.name().to_string(),
+            device: ctx.device().to_string(),
+            baseline_latency,
+            final_latency: latency,
+            final_fps: 1.0 / latency,
+            fps_increase_rate: baseline_latency / latency,
+            macs: flops / 2, // structure unchanged (tables print "-")
+            params,
+            top1,
+            top5,
+            channels,
+            pareto,
+            iterations: Vec::new(),
+            search_candidates: 0,
+            main_step_seconds: 0.0,
+            programs_measured: session.measured_count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::model_zoo::ModelKind;
+    use crate::run::RunBuilder;
+
+    #[test]
+    fn registry_resolves_every_documented_name() {
+        for name in PRUNER_NAMES.split_whitespace() {
+            let p = pruner_by_name(name).unwrap_or_else(|| panic!("missing pruner {name}"));
+            assert_eq!(p.name(), name);
+        }
+        assert!(pruner_by_name("dropout").is_none());
+    }
+
+    #[test]
+    fn every_pruner_runs_under_the_same_builder_wiring() {
+        let mut run = RunBuilder::new(ModelKind::ResNet8Cifar)
+            .device("kryo385")
+            .seed(1)
+            .max_iterations(3)
+            .build()
+            .unwrap();
+        for name in PRUNER_NAMES.split_whitespace() {
+            let pruner = pruner_by_name(name).unwrap();
+            let out = run.execute(pruner.as_ref()).unwrap();
+            assert_eq!(out.pruner, name);
+            assert!(out.final_fps > 0.0 && out.final_fps.is_finite(), "{name}");
+            assert!(out.top1 > 0.0 && out.top1 <= 1.0, "{name}");
+            assert!(!out.pareto.is_empty(), "{name}: frontier must be servable");
+            assert!(out.baseline_latency > 0.0, "{name}");
+            // every frontier point carries a deployable channel map
+            for c in out.pareto.points() {
+                assert!(c.instantiate(&run.model).is_ok(), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_shot_baselines_emit_a_one_point_frontier() {
+        let mut run = RunBuilder::new(ModelKind::Vgg16Cifar)
+            .device("kryo385")
+            .seed(2)
+            .build()
+            .unwrap();
+        for pruner in [&Magnitude::at(0.3) as &dyn Pruner, &Fpgm::at(0.25), &Pqf] {
+            let out = run.execute(pruner).unwrap();
+            assert_eq!(out.pareto.len(), 1, "{}", pruner.name());
+            assert!(out.iterations.is_empty());
+            let point = out.pareto.fastest().unwrap();
+            assert_eq!(point.latency, out.final_latency, "{}", pruner.name());
+            assert_eq!(point.accuracy, out.top1, "{}", pruner.name());
+        }
+    }
+}

@@ -46,7 +46,9 @@ impl Checkpoint {
         crate::graph::prune::apply(&model.graph, &self.channels)
     }
 
-    fn to_json(&self) -> Json {
+    /// Versioned serialization shared by [`crate::serve::Registry`]
+    /// files and the run layer's JSONL event stream (DESIGN.md §9).
+    pub fn to_json(&self) -> Json {
         let channels = Json::Obj(
             self.channels
                 .iter()
@@ -61,7 +63,8 @@ impl Checkpoint {
         ])
     }
 
-    fn from_json(j: &Json) -> Result<Checkpoint, String> {
+    /// Parse a checkpoint serialized by [`Checkpoint::to_json`].
+    pub fn from_json(j: &Json) -> Result<Checkpoint, String> {
         let mut channels = BTreeMap::new();
         match j.get("channels") {
             Some(Json::Obj(m)) => {

@@ -124,8 +124,10 @@ impl std::fmt::Display for Json {
     }
 }
 
-/// Parse a JSON document. Supports the full grammar minus `\uXXXX` surrogate
-/// pairs (not needed for our manifests).
+/// Parse a JSON document. Supports the full grammar, including `\uXXXX`
+/// surrogate pairs (event logs may carry non-BMP characters); unpaired
+/// surrogates are rejected with a clear error rather than silently
+/// replaced.
 pub fn parse(input: &str) -> Result<Json, String> {
     let mut p = Parser {
         bytes: input.as_bytes(),
@@ -220,29 +222,44 @@ impl<'a> Parser<'a> {
                 Some(b'\\') => {
                     self.pos += 1;
                     match self.peek() {
-                        Some(b'"') => s.push('"'),
-                        Some(b'\\') => s.push('\\'),
-                        Some(b'/') => s.push('/'),
-                        Some(b'n') => s.push('\n'),
-                        Some(b't') => s.push('\t'),
-                        Some(b'r') => s.push('\r'),
-                        Some(b'b') => s.push('\u{8}'),
-                        Some(b'f') => s.push('\u{c}'),
+                        Some(b'"') => {
+                            s.push('"');
+                            self.pos += 1;
+                        }
+                        Some(b'\\') => {
+                            s.push('\\');
+                            self.pos += 1;
+                        }
+                        Some(b'/') => {
+                            s.push('/');
+                            self.pos += 1;
+                        }
+                        Some(b'n') => {
+                            s.push('\n');
+                            self.pos += 1;
+                        }
+                        Some(b't') => {
+                            s.push('\t');
+                            self.pos += 1;
+                        }
+                        Some(b'r') => {
+                            s.push('\r');
+                            self.pos += 1;
+                        }
+                        Some(b'b') => {
+                            s.push('\u{8}');
+                            self.pos += 1;
+                        }
+                        Some(b'f') => {
+                            s.push('\u{c}');
+                            self.pos += 1;
+                        }
                         Some(b'u') => {
-                            let hex = std::str::from_utf8(
-                                self.bytes
-                                    .get(self.pos + 1..self.pos + 5)
-                                    .ok_or("bad \\u escape")?,
-                            )
-                            .map_err(|_| "bad \\u escape")?;
-                            let cp =
-                                u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.pos += 4;
+                            self.pos += 1;
+                            s.push(self.unicode_escape()?);
                         }
                         _ => return Err("bad escape".into()),
                     }
-                    self.pos += 1;
                 }
                 Some(_) => {
                     // copy a full utf-8 scalar
@@ -255,6 +272,66 @@ impl<'a> Parser<'a> {
                 None => return Err("unterminated string".into()),
             }
         }
+    }
+
+    /// Four hex digits of a `\uXXXX` escape; `pos` sits on the first
+    /// digit (the `u` is already consumed) and ends one past the last.
+    fn hex4(&mut self) -> Result<u32, String> {
+        let hex = self
+            .bytes
+            .get(self.pos..self.pos + 4)
+            .and_then(|b| std::str::from_utf8(b).ok())
+            .ok_or_else(|| format!("truncated \\u escape at byte {}", self.pos))?;
+        if !hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return Err(format!("bad \\u escape '{hex}' at byte {}", self.pos));
+        }
+        let v = u32::from_str_radix(hex, 16)
+            .map_err(|_| format!("bad \\u escape '{hex}' at byte {}", self.pos))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    /// Decode a `\uXXXX` escape (the `\u` is already consumed),
+    /// including UTF-16 surrogate pairs for non-BMP characters. Unpaired
+    /// surrogates are an error: a lone `\uD800`–`\uDFFF` cannot encode a
+    /// scalar value, and replacing it with U+FFFD would silently corrupt
+    /// event logs on a round-trip.
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let hi = self.hex4()?;
+        if (0xDC00..=0xDFFF).contains(&hi) {
+            return Err(format!(
+                "unpaired low surrogate \\u{hi:04x} at byte {}",
+                self.pos
+            ));
+        }
+        if !(0xD800..=0xDBFF).contains(&hi) {
+            // Plain BMP scalar: every non-surrogate u16 is a valid char.
+            return char::from_u32(hi)
+                .ok_or_else(|| format!("invalid \\u{hi:04x} at byte {}", self.pos));
+        }
+        // High surrogate: a low surrogate escape must follow immediately.
+        if self.peek() != Some(b'\\') {
+            return Err(format!(
+                "unpaired high surrogate \\u{hi:04x} at byte {} (expected \\uDC00..\\uDFFF next)",
+                self.pos
+            ));
+        }
+        self.pos += 1;
+        if self.peek() != Some(b'u') {
+            return Err(format!(
+                "unpaired high surrogate \\u{hi:04x} at byte {} (expected \\uDC00..\\uDFFF next)",
+                self.pos
+            ));
+        }
+        self.pos += 1;
+        let lo = self.hex4()?;
+        if !(0xDC00..=0xDFFF).contains(&lo) {
+            return Err(format!(
+                "invalid low surrogate \\u{lo:04x} after \\u{hi:04x}"
+            ));
+        }
+        let cp = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+        char::from_u32(cp).ok_or_else(|| format!("invalid surrogate pair \\u{hi:04x}\\u{lo:04x}"))
     }
 
     fn array(&mut self) -> Result<Json, String> {
@@ -371,5 +448,66 @@ mod tests {
         let j = Json::Str("a\"b\\c\nd".into());
         assert_eq!(j.to_string(), r#""a\"b\\c\nd""#);
         assert_eq!(parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn bmp_unicode_escapes_decode() {
+        assert_eq!(parse(r#""\u0041""#).unwrap(), Json::Str("A".into()));
+        assert_eq!(parse(r#""\u00e9""#).unwrap(), Json::Str("é".into()));
+        assert_eq!(parse(r#""\u2713""#).unwrap(), Json::Str("✓".into()));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_to_non_bmp_chars() {
+        // U+1F600 GRINNING FACE = 😀
+        assert_eq!(parse(r#""\ud83d\ude00""#).unwrap(), Json::Str("😀".into()));
+        // mixed-case hex, embedded in surrounding text
+        assert_eq!(
+            parse(r#""ok \uD83D\uDE80 go""#).unwrap(),
+            Json::Str("ok 🚀 go".into())
+        );
+        // U+10000, the lowest non-BMP scalar
+        assert_eq!(
+            parse(r#""\ud800\udc00""#).unwrap(),
+            Json::Str("\u{10000}".into())
+        );
+        // U+10FFFF, the highest
+        assert_eq!(
+            parse(r#""\udbff\udfff""#).unwrap(),
+            Json::Str("\u{10FFFF}".into())
+        );
+    }
+
+    #[test]
+    fn unpaired_surrogates_are_rejected_loudly() {
+        // lone high surrogate at end of string
+        let e = parse(r#""\ud800""#).unwrap_err();
+        assert!(e.contains("unpaired high surrogate"), "{e}");
+        // high surrogate followed by ordinary text
+        let e = parse(r#""\ud83dx""#).unwrap_err();
+        assert!(e.contains("unpaired high surrogate"), "{e}");
+        // high surrogate followed by a non-\u escape
+        let e = parse(r#""\ud83d\n""#).unwrap_err();
+        assert!(e.contains("unpaired high surrogate"), "{e}");
+        // lone low surrogate
+        let e = parse(r#""\ude00""#).unwrap_err();
+        assert!(e.contains("unpaired low surrogate"), "{e}");
+        // high surrogate followed by another high surrogate
+        let e = parse(r#""\ud83d\ud83d""#).unwrap_err();
+        assert!(e.contains("invalid low surrogate"), "{e}");
+        // truncated and malformed hex still fail
+        assert!(parse(r#""\u12""#).is_err());
+        assert!(parse(r#""\uzzzz""#).is_err());
+    }
+
+    #[test]
+    fn non_bmp_strings_round_trip_through_writer_and_parser() {
+        // The writer emits non-BMP characters as raw UTF-8; the parser
+        // accepts both that and the escaped surrogate-pair spelling.
+        let j = Json::Str("emoji 😀🚀 done".into());
+        let text = j.to_string();
+        assert_eq!(parse(&text).unwrap(), j);
+        let escaped = r#""emoji \ud83d\ude00\ud83d\ude80 done""#;
+        assert_eq!(parse(escaped).unwrap(), j);
     }
 }

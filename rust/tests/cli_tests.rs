@@ -38,6 +38,55 @@ fn dot_command_succeeds() {
 }
 
 #[test]
+fn run_command_selects_pruners_by_name_and_streams_events() {
+    let path = std::env::temp_dir().join("cprune_cli_test_run_events.jsonl");
+    let p = path.to_str().unwrap();
+    let _ = std::fs::remove_file(&path);
+    let code = run(&[
+        "run", "--pruner", "magnitude", "--model", "resnet8-cifar",
+        "--device", "kryo385", "--quiet", "--events", p,
+    ]);
+    assert_eq!(code, 0);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    let header = json::parse(lines[0]).expect("header line must parse");
+    assert_eq!(header.get("format").unwrap().as_str(), Some("cprune-run-events"));
+    let last = json::parse(lines.last().unwrap()).expect("finished line must parse");
+    assert_eq!(last.get("event").unwrap().as_str(), Some("finished"));
+    assert_eq!(last.get("pruner").unwrap().as_str(), Some("magnitude"));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn run_command_rejects_unknown_pruners() {
+    assert_eq!(run(&["run", "--pruner", "dropout", "--model", "resnet8-cifar"]), 2);
+}
+
+#[test]
+fn run_command_accepts_key_equals_value_flags() {
+    assert_eq!(
+        run(&["run", "--pruner=pqf", "--model=resnet8-cifar", "--quiet"]),
+        0
+    );
+}
+
+#[test]
+fn flag_lookalike_values_fail_loudly_instead_of_being_swallowed() {
+    // Legacy parsing silently made `--events` a boolean here.
+    assert_eq!(run(&["run", "--model", "resnet8-cifar", "--events", "--foo.jsonl"]), 2);
+}
+
+#[test]
+fn serve_with_no_search_and_missing_frontier_fails_with_nonzero_exit() {
+    // --no-search forbids the CPrune backfill, and no registry was
+    // supplied: the requested device has no frontier to serve from.
+    assert_eq!(
+        run(&["serve", "--model", "resnet8-cifar", "--devices", "kryo385", "--no-search"]),
+        1
+    );
+}
+
+#[test]
 fn report_fig6_smoke() {
     assert_eq!(run(&["report", "fig6", "--scale", "smoke"]), 0);
 }

@@ -1,0 +1,308 @@
+//! The run layer's contract (DESIGN.md §9):
+//!
+//! 1. **Equivalence** — `RunBuilder` + `Pruner` runs reproduce the
+//!    legacy `cprune`/`cprune_with_session`/`baselines::*` free-function
+//!    results bit-for-bit for fixed seeds (the free functions are shims
+//!    over the trait, and the builder wiring must not perturb them);
+//! 2. **Events** — a seeded run with a JSONL sink produces a parseable
+//!    log whose `finished` event matches the returned `PruneOutcome`;
+//! 3. **Schema** — the JSONL event serialization is pinned by a golden
+//!    file (`tests/golden/run_events.jsonl`, `cprune-run-events` v1).
+
+use cprune::accuracy::ProxyOracle;
+use cprune::baselines::amc::{amc, AmcConfig};
+use cprune::baselines::fpgm::fpgm_prune;
+use cprune::baselines::magnitude::magnitude_prune;
+use cprune::baselines::netadapt::{netadapt, NetAdaptConfig};
+use cprune::baselines::pqf::pqf;
+use cprune::baselines::{original_row, Outcome};
+use cprune::device::{DeviceSpec, Simulator};
+use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::pruner::{cprune, CPruneConfig};
+use cprune::run::{
+    pruner_by_name, Amc, CPrune, Fpgm, JsonlSink, Magnitude, NetAdapt, Pqf, Pruner,
+    RegistryPublisher, RunBuilder, RunEvent,
+};
+use cprune::serve::Checkpoint;
+use cprune::tuner::{TuneOptions, TuningSession};
+use cprune::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+#[test]
+fn run_builder_reproduces_legacy_cprune_bit_for_bit() {
+    let seed = 3;
+    let cfg = CPruneConfig { max_iterations: 6, seed, ..Default::default() };
+    let model = Model::build(ModelKind::ResNet8Cifar, seed);
+    let sim = Simulator::new(DeviceSpec::kryo385());
+    let mut oracle = ProxyOracle::new();
+    let legacy = cprune(&model, &sim, &mut oracle, &cfg);
+
+    let mut run = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .device("kryo385")
+        .seed(seed)
+        .build()
+        .unwrap();
+    let out = run.execute(&CPrune::with_cfg(cfg)).unwrap();
+
+    assert_eq!(out.final_latency, legacy.final_latency);
+    assert_eq!(out.final_fps, legacy.final_fps);
+    assert_eq!(out.fps_increase_rate, legacy.fps_increase_rate);
+    assert_eq!(out.top1, legacy.final_top1);
+    assert_eq!(out.top5, legacy.final_top5);
+    assert_eq!(out.channels, legacy.final_state.cout);
+    assert_eq!(out.search_candidates, legacy.candidates_tried);
+    assert_eq!(out.pareto, legacy.pareto);
+    assert_eq!(out.iterations.len(), legacy.iterations.len());
+    for (a, b) in out.iterations.iter().zip(&legacy.iterations) {
+        assert_eq!(a.iteration, b.iteration);
+        assert_eq!(a.latency, b.latency);
+        assert_eq!(a.short_accuracy, b.short_accuracy);
+        assert_eq!(a.pruned_convs, b.pruned_convs);
+        assert_eq!(a.filters_removed, b.filters_removed);
+    }
+}
+
+#[test]
+fn run_builder_reproduces_legacy_one_shot_baselines_bit_for_bit() {
+    let seed = 5;
+    let kind = ModelKind::Vgg16Cifar;
+    let model = Model::build(kind, seed);
+    let sim = Simulator::new(DeviceSpec::kryo385());
+    let session = TuningSession::new(&sim, TuneOptions::quick(), seed);
+    let mut oracle = ProxyOracle::new();
+    let (_, base_latency) = original_row(&model, &session);
+    let pairs: Vec<(Outcome, Box<dyn Pruner>)> = vec![
+        (
+            magnitude_prune(&model, 0.3, &session, &mut oracle, base_latency),
+            Box::new(Magnitude::at(0.3)),
+        ),
+        (
+            fpgm_prune(&model, 0.25, &session, &mut oracle, base_latency),
+            Box::new(Fpgm::at(0.25)),
+        ),
+        (
+            amc(&model, &session, &mut oracle, &AmcConfig::default(), base_latency),
+            Box::new(Amc::default()),
+        ),
+        (pqf(&model, &session, &sim, base_latency), Box::new(Pqf)),
+    ];
+
+    let mut run = RunBuilder::new(kind).device("kryo385").seed(seed).build().unwrap();
+    for (legacy, pruner) in &pairs {
+        let out = run.execute(pruner.as_ref()).unwrap();
+        assert_eq!(out.method, legacy.method);
+        assert_eq!(out.final_fps, legacy.fps, "{}", legacy.method);
+        assert_eq!(out.fps_increase_rate, legacy.fps_increase_rate, "{}", legacy.method);
+        assert_eq!(out.macs, legacy.macs, "{}", legacy.method);
+        assert_eq!(out.params, legacy.params, "{}", legacy.method);
+        assert_eq!(out.top1, legacy.top1, "{}", legacy.method);
+        assert_eq!(out.top5, legacy.top5, "{}", legacy.method);
+        assert_eq!(out.baseline_latency, base_latency, "{}", legacy.method);
+    }
+}
+
+#[test]
+fn run_builder_reproduces_legacy_netadapt_bit_for_bit() {
+    let seed = 2;
+    let kind = ModelKind::ResNet8Cifar;
+    let model = Model::build(kind, seed);
+    let sim = Simulator::new(DeviceSpec::kryo385());
+    let session = TuningSession::new(&sim, TuneOptions::quick(), seed);
+    let mut oracle = ProxyOracle::new();
+    let cfg = NetAdaptConfig {
+        target_latency_ratio: 0.8,
+        max_iterations: 6,
+        ..Default::default()
+    };
+    let legacy = netadapt(&model, &session, &sim, &mut oracle, &cfg);
+
+    let mut run = RunBuilder::new(kind).device("kryo385").seed(seed).build().unwrap();
+    let out = run.execute(&NetAdapt::with(cfg)).unwrap();
+    assert_eq!(out.final_fps, legacy.outcome.fps);
+    assert_eq!(out.fps_increase_rate, legacy.outcome.fps_increase_rate);
+    assert_eq!(out.top1, legacy.outcome.top1);
+    assert_eq!(out.search_candidates, legacy.candidates_tried);
+    assert_eq!(out.iterations.len(), legacy.iterations);
+    assert_eq!(out.channels, legacy.state.cout);
+}
+
+#[test]
+fn registry_selects_algorithms_uniformly_with_no_wiring_branches() {
+    // The acceptance loop: every registered name runs through identical
+    // builder wiring and returns a servable outcome.
+    let mut run = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .device("kryo585")
+        .seed(4)
+        .max_iterations(3)
+        .build()
+        .unwrap();
+    for name in ["cprune", "magnitude", "fpgm", "netadapt", "amc", "pqf"] {
+        let pruner = pruner_by_name(name).expect(name);
+        let out = run.execute(pruner.as_ref()).unwrap();
+        assert_eq!(out.pruner, name);
+        assert_eq!(out.device, "kryo585");
+        assert!(out.final_fps > 0.0 && out.final_fps.is_finite(), "{name}");
+        assert!(!out.pareto.is_empty(), "{name}");
+    }
+}
+
+#[test]
+fn seeded_run_with_events_produces_parseable_jsonl_matching_the_outcome() {
+    let path = std::env::temp_dir().join("cprune_run_api_events_test.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let mut run = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .device("kryo385")
+        .seed(1)
+        .max_iterations(4)
+        .observer(Box::new(JsonlSink::create(&path).unwrap()))
+        .build()
+        .unwrap();
+    let out = run.execute(&CPrune::default()).unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() >= 3, "header + events + finished expected");
+    let header = json::parse(lines[0]).unwrap();
+    assert_eq!(header.get("format").and_then(Json::as_str), Some("cprune-run-events"));
+    assert_eq!(header.get("version").and_then(Json::as_usize), Some(1));
+
+    let mut accepted = 0usize;
+    let mut checkpoints = 0usize;
+    let mut baseline_tuned = 0usize;
+    let mut finished: Option<Json> = None;
+    for line in &lines[1..] {
+        let j = json::parse(line).unwrap_or_else(|e| panic!("bad event line {line}: {e}"));
+        match j.get("event").and_then(Json::as_str).expect("event tag") {
+            "iteration_accepted" => accepted += 1,
+            "checkpoint_emitted" => checkpoints += 1,
+            "baseline_tuned" => baseline_tuned += 1,
+            "finished" => finished = Some(j.clone()),
+            _ => {}
+        }
+    }
+    assert_eq!(baseline_tuned, 1);
+    assert_eq!(accepted, out.iterations.len());
+    // iteration-0 baseline checkpoint + one per accepted iteration
+    assert_eq!(checkpoints, out.iterations.len() + 1);
+
+    let fin = finished.expect("finished event present");
+    assert_eq!(fin.get("pruner").and_then(Json::as_str), Some("cprune"));
+    assert_eq!(fin.get("final_latency").unwrap().as_f64().unwrap(), out.final_latency);
+    assert_eq!(fin.get("final_fps").unwrap().as_f64().unwrap(), out.final_fps);
+    assert_eq!(
+        fin.get("fps_increase_rate").unwrap().as_f64().unwrap(),
+        out.fps_increase_rate
+    );
+    assert_eq!(fin.get("top1").unwrap().as_f64().unwrap(), out.top1);
+    assert_eq!(fin.get("iterations").unwrap().as_usize().unwrap(), out.iterations.len());
+    assert_eq!(fin.get("pareto_points").unwrap().as_usize().unwrap(), out.pareto.len());
+    // the finished event is the log's last line
+    assert_eq!(
+        json::parse(lines.last().unwrap()).unwrap().get("event").and_then(Json::as_str),
+        Some("finished")
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn registry_publisher_accumulates_exactly_the_run_frontier() {
+    let model_name = ModelKind::ResNet8Cifar.name();
+    let publisher = RegistryPublisher::new(model_name, "kryo385");
+    let registry = publisher.registry();
+    let mut run = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .device("kryo385")
+        .seed(2)
+        .max_iterations(4)
+        .observer(Box::new(publisher))
+        .build()
+        .unwrap();
+    let out = run.execute(&CPrune::default()).unwrap();
+    let reg = registry.borrow();
+    let set = reg.get(model_name, "kryo385").expect("auto-published frontier");
+    assert_eq!(set, &out.pareto);
+}
+
+/// The events this crate promises to serialize stably — must stay in
+/// sync with `tests/golden/run_events.jsonl` (one object per line, after
+/// the header). When the schema changes intentionally, bump
+/// `EVENTS_VERSION` and regenerate the golden file.
+fn golden_events() -> Vec<RunEvent> {
+    let mut channels = BTreeMap::new();
+    channels.insert(3usize, 16usize);
+    channels.insert(11, 32);
+    vec![
+        RunEvent::BaselineTuned { latency: 0.25, fps: 4.0 },
+        RunEvent::CandidateMeasured {
+            iteration: 1,
+            latency: 0.125,
+            latency_target: 0.25,
+            candidates_tried: 1,
+        },
+        RunEvent::IterationRejected {
+            iteration: 1,
+            latency: 0.5,
+            latency_target: 0.25,
+            short_accuracy: None,
+            accuracy_gate: None,
+            reason: cprune::run::RejectReason::LatencyGate,
+        },
+        RunEvent::IterationAccepted {
+            iteration: 1,
+            latency: 0.125,
+            latency_target: 0.25,
+            short_accuracy: 0.75,
+            accuracy_gate: 0.5,
+            filters_removed: 8,
+        },
+        RunEvent::TaskBanned { conv: 7, reason: "accuracy_gate".to_string() },
+        RunEvent::CheckpointEmitted {
+            checkpoint: Checkpoint { iteration: 1, latency: 0.125, accuracy: 0.75, channels },
+        },
+        RunEvent::Finished {
+            pruner: "cprune".to_string(),
+            method: "CPrune".to_string(),
+            model: "resnet-8".to_string(),
+            device: "kryo385".to_string(),
+            final_latency: 0.125,
+            final_fps: 8.0,
+            fps_increase_rate: 2.0,
+            top1: 0.75,
+            top5: 0.875,
+            macs: 1000,
+            params: 100,
+            iterations: 1,
+            search_candidates: 1,
+            pareto_points: 2,
+        },
+    ]
+}
+
+#[test]
+fn golden_file_pins_the_jsonl_event_schema() {
+    let golden = include_str!("golden/run_events.jsonl");
+    let lines: Vec<&str> = golden.lines().collect();
+    let events = golden_events();
+    assert_eq!(
+        lines.len(),
+        events.len() + 1,
+        "golden file must hold the header plus one line per pinned event"
+    );
+    assert_eq!(
+        RunEvent::header_json().to_string(),
+        lines[0],
+        "header drifted from the golden file"
+    );
+    for (ev, line) in events.iter().zip(&lines[1..]) {
+        assert_eq!(
+            ev.to_json().to_string(),
+            *line,
+            "event schema drifted from the golden file ({}); bump EVENTS_VERSION \
+             and regenerate tests/golden/run_events.jsonl if intentional",
+            ev.kind()
+        );
+        // every golden line is canonical writer output (parse → rewrite
+        // is the identity), so the file doubles as a parser fixture
+        let parsed = json::parse(line).unwrap_or_else(|e| panic!("bad golden line {line}: {e}"));
+        assert_eq!(parsed.to_string(), *line);
+    }
+}
