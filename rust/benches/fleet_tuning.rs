@@ -1,10 +1,13 @@
 //! Fleet compilation bench: tune MobileNetV2 for every mobile target in
 //! one FleetSession (pilot-seeded), then repeat warm to show the
-//! persistent cache's programs-measured savings.
+//! persistent cache's programs-measured savings. The device set and model
+//! come from the perf harness (DESIGN.md §10), so this bench and
+//! `cprune bench --tier full`'s BENCH_tuner.json measure the same fleet
+//! workload.
 //! Run: cargo bench --bench fleet_tuning
 
-use cprune::device::DeviceSpec;
-use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::graph::model_zoo::Model;
+use cprune::perf::{fleet_devices, fleet_model, Tier};
 use cprune::tuner::{FleetDeviceResult, FleetOptions, FleetResult, FleetSession, TuneOptions};
 use cprune::util::bench::print_table;
 use std::time::Instant;
@@ -14,9 +17,9 @@ fn device_rows(r: &FleetResult) -> Vec<Vec<String>> {
 }
 
 fn main() {
-    let model = Model::build(ModelKind::MobileNetV2ImageNet, 42);
+    let model = Model::build(fleet_model(Tier::Full), 42);
     let mut fleet = FleetSession::new(
-        DeviceSpec::mobile_targets(),
+        fleet_devices(Tier::Full),
         FleetOptions { tune: TuneOptions::default(), ..Default::default() },
         42,
     );

@@ -1,23 +1,23 @@
 //! L3 microbenchmarks: tuner throughput, simulator latency-model speed,
 //! partition + task extraction, tuned compile on the small model.
-//! These are the §Perf hot paths. Run: cargo bench --bench tuner_micro
+//! These are the §Perf hot paths (DESIGN.md §10); the same workloads run
+//! under `cprune bench` into BENCH_tuner.json, so numbers here line up
+//! with the recorded perf trajectory.
+//! Run: cargo bench --bench tuner_micro
 
 use cprune::device::{DeviceSpec, Simulator};
 use cprune::graph::model_zoo::{Model, ModelKind};
-use cprune::graph::ops::OpKind;
+use cprune::perf::hot_conv_workload;
 use cprune::relay::partition::extract_tasks;
-use cprune::tir::{Program, Workload};
+use cprune::tir::Program;
+use cprune::tuner::search::tune_task_reference;
 use cprune::tuner::{tune_task, TuneOptions, TuningSession};
 use cprune::util::bench::{bench_auto, print_table};
 use cprune::util::rng::Rng;
 use std::collections::HashMap;
 
 fn main() {
-    let w = Workload::from_conv(
-        &OpKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: 256, stride: 1, padding: 1, groups: 1 },
-        [1, 28, 28, 256],
-        vec!["bn", "relu"],
-    );
+    let w = hot_conv_workload();
     let sim = Simulator::new(DeviceSpec::kryo385());
 
     let mut rng = Rng::new(0);
@@ -37,6 +37,18 @@ fn main() {
         std::hint::black_box(tune_task(&w, &sim, &TuneOptions::quick(), &mut rng, None));
     });
     r.report();
+
+    // The pre-optimization search (comparator-time scoring, full-history
+    // re-sort, allocation-per-program evolution) on identical seeds: the
+    // reported ratio is the hot-loop speedup the optimized path buys.
+    let mut seed_ref = 0u64;
+    let r_ref = bench_auto("tune_task_quick_reference", 3000, || {
+        seed_ref += 1;
+        let mut rng = Rng::new(seed_ref);
+        std::hint::black_box(tune_task_reference(&w, &sim, &TuneOptions::quick(), &mut rng, None));
+    });
+    r_ref.report();
+    println!("BENCH tune_task_speedup_vs_reference {:.2}", r_ref.median_ns / r.median_ns);
 
     let m = Model::build(ModelKind::ResNet18ImageNet, 0);
     let r = bench_auto("partition_resnet18", 2000, || {

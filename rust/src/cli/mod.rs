@@ -230,6 +230,33 @@ fn close_session(session: &TuningSession, cache_path: Option<&String>) -> i32 {
     0
 }
 
+/// Print one perf suite's table + machine-grepable BENCH lines and save
+/// its `BENCH_<suite>.json`; `Some(exit_code)` on failure.
+fn emit_bench_report(report: &crate::perf::PerfReport, seed: u64, out_dir: &str) -> Option<i32> {
+    let rows: Vec<Vec<String>> = report.records.iter().map(|r| r.table_row()).collect();
+    print_table(
+        &format!("{} suite ({} tier, seed {})", report.suite, report.tier.name(), seed),
+        &["benchmark", "wall s", "programs measured"],
+        &rows,
+    );
+    for r in &report.records {
+        println!("BENCH {} wall_s {:.3} measured {}", r.name, r.wall_s, r.programs_measured);
+        for (k, v) in &r.metrics {
+            println!("BENCH {}.{k} {v:.3}", r.name);
+        }
+    }
+    match report.save(out_dir) {
+        Ok(path) => {
+            println!("bench: wrote {}", path.display());
+            None
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            Some(1)
+        }
+    }
+}
+
 const USAGE: &str = "cprune — compiler-informed model pruning (paper reproduction)
 
 USAGE:
@@ -243,6 +270,7 @@ USAGE:
                    [--accuracy-floor A] [--trace-seed S] [--max-batch B] [--iters N]
                    [--registry FILE] [--no-search] [--seed S]
   cprune compare   [--model M] [--device D] [--seed S]
+  cprune bench     [--tier quick|full] [--seed S] [--out-dir DIR]
   cprune report    <fig1|fig6|fig7|fig8|fig9|fig10|fig11|table1|table2> [--scale smoke|full]
   cprune dot       [--model M]                    # graphviz of graph+subgraphs+tasks
   cprune calibrate [--device D]                   # fit sim scale to paper anchors
@@ -283,6 +311,14 @@ SERVING:
   under load. Reports p50/p95/p99 latency, throughput and SLO-violation
   rate — byte-identical across runs with the same seeds. --registry FILE
   persists the Pareto sets (versioned JSON).
+
+BENCH:
+  `bench` runs the perf-trajectory harness (DESIGN.md §10): the tuner
+  hot-path and end-to-end CPrune workloads with pinned seeds, writing
+  versioned BENCH_tuner.json / BENCH_e2e.json into --out-dir (default:
+  the current directory). Wall times are host-dependent; the
+  programs-measured counts are deterministic for a pinned seed, which CI
+  smoke-checks. --tier quick is CI-sized; --tier full is trajectory-grade.
 
 FEATURES:
   The optional `pjrt` cargo feature (cargo build --features pjrt) enables
@@ -637,6 +673,32 @@ pub fn run(argv: Vec<String>) -> i32 {
                     1
                 }
             }
+        }
+        "bench" => {
+            let tier_name = args.flags.get("tier").map(String::as_str).unwrap_or("quick");
+            let Some(tier) = crate::perf::Tier::parse(tier_name) else {
+                eprintln!("unknown tier '{tier_name}'. options: quick, full");
+                return 2;
+            };
+            let out_dir = args.flags.get("out-dir").cloned().unwrap_or_else(|| ".".to_string());
+            // Run, print and persist each suite as it completes, so the
+            // tuner results reach the terminal and disk even if the
+            // (later, slower) e2e suite fails.
+            let tuner = crate::perf::run_tuner_suite(tier, seed);
+            if let Some(code) = emit_bench_report(&tuner, seed, &out_dir) {
+                return code;
+            }
+            let e2e = match crate::perf::run_e2e_suite(tier, seed) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            if let Some(code) = emit_bench_report(&e2e, seed, &out_dir) {
+                return code;
+            }
+            0
         }
         "compare" => {
             let block = exp::table1::run_cell(model_kind, device, Scale::Smoke, seed);

@@ -31,6 +31,7 @@ pub mod compiler;
 pub mod device;
 pub mod exp;
 pub mod graph;
+pub mod perf;
 pub mod pruner;
 pub mod relay;
 pub mod run;

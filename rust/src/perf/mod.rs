@@ -1,0 +1,367 @@
+//! Perf-trajectory harness: versioned `BENCH_*.json` for every PR
+//! (DESIGN.md §10).
+//!
+//! `cprune bench --tier quick|full` runs the hot-path workloads the
+//! standalone benches (`benches/tuner_micro.rs`, `benches/fleet_tuning.rs`)
+//! exercise — with pinned seeds — and records wall-clock seconds plus
+//! programs-measured counts into `BENCH_tuner.json` / `BENCH_e2e.json`
+//! (`cprune-bench` format v1). Wall times vary with the host; the
+//! measured-program counts are deterministic for a pinned seed, so CI can
+//! smoke-check them while the JSON artifacts accumulate a cross-PR perf
+//! trajectory.
+//!
+//! The tuner suite also times `tune_task` against the straightforward
+//! reference search it was optimized from (`tuner::search`), reporting
+//! `speedup_vs_reference` — the measured win of the scoring cache, elite
+//! pool and allocation-reusing evolution.
+
+use crate::device::{DeviceSpec, Simulator};
+use crate::graph::model_zoo::{Model, ModelKind};
+use crate::graph::ops::OpKind;
+use crate::run::{CPrune, RunBuilder};
+use crate::tir::Workload;
+use crate::tuner::search::tune_task_reference;
+use crate::tuner::{tune_task, FleetOptions, FleetSession, TuneOptions, TuningSession};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Format tag of the `BENCH_*.json` header (guards foreign JSON files).
+pub const BENCH_FORMAT: &str = "cprune-bench";
+/// Bump when the record schema changes.
+pub const BENCH_VERSION: u64 = 1;
+
+/// Benchmark effort tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// CI-sized: seconds, quick tune budgets, small models.
+    Quick,
+    /// Trajectory-grade: the full bench workloads (minutes).
+    Full,
+}
+
+impl Tier {
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s {
+            "quick" => Some(Tier::Quick),
+            "full" => Some(Tier::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Quick => "quick",
+            Tier::Full => "full",
+        }
+    }
+}
+
+/// One benchmark's outcome: wall clock, search cost, extra metrics.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    /// Wall-clock seconds for the whole workload (host-dependent).
+    pub wall_s: f64,
+    /// Programs measured on the simulated device — deterministic for a
+    /// pinned seed (the CI smoke contract).
+    pub programs_measured: usize,
+    /// Named extra metrics (speedups, hit rates, FPS...).
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl BenchRecord {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("programs_measured", Json::Num(self.programs_measured as f64)),
+        ];
+        for (k, v) in &self.metrics {
+            pairs.push((k.as_str(), Json::Num(*v)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Row for `util::bench::print_table` (name, wall, measured).
+    pub fn table_row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            format!("{:.3}", self.wall_s),
+            self.programs_measured.to_string(),
+        ]
+    }
+}
+
+/// A suite's records, serializable as versioned `BENCH_<suite>.json`.
+#[derive(Clone, Debug)]
+pub struct PerfReport {
+    /// Suite tag — becomes the file name (`tuner` → `BENCH_tuner.json`).
+    pub suite: String,
+    pub tier: Tier,
+    pub seed: u64,
+    pub records: Vec<BenchRecord>,
+}
+
+impl PerfReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Str(BENCH_FORMAT.to_string())),
+            ("version", Json::Num(BENCH_VERSION as f64)),
+            ("suite", Json::Str(self.suite.clone())),
+            ("tier", Json::Str(self.tier.name().to_string())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("records", Json::Arr(self.records.iter().map(BenchRecord::to_json).collect())),
+        ])
+    }
+
+    /// The report's file name (`BENCH_tuner.json`, `BENCH_e2e.json`).
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.suite)
+    }
+
+    /// Write `BENCH_<suite>.json` into `dir` (created if absent).
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<PathBuf, String> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
+        let path = dir.join(self.file_name());
+        std::fs::write(&path, self.to_json().to_string())
+            .map_err(|e| format!("writing {}: {e}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// The benches' hot conv workload (`tuner_micro`'s 256-filter 3×3 conv).
+pub fn hot_conv_workload() -> Workload {
+    Workload::from_conv(
+        &OpKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: 256, stride: 1, padding: 1, groups: 1 },
+        [1, 28, 28, 256],
+        vec!["bn", "relu"],
+    )
+}
+
+/// The fleet bench's device set for a tier (`fleet_tuning` uses the full
+/// mobile-target roster; quick keeps CI under a minute with three).
+pub fn fleet_devices(tier: Tier) -> Vec<DeviceSpec> {
+    match tier {
+        Tier::Quick => vec![DeviceSpec::kryo385(), DeviceSpec::kryo585(), DeviceSpec::mali_g72()],
+        Tier::Full => DeviceSpec::mobile_targets(),
+    }
+}
+
+/// The fleet bench's model for a tier.
+pub fn fleet_model(tier: Tier) -> ModelKind {
+    match tier {
+        Tier::Quick => ModelKind::ResNet8Cifar,
+        Tier::Full => ModelKind::MobileNetV2ImageNet,
+    }
+}
+
+/// Tuner-hot-path suite → `BENCH_tuner.json`.
+///
+/// Records: `tune_task` repeats on the hot conv (with the
+/// reference-search speedup), a fresh-session `tune_graph`, and a
+/// cold+warm fleet compilation.
+pub fn run_tuner_suite(tier: Tier, seed: u64) -> PerfReport {
+    let mut records = Vec::new();
+    let (task_iters, graph_iters) = match tier {
+        Tier::Quick => (8usize, 2usize),
+        Tier::Full => (48, 8),
+    };
+
+    // -- tune_task on the hot conv, optimized vs reference ----------------
+    let w = hot_conv_workload();
+    let sim = Simulator::new(DeviceSpec::kryo385());
+    let mut measured = 0usize;
+    let t0 = Instant::now();
+    for i in 0..task_iters {
+        let mut rng = crate::util::rng::Rng::new(seed.wrapping_add(i as u64));
+        measured += tune_task(&w, &sim, &TuneOptions::quick(), &mut rng, None).measured;
+    }
+    let opt_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    for i in 0..task_iters {
+        let mut rng = crate::util::rng::Rng::new(seed.wrapping_add(i as u64));
+        let _ = tune_task_reference(&w, &sim, &TuneOptions::quick(), &mut rng, None);
+    }
+    let ref_s = t1.elapsed().as_secs_f64();
+    records.push(BenchRecord {
+        name: "tune_task_hot_conv".to_string(),
+        wall_s: opt_s,
+        programs_measured: measured,
+        metrics: vec![
+            ("iters".to_string(), task_iters as f64),
+            ("reference_wall_s".to_string(), ref_s),
+            ("speedup_vs_reference".to_string(), if opt_s > 0.0 { ref_s / opt_s } else { 0.0 }),
+        ],
+    });
+
+    // -- whole-graph tuning, fresh session each time ----------------------
+    let small = Model::build(ModelKind::ResNet8Cifar, 0);
+    let mut measured = 0usize;
+    let t0 = Instant::now();
+    for i in 0..graph_iters {
+        let s = seed.wrapping_add(i as u64);
+        let session = TuningSession::new(&sim, TuneOptions::quick(), s);
+        let table = session.tune_graph(&small.graph, &HashMap::new());
+        std::hint::black_box(table.model_latency());
+        measured += session.measured_count();
+    }
+    records.push(BenchRecord {
+        name: "tune_graph_resnet8".to_string(),
+        wall_s: t0.elapsed().as_secs_f64(),
+        programs_measured: measured,
+        metrics: vec![("iters".to_string(), graph_iters as f64)],
+    });
+
+    // -- fleet compilation, cold then warm --------------------------------
+    let model = Model::build(fleet_model(tier), seed);
+    let opts = match tier {
+        Tier::Quick => TuneOptions::quick(),
+        Tier::Full => TuneOptions::default(),
+    };
+    let mut fleet = FleetSession::new(
+        fleet_devices(tier),
+        FleetOptions { tune: opts, threads: 0, cross_seed: true },
+        seed,
+    );
+    let t0 = Instant::now();
+    let cold = fleet.tune_graph(&model.graph);
+    let cold_s = t0.elapsed().as_secs_f64();
+    records.push(BenchRecord {
+        name: "fleet_cold".to_string(),
+        wall_s: cold_s,
+        programs_measured: cold.total_measured(),
+        metrics: vec![("devices".to_string(), cold.devices.len() as f64)],
+    });
+    let t1 = Instant::now();
+    let warm = fleet.tune_graph(&model.graph);
+    records.push(BenchRecord {
+        name: "fleet_warm".to_string(),
+        wall_s: t1.elapsed().as_secs_f64(),
+        programs_measured: warm.total_measured(),
+        metrics: vec![
+            ("hit_rate".to_string(), warm.hit_rate()),
+            ("measured_saved".to_string(), warm.total_measured_saved() as f64),
+        ],
+    });
+
+    PerfReport { suite: "tuner".to_string(), tier, seed, records }
+}
+
+/// End-to-end suite → `BENCH_e2e.json`: a CPrune run (cold, then warm on
+/// the same session cache) through the §9 run layer. Errors propagate so
+/// the CLI can fail cleanly without discarding earlier suites.
+pub fn run_e2e_suite(tier: Tier, seed: u64) -> Result<PerfReport, String> {
+    let iters = match tier {
+        Tier::Quick => 4usize,
+        Tier::Full => 12,
+    };
+    let mut run = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .device("kryo385")
+        .seed(seed)
+        .tune_opts(TuneOptions::quick())
+        .max_iterations(iters)
+        .build()
+        .map_err(|e| format!("e2e bench: {e}"))?;
+    let pruner = CPrune::default();
+
+    let mut records = Vec::new();
+    let t0 = Instant::now();
+    let cold = run.execute(&pruner).map_err(|e| format!("e2e bench cold run: {e}"))?;
+    records.push(BenchRecord {
+        name: "cprune_resnet8_cold".to_string(),
+        wall_s: t0.elapsed().as_secs_f64(),
+        programs_measured: cold.programs_measured,
+        metrics: vec![
+            ("fps_increase_rate".to_string(), cold.fps_increase_rate),
+            ("search_candidates".to_string(), cold.search_candidates as f64),
+            ("accepted_iterations".to_string(), cold.iterations.len() as f64),
+        ],
+    });
+    let t1 = Instant::now();
+    let warm = run.execute(&pruner).map_err(|e| format!("e2e bench warm run: {e}"))?;
+    records.push(BenchRecord {
+        name: "cprune_resnet8_warm".to_string(),
+        wall_s: t1.elapsed().as_secs_f64(),
+        programs_measured: warm.programs_measured,
+        metrics: vec![("cache_hits".to_string(), run.cache().hits() as f64)],
+    });
+
+    Ok(PerfReport { suite: "e2e".to_string(), tier, seed, records })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn tier_parses() {
+        assert_eq!(Tier::parse("quick"), Some(Tier::Quick));
+        assert_eq!(Tier::parse("full"), Some(Tier::Full));
+        assert_eq!(Tier::parse("medium"), None);
+        assert_eq!(Tier::Quick.name(), "quick");
+    }
+
+    #[test]
+    fn report_json_roundtrips_and_is_versioned() {
+        let report = PerfReport {
+            suite: "tuner".to_string(),
+            tier: Tier::Quick,
+            seed: 7,
+            records: vec![BenchRecord {
+                name: "x".to_string(),
+                wall_s: 1.5,
+                programs_measured: 42,
+                metrics: vec![("speedup_vs_reference".to_string(), 2.0)],
+            }],
+        };
+        assert_eq!(report.file_name(), "BENCH_tuner.json");
+        let j = json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(j.get("format").and_then(Json::as_str), Some(BENCH_FORMAT));
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("tier").and_then(Json::as_str), Some("quick"));
+        let rec = &j.get("records").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(rec.get("programs_measured").and_then(Json::as_usize), Some(42));
+        assert_eq!(rec.get("speedup_vs_reference").and_then(Json::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn quick_tuner_suite_counts_are_deterministic() {
+        // Wall times vary; the search-cost counts must not (the CI smoke
+        // contract for the pinned seed).
+        let a = run_tuner_suite(Tier::Quick, 42);
+        let b = run_tuner_suite(Tier::Quick, 42);
+        let counts = |r: &PerfReport| -> Vec<(String, usize)> {
+            r.records.iter().map(|x| (x.name.clone(), x.programs_measured)).collect()
+        };
+        assert_eq!(counts(&a), counts(&b));
+        assert!(a.records.iter().any(|r| r.programs_measured > 0));
+        // the optimized search must not lose to the reference
+        let tt = &a.records[0];
+        let speedup = tt
+            .metrics
+            .iter()
+            .find(|(k, _)| k == "speedup_vs_reference")
+            .map(|(_, v)| *v)
+            .unwrap();
+        assert!(speedup > 0.0);
+    }
+
+    #[test]
+    fn quick_e2e_suite_runs_and_warm_run_measures_nothing() {
+        let r = run_e2e_suite(Tier::Quick, 0).expect("quick e2e suite runs");
+        assert_eq!(r.records.len(), 2);
+        assert!(r.records[0].programs_measured > 0, "cold run measured nothing");
+        assert_eq!(r.records[1].programs_measured, 0, "warm run re-measured");
+        let dir = std::env::temp_dir().join("cprune_perf_test");
+        let path = r.save(&dir).unwrap();
+        assert!(path.ends_with("BENCH_e2e.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

@@ -186,7 +186,9 @@ pub struct PruneOutcome {
     pub search_candidates: usize,
     /// Wall-clock seconds of the search's main step.
     pub main_step_seconds: f64,
-    /// Programs measured by the tuner on this context's session.
+    /// Programs measured by the tuner on this context's session — an
+    /// honest per-`measure_avg`-call counter (DESIGN.md §10), the
+    /// paper's Fig. 11 search-cost metric.
     pub programs_measured: usize,
 }
 

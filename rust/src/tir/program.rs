@@ -12,7 +12,13 @@ use crate::util::rng::Rng;
 use crate::util::{divisors, lcm};
 
 /// One concrete schedule for a workload.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// `Eq`/`Hash` let the tuner key its measured-program seen-set by value
+/// (all fields are integers, so both derive exactly). `Clone` is written
+/// by hand so `clone_from` reuses the destination's split-tree
+/// allocations — the tuner's evolution loop (DESIGN.md §10) overwrites
+/// population slots in place instead of re-allocating every generation.
+#[derive(Debug, PartialEq, Eq, Hash)]
 pub struct Program {
     /// Split tree of the fused spatial axis (oh*ow): outer→inner factors.
     pub spatial_splits: Vec<usize>,
@@ -30,6 +36,30 @@ pub struct Program {
     pub unroll: usize,
 }
 
+impl Clone for Program {
+    fn clone(&self) -> Program {
+        Program {
+            spatial_splits: self.spatial_splits.clone(),
+            ff_splits: self.ff_splits.clone(),
+            ax3_splits: self.ax3_splits.clone(),
+            ic_splits: self.ic_splits.clone(),
+            parallel: self.parallel,
+            vectorize: self.vectorize,
+            unroll: self.unroll,
+        }
+    }
+
+    fn clone_from(&mut self, src: &Program) {
+        self.spatial_splits.clone_from(&src.spatial_splits);
+        self.ff_splits.clone_from(&src.ff_splits);
+        self.ax3_splits.clone_from(&src.ax3_splits);
+        self.ic_splits.clone_from(&src.ic_splits);
+        self.parallel = src.parallel;
+        self.vectorize = src.vectorize;
+        self.unroll = src.unroll;
+    }
+}
+
 impl Program {
     /// The naive untuned schedule (what a "default" / TFLite-like library
     /// path runs): no tiling beyond the trivial, scalar inner loop.
@@ -45,37 +75,64 @@ impl Program {
         }
     }
 
+    /// An all-empty placeholder, only for buffers that are immediately
+    /// overwritten via `Program::clone_from` / [`Program::sample_into`]
+    /// (it does not validate against any workload).
+    pub(crate) fn empty() -> Program {
+        Program {
+            spatial_splits: Vec::new(),
+            ff_splits: Vec::new(),
+            ax3_splits: Vec::new(),
+            ic_splits: Vec::new(),
+            parallel: 1,
+            vectorize: 1,
+            unroll: 1,
+        }
+    }
+
     /// Sample a random valid schedule (Ansor-style sketch sampling).
     pub fn sample(w: &Workload, rng: &mut Rng) -> Program {
-        let spatial = w.oh * w.ow;
-        let prog = Program {
-            spatial_splits: sample_splits(spatial, 3, rng),
-            ff_splits: sample_splits(w.ff, 3, rng),
-            ax3_splits: sample_splits(w.ff, 3, rng),
-            ic_splits: sample_splits(w.ic, 2, rng),
-            parallel: *rng.choose(&[1, 2, 4, 8]),
-            vectorize: *rng.choose(&[1, 4, 8, 16]),
-            unroll: *rng.choose(&[1, 2, 4, 16]),
-        };
-        debug_assert!(prog.validate(w).is_ok());
+        let mut prog = Program::empty();
+        Program::sample_into(w, rng, &mut prog);
         prog
+    }
+
+    /// [`Program::sample`] into an existing buffer, reusing its split-tree
+    /// allocations. Draws exactly the same RNG sequence as `sample`.
+    pub fn sample_into(w: &Workload, rng: &mut Rng, out: &mut Program) {
+        let spatial = w.oh * w.ow;
+        sample_splits_into(spatial, 3, rng, &mut out.spatial_splits);
+        sample_splits_into(w.ff, 3, rng, &mut out.ff_splits);
+        sample_splits_into(w.ff, 3, rng, &mut out.ax3_splits);
+        sample_splits_into(w.ic, 2, rng, &mut out.ic_splits);
+        out.parallel = *rng.choose(&[1, 2, 4, 8]);
+        out.vectorize = *rng.choose(&[1, 4, 8, 16]);
+        out.unroll = *rng.choose(&[1, 2, 4, 16]);
+        debug_assert!(out.validate(w).is_ok());
     }
 
     /// Mutate one schedule decision (evolutionary-search step).
     pub fn mutate(&self, w: &Workload, rng: &mut Rng) -> Program {
-        let mut p = self.clone();
+        let mut p = Program::empty();
+        self.mutate_into(w, rng, &mut p);
+        p
+    }
+
+    /// [`Program::mutate`] into an existing buffer, reusing its split-tree
+    /// allocations. Draws exactly the same RNG sequence as `mutate`.
+    pub fn mutate_into(&self, w: &Workload, rng: &mut Rng, out: &mut Program) {
+        out.clone_from(self);
         match rng.below(6) {
-            0 => p.spatial_splits = sample_splits(w.oh * w.ow, 3, rng),
-            1 => p.ff_splits = sample_splits(w.ff, 3, rng),
-            2 => p.ax3_splits = sample_splits(w.ff, 3, rng),
-            3 => p.ic_splits = sample_splits(w.ic, 2, rng),
-            4 => p.parallel = *rng.choose(&[1, 2, 4, 8]),
+            0 => sample_splits_into(w.oh * w.ow, 3, rng, &mut out.spatial_splits),
+            1 => sample_splits_into(w.ff, 3, rng, &mut out.ff_splits),
+            2 => sample_splits_into(w.ff, 3, rng, &mut out.ax3_splits),
+            3 => sample_splits_into(w.ic, 2, rng, &mut out.ic_splits),
+            4 => out.parallel = *rng.choose(&[1, 2, 4, 8]),
             _ => {
-                p.vectorize = *rng.choose(&[1, 4, 8, 16]);
-                p.unroll = *rng.choose(&[1, 2, 4, 16]);
+                out.vectorize = *rng.choose(&[1, 4, 8, 16]);
+                out.unroll = *rng.choose(&[1, 2, 4, 16]);
             }
         }
-        p
     }
 
     /// Check split products against the workload extents.
@@ -187,14 +244,23 @@ impl Program {
 ///   outer iterations (waste < 2×), which keeps awkward extents (primes,
 ///   e.g. a 179-channel pruned conv) tileable.
 pub fn sample_splits(extent: usize, nparts: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut out = Vec::with_capacity(nparts);
+    sample_splits_into(extent, nparts, rng, &mut out);
+    out
+}
+
+/// [`sample_splits`] into an existing buffer (cleared first), reusing its
+/// allocation. Draws exactly the same RNG sequence as `sample_splits`.
+pub fn sample_splits_into(extent: usize, nparts: usize, rng: &mut Rng, out: &mut Vec<usize>) {
     assert!(extent >= 1 && nparts >= 1);
+    out.clear();
     if nparts == 1 {
-        return vec![extent];
+        out.push(extent);
+        return;
     }
     if rng.f32() < 0.5 {
         // exact divisor chain
         let mut rem = extent;
-        let mut out = Vec::with_capacity(nparts);
         for _ in 0..nparts - 1 {
             let divs = divisors(rem);
             let f = *rng.choose(&divs);
@@ -202,23 +268,20 @@ pub fn sample_splits(extent: usize, nparts: usize, rng: &mut Rng) -> Vec<usize> 
             rem /= f;
         }
         out.push(rem);
-        out
     } else {
         // padded: choose an inner power-of-two tile ≤ extent, cover the
         // rest with ceil-division, then split the outer part exactly.
         let max_pow = (usize::BITS - 1 - extent.leading_zeros()) as usize; // floor(log2)
         let tile = 1usize << rng.below(max_pow + 1).min(8);
         let outer = extent.div_ceil(tile);
-        let mut out = sample_splits_exact(outer, nparts - 1, rng);
+        sample_splits_exact_into(outer, nparts - 1, rng, out);
         out.push(tile);
-        out
     }
 }
 
 /// Exact divisor-chain split (helper for the padded family's outer part).
-fn sample_splits_exact(extent: usize, nparts: usize, rng: &mut Rng) -> Vec<usize> {
+fn sample_splits_exact_into(extent: usize, nparts: usize, rng: &mut Rng, out: &mut Vec<usize>) {
     let mut rem = extent;
-    let mut out = Vec::with_capacity(nparts);
     for _ in 0..nparts.saturating_sub(1) {
         let divs = divisors(rem);
         let f = *rng.choose(&divs);
@@ -226,7 +289,6 @@ fn sample_splits_exact(extent: usize, nparts: usize, rng: &mut Rng) -> Vec<usize
         rem /= f;
     }
     out.push(rem);
-    out
 }
 
 #[cfg(test)]
@@ -347,6 +409,48 @@ mod tests {
             *s.last().unwrap() >= 8
         });
         assert!(some_tiled, "no padded tiling sampled for prime extent");
+    }
+
+    #[test]
+    fn sample_into_matches_sample_exactly() {
+        // The buffer-reusing variants must draw the same RNG sequence and
+        // produce the same program as the allocating ones — the tuner's
+        // determinism contract (DESIGN.md §10) depends on it.
+        let w = wl(128);
+        let mut a = Rng::new(21);
+        let mut b = Rng::new(21);
+        let mut buf = Program::naive(&w); // non-empty: reuse must overwrite fully
+        for _ in 0..100 {
+            let fresh = Program::sample(&w, &mut a);
+            Program::sample_into(&w, &mut b, &mut buf);
+            assert_eq!(fresh, buf);
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "RNG streams diverged");
+    }
+
+    #[test]
+    fn mutate_into_matches_mutate_exactly() {
+        let w = wl(96);
+        let mut a = Rng::new(22);
+        let mut b = Rng::new(22);
+        let parent = Program::sample(&w, &mut Rng::new(0));
+        let mut buf = Program::empty();
+        for _ in 0..100 {
+            let fresh = parent.mutate(&w, &mut a);
+            parent.mutate_into(&w, &mut b, &mut buf);
+            assert_eq!(fresh, buf);
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "RNG streams diverged");
+    }
+
+    #[test]
+    fn clone_from_reuses_and_matches() {
+        let w = wl(64);
+        let mut rng = Rng::new(23);
+        let src = Program::sample(&w, &mut rng);
+        let mut dst = Program::sample(&w, &mut rng);
+        dst.clone_from(&src);
+        assert_eq!(dst, src);
     }
 
     #[test]

@@ -52,9 +52,23 @@ pub trait CostModel {
 }
 
 /// Ridge regression on [`features`] → log-latency.
+///
+/// The normal-equation sufficient statistics (XᵀX, Xᵀy) are accumulated
+/// *incrementally* in [`CostModel::observe`], so [`CostModel::refit`]
+/// solves the NFEAT×NFEAT system directly instead of rebuilding the Gram
+/// matrix from the whole sample history each round — refit cost is
+/// independent of how many programs were ever measured, and memory stays
+/// O(NFEAT²) across an arbitrarily long CPrune run (DESIGN.md §10).
+/// Because each sample's contribution is added in observation order, the
+/// accumulated sums are bit-identical to a batch rebuild over the full
+/// history (floating-point addition happens in the same sequence).
 pub struct LearnedCost {
-    xs: Vec<[f64; NFEAT]>,
-    ys: Vec<f64>,
+    /// Running XᵀX over every observed sample.
+    xtx: [[f64; NFEAT]; NFEAT],
+    /// Running Xᵀy (y = log-latency).
+    xty: [f64; NFEAT],
+    /// Observation count (the old `xs.len()`).
+    n: usize,
     weights: Option<[f64; NFEAT]>,
     /// L2 regularization strength.
     lambda: f64,
@@ -62,11 +76,17 @@ pub struct LearnedCost {
 
 impl LearnedCost {
     pub fn new() -> LearnedCost {
-        LearnedCost { xs: Vec::new(), ys: Vec::new(), weights: None, lambda: 1e-3 }
+        LearnedCost {
+            xtx: [[0.0; NFEAT]; NFEAT],
+            xty: [0.0; NFEAT],
+            n: 0,
+            weights: None,
+            lambda: 1e-3,
+        }
     }
 
     pub fn n_samples(&self) -> usize {
-        self.xs.len()
+        self.n
     }
 }
 
@@ -88,27 +108,33 @@ impl CostModel for LearnedCost {
     }
 
     fn observe(&mut self, w: &Workload, p: &Program, latency: f64) {
-        self.xs.push(features(w, p));
-        self.ys.push(latency.max(1e-12).ln());
+        let x = features(w, p);
+        let y = latency.max(1e-12).ln();
+        // Accumulate this sample's rank-1 update in the same element order
+        // the old batch rebuild used, so the sums stay bit-identical.
+        for (row, &xi) in self.xtx.iter_mut().zip(&x) {
+            for (cell, &xj) in row.iter_mut().zip(&x) {
+                *cell += xi * xj;
+            }
+        }
+        for (acc, &xi) in self.xty.iter_mut().zip(&x) {
+            *acc += xi * y;
+        }
+        self.n += 1;
     }
 
     fn refit(&mut self) {
-        if self.xs.len() < NFEAT {
+        if self.n < NFEAT {
             return; // underdetermined; stay untrained
         }
-        // Normal equations: (XᵀX + λI) w = Xᵀy, solved by Gaussian
-        // elimination with partial pivoting (NFEAT is tiny).
+        // Normal equations: (XᵀX + λI) w = Xᵀy over the pre-accumulated
+        // sufficient statistics, solved by Gaussian elimination with
+        // partial pivoting (NFEAT is tiny).
         let n = NFEAT;
         let mut a = vec![vec![0.0f64; n + 1]; n];
-        for (x, &y) in self.xs.iter().zip(&self.ys) {
-            for i in 0..n {
-                for j in 0..n {
-                    a[i][j] += x[i] * x[j];
-                }
-                a[i][n] += x[i] * y;
-            }
-        }
         for (i, row) in a.iter_mut().enumerate() {
+            row[..n].copy_from_slice(&self.xtx[i]);
+            row[n] = self.xty[i];
             row[i] += self.lambda;
         }
         if let Some(w) = solve(&mut a) {
@@ -203,6 +229,92 @@ mod tests {
         let mut rng = Rng::new(0);
         assert_eq!(model.score(&w, &Program::sample(&w, &mut rng)), 0.0);
         assert!(!model.trained());
+    }
+
+    #[test]
+    fn refit_cadence_does_not_change_weights() {
+        // Incremental sufficient statistics make refit a pure function of
+        // the observation sequence: interleaving extra refits must produce
+        // bit-identical predictions to one final refit (the old
+        // full-history rebuild had this property; pin it).
+        let w = wl();
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let mut rng = Rng::new(8);
+        let samples: Vec<(Program, f64)> = (0..60)
+            .map(|_| {
+                let p = Program::sample(&w, &mut rng);
+                let l = sim.measure(&w, &p, &mut rng);
+                (p, l)
+            })
+            .collect();
+        let mut eager = LearnedCost::new();
+        let mut lazy = LearnedCost::new();
+        for (i, (p, l)) in samples.iter().enumerate() {
+            eager.observe(&w, p, *l);
+            lazy.observe(&w, p, *l);
+            if i % 7 == 0 {
+                eager.refit();
+            }
+        }
+        eager.refit();
+        lazy.refit();
+        assert_eq!(eager.n_samples(), lazy.n_samples());
+        for _ in 0..50 {
+            let p = Program::sample(&w, &mut rng);
+            assert_eq!(
+                eager.score(&w, &p).to_bits(),
+                lazy.score(&w, &p).to_bits(),
+                "refit cadence changed the fitted weights"
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_gram_matches_batch_rebuild() {
+        // Independent naive batch implementation of the same ridge solve;
+        // the incremental accumulation must reproduce its weights exactly.
+        let w = wl();
+        let sim = Simulator::new(DeviceSpec::kryo280());
+        let mut rng = Rng::new(17);
+        let samples: Vec<(Program, f64)> = (0..40)
+            .map(|_| {
+                let p = Program::sample(&w, &mut rng);
+                let l = sim.measure(&w, &p, &mut rng);
+                (p, l)
+            })
+            .collect();
+        let mut model = LearnedCost::new();
+        for (p, l) in &samples {
+            model.observe(&w, p, *l);
+        }
+        model.refit();
+        // batch rebuild, exactly as the pre-incremental refit did it
+        let n = NFEAT;
+        let mut a = vec![vec![0.0f64; n + 1]; n];
+        for (p, l) in &samples {
+            let x = features(&w, p);
+            let y = l.max(1e-12).ln();
+            for i in 0..n {
+                for j in 0..n {
+                    a[i][j] += x[i] * x[j];
+                }
+                a[i][n] += x[i] * y;
+            }
+        }
+        for (i, row) in a.iter_mut().enumerate() {
+            row[i] += 1e-3;
+        }
+        let batch_w = solve(&mut a).expect("batch system solvable");
+        for _ in 0..30 {
+            let p = Program::sample(&w, &mut rng);
+            let x = features(&w, &p);
+            let batch_score: f64 = x.iter().zip(&batch_w).map(|(a, b)| a * b).sum();
+            assert_eq!(
+                model.score(&w, &p).to_bits(),
+                batch_score.to_bits(),
+                "incremental Gram diverged from batch rebuild"
+            );
+        }
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::tir::{Program, Workload};
 use crate::util::rng::stable_hash;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Fleet-wide knobs.
 #[derive(Clone, Copy, Debug)]
@@ -214,15 +215,27 @@ impl FleetSession {
                     *slot = Some(compiler::compile_tuned(graph, &sessions[i], &seeds));
                 }
             } else {
+                // Work-stealing over follower devices: workers claim the
+                // next untuned device off a shared atomic index instead of
+                // a static stride, so one slow device (e.g. the GPU spec's
+                // larger search space) cannot serialize its stride-mates.
+                // Device results depend only on per-device seeds and the
+                // pilot's (already fixed) programs, so claim order cannot
+                // change any output (DESIGN.md §10).
                 let sessions_ref = &sessions;
                 let seeds_ref = &seeds;
+                let next = AtomicUsize::new(1); // 0 = pilot, already tuned
+                let next_ref = &next;
                 let results: Vec<(usize, CompiledModel)> = std::thread::scope(|scope| {
                     let handles: Vec<_> = (0..workers)
-                        .map(|k| {
+                        .map(|_| {
                             scope.spawn(move || {
                                 let mut out = Vec::new();
-                                let mut i = 1 + k;
-                                while i < n {
+                                loop {
+                                    let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                                    if i >= n {
+                                        break;
+                                    }
                                     out.push((
                                         i,
                                         compiler::compile_tuned(
@@ -231,7 +244,6 @@ impl FleetSession {
                                             seeds_ref,
                                         ),
                                     ));
-                                    i += workers;
                                 }
                                 out
                             })
@@ -398,6 +410,33 @@ mod tests {
         for (c, w) in cold.devices.iter().zip(&warm.devices) {
             assert_eq!(c.latency, w.latency, "{} drifted across runs", c.device);
             assert_eq!(w.seeded, 0, "{}: warm run claims seeding happened", w.device);
+        }
+    }
+
+    #[test]
+    fn fleet_results_identical_across_thread_budgets() {
+        // Work-stealing claim order must not leak into any result.
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let mut one = FleetSession::new(
+            specs3(),
+            FleetOptions { tune: TuneOptions::quick(), threads: 1, cross_seed: true },
+            9,
+        );
+        let mut many = FleetSession::new(
+            specs3(),
+            FleetOptions { tune: TuneOptions::quick(), threads: 8, cross_seed: true },
+            9,
+        );
+        let a = one.tune_graph(&m.graph);
+        let b = many.tune_graph(&m.graph);
+        for (x, y) in a.devices.iter().zip(&b.devices) {
+            assert_eq!(
+                x.latency.to_bits(),
+                y.latency.to_bits(),
+                "{} drifted across thread budgets",
+                x.device
+            );
+            assert_eq!(x.measured, y.measured, "{} measured-count drifted", x.device);
         }
     }
 

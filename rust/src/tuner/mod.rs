@@ -10,6 +10,18 @@
 //! fleet layers (DESIGN.md §5): [`TuneCache`] serializes results across
 //! runs, and [`FleetSession`] tunes one graph for many devices with
 //! cross-device seeding.
+//!
+//! Performance architecture (DESIGN.md §10): the per-task search caches
+//! cost-model scores per round, keeps a bounded seen-set-keyed elite pool
+//! instead of re-sorting the measurement history, and double-buffers the
+//! population ([`search`]); the cost model accumulates its normal
+//! equations incrementally ([`cost_model`]); graph- and fleet-level
+//! parallelism uses work-stealing over a shared atomic index, which is
+//! result-invariant because every task's RNG stream derives from its own
+//! workload hash ([`session`], [`fleet`]). The `crate::perf` harness
+//! (`cprune bench`) records this module's hot-path wall clock and
+//! programs-measured counts into versioned `BENCH_*.json` files so every
+//! PR has a perf trajectory.
 
 pub mod cache;
 pub mod cost_model;

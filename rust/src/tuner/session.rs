@@ -15,6 +15,7 @@ use crate::relay::TaskTable;
 use crate::tir::{Program, Workload};
 use crate::util::rng::{stable_hash, Rng};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Tunes models for one device; owns the cache and the RNG seed policy.
 pub struct TuningSession<'a> {
@@ -30,7 +31,7 @@ pub struct TuningSession<'a> {
     /// stream from its own workload hash.
     pub threads: usize,
     /// Cumulative count of programs actually measured (search cost).
-    pub total_measured: std::sync::atomic::AtomicUsize,
+    pub total_measured: AtomicUsize,
 }
 
 impl<'a> TuningSession<'a> {
@@ -52,7 +53,7 @@ impl<'a> TuningSession<'a> {
             seed,
             retune_everything: false,
             threads: 0,
-            total_measured: std::sync::atomic::AtomicUsize::new(0),
+            total_measured: AtomicUsize::new(0),
         }
     }
 
@@ -94,6 +95,14 @@ impl<'a> TuningSession<'a> {
         // deduplicated), so tune them directly — probing again through
         // `tune_workload` would double-count every miss in the hit-rate
         // accounting.
+        //
+        // Work-stealing: workers claim tasks one at a time off a shared
+        // atomic next-index instead of a static `chunks()` split, so a
+        // thread stuck on the largest conv task no longer serializes the
+        // call while its chunk-mates idle. Safe for determinism: each
+        // task's result depends only on its own workload-hash-derived RNG
+        // stream (DESIGN.md §10), so which worker tunes it — and in what
+        // order — cannot change any output.
         let results: Vec<(usize, Program, f64)> = if threads <= 1 || pending.len() == 1 {
             pending
                 .iter()
@@ -103,21 +112,21 @@ impl<'a> TuningSession<'a> {
                 })
                 .collect()
         } else {
-            let chunks: Vec<&[(usize, Workload)]> =
-                pending.chunks(pending.len().div_ceil(threads)).collect();
+            let next = AtomicUsize::new(0);
+            let next_ref = &next;
+            let pending_ref = &pending;
             std::thread::scope(|scope| {
-                let handles: Vec<_> = chunks
-                    .into_iter()
-                    .map(|chunk| {
+                let handles: Vec<_> = (0..threads)
+                    .map(|_| {
                         scope.spawn(move || {
-                            chunk
-                                .iter()
-                                .map(|(tid, w)| {
-                                    let (p, lat) =
-                                        self.tune_uncached(w, seed_programs.get(w));
-                                    (*tid, p, lat)
-                                })
-                                .collect::<Vec<_>>()
+                            let mut out = Vec::new();
+                            loop {
+                                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                                let Some((tid, w)) = pending_ref.get(i) else { break };
+                                let (p, lat) = self.tune_uncached(w, seed_programs.get(w));
+                                out.push((*tid, p, lat));
+                            }
+                            out
                         })
                     })
                     .collect();
@@ -149,14 +158,13 @@ impl<'a> TuningSession<'a> {
         let mut rng = Rng::with_stream(self.seed, hash_workload(w));
         let TuneResult { best, latency, measured } =
             tune_task(w, self.sim, &self.opts, &mut rng, seed_prog);
-        self.total_measured
-            .fetch_add(measured, std::sync::atomic::Ordering::Relaxed);
+        self.total_measured.fetch_add(measured, Ordering::Relaxed);
         self.cache.put(w.clone(), best.clone(), latency, measured);
         (best, latency)
     }
 
     pub fn measured_count(&self) -> usize {
-        self.total_measured.load(std::sync::atomic::Ordering::Relaxed)
+        self.total_measured.load(Ordering::Relaxed)
     }
 }
 

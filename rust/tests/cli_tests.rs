@@ -92,6 +92,38 @@ fn report_fig6_smoke() {
 }
 
 #[test]
+fn bench_quick_writes_versioned_perf_jsons() {
+    let dir = std::env::temp_dir().join("cprune_cli_test_bench");
+    let d = dir.to_str().unwrap();
+    let _ = std::fs::remove_file(dir.join("BENCH_tuner.json"));
+    let _ = std::fs::remove_file(dir.join("BENCH_e2e.json"));
+    assert_eq!(run(&["bench", "--tier", "quick", "--seed", "42", "--out-dir", d]), 0);
+    for suite in ["tuner", "e2e"] {
+        let path = dir.join(format!("BENCH_{suite}.json"));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{} missing: {e}", path.display()));
+        let j = json::parse(&text).expect("BENCH json must parse");
+        assert_eq!(j.get("format").unwrap().as_str(), Some("cprune-bench"));
+        assert_eq!(j.get("version").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("tier").unwrap().as_str(), Some("quick"));
+        let records = j.get("records").unwrap().as_arr().unwrap();
+        assert!(!records.is_empty(), "{suite}: no records");
+        for r in records {
+            assert!(r.get("name").unwrap().as_str().is_some());
+            assert!(r.get("wall_s").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(r.get("programs_measured").unwrap().as_f64().is_some());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+    let _ = std::fs::remove_dir(&dir);
+}
+
+#[test]
+fn bench_rejects_unknown_tier() {
+    assert_eq!(run(&["bench", "--tier", "medium"]), 2);
+}
+
+#[test]
 fn tune_warm_starts_from_cache_file() {
     let path = std::env::temp_dir().join("cprune_cli_test_tune.cache.json");
     let p = path.to_str().unwrap();

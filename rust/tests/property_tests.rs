@@ -13,8 +13,11 @@ use cprune::graph::ops::OpKind;
 use cprune::pruner::summarize;
 use cprune::relay::partition::{extract_tasks, partition};
 use cprune::tir::{Program, Workload};
+use cprune::tuner::search::tune_task_reference;
+use cprune::tuner::{tune_task, TuneOptions, TuningSession};
 use cprune::util::rng::Rng;
 use cprune::util::lcm;
+use std::collections::HashMap;
 
 fn random_state(model: &Model, rng: &mut Rng) -> PruneState {
     let mut st = PruneState::full(model);
@@ -150,6 +153,103 @@ fn prop_structure_preserved_after_step_prune() {
         let q = q.unwrap();
         assert_eq!(q.ff_splits.len(), p.ff_splits.len());
         assert_eq!(q.ax3_splits.len(), p.ax3_splits.len());
+    }
+}
+
+#[test]
+fn prop_optimized_search_bit_identical_to_reference() {
+    // The optimized tune_task (scoring cache, bounded elite pool,
+    // double-buffered evolution — DESIGN.md §10) must return bit-identical
+    // (best, latency, measured) to the straightforward reference search
+    // across random seeds, workload shapes, devices, budgets, and seeded
+    // vs unseeded starts.
+    let devices = [DeviceSpec::kryo280(), DeviceSpec::kryo385(), DeviceSpec::kryo585()];
+    for seed in 0..12u64 {
+        let mut wrng = Rng::new(seed.wrapping_mul(0x9e37) ^ 0xC0FFEE);
+        let ff = *wrng.choose(&[16usize, 32, 64, 96, 128, 179, 256]);
+        let oh = 4 + wrng.below(28);
+        let w = Workload::from_conv(
+            &OpKind::Conv2d { kh: 3, kw: 3, cin: 32, cout: ff, stride: 1, padding: 1, groups: 1 },
+            [1, oh, oh, ff],
+            vec!["bn", "relu"],
+        );
+        let sim = Simulator::new(devices[seed as usize % devices.len()].clone());
+        let opts = if seed % 2 == 0 {
+            TuneOptions::quick()
+        } else {
+            TuneOptions { population: 32, rounds: 4, measure_top_k: 8, repeats: 2 }
+        };
+        let seed_prog = if seed % 3 == 0 {
+            Some(Program::naive(&w))
+        } else {
+            None
+        };
+        let a = tune_task(&w, &sim, &opts, &mut Rng::new(seed), seed_prog.as_ref());
+        let b = tune_task_reference(&w, &sim, &opts, &mut Rng::new(seed), seed_prog.as_ref());
+        assert_eq!(a.best, b.best, "seed {seed}: best program diverged");
+        assert_eq!(
+            a.latency.to_bits(),
+            b.latency.to_bits(),
+            "seed {seed}: latency diverged ({} vs {})",
+            a.latency,
+            b.latency
+        );
+        assert_eq!(a.measured, b.measured, "seed {seed}: measured count diverged");
+    }
+}
+
+#[test]
+fn prop_tune_graph_identical_across_thread_budgets() {
+    // Work-stealing claim order must never leak into results: 1 thread,
+    // 8 threads and 0 (= all cores) produce identical task tables and
+    // measured counts — each task's RNG stream derives from its own
+    // workload hash, so who tunes it is irrelevant (DESIGN.md §10).
+    for (kind, seed) in [
+        (ModelKind::ResNet8Cifar, 3u64),
+        (ModelKind::ResNet8Cifar, 11),
+        (ModelKind::Vgg16Cifar, 5),
+    ] {
+        let m = Model::build(kind, seed);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let mut outcomes = Vec::new();
+        for threads in [1usize, 8, 0] {
+            let mut sess = TuningSession::new(&sim, TuneOptions::quick(), seed);
+            sess.threads = threads;
+            let table = sess.tune_graph(&m.graph, &HashMap::new());
+            let mut lats: Vec<(usize, u64)> = table
+                .tasks()
+                .map(|t| (t.id, t.best_latency.unwrap().to_bits()))
+                .collect();
+            lats.sort_unstable();
+            outcomes.push((lats, sess.measured_count()));
+        }
+        assert_eq!(outcomes[0], outcomes[1], "{kind:?} seed {seed}: 1 vs 8 threads");
+        assert_eq!(outcomes[0], outcomes[2], "{kind:?} seed {seed}: 1 vs all-cores");
+    }
+}
+
+#[test]
+fn prop_measured_never_exceeds_budget() {
+    // The honest measured counter is bounded by rounds × measure_top_k
+    // and is strictly positive whenever any round measures.
+    for seed in 0..10u64 {
+        let mut wrng = Rng::new(seed + 77);
+        let ff = *wrng.choose(&[24usize, 48, 64, 128]);
+        let w = Workload::from_conv(
+            &OpKind::Conv2d { kh: 3, kw: 3, cin: 16, cout: ff, stride: 1, padding: 1, groups: 1 },
+            [1, 14, 14, ff],
+            vec![],
+        );
+        let sim = Simulator::new(DeviceSpec::mali_g72());
+        let opts = TuneOptions::quick();
+        let r = tune_task(&w, &sim, &opts, &mut Rng::new(seed), None);
+        assert!(r.measured > 0);
+        assert!(
+            r.measured <= opts.rounds * opts.measure_top_k,
+            "seed {seed}: counted {} > budget {}",
+            r.measured,
+            opts.rounds * opts.measure_top_k
+        );
     }
 }
 
