@@ -37,7 +37,7 @@ pub fn random_variant(model: &Model, max_ratio: f64, seed: u64) -> PruneState {
     for &conv in &model.prunable {
         let total = state.remaining(conv);
         // lognormal spread around the common mean, clamped
-        let ratio = (mean_ratio * rng.lognormal(0.7) as f64).clamp(0.0, 0.8);
+        let ratio = (mean_ratio * rng.lognormal(0.7)).clamp(0.0, 0.8);
         let k = ((total as f64 * ratio).round() as usize).min(total.saturating_sub(2));
         if k == 0 {
             continue;

@@ -27,7 +27,7 @@ pub mod pqf;
 
 use crate::accuracy::{AccuracyOracle, Criterion, TrainPhase};
 use crate::compiler;
-use crate::device::Simulator;
+use crate::device::Target;
 use crate::graph::model_zoo::Model;
 use crate::graph::prune::{apply, PruneState};
 use crate::graph::stats;
@@ -167,9 +167,9 @@ pub fn fps_of_state(model: &Model, state: &PruneState, session: &TuningSession) 
 /// FPS of a pruned state *without* compiler optimization (eager framework
 /// execution: naive schedules + per-op dispatch) — the "before compiler
 /// optimization" axis of Fig. 1.
-pub fn fps_of_state_untuned(model: &Model, state: &PruneState, sim: &Simulator) -> f64 {
+pub fn fps_of_state_untuned(model: &Model, state: &PruneState, target: &dyn Target) -> f64 {
     let graph = apply(&model.graph, &state.cout).expect("valid pruned graph");
-    compiler::compile_eager(&graph, sim).fps()
+    compiler::compile_eager(&graph, target).fps()
 }
 
 #[cfg(test)]

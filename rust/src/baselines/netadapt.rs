@@ -20,7 +20,7 @@
 
 use super::Outcome;
 use crate::accuracy::{AccuracyOracle, Criterion, TrainPhase};
-use crate::device::Simulator;
+use crate::device::Target;
 use crate::graph::model_zoo::Model;
 use crate::graph::prune::{apply, PruneState};
 use crate::graph::weights::Weights;
@@ -213,16 +213,16 @@ pub(crate) fn netadapt_run(ctx: &mut RunContext, cfg: &NetAdaptConfig) -> PruneO
 }
 
 /// Legacy free-function entry point — a thin shim over [`netadapt_run`]
-/// with no observers. `sim` is unused (measurement goes through the
+/// with no observers. `target` is unused (measurement goes through the
 /// session's tuned compile path) and kept for signature stability.
 pub fn netadapt(
     model: &Model,
     session: &TuningSession,
-    sim: &Simulator,
+    target: &dyn Target,
     oracle: &mut dyn AccuracyOracle,
     cfg: &NetAdaptConfig,
 ) -> NetAdaptResult {
-    let _ = sim;
+    let _ = target;
     let mut ctx = RunContext::standalone(model, session, oracle);
     let po = netadapt_run(&mut ctx, cfg);
     NetAdaptResult {
@@ -237,7 +237,7 @@ pub fn netadapt(
 mod tests {
     use super::*;
     use crate::accuracy::ProxyOracle;
-    use crate::device::DeviceSpec;
+    use crate::device::{DeviceSpec, Simulator};
     use crate::graph::model_zoo::ModelKind;
     use crate::tuner::TuneOptions;
 

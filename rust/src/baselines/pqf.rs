@@ -11,7 +11,7 @@
 
 use super::Outcome;
 use crate::accuracy::ProxyOracle;
-use crate::device::{DeviceKind, Simulator};
+use crate::device::{DeviceKind, Target};
 use crate::graph::model_zoo::Model;
 use crate::run::{Pqf, Pruner, RunContext};
 use crate::tuner::TuningSession;
@@ -30,16 +30,16 @@ pub const TOP1_DROP: f64 = 0.0302;
 pub const TOP5_DROP: f64 = 0.0192;
 
 /// Legacy free-function entry point — a thin shim over the [`Pqf`]
-/// pruner (DESIGN.md §9). `sim` is unused (the device kind comes from
-/// the session's simulator) and kept for signature stability; PQF needs
+/// pruner (DESIGN.md §9). `target` is unused (the device kind comes from
+/// the session's own target) and kept for signature stability; PQF needs
 /// no oracle, so the shim supplies a throwaway one.
 pub fn pqf(
     model: &Model,
     session: &TuningSession,
-    sim: &Simulator,
+    target: &dyn Target,
     baseline_latency: f64,
 ) -> Outcome {
-    let _ = sim;
+    let _ = target;
     let mut oracle = ProxyOracle::new();
     let mut ctx =
         RunContext::standalone(model, session, &mut oracle).with_baseline(baseline_latency);
@@ -49,7 +49,7 @@ pub fn pqf(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::device::DeviceSpec;
+    use crate::device::{DeviceSpec, Simulator};
     use crate::graph::model_zoo::ModelKind;
     use crate::tuner::TuneOptions;
 

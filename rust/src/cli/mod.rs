@@ -17,7 +17,7 @@
 //! repeated run warm-starts and re-measures (close to) nothing.
 
 use crate::compiler;
-use crate::device::{DeviceSpec, Simulator};
+use crate::device::{DeviceSpec, Simulator, Target, TargetRegistry};
 use crate::exp::{self, Scale};
 use crate::graph::model_zoo::{Model, ModelKind};
 use crate::run::{
@@ -113,17 +113,17 @@ pub fn model_by_name(name: &str) -> ModelKind {
 /// exists. `Err` carries the process exit code (corrupt cache files fail
 /// loudly rather than silently re-tuning from cold).
 fn open_session<'a>(
-    sim: &'a Simulator,
+    target: &'a dyn Target,
     opts: TuneOptions,
     seed: u64,
     cache_path: Option<&String>,
 ) -> Result<TuningSession<'a>, i32> {
     match cache_path {
         Some(p) if std::path::Path::new(p).exists() => {
-            match TuneCache::load(p, sim.spec.name) {
+            match TuneCache::load(p, target.spec().name) {
                 Ok(c) => {
                     println!("cache: warm-start from {p} ({} programs)", c.len());
-                    Ok(TuningSession::with_cache(sim, opts, seed, c))
+                    Ok(TuningSession::with_cache(target, opts, seed, c))
                 }
                 Err(e) => {
                     eprintln!("cache {p}: {e}");
@@ -131,14 +131,19 @@ fn open_session<'a>(
                 }
             }
         }
-        _ => Ok(TuningSession::new(sim, opts, seed)),
+        _ => Ok(TuningSession::new(target, opts, seed)),
     }
 }
 
 /// Parse `--devices d1,d2,...` (falling back to `default`) into specs,
 /// shared by `fleet` and `serve`. `Err` carries the process exit code —
-/// unknown names and empty lists already printed their diagnostics.
-fn parse_devices(args: &Args, default: &str) -> Result<Vec<DeviceSpec>, i32> {
+/// unknown names (diagnosed with the registry's full name list, device
+/// files included) and empty lists already printed their diagnostics.
+fn parse_devices(
+    args: &Args,
+    registry: &TargetRegistry,
+    default: &str,
+) -> Result<Vec<DeviceSpec>, i32> {
     let device_list = args
         .flags
         .get("devices")
@@ -146,10 +151,10 @@ fn parse_devices(args: &Args, default: &str) -> Result<Vec<DeviceSpec>, i32> {
         .unwrap_or_else(|| default.to_string());
     let mut specs: Vec<DeviceSpec> = Vec::new();
     for name in device_list.split(',').filter(|s| !s.is_empty()) {
-        match exp::try_device_by_name(name) {
-            Some(spec) => specs.push(spec),
+        match registry.spec(name) {
+            Some(spec) => specs.push(spec.clone()),
             None => {
-                eprintln!("unknown device '{name}'. options: {}", exp::DEVICE_NAMES);
+                eprintln!("{}", registry.unknown_device_error(name));
                 return Err(2);
             }
         }
@@ -174,11 +179,12 @@ fn flag_or<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T
 
 /// Shared wiring of the `run`/`prune` subcommands: a [`RunBuilder`] from
 /// the common flags (`--iters`, `--target-acc`, `--seed`, `--cache`,
-/// `--events`). `Err` carries the process exit code — diagnostics are
-/// already printed.
+/// `--events`, `--target`, `--record-trace`, `--replay-trace`). `Err`
+/// carries the process exit code — diagnostics are already printed.
 fn run_builder_from_flags(
     args: &Args,
     model_kind: ModelKind,
+    registry: &TargetRegistry,
     device: &DeviceSpec,
     seed: u64,
 ) -> Result<RunBuilder, i32> {
@@ -190,10 +196,32 @@ fn run_builder_from_flags(
         }
     };
     let mut builder = RunBuilder::new(model_kind)
-        .device_spec(device.clone())
+        .with_registry(registry.clone())
         .seed(seed)
         .tune_opts(TuneOptions::quick())
         .max_iterations(iters);
+    // Provider selection: a replay trace overrides everything (its spec
+    // travels in the trace); --target picks provider:name; otherwise the
+    // already-resolved --device spec rides the analytic provider.
+    if let Some(path) = args.flags.get("replay-trace") {
+        builder = builder.replay_trace(path);
+    } else if let Some(t) = args.flags.get("target") {
+        builder = builder.target_name(t);
+    } else {
+        builder = builder.device_spec(device.clone());
+    }
+    if let Some(path) = args.flags.get("record-trace") {
+        builder = builder.record_trace(path);
+    }
+    if let Some(path) = args.flags.get("calibration") {
+        match crate::device::calibration::CalibrationTable::load(path) {
+            Ok(table) => builder = builder.calibration(table),
+            Err(e) => {
+                eprintln!("{e}");
+                return Err(1);
+            }
+        }
+    }
     if let Some(v) = args.flags.get("target-acc") {
         match v.parse::<f64>() {
             Ok(a) => builder = builder.accuracy_budget(a),
@@ -221,7 +249,7 @@ fn run_builder_from_flags(
 /// Persist the session cache when `--cache` was given; returns the exit code.
 fn close_session(session: &TuningSession, cache_path: Option<&String>) -> i32 {
     if let Some(p) = cache_path {
-        if let Err(e) = session.cache.save(p, session.sim.spec.name) {
+        if let Err(e) = session.cache.save(p, session.device_name()) {
             eprintln!("saving cache {p}: {e}");
             return 1;
         }
@@ -260,10 +288,13 @@ fn emit_bench_report(report: &crate::perf::PerfReport, seed: u64, out_dir: &str)
 const USAGE: &str = "cprune — compiler-informed model pruning (paper reproduction)
 
 USAGE:
-  cprune run       [--pruner P] [--model M] [--device D] [--target-acc A] [--iters N] [--seed S]
-                   [--cache FILE] [--events FILE.jsonl] [--registry FILE] [--verbose] [--quiet]
-  cprune prune     [--model M] [--device D] [--target-acc A] [--iters N] [--seed S] [--out FILE.json]
-                   [--cache FILE] [--events FILE.jsonl]
+  cprune run       [--pruner P] [--model M] [--device D | --target T] [--target-acc A] [--iters N]
+                   [--seed S] [--cache FILE] [--events FILE.jsonl] [--registry FILE]
+                   [--record-trace FILE] [--replay-trace FILE] [--device-file FILE]
+                   [--calibration FILE] [--verbose] [--quiet]
+  cprune prune     [--model M] [--device D | --target T] [--target-acc A] [--iters N] [--seed S]
+                   [--out FILE.json] [--cache FILE] [--events FILE.jsonl]
+                   [--record-trace FILE] [--replay-trace FILE]
   cprune tune      [--model M] [--device D] [--seed S] [--cache FILE]
   cprune fleet     [--model M] [--devices d1,d2,...] [--seed S] [--threads N] [--quick] [--cache-dir DIR]
   cprune serve     [--model M] [--devices d1,d2,...] [--rps R] [--requests N] [--slo-ms T]
@@ -272,17 +303,33 @@ USAGE:
   cprune compare   [--model M] [--device D] [--seed S]
   cprune bench     [--tier quick|full] [--seed S] [--out-dir DIR]
   cprune report    <fig1|fig6|fig7|fig8|fig9|fig10|fig11|table1|table2> [--scale smoke|full]
+  cprune devices   [--device-file FILE]           # list the target registry
   cprune dot       [--model M]                    # graphviz of graph+subgraphs+tasks
-  cprune calibrate [--device D]                   # fit sim scale to paper anchors
+  cprune calibrate [--device D] [--save FILE]     # fit sim scale to paper anchors
   cprune e2e-info
 
   pruners: cprune magnitude fpgm netadapt amc pqf
   models:  vgg16-cifar resnet18-imagenet resnet18-cifar resnet34 mobilenetv1
            mobilenetv2 mnasnet1.0 resnet8-cifar
-  devices: kryo280 kryo385 kryo585 mali-g72 rtx3080
+  devices: kryo280 kryo385 kryo585 mali-g72 rtx3080, plus any spec loaded
+           from --device-file / CPRUNE_DEVICES (see `cprune devices`)
 
   Flags take '--key value' or '--key=value'; values that begin with '--'
   must use the '=' form.
+
+TARGETS (DESIGN.md §11):
+  Every measurement flows through one `device::Target` plane. --device D
+  picks the analytic roofline for a registry device; `run`/`prune` also
+  accept --target with a provider prefix: `analytic:D` (default) or
+  `lut:D` (per-layer latency tables built for the model at startup,
+  analytic fallback for uncovered workloads); --calibration FILE applies
+  a `cprune calibrate --save` table to the device spec first.
+  --record-trace FILE saves
+  every measurement as a versioned `cprune-measure-trace` JSON;
+  --replay-trace FILE re-runs against a recorded trace, reproducing the
+  recorded run's results and event stream byte-for-byte on any machine
+  (same model/seed/budget flags). User-defined devices load from
+  `cprune-devices` JSON files via --device-file or CPRUNE_DEVICES.
 
 RUN:
   `run` executes any pruning algorithm through the uniform run layer
@@ -338,15 +385,65 @@ pub fn run(argv: Vec<String>) -> i32 {
         return 0;
     };
     let seed: u64 = args.flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
-    let device = match args.flags.get("device") {
-        Some(d) => match exp::try_device_by_name(d) {
-            Some(spec) => spec,
-            None => {
-                eprintln!("unknown device '{d}'. options: {}", exp::DEVICE_NAMES);
+    // Device registry: the five built-ins, plus device files from
+    // CPRUNE_DEVICES, plus --device-file (later registrations shadow).
+    let mut registry = match TargetRegistry::from_env() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    if let Some(path) = args.flags.get("device-file") {
+        if let Err(e) = registry.load_file(path) {
+            eprintln!("{e}");
+            return 1;
+        }
+    }
+    // The spec subcommands consume (default Kryo 385). --target may carry
+    // a provider prefix (analytic:/lut:); only run/prune build non-analytic
+    // providers, so a lut: request anywhere else is an error, not a silent
+    // analytic downgrade — and --device never takes a prefix.
+    let device = {
+        let (name, from_target) = match (args.flags.get("target"), args.flags.get("device")) {
+            (Some(t), _) => (t.as_str(), true),
+            (None, Some(d)) => (d.as_str(), false),
+            (None, None) => ("kryo385", false),
+        };
+        let bare = match name.split_once(':') {
+            Some(("analytic", rest)) | Some(("lut", rest)) if from_target => {
+                if name.starts_with("lut:") && !matches!(cmd.as_str(), "run" | "prune") {
+                    eprintln!(
+                        "--target lut:... is only supported by `run`/`prune` \
+                         (other commands use the analytic provider); got '{name}'"
+                    );
+                    return 2;
+                }
+                rest
+            }
+            Some((provider, _)) => {
+                if from_target {
+                    eprintln!(
+                        "unknown target provider '{provider}:' in '{name}' \
+                         (want analytic:NAME or lut:NAME)"
+                    );
+                } else {
+                    eprintln!(
+                        "--device takes a bare registry name, got '{name}'; \
+                         provider prefixes go with --target"
+                    );
+                }
                 return 2;
             }
-        },
-        None => DeviceSpec::kryo385(),
+            None => name,
+        };
+        match registry.spec(bare) {
+            Some(spec) => spec.clone(),
+            None => {
+                eprintln!("{}", registry.unknown_device_error(bare));
+                return 2;
+            }
+        }
     };
     let model_kind = args
         .flags
@@ -365,10 +462,11 @@ pub fn run(argv: Vec<String>) -> i32 {
                 eprintln!("unknown pruner '{pruner_name}'. options: {PRUNER_NAMES}");
                 return 2;
             };
-            let mut builder = match run_builder_from_flags(&args, model_kind, &device, seed) {
-                Ok(b) => b,
-                Err(code) => return code,
-            };
+            let mut builder =
+                match run_builder_from_flags(&args, model_kind, &registry, &device, seed) {
+                    Ok(b) => b,
+                    Err(code) => return code,
+                };
             if !args.flags.contains_key("quiet") {
                 let printer = if args.flags.contains_key("verbose") {
                     ProgressPrinter::new().verbose()
@@ -436,13 +534,20 @@ pub fn run(argv: Vec<String>) -> i32 {
             if let Some(path) = args.flags.get("registry") {
                 println!("registry: published {}-point frontier to {path}", out.pareto.len());
             }
+            if let Some(path) = args.flags.get("record-trace") {
+                println!("trace: recorded measurement trace to {path}");
+            }
+            if let Some(path) = args.flags.get("replay-trace") {
+                println!("trace: replayed measurements from {path}");
+            }
             0
         }
         "prune" => {
-            let builder = match run_builder_from_flags(&args, model_kind, &device, seed) {
-                Ok(b) => b,
-                Err(code) => return code,
-            };
+            let builder =
+                match run_builder_from_flags(&args, model_kind, &registry, &device, seed) {
+                    Ok(b) => b,
+                    Err(code) => return code,
+                };
             let mut run = match builder.build() {
                 Ok(r) => r,
                 Err(e) => {
@@ -509,7 +614,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         }
         "fleet" => {
             let model = Model::build(model_kind, seed);
-            let specs = match parse_devices(&args, "kryo280,kryo385,kryo585,mali-g72") {
+            let specs = match parse_devices(&args, &registry, "kryo280,kryo385,kryo585,mali-g72") {
                 Ok(s) => s,
                 Err(code) => return code,
             };
@@ -567,7 +672,7 @@ pub fn run(argv: Vec<String>) -> i32 {
             0
         }
         "serve" => {
-            let specs = match parse_devices(&args, "kryo385,kryo585") {
+            let specs = match parse_devices(&args, &registry, "kryo385,kryo585") {
                 Ok(s) => s,
                 Err(code) => return code,
             };
@@ -728,6 +833,34 @@ pub fn run(argv: Vec<String>) -> i32 {
             };
             report(&which, scale, seed)
         }
+        "devices" => {
+            let rows: Vec<Vec<String>> = registry
+                .devices()
+                .iter()
+                .map(|d| {
+                    vec![
+                        d.short.clone(),
+                        d.spec.name.to_string(),
+                        d.spec.kind.as_str().to_string(),
+                        d.spec.cores.to_string(),
+                        format!("{:.1}", d.spec.peak_macs() / 1e9),
+                        format!("{:.1}", d.spec.mem_bytes_per_s / 1e9),
+                        d.source.clone(),
+                    ]
+                })
+                .collect();
+            print_table(
+                &format!("device registry ({} entries)", rows.len()),
+                &["name", "device", "kind", "cores", "peak GMAC/s", "DRAM GB/s", "source"],
+                &rows,
+            );
+            println!(
+                "\nresolve with --device/--target (run/prune also take lut:NAME or \
+                 analytic:NAME); add devices via --device-file FILE or the \
+                 CPRUNE_DEVICES environment variable (':'-separated files)."
+            );
+            0
+        }
         "dot" => {
             let model = Model::build(model_kind, seed);
             println!("{}", crate::graph::dot::to_dot(&model.graph));
@@ -747,6 +880,26 @@ pub fn run(argv: Vec<String>) -> i32 {
                 cal.residual * 100.0,
                 anchors.len()
             );
+            if let Some(path) = args.flags.get("save") {
+                use crate::device::calibration::CalibrationTable;
+                let mut table = if std::path::Path::new(path).exists() {
+                    match CalibrationTable::load(path) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            eprintln!("{e}");
+                            return 1;
+                        }
+                    }
+                } else {
+                    CalibrationTable::new()
+                };
+                table.insert(device.name, cal);
+                if let Err(e) = table.save(path) {
+                    eprintln!("{e}");
+                    return 1;
+                }
+                println!("calibration: saved {} device(s) to {path}", table.len());
+            }
             0
         }
         "e2e-info" => {

@@ -8,7 +8,7 @@
 //! * [`latency_with_programs`] — run programs tuned for *another* device
 //!   on this one (Fig. 8's cross-device experiment).
 
-use crate::device::Simulator;
+use crate::device::Target;
 use crate::graph::ops::Graph;
 use crate::graph::shape_infer;
 use crate::relay::partition::{extract_tasks, partition};
@@ -39,7 +39,7 @@ impl CompiledModel {
 }
 
 /// Latency contributed by non-fused ops (pooling, flatten): data movement.
-pub fn overhead_latency(graph: &Graph, sim: &Simulator) -> f64 {
+pub fn overhead_latency(graph: &Graph, target: &dyn Target) -> f64 {
     let shapes = shape_infer::infer(graph).expect("graph must shape-infer");
     let part = partition(graph);
     part.overhead_nodes
@@ -52,7 +52,7 @@ pub fn overhead_latency(graph: &Graph, sim: &Simulator) -> f64 {
                 .iter()
                 .map(|&i| shapes[i].iter().product::<usize>())
                 .sum();
-            sim.overhead_latency(((out_elems + in_elems) * 4) as u64)
+            target.overhead_latency(((out_elems + in_elems) * 4) as u64)
         })
         .sum()
 }
@@ -65,21 +65,21 @@ pub fn compile_tuned(
     seed_programs: &HashMap<Workload, Program>,
 ) -> CompiledModel {
     let table = session.tune_graph(graph, seed_programs);
-    CompiledModel { table, overhead_latency: overhead_latency(graph, session.sim) }
+    CompiledModel { table, overhead_latency: overhead_latency(graph, session.target) }
 }
 
 /// Target-agnostic compilation: every task gets the naive default
 /// schedule (what a generic kernel library achieves without tuning).
-pub fn compile_fallback(graph: &Graph, sim: &Simulator) -> CompiledModel {
+pub fn compile_fallback(graph: &Graph, target: &dyn Target) -> CompiledModel {
     let (_, mut table) = extract_tasks(graph);
     let ids: Vec<usize> = table.tasks().map(|t| t.id).collect();
     for tid in ids {
         let w = table.get(tid).workload.clone();
         let p = fallback_program(&w);
-        let lat = sim.latency(&w, &p);
+        let lat = target.latency(&w, &p);
         table.record_tuned(tid, p, lat);
     }
-    CompiledModel { table, overhead_latency: overhead_latency(graph, sim) }
+    CompiledModel { table, overhead_latency: overhead_latency(graph, target) }
 }
 
 /// The fallback schedule: modest fixed tiling — better than fully naive
@@ -106,7 +106,7 @@ pub fn fallback_program(w: &Workload) -> Program {
 /// overhead, and each task runs the naive schedule. This models running
 /// the pruned model directly in an eager DL framework (PyTorch) — the
 /// paper's pre-compilation measurement.
-pub fn compile_eager(graph: &Graph, sim: &Simulator) -> CompiledModel {
+pub fn compile_eager(graph: &Graph, target: &dyn Target) -> CompiledModel {
     let (_, mut table) = extract_tasks(graph);
     let ids: Vec<usize> = table.tasks().map(|t| t.id).collect();
     for tid in ids {
@@ -122,7 +122,7 @@ pub fn compile_eager(graph: &Graph, sim: &Simulator) -> CompiledModel {
         // latencies on a toolchain upgrade).
         let unit = (stable_hash(&(w.ff, w.ic, w.oh, w.kh)) % 10_000) as f64 / 10_000.0;
         let kernel_eff = 0.25 + 0.75 * unit;
-        let lat = sim.latency(&w, &p) / kernel_eff;
+        let lat = target.latency(&w, &p) / kernel_eff;
         table.record_tuned(tid, p, lat);
     }
     // Per-node framework dispatch: every op (not just fused subgraphs)
@@ -130,7 +130,7 @@ pub fn compile_eager(graph: &Graph, sim: &Simulator) -> CompiledModel {
     // shape (PyTorch dispatch + allocator + cudnnFind vary 0.5–2x with
     // tensor sizes), which is what makes eager FPS a poor predictor of
     // compiled FPS (Fig. 1).
-    let eager_per_op = match sim.spec.kind {
+    let eager_per_op = match target.spec().kind {
         crate::device::DeviceKind::Gpu => 40e-6,
         crate::device::DeviceKind::Cpu => 8e-6,
     };
@@ -143,15 +143,15 @@ pub fn compile_eager(graph: &Graph, sim: &Simulator) -> CompiledModel {
     }
     CompiledModel {
         table,
-        overhead_latency: overhead_latency(graph, sim) + eager_overhead,
+        overhead_latency: overhead_latency(graph, target) + eager_overhead,
     }
 }
 
-/// Evaluate a graph on `sim` using programs tuned elsewhere: for each task,
+/// Evaluate a graph on `target` using programs tuned elsewhere: for each task,
 /// look up the same workload in `foreign` (falling back to naive when the
 /// workload does not exist there). Models Fig. 8's "CPrune model executed
 /// on a different processor".
-pub fn latency_with_programs(graph: &Graph, foreign: &TaskTable, sim: &Simulator) -> f64 {
+pub fn latency_with_programs(graph: &Graph, foreign: &TaskTable, target: &dyn Target) -> f64 {
     let (_, mut table) = extract_tasks(graph);
     let ids: Vec<usize> = table.tasks().map(|t| t.id).collect();
     for tid in ids {
@@ -161,16 +161,16 @@ pub fn latency_with_programs(graph: &Graph, foreign: &TaskTable, sim: &Simulator
             .find(|t| t.workload.same_task(&w))
             .and_then(|t| t.best_program.clone())
             .unwrap_or_else(|| Program::naive(&w));
-        let lat = sim.latency(&w, &prog);
+        let lat = target.latency(&w, &prog);
         table.record_tuned(tid, prog, lat);
     }
-    table.model_latency() + overhead_latency(graph, sim)
+    table.model_latency() + overhead_latency(graph, target)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::device::DeviceSpec;
+    use crate::device::{DeviceSpec, Simulator};
     use crate::graph::model_zoo::{Model, ModelKind};
     use crate::tuner::TuneOptions;
 

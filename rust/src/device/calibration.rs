@@ -11,7 +11,14 @@ use super::spec::DeviceSpec;
 use crate::compiler;
 use crate::graph::model_zoo::{Model, ModelKind};
 use crate::tuner::{TuneOptions, TuningSession};
-use std::collections::HashMap;
+use crate::util::json::{self, Json};
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+
+/// Format tag of a persisted calibration table.
+pub const CALIBRATION_FORMAT: &str = "cprune-calibration";
+/// Bump when the entry schema changes; `parse` rejects other versions.
+pub const CALIBRATION_VERSION: u64 = 1;
 
 /// One anchor: the paper measured `fps` for `model` on this device.
 #[derive(Clone, Debug)]
@@ -43,7 +50,7 @@ pub fn paper_anchors(device_name: &str) -> Vec<Anchor> {
 }
 
 /// Result of a calibration fit.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Calibration {
     /// Multiply `peak_macs_per_core` and `mem_bytes_per_s` by this.
     pub scale: f64,
@@ -84,6 +91,118 @@ pub fn apply(spec: &DeviceSpec, cal: &Calibration) -> DeviceSpec {
     s
 }
 
+/// Persistable per-device calibration fits (device name → [`Calibration`]),
+/// so an expensive [`calibrate`] run is done once and reloaded by later
+/// sessions (`cprune calibrate --save`, [`super::LutTarget::calibrated`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CalibrationTable {
+    pub entries: BTreeMap<String, Calibration>,
+}
+
+impl CalibrationTable {
+    pub fn new() -> CalibrationTable {
+        CalibrationTable::default()
+    }
+
+    pub fn insert(&mut self, device: &str, cal: Calibration) {
+        self.entries.insert(device.to_string(), cal);
+    }
+
+    pub fn get(&self, device: &str) -> Option<&Calibration> {
+        self.entries.get(device)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Versioned JSON document (byte-stable: BTreeMap ordering).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Str(CALIBRATION_FORMAT.to_string())),
+            ("version", Json::Num(CALIBRATION_VERSION as f64)),
+            (
+                "entries",
+                Json::Arr(
+                    self.entries
+                        .iter()
+                        .map(|(device, cal)| {
+                            Json::obj(vec![
+                                ("device", Json::Str(device.clone())),
+                                ("scale", Json::Num(cal.scale)),
+                                ("residual", Json::Num(cal.residual)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a document produced by [`CalibrationTable::to_json`].
+    pub fn parse(text: &str) -> Result<CalibrationTable, String> {
+        let j = json::parse(text)?;
+        match j.get("format").and_then(Json::as_str) {
+            Some(CALIBRATION_FORMAT) => {}
+            other => return Err(format!("not a calibration table (format {other:?})")),
+        }
+        match j.get("version").and_then(Json::as_usize) {
+            Some(v) if v as u64 == CALIBRATION_VERSION => {}
+            other => {
+                return Err(format!(
+                    "unsupported calibration version {other:?} (want {CALIBRATION_VERSION})"
+                ))
+            }
+        }
+        let mut table = CalibrationTable::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("calibration table missing entries")?
+        {
+            let device = e
+                .get("device")
+                .and_then(Json::as_str)
+                .ok_or("entry missing device")?;
+            let scale = e
+                .get("scale")
+                .and_then(Json::as_f64)
+                .filter(|s| s.is_finite() && *s > 0.0)
+                .ok_or("entry missing positive scale")?;
+            let residual = e
+                .get("residual")
+                .and_then(Json::as_f64)
+                .ok_or("entry missing residual")?;
+            table.insert(device, Calibration { scale, residual });
+        }
+        Ok(table)
+    }
+
+    /// Write the table (temp-file + rename, like the tuning cache).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        let path = path.as_ref();
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(format!(".{}.tmp", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, self.to_json().to_string())
+            .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("renaming {} into place: {e}", tmp.display()))
+    }
+
+    /// Load a table previously written by [`CalibrationTable::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<CalibrationTable, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +229,37 @@ mod tests {
     fn empty_anchor_list_is_identity() {
         let cal = calibrate(&DeviceSpec::rtx3080(), &[], 0);
         assert_eq!(cal.scale, 1.0);
+    }
+
+    #[test]
+    fn calibration_table_roundtrips_through_disk() {
+        let mut table = CalibrationTable::new();
+        table.insert(
+            "Kryo 385 (Galaxy S9)",
+            Calibration { scale: 0.8312345678901234, residual: 0.042 },
+        );
+        table.insert("Mali-G72 (Galaxy S9 GPU)", Calibration { scale: 1.25, residual: 0.0 });
+        let path = std::env::temp_dir().join("cprune_calibration_unit_test.json");
+        table.save(&path).unwrap();
+        let back = CalibrationTable::load(&path).unwrap();
+        assert_eq!(back, table);
+        // f64 survives the text round trip exactly (shortest-repr writer)
+        assert_eq!(
+            back.get("Kryo 385 (Galaxy S9)").unwrap().scale.to_bits(),
+            0.8312345678901234f64.to_bits()
+        );
+        let _ = std::fs::remove_file(&path);
+        // foreign/versioned documents are rejected
+        assert!(CalibrationTable::parse("{}").is_err());
+        assert!(CalibrationTable::parse(
+            r#"{"format":"cprune-calibration","version":9,"entries":[]}"#
+        )
+        .is_err());
+        // a fitted calibration applies to a LutTarget's spec
+        let cal = back.get("Kryo 385 (Galaxy S9)").unwrap();
+        let t = crate::device::LutTarget::calibrated(&DeviceSpec::kryo385(), cal);
+        use crate::device::Target as _;
+        assert!(t.spec().peak_macs() < DeviceSpec::kryo385().peak_macs());
     }
 
     #[test]

@@ -6,8 +6,13 @@
 //! our simulator (tuned per sampled channel count, interpolated between),
 //! giving the NetAdapt baseline its authentic O(1) inner-loop queries and
 //! making the Fig. 11 search-cost comparison faithful.
+//!
+//! These tables also back the [`super::LutTarget`] measurement provider
+//! (DESIGN.md §11), which serves them through the uniform
+//! [`super::Target`] plane — `cprune run --target lut:<device>` tunes
+//! against the tables with analytic fallback for uncovered workloads.
 
-use super::sim::Simulator;
+use super::target::Target;
 use crate::tir::Workload;
 use crate::tuner::{tune_task, TuneOptions};
 use crate::util::rng::Rng;
@@ -21,10 +26,11 @@ pub struct LayerLut {
 }
 
 impl LayerLut {
-    /// Build by tuning the workload at `samples` channel counts.
+    /// Build by tuning the workload at `samples` channel counts on any
+    /// measurement provider (typically an analytic or calibrated target).
     pub fn build(
         base: &Workload,
-        sim: &Simulator,
+        target: &dyn Target,
         opts: &TuneOptions,
         samples: &[usize],
         seed: u64,
@@ -35,7 +41,7 @@ impl LayerLut {
                 let mut w = base.clone();
                 w.ff = ff;
                 let mut rng = Rng::with_stream(seed, ff as u64 | 1);
-                let r = tune_task(&w, sim, opts, &mut rng, None);
+                let r = tune_task(&w, target, opts, &mut rng, None);
                 (ff, r.latency)
             })
             .collect();
@@ -76,7 +82,7 @@ impl ModelLut {
     /// Sample each layer at {25, 50, 75, 100}% of its original width.
     pub fn build(
         model: &crate::graph::model_zoo::Model,
-        sim: &Simulator,
+        target: &dyn Target,
         opts: &TuneOptions,
         seed: u64,
     ) -> ModelLut {
@@ -95,7 +101,7 @@ impl ModelLut {
                 .collect();
             layers.insert(
                 sg.anchor,
-                LayerLut::build(&sg.workload, sim, opts, &samples, seed),
+                LayerLut::build(&sg.workload, target, opts, &samples, seed),
             );
         }
         ModelLut { layers }
@@ -105,7 +111,7 @@ impl ModelLut {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::device::DeviceSpec;
+    use crate::device::{DeviceSpec, Simulator};
     use crate::graph::model_zoo::{Model, ModelKind};
     use crate::graph::ops::OpKind;
 

@@ -1,10 +1,20 @@
-//! Target-device models and the latency simulator.
+//! Target-device models and the measurement plane (DESIGN.md §11).
 //!
 //! The paper measures real phones (Kryo 280/385/585 CPUs, Mali-G72 GPU) and
 //! desktop GPUs. None exist in this environment, so `spec.rs` captures each
 //! target's architectural parameters and `sim.rs` estimates the latency of a
 //! *scheduled program* on a *device* analytically (roofline + schedule
 //! efficiency + cache behaviour + measurement noise).
+//!
+//! Everything above this module talks to devices through one seam: the
+//! [`Target`] trait (`target.rs`) — `spec()`, `latency()`,
+//! `measure_batch()` — with three providers: [`AnalyticTarget`] (the
+//! roofline), [`LutTarget`] (calibrated per-layer tables from `lut.rs` /
+//! `calibration.rs`, analytic fallback) and [`ReplayTarget`]
+//! (`replay.rs`: record every measurement to a versioned JSON trace,
+//! replay it byte-identically). Devices resolve by name through
+//! [`TargetRegistry`] (`registry.rs`): the five built-ins plus
+//! user-defined JSON specs (`--device-file` / `CPRUNE_DEVICES`).
 //!
 //! What matters for reproducing the paper is not absolute numbers but the
 //! *decision landscape*: schedule quality spreads of ~5–30× between worst
@@ -15,8 +25,14 @@
 
 pub mod calibration;
 pub mod lut;
+pub mod registry;
+pub mod replay;
 pub mod sim;
 pub mod spec;
+pub mod target;
 
+pub use registry::{TargetRegistry, DEVICES_ENV};
+pub use replay::ReplayTarget;
 pub use sim::Simulator;
 pub use spec::{DeviceKind, DeviceSpec};
+pub use target::{AnalyticTarget, LutTarget, Target};

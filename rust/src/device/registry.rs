@@ -1,0 +1,297 @@
+//! Device registry: resolve execution targets by name (DESIGN.md §11).
+//!
+//! The five built-in specs register under their CLI short names
+//! (`kryo280 kryo385 kryo585 mali-g72 rtx3080`); user-defined specs load
+//! from versioned JSON device files ([`DEVICES_FORMAT`]
+//! v[`DEVICES_VERSION`]) via `--device-file` or the PATH-style
+//! [`DEVICES_ENV`] environment variable, and resolve exactly like the
+//! built-ins — `cprune run --target <name>` tunes for them end-to-end.
+//!
+//! A device-file entry is a [`DeviceSpec`] JSON object plus an optional
+//! `"short"` lookup key (defaulting to the spec's display name):
+//!
+//! ```json
+//! {"format": "cprune-devices", "version": 1, "devices": [
+//!   {"short": "pixel9", "name": "Tensor G4 (Pixel 9)", "kind": "cpu",
+//!    "cores": 8, "peak_macs_per_core": 1.1e10, "simd_lanes": 4,
+//!    "l1_bytes": 65536, "l2_bytes": 4194304,
+//!    "mem_bytes_per_s": 5.1e10, "dispatch_overhead_s": 6e-6}
+//! ]}
+//! ```
+//!
+//! Later registrations win: a device file may deliberately shadow a
+//! built-in short name (e.g. a recalibrated `kryo385`).
+
+use super::spec::DeviceSpec;
+use super::target::{AnalyticTarget, Target};
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+/// Format tag of a device-file header.
+pub const DEVICES_FORMAT: &str = "cprune-devices";
+/// Bump when the entry schema changes; `load_file` rejects other versions.
+pub const DEVICES_VERSION: u64 = 1;
+/// PATH-style (`:`-separated) list of device files loaded by
+/// [`TargetRegistry::from_env`] before any `--device-file`.
+pub const DEVICES_ENV: &str = "CPRUNE_DEVICES";
+
+/// One resolvable device.
+#[derive(Clone, Debug)]
+pub struct RegisteredDevice {
+    /// Primary lookup key (what `--target`/`--device` match).
+    pub short: String,
+    /// Extra lookup keys (e.g. `mali` for `mali-g72`).
+    pub aliases: Vec<String>,
+    pub spec: DeviceSpec,
+    /// Where the entry came from: `builtin` or the device-file path.
+    pub source: String,
+}
+
+/// Name → spec resolution for the measurement plane.
+#[derive(Clone, Debug, Default)]
+pub struct TargetRegistry {
+    devices: Vec<RegisteredDevice>,
+}
+
+impl TargetRegistry {
+    /// Just the five built-in devices.
+    pub fn builtin() -> TargetRegistry {
+        let mut r = TargetRegistry { devices: Vec::new() };
+        let b = |short: &str, aliases: &[&str], spec: DeviceSpec| RegisteredDevice {
+            short: short.to_string(),
+            aliases: aliases.iter().map(|a| a.to_string()).collect(),
+            spec,
+            source: "builtin".to_string(),
+        };
+        r.devices.push(b("kryo280", &[], DeviceSpec::kryo280()));
+        r.devices.push(b("kryo385", &[], DeviceSpec::kryo385()));
+        r.devices.push(b("kryo585", &[], DeviceSpec::kryo585()));
+        r.devices.push(b("mali-g72", &["mali"], DeviceSpec::mali_g72()));
+        r.devices.push(b("rtx3080", &[], DeviceSpec::rtx3080()));
+        r
+    }
+
+    /// Built-ins plus every device file named by [`DEVICES_ENV`]
+    /// (missing variable = built-ins only; unreadable files are loud).
+    pub fn from_env() -> Result<TargetRegistry, String> {
+        match std::env::var(DEVICES_ENV) {
+            Ok(paths) => TargetRegistry::from_paths(&paths),
+            Err(_) => Ok(TargetRegistry::builtin()),
+        }
+    }
+
+    /// Built-ins plus a `:`-separated list of device-file paths (what
+    /// [`DEVICES_ENV`] holds); empty segments are skipped.
+    pub fn from_paths(paths: &str) -> Result<TargetRegistry, String> {
+        let mut r = TargetRegistry::builtin();
+        for path in paths.split(':').filter(|p| !p.is_empty()) {
+            r.load_file(path)?;
+        }
+        Ok(r)
+    }
+
+    /// Register (or shadow) a device under `short`.
+    pub fn add(&mut self, short: &str, spec: DeviceSpec, source: &str) {
+        self.devices.push(RegisteredDevice {
+            short: short.to_string(),
+            aliases: Vec::new(),
+            spec,
+            source: source.to_string(),
+        });
+    }
+
+    /// Load a `cprune-devices` JSON file; returns how many devices it
+    /// added. Every entry must parse — a half-loaded registry would make
+    /// "unknown device" errors lie about what is available.
+    pub fn load_file(&mut self, path: impl AsRef<Path>) -> Result<usize, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        self.load_str(&text, &path.display().to_string())
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Parse a device-file document, tagging entries with `source`.
+    pub fn load_str(&mut self, text: &str, source: &str) -> Result<usize, String> {
+        let j = json::parse(text)?;
+        match j.get("format").and_then(Json::as_str) {
+            Some(DEVICES_FORMAT) => {}
+            other => return Err(format!("not a device file (format {other:?})")),
+        }
+        match j.get("version").and_then(Json::as_usize) {
+            Some(v) if v as u64 == DEVICES_VERSION => {}
+            other => {
+                return Err(format!(
+                    "unsupported device-file version {other:?} (want {DEVICES_VERSION})"
+                ))
+            }
+        }
+        let entries = j
+            .get("devices")
+            .and_then(Json::as_arr)
+            .ok_or("device file missing devices array")?;
+        // Parse everything before registering anything, so a bad entry
+        // cannot leave a half-loaded registry behind.
+        let mut parsed: Vec<(String, DeviceSpec)> = Vec::with_capacity(entries.len());
+        for e in entries {
+            let spec = DeviceSpec::from_json(e)?;
+            let short = e
+                .get("short")
+                .and_then(Json::as_str)
+                .unwrap_or(spec.name)
+                .to_string();
+            parsed.push((short, spec));
+        }
+        let added = parsed.len();
+        for (short, spec) in parsed {
+            self.add(&short, spec, source);
+        }
+        Ok(added)
+    }
+
+    /// All registered devices, in registration order (shadowed entries
+    /// included — `cprune devices` shows the whole picture).
+    pub fn devices(&self) -> &[RegisteredDevice] {
+        &self.devices
+    }
+
+    /// Sorted, deduplicated lookup names (shorts only, not aliases) —
+    /// what "unknown device" diagnostics list.
+    pub fn names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.devices.iter().map(|d| d.short.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        names
+    }
+
+    /// Look up a spec by short name or alias; later registrations shadow
+    /// earlier ones.
+    pub fn spec(&self, name: &str) -> Option<&DeviceSpec> {
+        self.devices
+            .iter()
+            .rev()
+            .find(|d| d.short == name || d.aliases.iter().any(|a| a == name))
+            .map(|d| &d.spec)
+    }
+
+    /// Resolve a name to an analytic measurement provider (an optional
+    /// `analytic:` prefix is accepted); richer providers (LUT tables,
+    /// record/replay) wrap the result — see `run::RunBuilder::target_name`
+    /// and the CLI's `--record-trace`/`--replay-trace`.
+    pub fn resolve(&self, name: &str) -> Result<Box<dyn Target>, String> {
+        let bare = name.strip_prefix("analytic:").unwrap_or(name);
+        match self.spec(bare) {
+            Some(spec) => Ok(Box::new(AnalyticTarget::new(spec.clone()))),
+            None => Err(self.unknown_device_error(bare)),
+        }
+    }
+
+    /// The diagnostic every unknown-name path shows: names the registry's
+    /// valid devices, including any loaded from device files.
+    pub fn unknown_device_error(&self, name: &str) -> String {
+        format!(
+            "unknown device '{name}'. known devices: {}",
+            self.names().join(" ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_names_resolve_to_their_specs() {
+        let r = TargetRegistry::builtin();
+        assert_eq!(r.spec("kryo385").unwrap().name, "Kryo 385 (Galaxy S9)");
+        assert_eq!(r.spec("mali-g72").unwrap().name, "Mali-G72 (Galaxy S9 GPU)");
+        assert_eq!(r.spec("mali").unwrap().name, "Mali-G72 (Galaxy S9 GPU)");
+        assert_eq!(r.spec("rtx3080").unwrap().kind, crate::device::DeviceKind::Gpu);
+        assert!(r.spec("galaxy-s10").is_none());
+        assert_eq!(r.names(), vec!["kryo280", "kryo385", "kryo585", "mali-g72", "rtx3080"]);
+    }
+
+    #[test]
+    fn unknown_device_error_lists_every_valid_name() {
+        let mut r = TargetRegistry::builtin();
+        let e = r.unknown_device_error("galaxy-s10");
+        assert!(e.contains("galaxy-s10"), "{e}");
+        for name in ["kryo280", "kryo385", "kryo585", "mali-g72", "rtx3080"] {
+            assert!(e.contains(name), "{e} missing {name}");
+        }
+        // names loaded from device files join the diagnostic
+        let mut custom = DeviceSpec::kryo385();
+        custom.name = "Custom Phone";
+        r.add("custom-phone", custom, "test");
+        let e = r.unknown_device_error("galaxy-s10");
+        assert!(e.contains("custom-phone"), "{e}");
+    }
+
+    #[test]
+    fn device_file_roundtrip_and_resolution() {
+        let doc = r#"{"format":"cprune-devices","version":1,"devices":[
+            {"short":"pixel9","name":"Tensor G4 (Pixel 9)","kind":"cpu",
+             "cores":8,"peak_macs_per_core":1.1e10,"simd_lanes":4,
+             "l1_bytes":65536,"l2_bytes":4194304,
+             "mem_bytes_per_s":5.1e10,"dispatch_overhead_s":6e-6}]}"#;
+        let mut r = TargetRegistry::builtin();
+        assert_eq!(r.load_str(doc, "inline").unwrap(), 1);
+        let spec = r.spec("pixel9").expect("loaded device resolves");
+        assert_eq!(spec.name, "Tensor G4 (Pixel 9)");
+        assert_eq!(spec.cores, 8);
+        let target = r.resolve("pixel9").unwrap();
+        assert_eq!(target.spec().cores, 8);
+        // analytic: prefix accepted
+        assert!(r.resolve("analytic:pixel9").is_ok());
+        assert!(r.resolve("nope").unwrap_err().contains("pixel9"));
+    }
+
+    #[test]
+    fn later_registrations_shadow_earlier_ones() {
+        let mut r = TargetRegistry::builtin();
+        let mut faster = DeviceSpec::kryo385();
+        faster.peak_macs_per_core *= 2.0;
+        r.add("kryo385", faster, "recalibration");
+        assert_eq!(
+            r.spec("kryo385").unwrap().peak_macs_per_core,
+            DeviceSpec::kryo385().peak_macs_per_core * 2.0
+        );
+        // names() stays deduplicated
+        assert_eq!(r.names().iter().filter(|n| **n == "kryo385").count(), 1);
+    }
+
+    #[test]
+    fn malformed_device_files_fail_loudly() {
+        let mut r = TargetRegistry::builtin();
+        assert!(r.load_str("{}", "x").is_err());
+        assert!(r
+            .load_str(r#"{"format":"other","version":1,"devices":[]}"#, "x")
+            .is_err());
+        assert!(r
+            .load_str(r#"{"format":"cprune-devices","version":9,"devices":[]}"#, "x")
+            .is_err());
+        // an entry missing fields poisons the whole load
+        assert!(r
+            .load_str(
+                r#"{"format":"cprune-devices","version":1,"devices":[{"short":"x"}]}"#,
+                "x"
+            )
+            .is_err());
+        assert!(r.load_file("/nonexistent/devices.json").is_err());
+    }
+
+    #[test]
+    fn from_paths_loads_each_file() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("cprune_registry_unit_test_devices.json");
+        let doc = r#"{"format":"cprune-devices","version":1,"devices":[
+            {"short":"tdev","name":"Test Device","kind":"gpu","cores":2,
+             "peak_macs_per_core":1e9,"simd_lanes":8,"l1_bytes":1024,
+             "l2_bytes":2048,"mem_bytes_per_s":1e9,"dispatch_overhead_s":1e-6}]}"#;
+        std::fs::write(&path, doc).unwrap();
+        let r = TargetRegistry::from_paths(&path.display().to_string()).unwrap();
+        assert!(r.spec("tdev").is_some());
+        assert!(TargetRegistry::from_paths("").unwrap().spec("tdev").is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+}

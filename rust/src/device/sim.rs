@@ -24,11 +24,18 @@ use crate::tir::{Program, Workload};
 use crate::util::rng::Rng;
 
 /// Latency simulator for one device.
+///
+/// This is the *analytic* measurement provider behind
+/// [`super::AnalyticTarget`]; it also implements [`super::Target`]
+/// directly so existing `&Simulator` call sites coerce onto the
+/// measurement plane unchanged.
 #[derive(Clone, Debug)]
 pub struct Simulator {
     pub spec: DeviceSpec,
     /// Log-normal sigma of measurement jitter (0 disables noise).
-    pub noise_sigma: f32,
+    /// `f64` end-to-end — latencies are `f64`, and narrowing the jitter
+    /// through `f32` would quantize every measured value.
+    pub noise_sigma: f64,
 }
 
 impl Simulator {
@@ -140,7 +147,7 @@ impl Simulator {
 
     /// One noisy measurement (what the tuner / Algorithm 1 line 9 sees).
     pub fn measure(&self, w: &Workload, p: &Program, rng: &mut Rng) -> f64 {
-        self.latency(w, p) * rng.lognormal(self.noise_sigma) as f64
+        self.latency(w, p) * rng.lognormal(self.noise_sigma)
     }
 
     /// Mean of `n` noisy measurements.
@@ -211,6 +218,24 @@ mod tests {
         assert!((m / base - 1.0).abs() < 0.25);
         let mut rng2 = Rng::new(0);
         assert_eq!(m, sim.measure(&w, &p, &mut rng2));
+    }
+
+    #[test]
+    fn zero_sigma_measurement_is_exactly_the_deterministic_latency() {
+        // noise_sigma is f64 end-to-end: at sigma = 0 the jitter factor
+        // is exactly 1.0, so measure/measure_avg are bit-identical to
+        // latency (no f32 round trip anywhere on the path).
+        let w = wl(96);
+        let mut sim = Simulator::new(DeviceSpec::kryo585());
+        sim.noise_sigma = 0.0;
+        let p = good_program(&w);
+        let base = sim.latency(&w, &p);
+        let mut rng = Rng::new(3);
+        assert_eq!(sim.measure(&w, &p, &mut rng).to_bits(), base.to_bits());
+        assert_eq!(sim.measure_avg(&w, &p, &mut rng, 1).to_bits(), base.to_bits());
+        // n = 2: (x + x) / 2 is exact in IEEE; larger n would round the
+        // running sum, so "exact" is only promised per measurement.
+        assert_eq!(sim.measure_avg(&w, &p, &mut rng, 2).to_bits(), base.to_bits());
     }
 
     #[test]

@@ -4,11 +4,31 @@
 //! peak, LPDDR4/4X/5 for bandwidth). The simulator consumes ratios, so
 //! modest absolute errors do not change any experiment's *shape*.
 
+use crate::util::json::Json;
+
 /// CPU vs GPU execution model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum DeviceKind {
     Cpu,
     Gpu,
+}
+
+impl DeviceKind {
+    /// Stable string used by the device-file / measurement-trace schemas.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DeviceKind::Cpu => "cpu",
+            DeviceKind::Gpu => "gpu",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DeviceKind, String> {
+        match s {
+            "cpu" => Ok(DeviceKind::Cpu),
+            "gpu" => Ok(DeviceKind::Gpu),
+            other => Err(format!("unknown device kind '{other}' (want cpu|gpu)")),
+        }
+    }
 }
 
 /// One execution target.
@@ -125,6 +145,84 @@ impl DeviceSpec {
     pub fn peak_macs(&self) -> f64 {
         self.peak_macs_per_core * self.cores as f64
     }
+
+    /// JSON encoding shared by the device-file schema
+    /// (`cprune-devices`, see [`super::TargetRegistry`]) and the
+    /// measurement-trace header (`cprune-measure-trace`,
+    /// [`super::ReplayTarget`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("kind", Json::Str(self.kind.as_str().to_string())),
+            ("cores", Json::Num(self.cores as f64)),
+            ("peak_macs_per_core", Json::Num(self.peak_macs_per_core)),
+            ("simd_lanes", Json::Num(self.simd_lanes as f64)),
+            ("l1_bytes", Json::Num(self.l1_bytes as f64)),
+            ("l2_bytes", Json::Num(self.l2_bytes as f64)),
+            ("mem_bytes_per_s", Json::Num(self.mem_bytes_per_s)),
+            ("dispatch_overhead_s", Json::Num(self.dispatch_overhead_s)),
+        ])
+    }
+
+    /// Parse a spec from [`DeviceSpec::to_json`] output (or a
+    /// hand-written device-file entry). Names matching a built-in are
+    /// reused; novel names are interned (leaked once per distinct name
+    /// per process — specs are loaded a handful of times, not in loops).
+    pub fn from_json(j: &Json) -> Result<DeviceSpec, String> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("device spec missing name")?;
+        let kind = DeviceKind::parse(
+            j.get("kind")
+                .and_then(Json::as_str)
+                .ok_or("device spec missing kind")?,
+        )?;
+        let usize_field = |key: &str| -> Result<usize, String> {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("device spec missing {key}"))
+        };
+        let f64_field = |key: &str| -> Result<f64, String> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .filter(|v| v.is_finite() && *v > 0.0)
+                .ok_or_else(|| format!("device spec missing positive {key}"))
+        };
+        Ok(DeviceSpec {
+            name: intern_device_name(name),
+            kind,
+            cores: usize_field("cores")?.max(1),
+            peak_macs_per_core: f64_field("peak_macs_per_core")?,
+            simd_lanes: usize_field("simd_lanes")?.max(1),
+            l1_bytes: usize_field("l1_bytes")?.max(1),
+            l2_bytes: usize_field("l2_bytes")?.max(1),
+            mem_bytes_per_s: f64_field("mem_bytes_per_s")?,
+            dispatch_overhead_s: j
+                .get("dispatch_overhead_s")
+                .and_then(Json::as_f64)
+                .filter(|v| v.is_finite() && *v >= 0.0)
+                .ok_or("device spec missing dispatch_overhead_s")?,
+        })
+    }
+}
+
+/// Map a parsed device name back onto a `'static` str: built-in names are
+/// reused, novel ones are leaked once per distinct name per process (the
+/// same pattern `tir::jsonio` uses for epilogue tags).
+fn intern_device_name(name: &str) -> &'static str {
+    for spec in [
+        DeviceSpec::kryo280(),
+        DeviceSpec::kryo385(),
+        DeviceSpec::kryo585(),
+        DeviceSpec::mali_g72(),
+        DeviceSpec::rtx3080(),
+    ] {
+        if spec.name == name {
+            return spec.name;
+        }
+    }
+    Box::leak(name.to_string().into_boxed_str())
 }
 
 #[cfg(test)]
@@ -151,5 +249,25 @@ mod tests {
     #[test]
     fn host_gpu_dwarfs_mobile() {
         assert!(DeviceSpec::rtx3080().peak_macs() > 50.0 * DeviceSpec::kryo585().peak_macs());
+    }
+
+    #[test]
+    fn spec_json_roundtrip_is_exact() {
+        for spec in [DeviceSpec::kryo385(), DeviceSpec::mali_g72(), DeviceSpec::rtx3080()] {
+            let j = spec.to_json();
+            let back = DeviceSpec::from_json(&j).unwrap();
+            assert_eq!(back.name, spec.name);
+            assert_eq!(back.kind, spec.kind);
+            assert_eq!(back.cores, spec.cores);
+            assert_eq!(back.peak_macs_per_core.to_bits(), spec.peak_macs_per_core.to_bits());
+            assert_eq!(back.simd_lanes, spec.simd_lanes);
+            assert_eq!(back.l1_bytes, spec.l1_bytes);
+            assert_eq!(back.l2_bytes, spec.l2_bytes);
+            assert_eq!(back.mem_bytes_per_s.to_bits(), spec.mem_bytes_per_s.to_bits());
+            assert_eq!(back.dispatch_overhead_s.to_bits(), spec.dispatch_overhead_s.to_bits());
+            // built-in names intern to the same 'static str, no leak
+            assert!(std::ptr::eq(back.name, spec.name));
+        }
+        assert!(DeviceSpec::from_json(&Json::obj(vec![])).is_err());
     }
 }

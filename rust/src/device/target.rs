@@ -1,0 +1,452 @@
+//! The measurement plane: one [`Target`] trait, pluggable providers
+//! (DESIGN.md §11).
+//!
+//! The paper's harness swaps freely between Kryo CPUs, a Mali GPU and a
+//! desktop GPU over TVM's RPC measurement plane; everything above it (the
+//! tuner, CPrune's gates, the experiment harnesses) only ever asks two
+//! questions — *"what does this program cost?"* and *"measure this batch
+//! for me"*. [`Target`] is that seam. Three providers ship:
+//!
+//! * [`AnalyticTarget`] — wraps the roofline [`Simulator`]; bit-for-bit
+//!   identical to the pre-trait `Simulator` wiring (pinned by
+//!   `tests/target_tests.rs`);
+//! * [`LutTarget`] — serves calibrated per-layer latency tables
+//!   ([`super::lut::LayerLut`], the Tang-style channel-count step data)
+//!   with analytic fallback for uncovered workloads;
+//! * [`super::ReplayTarget`] — records every measurement to a versioned
+//!   JSON trace and replays it byte-identically (deterministic
+//!   cross-machine CI, offline debugging of tuner decisions).
+//!
+//! Devices resolve by name through [`super::TargetRegistry`] — the five
+//! built-ins plus user-defined specs loaded from JSON device files.
+//!
+//! ## Measurement contract
+//!
+//! All device measurement goes through [`Target::measure_batch`]: repeats
+//! and seeded jitter live here, in one place, instead of being
+//! re-implemented per caller. Implementations MUST consume exactly
+//! `repeats` jitter draws from `rng` per program, in batch order — the
+//! provided implementation does — because [`super::ReplayTarget`] keeps a
+//! replayed run's RNG stream aligned by burning the same draws. At
+//! `noise_sigma() == 0.0` a measurement is *exactly* the deterministic
+//! [`Target::latency`] (see `util::rng::Rng::lognormal`).
+
+use super::lut::LayerLut;
+use super::replay::ReplayTarget;
+use super::sim::Simulator;
+use super::spec::DeviceSpec;
+use crate::tir::{Program, Workload};
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// One execution target behind the measurement plane.
+///
+/// Object-safe: the tuner, sessions and the run layer hold `&dyn Target`
+/// / `Box<dyn Target>`. `Send + Sync` are supertraits because
+/// `TuningSession::tune_graph` measures tasks from scoped worker threads.
+pub trait Target: Send + Sync {
+    /// Architectural parameters of the device this provider answers for.
+    fn spec(&self) -> &DeviceSpec;
+
+    /// Deterministic (noise-free) latency estimate of `p` on this device,
+    /// in seconds.
+    fn latency(&self, w: &Workload, p: &Program) -> f64;
+
+    /// Log-normal sigma of measurement jitter (0 = noise-free provider).
+    fn noise_sigma(&self) -> f64 {
+        0.0
+    }
+
+    /// Measure every program `repeats` times and return the per-program
+    /// mean latencies, in batch order. This is the ONE measurement entry
+    /// point: repeats and seeded jitter are implemented here rather than
+    /// per caller (see the module-level measurement contract).
+    fn measure_batch(
+        &self,
+        w: &Workload,
+        programs: &[&Program],
+        rng: &mut Rng,
+        repeats: usize,
+    ) -> Vec<f64> {
+        let sigma = self.noise_sigma();
+        programs
+            .iter()
+            .map(|&p| {
+                let base = self.latency(w, p);
+                (0..repeats).map(|_| base * rng.lognormal(sigma)).sum::<f64>() / repeats as f64
+            })
+            .collect()
+    }
+
+    /// Mean of `repeats` noisy measurements of one program (a one-element
+    /// [`Target::measure_batch`]).
+    fn measure_avg(&self, w: &Workload, p: &Program, rng: &mut Rng, repeats: usize) -> f64 {
+        self.measure_batch(w, &[p], rng, repeats)[0]
+    }
+
+    /// Latency of a non-tunable overhead op that moves `bytes` of data
+    /// (pooling, flatten): pure memory movement + dispatch. Spec-derived;
+    /// providers should not override it (the replay provider reproduces
+    /// it from the recorded spec alone).
+    fn overhead_latency(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.spec().mem_bytes_per_s + self.spec().dispatch_overhead_s
+    }
+
+    /// Display name of the device (the spec's name).
+    fn name(&self) -> &'static str {
+        self.spec().name
+    }
+
+    /// Downcast hook for the replay provider, so the run layer can
+    /// persist a recording target's trace without `Any` plumbing.
+    fn as_replay(&self) -> Option<&ReplayTarget> {
+        None
+    }
+}
+
+/// The roofline simulator IS a measurement provider: existing
+/// `&Simulator` call sites coerce straight onto the plane, and the
+/// provided `measure_batch` reproduces the historical
+/// `Simulator::measure_avg` loop draw-for-draw.
+impl Target for Simulator {
+    fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    fn latency(&self, w: &Workload, p: &Program) -> f64 {
+        Simulator::latency(self, w, p)
+    }
+
+    fn noise_sigma(&self) -> f64 {
+        self.noise_sigma
+    }
+}
+
+/// The analytic provider: today's roofline [`Simulator`] behind the
+/// [`Target`] seam. Output is bit-for-bit identical to using the
+/// simulator directly (both run the same roofline and the same provided
+/// `measure_batch`), which `tests/target_tests.rs` pins.
+#[derive(Clone, Debug)]
+pub struct AnalyticTarget {
+    sim: Simulator,
+}
+
+impl AnalyticTarget {
+    pub fn new(spec: DeviceSpec) -> AnalyticTarget {
+        AnalyticTarget { sim: Simulator::new(spec) }
+    }
+
+    /// Wrap an existing simulator (keeps its noise sigma).
+    pub fn from_simulator(sim: Simulator) -> AnalyticTarget {
+        AnalyticTarget { sim }
+    }
+
+    /// Override the measurement jitter (0 disables noise).
+    pub fn with_noise(mut self, sigma: f64) -> AnalyticTarget {
+        self.sim.noise_sigma = sigma;
+        self
+    }
+
+    /// The wrapped roofline simulator.
+    pub fn simulator(&self) -> &Simulator {
+        &self.sim
+    }
+}
+
+impl Target for AnalyticTarget {
+    fn spec(&self) -> &DeviceSpec {
+        &self.sim.spec
+    }
+
+    fn latency(&self, w: &Workload, p: &Program) -> f64 {
+        self.sim.latency(w, p)
+    }
+
+    fn noise_sigma(&self) -> f64 {
+        self.sim.noise_sigma
+    }
+}
+
+/// The family key a LUT covers: every extent of the workload except the
+/// filter count (the dimension pruning sweeps and the table samples).
+fn family_key(w: &Workload) -> Workload {
+    let mut key = w.clone();
+    key.ff = 0;
+    key
+}
+
+/// The lookup-table provider: calibrated per-layer latency tables
+/// ([`LayerLut`], NetAdapt §3's actual mechanism / the Tang et al. step
+/// data) served through the measurement plane, with analytic fallback
+/// for workloads no table covers.
+///
+/// Semantics: a covered workload answers with the *tuned* latency of the
+/// layer at its channel count, regardless of the candidate program —
+/// tuning a covered task degenerates to an O(1) table query, exactly the
+/// saving NetAdapt's tables buy. Workloads outside every table family
+/// (and all overhead queries) fall back to the wrapped roofline
+/// simulator. A workload is in a table's family iff every extent except
+/// `ff` matches — pruning a layer's *own* filters stays covered;
+/// workloads whose input channels were changed by upstream pruning fall
+/// back (the table was not measured for them).
+pub struct LutTarget {
+    sim: Simulator,
+    /// (family key, table) pairs; linear scan (models have tens of
+    /// distinct conv families).
+    tables: Vec<(Workload, LayerLut)>,
+    lut_hits: AtomicUsize,
+    fallbacks: AtomicUsize,
+}
+
+impl LutTarget {
+    /// A table-less target: pure analytic fallback until tables are
+    /// installed with [`LutTarget::insert_table`].
+    pub fn new(spec: DeviceSpec) -> LutTarget {
+        LutTarget {
+            sim: Simulator::new(spec),
+            tables: Vec::new(),
+            lut_hits: AtomicUsize::new(0),
+            fallbacks: AtomicUsize::new(0),
+        }
+    }
+
+    /// A target whose spec was scaled by a fitted
+    /// [`super::calibration::Calibration`] (anchoring absolute latencies
+    /// to real measurements) before any table is built.
+    pub fn calibrated(spec: &DeviceSpec, cal: &super::calibration::Calibration) -> LutTarget {
+        LutTarget::new(super::calibration::apply(spec, cal))
+    }
+
+    /// Install a latency table for `base`'s workload family (replacing
+    /// any existing table for the same family).
+    pub fn insert_table(&mut self, base: &Workload, lut: LayerLut) {
+        let key = family_key(base);
+        if let Some(slot) = self.tables.iter_mut().find(|(k, _)| *k == key) {
+            slot.1 = lut;
+        } else {
+            self.tables.push((key, lut));
+        }
+    }
+
+    /// Build tables for every prunable conv family of `model` by tuning
+    /// each at {25, 50, 75, 100}% of its width (the sampling
+    /// [`super::lut::ModelLut`] uses) — this is what finally wires the
+    /// calibrated step-function data into the tuner: CPrune's candidate
+    /// measurements for covered layers become table queries.
+    pub fn for_model(
+        spec: DeviceSpec,
+        model: &crate::graph::model_zoo::Model,
+        opts: &crate::tuner::TuneOptions,
+        seed: u64,
+    ) -> LutTarget {
+        let sim = Simulator::new(spec);
+        let part = crate::relay::partition::partition(&model.graph);
+        let mut tables: Vec<(Workload, LayerLut)> = Vec::new();
+        for sg in &part.subgraphs {
+            if !model.prunable.contains(&sg.anchor) {
+                continue;
+            }
+            let key = family_key(&sg.workload);
+            if tables.iter().any(|(k, _)| *k == key) {
+                continue;
+            }
+            let ff = sg.workload.ff;
+            let samples: Vec<usize> = [ff / 4, ff / 2, ff * 3 / 4, ff]
+                .iter()
+                .map(|&c| c.max(2))
+                .collect::<std::collections::BTreeSet<_>>()
+                .into_iter()
+                .collect();
+            let lut = LayerLut::build(&sg.workload, &sim, opts, &samples, seed);
+            tables.push((key, lut));
+        }
+        LutTarget {
+            sim,
+            tables,
+            lut_hits: AtomicUsize::new(0),
+            fallbacks: AtomicUsize::new(0),
+        }
+    }
+
+    fn table_for(&self, w: &Workload) -> Option<&LayerLut> {
+        let key = family_key(w);
+        self.tables.iter().find(|(k, _)| *k == key).map(|(_, lut)| lut)
+    }
+
+    /// True when a table covers `w`'s family.
+    pub fn covers(&self, w: &Workload) -> bool {
+        self.table_for(w).is_some()
+    }
+
+    /// Number of installed tables.
+    pub fn num_tables(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Latency queries answered from a table so far.
+    pub fn lut_hits(&self) -> usize {
+        self.lut_hits.load(Ordering::Relaxed)
+    }
+
+    /// Latency queries that fell back to the analytic roofline.
+    pub fn fallbacks(&self) -> usize {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+}
+
+impl Target for LutTarget {
+    fn spec(&self) -> &DeviceSpec {
+        &self.sim.spec
+    }
+
+    fn latency(&self, w: &Workload, p: &Program) -> f64 {
+        match self.table_for(w) {
+            Some(lut) => {
+                self.lut_hits.fetch_add(1, Ordering::Relaxed);
+                lut.latency(w.ff)
+            }
+            None => {
+                self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                self.sim.latency(w, p)
+            }
+        }
+    }
+
+    fn noise_sigma(&self) -> f64 {
+        self.sim.noise_sigma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::OpKind;
+    use crate::tuner::TuneOptions;
+
+    fn wl(ff: usize) -> Workload {
+        Workload::from_conv(
+            &OpKind::Conv2d { kh: 3, kw: 3, cin: 32, cout: ff, stride: 1, padding: 1, groups: 1 },
+            [1, 14, 14, ff],
+            vec!["bn", "relu"],
+        )
+    }
+
+    #[test]
+    fn analytic_target_matches_simulator_bit_for_bit() {
+        let w = wl(64);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let target = AnalyticTarget::new(DeviceSpec::kryo385());
+        let p = Program::naive(&w);
+        assert_eq!(
+            Target::latency(&sim, &w, &p).to_bits(),
+            target.latency(&w, &p).to_bits()
+        );
+        // the measurement plane draws the same noise as the legacy
+        // Simulator::measure_avg loop, draw for draw
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let legacy = sim.measure_avg(&w, &p, &mut r1, 3);
+        let plane = Target::measure_avg(&target, &w, &p, &mut r2, 3);
+        assert_eq!(legacy.to_bits(), plane.to_bits());
+        assert_eq!(r1.next_u64(), r2.next_u64(), "RNG streams diverged");
+    }
+
+    #[test]
+    fn measure_batch_equals_sequential_measure_avg() {
+        let w = wl(96);
+        let target = AnalyticTarget::new(DeviceSpec::mali_g72());
+        let a = Program::naive(&w);
+        let mut b = Program::naive(&w);
+        b.unroll = 4;
+        let mut r1 = Rng::new(4);
+        let batch = target.measure_batch(&w, &[&a, &b], &mut r1, 2);
+        let mut r2 = Rng::new(4);
+        let s1 = Target::measure_avg(&target, &w, &a, &mut r2, 2);
+        let s2 = Target::measure_avg(&target, &w, &b, &mut r2, 2);
+        assert_eq!(batch[0].to_bits(), s1.to_bits());
+        assert_eq!(batch[1].to_bits(), s2.to_bits());
+    }
+
+    #[test]
+    fn lut_target_serves_tables_and_falls_back() {
+        let base = wl(64);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let lut = LayerLut::build(&base, &sim, &TuneOptions::quick(), &[16, 32, 48, 64], 0);
+        let mut t = LutTarget::new(DeviceSpec::kryo385());
+        assert!(!t.covers(&base));
+        t.insert_table(&base, lut.clone());
+        assert!(t.covers(&base));
+        assert_eq!(t.num_tables(), 1);
+
+        // covered: pruned channel counts of the same family hit the table
+        let mut pruned = base.clone();
+        pruned.ff = 32;
+        let p = Program::naive(&pruned);
+        assert_eq!(t.latency(&pruned, &p), lut.latency(32));
+        assert_eq!(t.lut_hits(), 1);
+        assert_eq!(t.fallbacks(), 0);
+        // covered queries ignore the program (table = tuned latency)
+        let mut p2 = Program::naive(&pruned);
+        p2.unroll = 4;
+        assert_eq!(t.latency(&pruned, &p2), t.latency(&pruned, &p));
+
+        // uncovered: a different ic (upstream pruning) falls back
+        let mut foreign = base.clone();
+        foreign.ic = 16;
+        let pf = Program::naive(&foreign);
+        assert_eq!(t.latency(&foreign, &pf), t.sim.latency(&foreign, &pf));
+        assert!(t.fallbacks() >= 1);
+    }
+
+    #[test]
+    fn lut_step_function_is_monotone_at_sampled_points() {
+        // Tang-style channel-count step function: the tuned latency the
+        // table stores must be (weakly) monotone in the channel count.
+        let base = wl(128);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let lut = LayerLut::build(&base, &sim, &TuneOptions::quick(), &[32, 64, 96, 128], 1);
+        for pair in lut.points.windows(2) {
+            assert!(
+                pair[0].1 <= pair[1].1 * 1.05,
+                "step function not monotone: {:?} then {:?}",
+                pair[0],
+                pair[1]
+            );
+        }
+        // interpolation stays within the bracketing samples
+        let mut t = LutTarget::new(DeviceSpec::kryo385());
+        t.insert_table(&base, lut.clone());
+        let mut q = base.clone();
+        q.ff = 80;
+        let p = Program::naive(&q);
+        let mid = t.latency(&q, &p);
+        let lo = lut.latency(64).min(lut.latency(96));
+        let hi = lut.latency(64).max(lut.latency(96));
+        assert!(mid >= lo && mid <= hi);
+    }
+
+    #[test]
+    fn lut_for_model_covers_every_prunable_family() {
+        use crate::graph::model_zoo::{Model, ModelKind};
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let t = LutTarget::for_model(DeviceSpec::kryo385(), &m, &TuneOptions::quick(), 0);
+        assert!(t.num_tables() > 0);
+        let part = crate::relay::partition::partition(&m.graph);
+        for sg in &part.subgraphs {
+            if m.prunable.contains(&sg.anchor) {
+                assert!(t.covers(&sg.workload), "family of conv {} uncovered", sg.anchor);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_noise_target_measures_exact_latency() {
+        let w = wl(64);
+        let t = AnalyticTarget::new(DeviceSpec::kryo280()).with_noise(0.0);
+        let p = Program::naive(&w);
+        let base = t.latency(&w, &p);
+        let mut rng = Rng::new(0);
+        let m = t.measure_batch(&w, &[&p], &mut rng, 1);
+        assert_eq!(m[0].to_bits(), base.to_bits());
+    }
+}

@@ -43,7 +43,7 @@ pub fn run(scale: Scale, seed: u64) -> Vec<Fig7Row> {
                 .tune_opts(scale.tune_opts())
                 .build()
                 .expect("zoo model + known device");
-            let fps_tflite = compiler::compile_fallback(&run.model.graph, &run.sim).fps();
+            let fps_tflite = compiler::compile_fallback(&run.model.graph, run.target()).fps();
             let (orig, _) = run.original_row();
             let cfg = CPruneConfig {
                 max_iterations: scale.cprune_iters(),
@@ -76,7 +76,7 @@ mod tests {
             .seed(1)
             .build()
             .unwrap();
-        let tflite = compiler::compile_fallback(&run.model.graph, &run.sim).fps();
+        let tflite = compiler::compile_fallback(&run.model.graph, run.target()).fps();
         let (orig, _) = run.original_row();
         let tvm = orig.fps;
         assert!(tvm > tflite, "tuned {tvm} <= library {tflite}");

@@ -48,7 +48,7 @@ pub fn run(scale: Scale, seed: u64) -> Vec<Fig8Row> {
     let pruner = CPrune::with_cfg(cfg.clone());
     let results: Vec<_> = (0..n)
         .map(|i| {
-            let session = TuningSession::new(fleet.sim(i), cfg.tune_opts, seed);
+            let session = TuningSession::new(fleet.target(i), cfg.tune_opts, seed);
             let mut oracle = ProxyOracle::new();
             let mut ctx = RunContext::standalone(&model, &session, &mut oracle);
             pruner.run_full(&mut ctx)

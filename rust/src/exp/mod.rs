@@ -69,19 +69,16 @@ pub fn paper_accuracy_budget(kind: crate::graph::model_zoo::ModelKind) -> f64 {
     }
 }
 
-/// Short device names accepted by [`device_by_name`] (CLI help/errors).
+/// Short built-in device names (CLI help text; the authoritative list —
+/// device files included — is `TargetRegistry::names`).
 pub const DEVICE_NAMES: &str = "kryo280 kryo385 kryo585 mali-g72 rtx3080";
 
-/// Non-panicking lookup for user-supplied device names.
+/// Non-panicking lookup for user-supplied device names. A thin shim over
+/// the built-in [`crate::device::TargetRegistry`] (experiment harnesses
+/// only ever name the paper's devices; CLI paths carry their own
+/// registry with `--device-file` entries).
 pub fn try_device_by_name(name: &str) -> Option<DeviceSpec> {
-    match name {
-        "kryo280" => Some(DeviceSpec::kryo280()),
-        "kryo385" => Some(DeviceSpec::kryo385()),
-        "kryo585" => Some(DeviceSpec::kryo585()),
-        "mali" | "mali-g72" => Some(DeviceSpec::mali_g72()),
-        "rtx3080" => Some(DeviceSpec::rtx3080()),
-        _ => None,
-    }
+    crate::device::TargetRegistry::builtin().spec(name).cloned()
 }
 
 /// The devices of the paper's tables, by short name. Panics on unknown

@@ -5,7 +5,10 @@
 //!   `pruner/`) plus every substrate it assumes: a DNN graph IR (`graph/`),
 //!   a Relay-style partitioner (`relay/`), a TVM-style loop-nest IR and
 //!   schedule space (`tir/`), an Ansor-style auto-tuner (`tuner/`), a
-//!   mobile-device latency simulator (`device/`), baseline pruners
+//!   mobile-device latency simulator behind the pluggable measurement
+//!   plane (`device/`, DESIGN.md §11: one [`device::Target`] trait with
+//!   analytic/LUT/record-replay providers and a name registry), baseline
+//!   pruners
 //!   (`baselines/`), accuracy oracles (`accuracy/`), the end-to-end
 //!   compile pipeline (`compiler/`), the serving layer (`serve/`,
 //!   DESIGN.md §8): the Pareto-set registry of deployable checkpoints

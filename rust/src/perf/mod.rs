@@ -15,7 +15,7 @@
 //! `speedup_vs_reference` — the measured win of the scoring cache, elite
 //! pool and allocation-reusing evolution.
 
-use crate::device::{DeviceSpec, Simulator};
+use crate::device::{DeviceSpec, TargetRegistry};
 use crate::graph::model_zoo::{Model, ModelKind};
 use crate::graph::ops::OpKind;
 use crate::run::{CPrune, RunBuilder};
@@ -171,19 +171,24 @@ pub fn run_tuner_suite(tier: Tier, seed: u64) -> PerfReport {
     };
 
     // -- tune_task on the hot conv, optimized vs reference ----------------
+    // The device rides the registry like every other caller (DESIGN.md
+    // §11); the analytic provider is bit-identical to the old direct
+    // Simulator wiring, so the pinned measured counts are unaffected.
     let w = hot_conv_workload();
-    let sim = Simulator::new(DeviceSpec::kryo385());
+    let target = TargetRegistry::builtin()
+        .resolve("kryo385")
+        .expect("builtin device resolves");
     let mut measured = 0usize;
     let t0 = Instant::now();
     for i in 0..task_iters {
         let mut rng = crate::util::rng::Rng::new(seed.wrapping_add(i as u64));
-        measured += tune_task(&w, &sim, &TuneOptions::quick(), &mut rng, None).measured;
+        measured += tune_task(&w, target.as_ref(), &TuneOptions::quick(), &mut rng, None).measured;
     }
     let opt_s = t0.elapsed().as_secs_f64();
     let t1 = Instant::now();
     for i in 0..task_iters {
         let mut rng = crate::util::rng::Rng::new(seed.wrapping_add(i as u64));
-        let _ = tune_task_reference(&w, &sim, &TuneOptions::quick(), &mut rng, None);
+        let _ = tune_task_reference(&w, target.as_ref(), &TuneOptions::quick(), &mut rng, None);
     }
     let ref_s = t1.elapsed().as_secs_f64();
     records.push(BenchRecord {
@@ -203,7 +208,7 @@ pub fn run_tuner_suite(tier: Tier, seed: u64) -> PerfReport {
     let t0 = Instant::now();
     for i in 0..graph_iters {
         let s = seed.wrapping_add(i as u64);
-        let session = TuningSession::new(&sim, TuneOptions::quick(), s);
+        let session = TuningSession::new(target.as_ref(), TuneOptions::quick(), s);
         let table = session.tune_graph(&small.graph, &HashMap::new());
         std::hint::black_box(table.model_latency());
         measured += session.measured_count();

@@ -13,7 +13,7 @@
 
 use crate::accuracy::{AccuracyOracle, Criterion, TrainPhase};
 use crate::compiler::{self, CompiledModel};
-use crate::device::Simulator;
+use crate::device::Target;
 use crate::graph::model_zoo::Model;
 use crate::graph::ops::{Graph, NodeId};
 use crate::graph::prune::{apply, PruneState};
@@ -117,14 +117,15 @@ pub struct CPruneResult {
     pub programs_measured: usize,
 }
 
-/// Run CPrune for `model` on the device behind `sim`.
+/// Run CPrune for `model` on the device behind `target` (any
+/// measurement provider — DESIGN.md §11).
 pub fn cprune(
     model: &Model,
-    sim: &Simulator,
+    target: &dyn Target,
     oracle: &mut dyn AccuracyOracle,
     cfg: &CPruneConfig,
 ) -> CPruneResult {
-    let session = TuningSession::new(sim, cfg.tune_opts, cfg.seed);
+    let session = TuningSession::new(target, cfg.tune_opts, cfg.seed);
     cprune_with_session(model, oracle, cfg, &session)
 }
 
@@ -155,7 +156,7 @@ pub fn cprune_run(ctx: &mut RunContext, cfg: &CPruneConfig) -> CPruneResult {
     let t0 = Instant::now();
     let model = ctx.model;
     let session = ctx.session;
-    let sim = session.sim;
+    let target = session.target;
 
     // -- Line 1: initial tune of M --------------------------------------
     let baseline = compiler::compile_tuned(&model.graph, session, &HashMap::new());
@@ -168,7 +169,7 @@ pub fn cprune_run(ctx: &mut RunContext, cfg: &CPruneConfig) -> CPruneResult {
     let gate_baseline = if cfg.with_tuning {
         base_latency
     } else {
-        compiler::compile_fallback(&model.graph, sim).latency()
+        compiler::compile_fallback(&model.graph, target).latency()
     };
 
     let mut state = PruneState::full(model);
@@ -177,7 +178,7 @@ pub fn cprune_run(ctx: &mut RunContext, cfg: &CPruneConfig) -> CPruneResult {
     let mut table = if cfg.with_tuning {
         baseline.table.clone()
     } else {
-        compiler::compile_fallback(&model.graph, sim).table
+        compiler::compile_fallback(&model.graph, target).table
     };
     let mut l_t = cfg.beta * gate_baseline;
     let initial_summary = super::summarize(model, &state, cfg.criterion);
@@ -302,7 +303,7 @@ pub fn cprune_run(ctx: &mut RunContext, cfg: &CPruneConfig) -> CPruneResult {
                 let cand = if cfg.with_tuning {
                     compiler::compile_tuned(&cand_graph, session, &seeds)
                 } else {
-                    compiler::compile_fallback(&cand_graph, sim)
+                    compiler::compile_fallback(&cand_graph, target)
                 };
                 let l_m = cand.latency();
                 candidates_tried += 1;
@@ -439,7 +440,7 @@ pub fn cprune_run(ctx: &mut RunContext, cfg: &CPruneConfig) -> CPruneResult {
 mod tests {
     use super::*;
     use crate::accuracy::ProxyOracle;
-    use crate::device::DeviceSpec;
+    use crate::device::{DeviceSpec, Simulator};
     use crate::graph::model_zoo::ModelKind;
     use crate::graph::stats;
 

@@ -1,9 +1,11 @@
-//! Fluent construction of pruning runs (DESIGN.md §9).
+//! Fluent construction of pruning runs (DESIGN.md §9, §11).
 //!
 //! [`RunBuilder`] owns the cross-cutting wiring that every experiment
 //! harness, CLI path and bench used to hand-assemble: the model, the
-//! target device, the tuning budget, the RNG seed, an optional warm-start
-//! cache file, the accuracy budget, the oracle and the observers.
+//! target device (any measurement provider behind
+//! [`crate::device::Target`]), the tuning budget, the RNG seed, an
+//! optional warm-start cache file, the accuracy budget, the oracle and
+//! the observers.
 //!
 //! ```no_run
 //! use cprune::graph::model_zoo::ModelKind;
@@ -18,20 +20,47 @@
 //! let outcome = run.execute(&CPrune::default()).unwrap();
 //! println!("{:.2}x FPS", outcome.fps_increase_rate);
 //! ```
+//!
+//! Device selection goes through the [`crate::device::TargetRegistry`]
+//! (built-ins plus `CPRUNE_DEVICES` device files): [`RunBuilder::device`]
+//! and [`RunBuilder::target_name`] resolve names (the latter also
+//! accepts an `analytic:`/`lut:` provider prefix), [`RunBuilder::target`]
+//! injects any provider directly, and
+//! [`RunBuilder::record_trace`]/[`RunBuilder::replay_trace`] wrap the run
+//! in the record/replay provider for deterministic cross-machine replays.
 
 use super::{PruneOutcome, Pruner, RunContext, RunObserver};
 use crate::accuracy::{AccuracyOracle, ProxyOracle};
-use crate::device::{DeviceSpec, Simulator};
+use crate::device::calibration::{self, CalibrationTable};
+use crate::device::{AnalyticTarget, DeviceSpec, LutTarget, ReplayTarget, Target, TargetRegistry};
 use crate::graph::model_zoo::{Model, ModelKind};
 use crate::tuner::{TuneCache, TuneOptions, TuningSession};
 use std::path::PathBuf;
 
-/// Builder for a [`Run`]. Defaults: Kryo 385, [`TuneOptions::quick`],
-/// seed 0, a jitter-free [`ProxyOracle`], no cache, no observers.
+/// How the run's measurement provider is produced at build time.
+enum TargetChoice {
+    /// Analytic provider over this spec (the default: Kryo 385).
+    Spec(DeviceSpec),
+    /// LUT provider: per-layer tables built for the run's model at
+    /// [`RunBuilder::build`] (tuning each prunable family at sampled
+    /// channel counts — a deliberate upfront cost).
+    Lut(DeviceSpec),
+    /// Caller-supplied provider, used as-is.
+    Explicit(Box<dyn Target>),
+    /// Replay provider loaded from a recorded trace.
+    Replay(PathBuf),
+}
+
+/// Builder for a [`Run`]. Defaults: Kryo 385 (analytic),
+/// [`TuneOptions::quick`], seed 0, a jitter-free [`ProxyOracle`], no
+/// cache, no observers, no trace.
 pub struct RunBuilder {
     kind: ModelKind,
-    device: DeviceSpec,
-    device_error: Option<String>,
+    choice: TargetChoice,
+    target_error: Option<String>,
+    registry: Option<TargetRegistry>,
+    calibration: Option<CalibrationTable>,
+    record_path: Option<PathBuf>,
     tune_opts: TuneOptions,
     seed: u64,
     cache_path: Option<PathBuf>,
@@ -45,8 +74,11 @@ impl RunBuilder {
     pub fn new(kind: ModelKind) -> RunBuilder {
         RunBuilder {
             kind,
-            device: DeviceSpec::kryo385(),
-            device_error: None,
+            choice: TargetChoice::Spec(DeviceSpec::kryo385()),
+            target_error: None,
+            registry: None,
+            calibration: None,
+            record_path: None,
             tune_opts: TuneOptions::quick(),
             seed: 0,
             cache_path: None,
@@ -57,24 +89,103 @@ impl RunBuilder {
         }
     }
 
-    /// Target device by short name (`kryo280`, `kryo385`, `kryo585`,
-    /// `mali-g72`, `rtx3080`); unknown names fail at [`build`](Self::build).
-    pub fn device(mut self, name: &str) -> RunBuilder {
-        match crate::exp::try_device_by_name(name) {
-            Some(spec) => self.device = spec,
+    /// Use this registry for [`device`](Self::device)/
+    /// [`target_name`](Self::target_name) resolution instead of the
+    /// default (built-ins + `CPRUNE_DEVICES`) — e.g. a registry with
+    /// `--device-file` entries loaded. Set it *before* naming a device.
+    pub fn with_registry(mut self, registry: TargetRegistry) -> RunBuilder {
+        self.registry = Some(registry);
+        self
+    }
+
+    fn resolve_spec(&mut self, name: &str) -> Option<DeviceSpec> {
+        let registry = match &self.registry {
+            Some(r) => r.clone(),
+            None => match TargetRegistry::from_env() {
+                Ok(r) => r,
+                Err(e) => {
+                    self.target_error = Some(e);
+                    return None;
+                }
+            },
+        };
+        match registry.spec(name) {
+            Some(spec) => Some(spec.clone()),
             None => {
-                self.device_error = Some(format!(
-                    "unknown device '{name}'. options: {}",
-                    crate::exp::DEVICE_NAMES
-                ))
+                self.target_error = Some(registry.unknown_device_error(name));
+                None
             }
+        }
+    }
+
+    /// Target device by registry name (`kryo280`, `kryo385`, `kryo585`,
+    /// `mali-g72`, `rtx3080`, plus anything loaded from `CPRUNE_DEVICES`
+    /// device files); unknown names fail at [`build`](Self::build) with a
+    /// diagnostic listing every valid name.
+    pub fn device(mut self, name: &str) -> RunBuilder {
+        if let Some(spec) = self.resolve_spec(name) {
+            self.choice = TargetChoice::Spec(spec);
         }
         self
     }
 
-    /// Target device by explicit spec.
+    /// Target device by explicit spec (analytic provider).
     pub fn device_spec(mut self, spec: DeviceSpec) -> RunBuilder {
-        self.device = spec;
+        self.choice = TargetChoice::Spec(spec);
+        self
+    }
+
+    /// Target by explicit measurement provider (any [`Target`]).
+    pub fn target(mut self, target: Box<dyn Target>) -> RunBuilder {
+        self.choice = TargetChoice::Explicit(target);
+        self
+    }
+
+    /// Target by registry name with an optional provider prefix:
+    /// `NAME`/`analytic:NAME` (roofline) or `lut:NAME` (calibrated
+    /// per-layer tables built for the run's model at build time, analytic
+    /// fallback for uncovered workloads). Unknown names fail at
+    /// [`build`](Self::build) listing the registry's valid names.
+    pub fn target_name(mut self, name: &str) -> RunBuilder {
+        let (provider, bare) = match name.split_once(':') {
+            Some((p, rest)) if p == "lut" || p == "analytic" => (p, rest),
+            _ => ("analytic", name),
+        };
+        if let Some(spec) = self.resolve_spec(bare) {
+            self.choice = if provider == "lut" {
+                TargetChoice::Lut(spec)
+            } else {
+                TargetChoice::Spec(spec)
+            };
+        }
+        self
+    }
+
+    /// Scale-fit the resolved device spec with this table (a
+    /// `cprune calibrate --save` output): if the table holds an entry
+    /// for the device's display name, `calibration::apply` adjusts the
+    /// spec before the analytic/LUT provider is built. Devices absent
+    /// from the table run uncalibrated; explicit-provider and replay
+    /// targets are unaffected (the replay trace carries its own spec).
+    pub fn calibration(mut self, table: CalibrationTable) -> RunBuilder {
+        self.calibration = Some(table);
+        self
+    }
+
+    /// Record every device measurement of the run into a
+    /// `cprune-measure-trace` file, written after each
+    /// [`Run::execute`].
+    pub fn record_trace(mut self, path: impl Into<PathBuf>) -> RunBuilder {
+        self.record_path = Some(path.into());
+        self
+    }
+
+    /// Replay a recorded trace instead of measuring: the device spec
+    /// comes from the trace, and the run reproduces the recorded run's
+    /// results and event stream byte-for-byte (given the same model,
+    /// seed and budgets).
+    pub fn replay_trace(mut self, path: impl Into<PathBuf>) -> RunBuilder {
+        self.choice = TargetChoice::Replay(path.into());
         self
     }
 
@@ -125,21 +236,42 @@ impl RunBuilder {
         self
     }
 
-    /// Build the model and device simulator, loading the warm-start cache
-    /// when its file exists. Fails on unknown device names and corrupt
-    /// cache files (loudly, rather than silently re-tuning from cold).
+    /// Build the model and measurement provider, loading the warm-start
+    /// cache when its file exists. Fails on unknown device names,
+    /// unreadable replay traces and corrupt cache files (loudly, rather
+    /// than silently re-tuning from cold).
     pub fn build(self) -> Result<Run, String> {
-        if let Some(e) = self.device_error {
+        if let Some(e) = self.target_error {
             return Err(e);
         }
+        let model = Model::build(self.kind, self.seed);
+        let fitted = |spec: DeviceSpec| -> DeviceSpec {
+            match self.calibration.as_ref().and_then(|t| t.get(spec.name)) {
+                Some(cal) => calibration::apply(&spec, cal),
+                None => spec,
+            }
+        };
+        let base: Box<dyn Target> = match self.choice {
+            TargetChoice::Spec(spec) => Box::new(AnalyticTarget::new(fitted(spec))),
+            TargetChoice::Lut(spec) => {
+                Box::new(LutTarget::for_model(fitted(spec), &model, &self.tune_opts, self.seed))
+            }
+            TargetChoice::Explicit(t) => t,
+            TargetChoice::Replay(path) => Box::new(ReplayTarget::load(&path)?),
+        };
+        let target: Box<dyn Target> = if self.record_path.is_some() {
+            Box::new(ReplayTarget::record(base))
+        } else {
+            base
+        };
         let cache = match &self.cache_path {
-            Some(p) if p.exists() => TuneCache::load(p, self.device.name)?,
+            Some(p) if p.exists() => TuneCache::load(p, target.spec().name)?,
             _ => TuneCache::new(),
         };
-        let model = Model::build(self.kind, self.seed);
         Ok(Run {
             model,
-            sim: Simulator::new(self.device),
+            target,
+            trace_path: self.record_path,
             tune_opts: self.tune_opts,
             seed: self.seed,
             cache_path: self.cache_path,
@@ -158,7 +290,9 @@ impl RunBuilder {
 /// the legacy shared-session harnesses did).
 pub struct Run {
     pub model: Model,
-    pub sim: Simulator,
+    target: Box<dyn Target>,
+    /// Where to persist the recording target's trace after each execute.
+    trace_path: Option<PathBuf>,
     tune_opts: TuneOptions,
     seed: u64,
     cache_path: Option<PathBuf>,
@@ -172,10 +306,11 @@ pub struct Run {
 impl Run {
     /// Execute `pruner` against this run's wiring. Emits the
     /// [`crate::run::RunEvent::Finished`] event after the pruner returns,
-    /// then persists the tune cache when a cache path was configured.
+    /// then persists the tune cache and measurement trace when configured.
     pub fn execute(&mut self, pruner: &dyn Pruner) -> Result<PruneOutcome, String> {
         let cache = std::mem::take(&mut self.cache);
-        let session = TuningSession::with_cache(&self.sim, self.tune_opts, self.seed, cache);
+        let session =
+            TuningSession::with_cache(self.target.as_ref(), self.tune_opts, self.seed, cache);
         let outcome = {
             let mut ctx = RunContext::new(
                 &self.model,
@@ -193,7 +328,13 @@ impl Run {
         }
         self.cache = session.cache;
         if let Some(path) = &self.cache_path {
-            self.cache.save(path, self.sim.spec.name)?;
+            self.cache.save(path, self.target.spec().name)?;
+        }
+        if let Some(path) = &self.trace_path {
+            match self.target.as_replay() {
+                Some(trace) => trace.save(path)?,
+                None => return Err("record_trace set but target is not recording".to_string()),
+            }
         }
         // A broken observer (sink write error, registry save failure)
         // fails the run loudly — a truncated event log or unpersisted
@@ -209,10 +350,16 @@ impl Run {
     /// [`execute`](Self::execute) reuses every tuned program.
     pub fn original_row(&mut self) -> (crate::baselines::Outcome, f64) {
         let cache = std::mem::take(&mut self.cache);
-        let session = TuningSession::with_cache(&self.sim, self.tune_opts, self.seed, cache);
+        let session =
+            TuningSession::with_cache(self.target.as_ref(), self.tune_opts, self.seed, cache);
         let row = crate::baselines::original_row(&self.model, &session);
         self.cache = session.cache;
         row
+    }
+
+    /// The run's measurement provider.
+    pub fn target(&self) -> &dyn Target {
+        self.target.as_ref()
     }
 
     /// The tune cache in its current (post-execution) state.
@@ -239,6 +386,17 @@ mod tests {
             Ok(_) => panic!("unknown device must fail"),
         };
         assert!(err.contains("galaxy-s10"), "{err}");
+        // the diagnostic lists the registry's valid names
+        assert!(err.contains("kryo385") && err.contains("mali-g72"), "{err}");
+        // ...through target_name too
+        let err = match RunBuilder::new(ModelKind::ResNet8Cifar)
+            .target_name("lut:galaxy-s10")
+            .build()
+        {
+            Err(e) => e,
+            Ok(_) => panic!("unknown target must fail"),
+        };
+        assert!(err.contains("galaxy-s10") && err.contains("kryo585"), "{err}");
     }
 
     #[test]
@@ -276,5 +434,20 @@ mod tests {
         assert_eq!(b.programs_measured, 0, "warm builder re-measured");
         assert_eq!(a.final_latency, b.final_latency);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn target_name_resolves_providers() {
+        let run = RunBuilder::new(ModelKind::ResNet8Cifar)
+            .target_name("kryo585")
+            .build()
+            .unwrap();
+        assert_eq!(run.target().spec().name, "Kryo 585 (Galaxy S20+)");
+        // explicit provider injection
+        let run = RunBuilder::new(ModelKind::ResNet8Cifar)
+            .target(Box::new(AnalyticTarget::new(DeviceSpec::kryo280())))
+            .build()
+            .unwrap();
+        assert_eq!(run.target().spec().name, "Kryo 280 (Galaxy S8)");
     }
 }

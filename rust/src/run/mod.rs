@@ -23,6 +23,12 @@
 //!   stream with three shipped observers (JSONL sink, CLI progress
 //!   printer, registry auto-publisher).
 //!
+//! Devices reach a run through the measurement plane (DESIGN.md §11):
+//! [`RunBuilder`] resolves names via [`crate::device::TargetRegistry`],
+//! accepts any [`crate::device::Target`] provider directly, and wraps
+//! runs in the record/replay provider for byte-identical cross-machine
+//! replays of the event stream.
+//!
 //! The legacy free functions (`pruner::cprune`, `baselines::*`) remain
 //! as thin shims over the trait, so both spellings stay byte-identical
 //! for a fixed seed (pinned by `tests/run_api_tests.rs`).
@@ -119,9 +125,9 @@ impl<'s> RunContext<'s> {
         self
     }
 
-    /// Short device name of the session's target.
+    /// Display name of the session's target device.
     pub fn device(&self) -> &'static str {
-        self.session.sim.spec.name
+        self.session.device_name()
     }
 
     /// Deliver an event to every observer, in registration order.
@@ -317,7 +323,9 @@ mod tests {
         let b = ctx.baseline_latency();
         assert!(a > 0.0 && a.is_finite());
         assert_eq!(a, b);
-        assert_eq!(ctx.device(), "kryo385");
+        // the device name is the spec's display name (the same string
+        // the serve registry and fleet results key on)
+        assert_eq!(ctx.device(), "Kryo 385 (Galaxy S9)");
     }
 
     #[test]

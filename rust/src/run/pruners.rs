@@ -266,7 +266,7 @@ impl Pruner for Pqf {
         let session = ctx.session;
         let baseline_latency = ctx.baseline_latency();
         let compiled = compiler::compile_tuned(&model.graph, session, &HashMap::new());
-        let latency = compiled.latency() * latency_multiplier(session.sim.spec.kind);
+        let latency = compiled.latency() * latency_multiplier(session.spec().kind);
         let (flops, params) = stats::flops_params(&model.graph);
         let (b1, b5) = model.kind.base_accuracy();
         let top1 = (b1 - TOP1_DROP).max(0.0);

@@ -27,6 +27,7 @@
 
 use super::pareto::ParetoSet;
 use super::registry::Registry;
+use crate::device::Target;
 use crate::tuner::FleetSession;
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -185,7 +186,7 @@ impl Simulator {
     ) -> Result<Simulator, String> {
         let mut sim = Simulator::new(opts);
         for i in 0..fleet.num_devices() {
-            let device = fleet.sim(i).spec.name;
+            let device = fleet.target(i).spec().name;
             let set = registry.get(model, device).ok_or_else(|| {
                 format!("registry holds no Pareto set for ({model}, {device})")
             })?;

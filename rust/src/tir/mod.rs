@@ -14,6 +14,7 @@
 //! concrete schedule; [`Program::min_filter_prune_step`] is the paper's
 //! LCM rule.
 
+pub mod jsonio;
 pub mod loopnest;
 pub mod lower;
 pub mod program;

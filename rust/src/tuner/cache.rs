@@ -12,6 +12,10 @@
 //! through Rust's shortest-representation formatter, so a warm-started
 //! run reproduces the cold run's numbers bit-for-bit.
 
+// Canonical workload/program JSON lives in `tir::jsonio` — shared with
+// the measurement traces of `device::ReplayTarget`, so both persistence
+// surfaces parse each other's keys.
+use crate::tir::jsonio::{program_from_json, program_to_json, workload_from_json, workload_to_json};
 use crate::tir::{Program, Workload};
 use crate::util::json::{self, Json};
 use std::collections::HashMap;
@@ -207,112 +211,6 @@ impl TuneCache {
             .map_err(|e| format!("reading {}: {e}", path.display()))?;
         Self::parse(&text, Some(expected_device)).map_err(|e| format!("{}: {e}", path.display()))
     }
-}
-
-fn num(n: usize) -> Json {
-    Json::Num(n as f64)
-}
-
-fn nums(xs: &[usize]) -> Json {
-    Json::Arr(xs.iter().map(|&x| num(x)).collect())
-}
-
-fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
-    j.get(key)
-        .and_then(Json::as_usize)
-        .ok_or_else(|| format!("missing field {key}"))
-}
-
-fn usize_list(j: &Json, key: &str) -> Result<Vec<usize>, String> {
-    j.get(key)
-        .and_then(Json::as_arr)
-        .ok_or_else(|| format!("missing list {key}"))?
-        .iter()
-        .map(|v| v.as_usize().ok_or_else(|| format!("non-integer in {key}")))
-        .collect()
-}
-
-/// Epilogue tags come from the fixed fusion vocabulary in
-/// `relay::partition`; map parsed strings back onto the `'static` strs the
-/// `Workload` type carries (unknown tags — future fusions — are leaked,
-/// which costs bytes once per distinct tag per process).
-fn intern_epilogue(tag: &str) -> &'static str {
-    match tag {
-        "bn" => "bn",
-        "relu" => "relu",
-        "relu6" => "relu6",
-        "softmax" => "softmax",
-        "add" => "add",
-        other => Box::leak(other.to_string().into_boxed_str()),
-    }
-}
-
-fn workload_to_json(w: &Workload) -> Json {
-    Json::obj(vec![
-        ("n", num(w.n)),
-        ("oh", num(w.oh)),
-        ("ow", num(w.ow)),
-        ("ff", num(w.ff)),
-        ("ic", num(w.ic)),
-        ("kh", num(w.kh)),
-        ("kw", num(w.kw)),
-        ("groups", num(w.groups)),
-        ("stride", num(w.stride)),
-        (
-            "epilogue",
-            Json::Arr(w.epilogue.iter().map(|t| Json::Str(t.to_string())).collect()),
-        ),
-    ])
-}
-
-fn workload_from_json(j: &Json) -> Result<Workload, String> {
-    let epilogue = j
-        .get("epilogue")
-        .and_then(Json::as_arr)
-        .ok_or("workload missing epilogue")?
-        .iter()
-        .map(|v| {
-            v.as_str()
-                .map(intern_epilogue)
-                .ok_or_else(|| "non-string epilogue tag".to_string())
-        })
-        .collect::<Result<Vec<_>, _>>()?;
-    Ok(Workload {
-        n: usize_field(j, "n")?,
-        oh: usize_field(j, "oh")?,
-        ow: usize_field(j, "ow")?,
-        ff: usize_field(j, "ff")?,
-        ic: usize_field(j, "ic")?,
-        kh: usize_field(j, "kh")?,
-        kw: usize_field(j, "kw")?,
-        groups: usize_field(j, "groups")?,
-        stride: usize_field(j, "stride")?,
-        epilogue,
-    })
-}
-
-fn program_to_json(p: &Program) -> Json {
-    Json::obj(vec![
-        ("spatial_splits", nums(&p.spatial_splits)),
-        ("ff_splits", nums(&p.ff_splits)),
-        ("ax3_splits", nums(&p.ax3_splits)),
-        ("ic_splits", nums(&p.ic_splits)),
-        ("parallel", num(p.parallel)),
-        ("vectorize", num(p.vectorize)),
-        ("unroll", num(p.unroll)),
-    ])
-}
-
-fn program_from_json(j: &Json) -> Result<Program, String> {
-    Ok(Program {
-        spatial_splits: usize_list(j, "spatial_splits")?,
-        ff_splits: usize_list(j, "ff_splits")?,
-        ax3_splits: usize_list(j, "ax3_splits")?,
-        ic_splits: usize_list(j, "ic_splits")?,
-        parallel: usize_field(j, "parallel")?,
-        vectorize: usize_field(j, "vectorize")?,
-        unroll: usize_field(j, "unroll")?,
-    })
 }
 
 #[cfg(test)]

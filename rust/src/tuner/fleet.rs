@@ -20,7 +20,7 @@ use super::cache::TuneCache;
 use super::search::TuneOptions;
 use super::session::{resolve_thread_budget, TuningSession};
 use crate::compiler::{self, CompiledModel};
-use crate::device::{DeviceSpec, Simulator};
+use crate::device::{AnalyticTarget, DeviceSpec, Target};
 use crate::graph::ops::Graph;
 use crate::relay::TaskTable;
 use crate::tir::{Program, Workload};
@@ -127,45 +127,70 @@ pub struct TransferCell {
     pub latency: f64,
 }
 
-/// A persistent multi-device tuning service: N simulators, N caches, one
-/// shared thread budget and seed policy.
+/// A persistent multi-device tuning service: N measurement providers, N
+/// caches, one shared thread budget and seed policy.
+///
+/// Providers may be heterogeneous (DESIGN.md §11): an analytic pilot
+/// seeding a LUT-backed follower, or a replayed device riding along with
+/// live ones — the fleet only talks to [`Target`].
 pub struct FleetSession {
-    sims: Vec<Simulator>,
-    /// Per-device persistent caches (index-aligned with the device specs).
+    targets: Vec<Box<dyn Target>>,
+    /// Per-device persistent caches (index-aligned with the targets).
     pub caches: Vec<TuneCache>,
     pub opts: FleetOptions,
     pub seed: u64,
 }
 
 impl FleetSession {
+    /// An all-analytic fleet over `specs` (the historical constructor —
+    /// bit-identical to the pre-[`Target`] simulator wiring).
     pub fn new(specs: Vec<DeviceSpec>, opts: FleetOptions, seed: u64) -> FleetSession {
-        assert!(!specs.is_empty(), "fleet needs at least one device");
-        let caches = specs.iter().map(|_| TuneCache::new()).collect();
-        let sims = specs.into_iter().map(Simulator::new).collect();
-        FleetSession { sims, caches, opts, seed }
+        Self::from_targets(
+            specs
+                .into_iter()
+                .map(|s| Box::new(AnalyticTarget::new(s)) as Box<dyn Target>)
+                .collect(),
+            opts,
+            seed,
+        )
+    }
+
+    /// A fleet over arbitrary (possibly mixed-provider) targets.
+    pub fn from_targets(
+        targets: Vec<Box<dyn Target>>,
+        opts: FleetOptions,
+        seed: u64,
+    ) -> FleetSession {
+        assert!(!targets.is_empty(), "fleet needs at least one device");
+        let caches = targets.iter().map(|_| TuneCache::new()).collect();
+        FleetSession { targets, caches, opts, seed }
     }
 
     pub fn num_devices(&self) -> usize {
-        self.sims.len()
+        self.targets.len()
     }
 
-    /// The simulator for device `i` (pilot = 0).
-    pub fn sim(&self, i: usize) -> &Simulator {
-        &self.sims[i]
+    /// The measurement provider for device `i` (pilot = 0).
+    pub fn target(&self, i: usize) -> &dyn Target {
+        self.targets[i].as_ref()
     }
 
     /// Tune `graph` for every device. The pilot (device 0) tunes first
     /// with the whole thread budget; followers then tune concurrently,
     /// splitting the budget, each seeded with the pilot's best programs.
     pub fn tune_graph(&mut self, graph: &Graph) -> FleetResult {
-        let n = self.sims.len();
+        let n = self.targets.len();
         let budget = resolve_thread_budget(self.opts.threads);
 
         let caches = std::mem::take(&mut self.caches);
         let mut sessions: Vec<TuningSession<'_>> = Vec::with_capacity(n);
-        for (i, (sim, cache)) in self.sims.iter().zip(caches).enumerate() {
-            let mut s =
-                TuningSession::with_cache(sim, self.opts.tune, device_seed(self.seed, i), cache);
+        for (i, (target, cache)) in self.targets.iter().zip(caches).enumerate() {
+            let mut s = TuningSession::with_cache(
+                target.as_ref(),
+                self.opts.tune,
+                device_seed(self.seed, i),
+                cache,
+            );
             s.threads = budget;
             sessions.push(s);
         }
@@ -264,7 +289,7 @@ impl FleetSession {
         for (i, (sess, c)) in sessions.iter().zip(compiled).enumerate() {
             let c = c.expect("every device compiled");
             devices.push(FleetDeviceResult {
-                device: self.sims[i].spec.name,
+                device: self.targets[i].spec().name,
                 latency: c.latency(),
                 fps: c.fps(),
                 tasks: c.table.len(),
@@ -284,14 +309,14 @@ impl FleetSession {
     /// natively for device i) evaluate it on every device j with i's
     /// programs. `models` must be index-aligned with the fleet's devices.
     pub fn transfer_matrix(&self, models: &[(&Graph, &TaskTable)]) -> Vec<TransferCell> {
-        assert_eq!(models.len(), self.sims.len(), "one model per fleet device");
-        let mut cells = Vec::with_capacity(models.len() * self.sims.len());
+        assert_eq!(models.len(), self.targets.len(), "one model per fleet device");
+        let mut cells = Vec::with_capacity(models.len() * self.targets.len());
         for (i, (graph, table)) in models.iter().enumerate() {
-            for sim in &self.sims {
+            for target in &self.targets {
                 cells.push(TransferCell {
-                    tuned_for: self.sims[i].spec.name,
-                    run_on: sim.spec.name,
-                    latency: compiler::latency_with_programs(graph, table, sim),
+                    tuned_for: self.targets[i].spec().name,
+                    run_on: target.spec().name,
+                    latency: compiler::latency_with_programs(graph, table, target.as_ref()),
                 });
             }
         }
@@ -303,10 +328,11 @@ impl FleetSession {
     pub fn load_caches(&mut self, dir: impl AsRef<Path>) -> Result<usize, String> {
         let dir = dir.as_ref();
         let mut loaded = 0;
-        for (i, sim) in self.sims.iter().enumerate() {
-            let path = dir.join(cache_file_name(sim.spec.name));
+        for (i, target) in self.targets.iter().enumerate() {
+            let name = target.spec().name;
+            let path = dir.join(cache_file_name(name));
             if path.exists() {
-                self.caches[i] = TuneCache::load(&path, sim.spec.name)?;
+                self.caches[i] = TuneCache::load(&path, name)?;
                 loaded += 1;
             }
         }
@@ -317,8 +343,9 @@ impl FleetSession {
     pub fn save_caches(&self, dir: impl AsRef<Path>) -> Result<(), String> {
         let dir = dir.as_ref();
         std::fs::create_dir_all(dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
-        for (i, sim) in self.sims.iter().enumerate() {
-            self.caches[i].save(dir.join(cache_file_name(sim.spec.name)), sim.spec.name)?;
+        for (i, target) in self.targets.iter().enumerate() {
+            let name = target.spec().name;
+            self.caches[i].save(dir.join(cache_file_name(name)), name)?;
         }
         Ok(())
     }
@@ -387,10 +414,39 @@ mod tests {
             7,
         );
         let r = fleet.tune_graph(&m.graph);
-        let sim = Simulator::new(DeviceSpec::kryo385());
+        let sim = crate::device::Simulator::new(DeviceSpec::kryo385());
         let sess = TuningSession::new(&sim, TuneOptions::quick(), 7);
         let table = sess.tune_graph(&m.graph, &HashMap::new());
         assert_eq!(r.devices[0].table.model_latency(), table.model_latency());
+    }
+
+    #[test]
+    fn mixed_provider_fleet_tunes_every_device() {
+        // Heterogeneous providers behind one fleet: an analytic device
+        // plus a LUT-backed one (DESIGN.md §11).
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let targets: Vec<Box<dyn Target>> = vec![
+            Box::new(AnalyticTarget::new(DeviceSpec::kryo385())),
+            Box::new(crate::device::LutTarget::for_model(
+                DeviceSpec::kryo585(),
+                &m,
+                &TuneOptions::quick(),
+                0,
+            )),
+        ];
+        let mut fleet = FleetSession::from_targets(
+            targets,
+            FleetOptions { tune: TuneOptions::quick(), ..Default::default() },
+            3,
+        );
+        let r = fleet.tune_graph(&m.graph);
+        assert_eq!(r.devices.len(), 2);
+        for d in &r.devices {
+            assert!(d.fps > 0.0 && d.fps.is_finite(), "{}: bad fps", d.device);
+            assert!(d.measured > 0, "{}: measured nothing", d.device);
+        }
+        assert_eq!(r.devices[0].device, "Kryo 385 (Galaxy S9)");
+        assert_eq!(r.devices[1].device, "Kryo 585 (Galaxy S20+)");
     }
 
     #[test]
@@ -455,8 +511,8 @@ mod tests {
         assert_eq!(cells.len(), 9);
         for (idx, c) in cells.iter().enumerate() {
             assert!(c.latency > 0.0);
-            assert_eq!(c.tuned_for, fleet.sim(idx / 3).spec.name);
-            assert_eq!(c.run_on, fleet.sim(idx % 3).spec.name);
+            assert_eq!(c.tuned_for, fleet.target(idx / 3).spec().name);
+            assert_eq!(c.run_on, fleet.target(idx % 3).spec().name);
         }
     }
 

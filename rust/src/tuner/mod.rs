@@ -11,6 +11,12 @@
 //! runs, and [`FleetSession`] tunes one graph for many devices with
 //! cross-device seeding.
 //!
+//! Devices are [`crate::device::Target`] measurement providers
+//! (DESIGN.md §11): every measurement flows through
+//! `Target::measure_batch`, so the tuner runs unchanged against the
+//! analytic roofline, calibrated LUT tables or a recorded replay trace,
+//! and [`FleetSession::from_targets`] mixes providers in one fleet.
+//!
 //! Performance architecture (DESIGN.md §10): the per-task search caches
 //! cost-model scores per round, keeps a bounded seen-set-keyed elite pool
 //! instead of re-sorting the measurement history, and double-buffers the

@@ -26,7 +26,7 @@
 //! reports the speedup between the two.
 
 use super::cost_model::{CostModel, LearnedCost};
-use crate::device::Simulator;
+use crate::device::Target;
 use crate::tir::{Program, Workload};
 use crate::util::rng::Rng;
 use std::cmp::Ordering;
@@ -146,14 +146,15 @@ impl ElitePool {
     }
 }
 
-/// Tune one workload on one device. Deterministic given `rng`'s seed.
+/// Tune one workload on one device (any [`Target`] provider — analytic,
+/// LUT-backed or replayed). Deterministic given `rng`'s seed.
 ///
 /// `seed_program`: optionally start from a known-good structure — CPrune
 /// seeds the pruned task's search with the pre-pruning fastest program
 /// (structure preservation, §3.5).
 pub fn tune_task(
     w: &Workload,
-    sim: &Simulator,
+    target: &dyn Target,
     opts: &TuneOptions,
     rng: &mut Rng,
     seed_program: Option<&Program>,
@@ -218,9 +219,17 @@ pub fn tune_task(
         // model's sample weights and the measured count.
         batch_seen.clear();
         batch.retain(|&i| batch_seen.insert(i));
-        for &i in &batch {
+        // One measurement-plane call for the whole deduped batch:
+        // repeats and seeded jitter live in `Target::measure_batch`
+        // (draw-for-draw identical to the historical per-program
+        // `measure_avg` loop), and the honest `measured` counter is one
+        // count per batch slot.
+        let lats = {
+            let programs: Vec<&Program> = batch.iter().map(|&i| &population[i]).collect();
+            target.measure_batch(w, &programs, rng, opts.repeats)
+        };
+        for (&i, lat) in batch.iter().zip(lats) {
             let p = &population[i];
-            let lat = sim.measure_avg(w, p, rng, opts.repeats);
             model.observe(w, p, lat);
             n_measured += 1;
             pool.record(p, lat);
@@ -273,7 +282,7 @@ fn grow_slot(buf: &mut Vec<Program>, i: usize) -> &mut Program {
 #[doc(hidden)]
 pub fn tune_task_reference(
     w: &Workload,
-    sim: &Simulator,
+    target: &dyn Target,
     opts: &TuneOptions,
     rng: &mut Rng,
     seed_program: Option<&Program>,
@@ -317,9 +326,12 @@ pub fn tune_task_reference(
         }
         let mut seen_idx = HashSet::new();
         batch.retain(|&i| seen_idx.insert(i));
-        for &i in &batch {
+        let lats = {
+            let programs: Vec<&Program> = batch.iter().map(|&i| &population[i]).collect();
+            target.measure_batch(w, &programs, rng, opts.repeats)
+        };
+        for (&i, lat) in batch.iter().zip(lats) {
             let p = &population[i];
-            let lat = sim.measure_avg(w, p, rng, opts.repeats);
             model.observe(w, p, lat);
             n_measured += 1;
             history.push((p.clone(), lat));
@@ -359,7 +371,7 @@ pub fn tune_task_reference(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::device::DeviceSpec;
+    use crate::device::{DeviceSpec, Simulator};
     use crate::graph::ops::OpKind;
 
     fn wl(ff: usize) -> Workload {

@@ -8,7 +8,7 @@
 
 use super::cache::TuneCache;
 use super::search::{tune_task, TuneOptions, TuneResult};
-use crate::device::Simulator;
+use crate::device::{DeviceSpec, Target};
 use crate::graph::ops::Graph;
 use crate::relay::partition::extract_tasks;
 use crate::relay::TaskTable;
@@ -18,8 +18,12 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Tunes models for one device; owns the cache and the RNG seed policy.
+///
+/// The device is any [`Target`] measurement provider (DESIGN.md §11):
+/// the analytic roofline, a calibrated LUT target, or a record/replay
+/// target — the session neither knows nor cares which.
 pub struct TuningSession<'a> {
-    pub sim: &'a Simulator,
+    pub target: &'a dyn Target,
     pub opts: TuneOptions,
     pub cache: TuneCache,
     pub seed: u64,
@@ -35,19 +39,19 @@ pub struct TuningSession<'a> {
 }
 
 impl<'a> TuningSession<'a> {
-    pub fn new(sim: &'a Simulator, opts: TuneOptions, seed: u64) -> TuningSession<'a> {
-        Self::with_cache(sim, opts, seed, TuneCache::new())
+    pub fn new(target: &'a dyn Target, opts: TuneOptions, seed: u64) -> TuningSession<'a> {
+        Self::with_cache(target, opts, seed, TuneCache::new())
     }
 
     /// Warm-start from an existing (e.g. [`TuneCache::load`]ed) cache.
     pub fn with_cache(
-        sim: &'a Simulator,
+        target: &'a dyn Target,
         opts: TuneOptions,
         seed: u64,
         cache: TuneCache,
     ) -> TuningSession<'a> {
         TuningSession {
-            sim,
+            target,
             opts,
             cache,
             seed,
@@ -157,7 +161,7 @@ impl<'a> TuningSession<'a> {
     fn tune_uncached(&self, w: &Workload, seed_prog: Option<&Program>) -> (Program, f64) {
         let mut rng = Rng::with_stream(self.seed, hash_workload(w));
         let TuneResult { best, latency, measured } =
-            tune_task(w, self.sim, &self.opts, &mut rng, seed_prog);
+            tune_task(w, self.target, &self.opts, &mut rng, seed_prog);
         self.total_measured.fetch_add(measured, Ordering::Relaxed);
         self.cache.put(w.clone(), best.clone(), latency, measured);
         (best, latency)
@@ -165,6 +169,16 @@ impl<'a> TuningSession<'a> {
 
     pub fn measured_count(&self) -> usize {
         self.total_measured.load(Ordering::Relaxed)
+    }
+
+    /// Architectural parameters of the session's device.
+    pub fn spec(&self) -> &DeviceSpec {
+        self.target.spec()
+    }
+
+    /// Display name of the session's device.
+    pub fn device_name(&self) -> &'static str {
+        self.target.spec().name
     }
 }
 
@@ -194,7 +208,7 @@ fn hash_workload(w: &Workload) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::device::DeviceSpec;
+    use crate::device::{DeviceSpec, Simulator};
     use crate::graph::model_zoo::{Model, ModelKind};
 
     #[test]

@@ -80,8 +80,15 @@ impl Rng {
     }
 
     /// Log-normal multiplicative noise with given sigma (measurement jitter).
-    pub fn lognormal(&mut self, sigma: f32) -> f32 {
-        (self.normal() * sigma).exp()
+    ///
+    /// Sigma and the returned factor are `f64` end-to-end so the
+    /// measurement plane ([`crate::device::Target::measure_batch`]) never
+    /// narrows a latency through `f32`; the underlying normal variate
+    /// keeps the RNG's native `f32` resolution (and draw count). At
+    /// `sigma == 0.0` the factor is *exactly* 1.0 — a noise-free
+    /// measurement is bit-identical to the deterministic latency.
+    pub fn lognormal(&mut self, sigma: f64) -> f64 {
+        (self.normal() as f64 * sigma).exp()
     }
 
     /// Pick a random element of a slice.
@@ -218,6 +225,28 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_zero_sigma_is_exactly_one() {
+        // (normal * 0.0).exp() == 1.0 bit-exactly, for every draw — the
+        // foundation of the "sigma = 0 measures the deterministic
+        // latency exactly" contract in device::Target.
+        let mut r = Rng::new(13);
+        for _ in 0..1000 {
+            assert_eq!(r.lognormal(0.0), 1.0);
+        }
+    }
+
+    #[test]
+    fn lognormal_draws_are_f64_and_seeded() {
+        let mut a = Rng::new(21);
+        let mut b = Rng::new(21);
+        for _ in 0..100 {
+            let x = a.lognormal(0.05);
+            assert_eq!(x, b.lognormal(0.05));
+            assert!(x > 0.0 && x.is_finite());
+        }
     }
 
     #[test]

@@ -205,6 +205,137 @@ fn cache_for_another_device_is_refused() {
     let _ = std::fs::remove_file(&path);
 }
 
+const DEVICE_FILE: &str = r#"{"format":"cprune-devices","version":1,"devices":[
+  {"short":"testphone","name":"Test Phone (CLI)","kind":"cpu","cores":6,
+   "peak_macs_per_core":8.0e9,"simd_lanes":4,"l1_bytes":65536,
+   "l2_bytes":2097152,"mem_bytes_per_s":2.0e10,"dispatch_overhead_s":7e-6}]}"#;
+
+#[test]
+fn unknown_devices_exit_with_usage_errors() {
+    // The diagnostic text (listing every registry name) is unit-tested in
+    // device::registry; here the CLI paths must all reject cleanly.
+    assert_eq!(run(&["prune", "--model", "resnet8-cifar", "--device", "galaxy-s10"]), 2);
+    assert_eq!(run(&["run", "--model", "resnet8-cifar", "--target", "lut:galaxy-s10"]), 2);
+    assert_eq!(run(&["fleet", "--devices", "kryo385,galaxy-s10"]), 2);
+}
+
+#[test]
+fn provider_prefixes_are_validated_not_silently_dropped() {
+    // lut: is only meaningful to run/prune — other commands must refuse
+    // rather than silently downgrade to the analytic provider.
+    assert_eq!(run(&["tune", "--model", "resnet8-cifar", "--target", "lut:kryo385"]), 2);
+    // unknown providers are named in the diagnostic, not treated as devices
+    assert_eq!(run(&["run", "--model", "resnet8-cifar", "--target", "replay:kryo385"]), 2);
+    // --device never takes a provider prefix
+    assert_eq!(run(&["prune", "--model", "resnet8-cifar", "--device", "lut:kryo385"]), 2);
+}
+
+#[test]
+fn calibration_table_feeds_back_into_a_run() {
+    let path = std::env::temp_dir().join("cprune_cli_test_calibration_run.json");
+    let _ = std::fs::remove_file(&path);
+    let p = path.to_str().unwrap();
+    assert_eq!(run(&["calibrate", "--device", "kryo280", "--save", p]), 0);
+    assert_eq!(
+        run(&["run", "--pruner", "magnitude", "--model", "resnet8-cifar",
+              "--device", "kryo280", "--calibration", p, "--quiet"]),
+        0
+    );
+    // a corrupt table fails loudly instead of running uncalibrated
+    std::fs::write(&path, "not json").unwrap();
+    assert_eq!(
+        run(&["run", "--pruner", "magnitude", "--model", "resnet8-cifar",
+              "--device", "kryo280", "--calibration", p, "--quiet"]),
+        1
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn devices_subcommand_lists_the_registry() {
+    assert_eq!(run(&["devices"]), 0);
+    let path = std::env::temp_dir().join("cprune_cli_test_devices_list.json");
+    std::fs::write(&path, DEVICE_FILE).unwrap();
+    assert_eq!(run(&["devices", "--device-file", path.to_str().unwrap()]), 0);
+    assert_eq!(run(&["devices", "--device-file", "/nonexistent/devs.json"]), 1);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn custom_device_from_file_is_tunable_end_to_end() {
+    let path = std::env::temp_dir().join("cprune_cli_test_devices_run.json");
+    std::fs::write(&path, DEVICE_FILE).unwrap();
+    let p = path.to_str().unwrap();
+    // resolves and tunes end-to-end through `cprune run --target <name>`
+    assert_eq!(
+        run(&["run", "--pruner", "magnitude", "--model", "resnet8-cifar",
+              "--device-file", p, "--target", "testphone", "--quiet"]),
+        0
+    );
+    // without the device file the name is unknown
+    assert_eq!(
+        run(&["run", "--pruner", "magnitude", "--model", "resnet8-cifar",
+              "--target", "testphone", "--quiet"]),
+        2
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn record_then_replay_reproduces_the_event_stream_byte_for_byte() {
+    let dir = std::env::temp_dir();
+    let trace = dir.join("cprune_cli_test_replay.trace.json");
+    let rec_events = dir.join("cprune_cli_test_replay_rec.jsonl");
+    let rep_events = dir.join("cprune_cli_test_replay_rep.jsonl");
+    for f in [&trace, &rec_events, &rep_events] {
+        let _ = std::fs::remove_file(f);
+    }
+    let base = [
+        "run", "--pruner", "cprune", "--model", "resnet8-cifar",
+        "--device", "kryo385", "--iters", "2", "--seed", "7", "--quiet",
+    ];
+    let mut rec: Vec<&str> = base.to_vec();
+    let (t, re, rp) = (
+        trace.to_str().unwrap().to_string(),
+        rec_events.to_str().unwrap().to_string(),
+        rep_events.to_str().unwrap().to_string(),
+    );
+    rec.extend(["--events", &re, "--record-trace", &t]);
+    assert_eq!(run(&rec), 0);
+    assert!(trace.exists(), "trace not written");
+    let mut rep: Vec<&str> = base.to_vec();
+    rep.extend(["--events", &rp, "--replay-trace", &t]);
+    assert_eq!(run(&rep), 0);
+    let a = std::fs::read(&rec_events).unwrap();
+    let b = std::fs::read(&rep_events).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "replayed RunEvent JSONL is not byte-identical");
+    for f in [&trace, &rec_events, &rep_events] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+#[test]
+fn lut_target_runs_through_the_cli() {
+    assert_eq!(
+        run(&["run", "--pruner", "magnitude", "--model", "resnet8-cifar",
+              "--target", "lut:kryo385", "--quiet"]),
+        0
+    );
+}
+
+#[test]
+fn calibrate_saves_a_calibration_table() {
+    let path = std::env::temp_dir().join("cprune_cli_test_calibration.json");
+    let _ = std::fs::remove_file(&path);
+    let p = path.to_str().unwrap();
+    assert_eq!(run(&["calibrate", "--device", "kryo280", "--save", p]), 0);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = json::parse(&text).unwrap();
+    assert_eq!(j.get("format").unwrap().as_str(), Some("cprune-calibration"));
+    let _ = std::fs::remove_file(&path);
+}
+
 #[test]
 fn corrupt_cache_fails_loudly() {
     let path = std::env::temp_dir().join("cprune_cli_test_corrupt.cache.json");

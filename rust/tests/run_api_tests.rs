@@ -140,7 +140,7 @@ fn registry_selects_algorithms_uniformly_with_no_wiring_branches() {
         let pruner = pruner_by_name(name).expect(name);
         let out = run.execute(pruner.as_ref()).unwrap();
         assert_eq!(out.pruner, name);
-        assert_eq!(out.device, "kryo585");
+        assert_eq!(out.device, "Kryo 585 (Galaxy S20+)");
         assert!(out.final_fps > 0.0 && out.final_fps.is_finite(), "{name}");
         assert!(!out.pareto.is_empty(), "{name}");
     }

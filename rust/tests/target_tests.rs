@@ -1,0 +1,257 @@
+//! The measurement plane's contract (DESIGN.md §11):
+//!
+//! 1. **Equivalence** — tuning through `AnalyticTarget` (and through the
+//!    registry) is bit-for-bit identical to the pre-redesign `Simulator`
+//!    wiring: same `TuneResult`s, same `PruneOutcome`s, same `RunEvent`
+//!    JSONL streams for fixed seeds;
+//! 2. **Replay** — a recorded trace replayed through `ReplayTarget`
+//!    reproduces an entire run's event stream byte-for-byte;
+//! 3. **Registry** — a JSON-defined custom device round-trips through
+//!    `TargetRegistry` and is tunable end-to-end;
+//! 4. **Providers** — `LutTarget` drives a run with table-backed
+//!    measurements and analytic fallback.
+
+use cprune::device::{
+    AnalyticTarget, DeviceSpec, LutTarget, ReplayTarget, Simulator, Target, TargetRegistry,
+};
+use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::graph::ops::OpKind;
+use cprune::run::{CPrune, JsonlSink, RunBuilder};
+use cprune::tir::Workload;
+use cprune::tuner::{tune_task, TuneOptions, TuningSession};
+use cprune::util::rng::Rng;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+fn wl(ff: usize) -> Workload {
+    Workload::from_conv(
+        &OpKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: ff, stride: 1, padding: 1, groups: 1 },
+        [1, 28, 28, ff],
+        vec!["bn", "relu"],
+    )
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+#[test]
+fn analytic_target_tunes_bit_identically_to_the_simulator() {
+    // The acceptance pin: for fixed seeds, the trait path reproduces the
+    // legacy path exactly — best program, latency bits, measured count.
+    for seed in [0u64, 3, 11] {
+        let w = wl(96);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let legacy = tune_task(&w, &sim, &TuneOptions::quick(), &mut Rng::new(seed), None);
+        let target = AnalyticTarget::new(DeviceSpec::kryo385());
+        let plane = tune_task(&w, &target, &TuneOptions::quick(), &mut Rng::new(seed), None);
+        assert_eq!(legacy.best, plane.best);
+        assert_eq!(legacy.latency.to_bits(), plane.latency.to_bits());
+        assert_eq!(legacy.measured, plane.measured);
+        // and through the registry
+        let resolved = TargetRegistry::builtin().resolve("kryo385").unwrap();
+        let via_registry =
+            tune_task(&w, resolved.as_ref(), &TuneOptions::quick(), &mut Rng::new(seed), None);
+        assert_eq!(legacy.latency.to_bits(), via_registry.latency.to_bits());
+        assert_eq!(legacy.measured, via_registry.measured);
+    }
+}
+
+#[test]
+fn whole_graph_tuning_matches_across_providers() {
+    let m = Model::build(ModelKind::ResNet8Cifar, 0);
+    let sim = Simulator::new(DeviceSpec::kryo585());
+    let a = TuningSession::new(&sim, TuneOptions::quick(), 5)
+        .tune_graph(&m.graph, &HashMap::new())
+        .model_latency();
+    let target = AnalyticTarget::new(DeviceSpec::kryo585());
+    let b = TuningSession::new(&target, TuneOptions::quick(), 5)
+        .tune_graph(&m.graph, &HashMap::new())
+        .model_latency();
+    assert_eq!(a.to_bits(), b.to_bits());
+}
+
+#[test]
+fn run_builder_event_streams_are_identical_across_target_spellings() {
+    // .device(name), .target_name(name) and .target(Box<AnalyticTarget>)
+    // must produce byte-identical RunEvent JSONL for a fixed seed.
+    let events = |tag: &str, wire: fn(RunBuilder) -> RunBuilder| -> Vec<u8> {
+        let path = tmp(&format!("cprune_target_events_{tag}.jsonl"));
+        let _ = std::fs::remove_file(&path);
+        let builder = wire(
+            RunBuilder::new(ModelKind::ResNet8Cifar)
+                .seed(4)
+                .max_iterations(3)
+                .observer(Box::new(JsonlSink::create(&path).unwrap())),
+        );
+        let mut run = builder.build().unwrap();
+        run.execute(&CPrune::default()).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        bytes
+    };
+    let by_device = events("device", |b| b.device("kryo385"));
+    let by_target_name = events("tname", |b| b.target_name("analytic:kryo385"));
+    let by_explicit = events("explicit", |b| {
+        b.target(Box::new(AnalyticTarget::new(DeviceSpec::kryo385())))
+    });
+    assert!(!by_device.is_empty());
+    assert_eq!(by_device, by_target_name);
+    assert_eq!(by_device, by_explicit);
+}
+
+#[test]
+fn recorded_trace_replays_an_entire_run_byte_for_byte() {
+    let trace = tmp("cprune_target_trace.json");
+    let rec_events = tmp("cprune_target_rec.jsonl");
+    let rep_events = tmp("cprune_target_rep.jsonl");
+    for f in [&trace, &rec_events, &rep_events] {
+        let _ = std::fs::remove_file(f);
+    }
+
+    let mut rec = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .device("kryo385")
+        .seed(9)
+        .max_iterations(3)
+        .record_trace(&trace)
+        .observer(Box::new(JsonlSink::create(&rec_events).unwrap()))
+        .build()
+        .unwrap();
+    let recorded = rec.execute(&CPrune::default()).unwrap();
+    assert!(trace.exists());
+
+    let mut rep = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .replay_trace(&trace)
+        .seed(9)
+        .max_iterations(3)
+        .observer(Box::new(JsonlSink::create(&rep_events).unwrap()))
+        .build()
+        .unwrap();
+    // the replay target carries the recorded device's spec
+    assert_eq!(rep.target().spec().name, "Kryo 385 (Galaxy S9)");
+    let replayed = rep.execute(&CPrune::default()).unwrap();
+
+    assert_eq!(recorded.final_latency.to_bits(), replayed.final_latency.to_bits());
+    assert_eq!(recorded.channels, replayed.channels);
+    assert_eq!(recorded.programs_measured, replayed.programs_measured);
+    assert_eq!(recorded.pareto, replayed.pareto);
+    let a = std::fs::read(&rec_events).unwrap();
+    let b = std::fs::read(&rep_events).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "replayed event stream diverged from the recording");
+    // the trace file itself is byte-stable across serializations
+    let trace_text = std::fs::read_to_string(&trace).unwrap();
+    assert_eq!(
+        ReplayTarget::parse(&trace_text).unwrap().to_json().to_string(),
+        trace_text
+    );
+    for f in [&trace, &rec_events, &rep_events] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+#[test]
+fn json_defined_custom_device_is_tunable_end_to_end() {
+    // Acceptance: a device that exists nowhere in the source resolves
+    // through the registry and a full CPrune run tunes for it.
+    let doc = r#"{"format":"cprune-devices","version":1,"devices":[
+        {"short":"labphone","name":"Lab Phone (custom)","kind":"cpu","cores":6,
+         "peak_macs_per_core":9.0e9,"simd_lanes":4,"l1_bytes":65536,
+         "l2_bytes":3145728,"mem_bytes_per_s":2.8e10,"dispatch_overhead_s":6e-6}]}"#;
+    let mut registry = TargetRegistry::builtin();
+    registry.load_str(doc, "inline").unwrap();
+    // round-trips: the registered spec serializes back identically
+    let spec = registry.spec("labphone").unwrap().clone();
+    assert_eq!(
+        DeviceSpec::from_json(&spec.to_json()).unwrap().to_json().to_string(),
+        spec.to_json().to_string()
+    );
+
+    let mut run = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .with_registry(registry)
+        .target_name("labphone")
+        .seed(1)
+        .max_iterations(2)
+        .build()
+        .unwrap();
+    let out = run.execute(&CPrune::default()).unwrap();
+    assert_eq!(out.device, "Lab Phone (custom)");
+    assert!(out.final_fps > 0.0 && out.final_fps.is_finite());
+    assert!(out.programs_measured > 0);
+}
+
+#[test]
+fn lut_target_drives_a_run_with_table_hits() {
+    let m = Model::build(ModelKind::ResNet8Cifar, 2);
+    let lut = LutTarget::for_model(DeviceSpec::kryo385(), &m, &TuneOptions::quick(), 2);
+    assert!(lut.num_tables() > 0);
+    let mut run = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .target(Box::new(lut))
+        .seed(2)
+        .max_iterations(2)
+        .build()
+        .unwrap();
+    let out = run.execute(&CPrune::default()).unwrap();
+    assert!(out.final_fps > 0.0 && out.final_fps.is_finite());
+    assert!(out.programs_measured > 0);
+}
+
+#[test]
+fn calibration_table_scales_the_built_target() {
+    use cprune::device::calibration::{Calibration, CalibrationTable};
+    let mut table = CalibrationTable::new();
+    table.insert("Kryo 385 (Galaxy S9)", Calibration { scale: 0.5, residual: 0.0 });
+    let calibrated = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .device("kryo385")
+        .calibration(table.clone())
+        .build()
+        .unwrap();
+    let plain = RunBuilder::new(ModelKind::ResNet8Cifar).device("kryo385").build().unwrap();
+    assert_eq!(
+        calibrated.target().spec().peak_macs_per_core,
+        plain.target().spec().peak_macs_per_core * 0.5
+    );
+    // devices absent from the table run uncalibrated
+    let other = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .device("kryo585")
+        .calibration(table)
+        .build()
+        .unwrap();
+    assert_eq!(
+        other.target().spec().peak_macs_per_core,
+        DeviceSpec::kryo585().peak_macs_per_core
+    );
+}
+
+#[test]
+fn mixed_provider_targets_share_one_session_api() {
+    // One workload, three providers, one call shape.
+    let w = wl(64);
+    let providers: Vec<Box<dyn Target>> = vec![
+        Box::new(AnalyticTarget::new(DeviceSpec::kryo385())),
+        Box::new(LutTarget::new(DeviceSpec::kryo385())),
+        TargetRegistry::builtin().resolve("mali").unwrap(),
+    ];
+    for t in &providers {
+        let r = tune_task(&w, t.as_ref(), &TuneOptions::quick(), &mut Rng::new(3), None);
+        assert!(r.latency > 0.0 && r.latency.is_finite(), "{}", t.spec().name);
+        assert!(r.measured > 0);
+    }
+    // a table-less LutTarget is pure analytic fallback: identical bits
+    let analytic = tune_task(
+        &w,
+        providers[0].as_ref(),
+        &TuneOptions::quick(),
+        &mut Rng::new(3),
+        None,
+    );
+    let lut_fallback = tune_task(
+        &w,
+        providers[1].as_ref(),
+        &TuneOptions::quick(),
+        &mut Rng::new(3),
+        None,
+    );
+    assert_eq!(analytic.latency.to_bits(), lut_fallback.latency.to_bits());
+    assert_eq!(analytic.best, lut_fallback.best);
+}
