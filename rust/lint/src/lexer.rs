@@ -1,0 +1,424 @@
+//! A hand-rolled lexer for the subset of Rust surface syntax the lint
+//! rules need (in the spirit of `cprune`'s hand-rolled `util::json`).
+//!
+//! The lexer does three things:
+//!
+//! 1. strips comments, string/char literals and lifetimes, so rules
+//!    never match inside prose or data;
+//! 2. produces a flat token stream — identifiers, numeric literals and
+//!    single-character punctuation — each tagged with its 1-based line;
+//! 3. captures `allow(RULE, reason="...")` lint annotations out of the
+//!    comments it strips (the escape hatch of DESIGN.md §12), reporting
+//!    malformed ones so a typo cannot silently disable a rule.
+//!
+//! (The literal marker string is [`ANNOTATION_MARKER`]; these docs avoid
+//! spelling it so the linter does not parse its own documentation.)
+//!
+//! It is deliberately not a full Rust lexer: nested generics, macros and
+//! attributes all come out as plain punctuation, which is exactly the
+//! level the rules operate at. Known holes (documented in DESIGN.md
+//! §12): float-suffix literals like `1.0f32` lex as one `Number` token,
+//! and non-ASCII identifier tails are truncated — neither occurs in this
+//! codebase.
+
+/// Token class. Rules mostly dispatch on `Ident` text.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Number,
+    Punct,
+}
+
+/// One lexed token: class, source text and 1-based source line.
+#[derive(Clone, Copy, Debug)]
+pub struct Token<'a> {
+    pub kind: TokKind,
+    pub text: &'a str,
+    pub line: usize,
+}
+
+/// Everything the lexer extracts from one source file.
+#[derive(Debug, Default)]
+pub struct Lexed<'a> {
+    pub tokens: Vec<Token<'a>>,
+    /// Well-formed `(line, rule_id)` allow-annotations.
+    pub allows: Vec<(usize, String)>,
+    /// `(line, why)` for annotations that failed to parse.
+    pub bad_annotations: Vec<(usize, String)>,
+}
+
+/// The marker every annotation starts with.
+pub const ANNOTATION_MARKER: &str = "cprune-lint:";
+
+/// Lex `src` into tokens plus the annotations found in its comments.
+pub fn lex(src: &str) -> Lexed<'_> {
+    let bytes = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if bytes.get(i + 1) == Some(&b'/') => {
+                let end = memchr_newline(bytes, i);
+                scan_annotations(&src[i..end], line, &mut out);
+                i = end;
+            }
+            b'/' if bytes.get(i + 1) == Some(&b'*') => {
+                let start_line = line;
+                let (end, newlines) = skip_block_comment(bytes, i);
+                scan_annotations(&src[i..end], start_line, &mut out);
+                line += newlines;
+                i = end;
+            }
+            b'r' | b'b' if is_raw_string_start(bytes, i) => {
+                let (end, newlines) = skip_raw_string(bytes, i);
+                line += newlines;
+                i = end;
+            }
+            b'"' => {
+                let (end, newlines) = skip_string(bytes, i);
+                line += newlines;
+                i = end;
+            }
+            b'b' if bytes.get(i + 1) == Some(&b'"') => {
+                let (end, newlines) = skip_string(bytes, i + 1);
+                line += newlines;
+                i = end;
+            }
+            b'\'' => {
+                if is_lifetime_start(bytes, i) {
+                    i += 1;
+                    while i < bytes.len() && is_ident_byte(bytes[i]) {
+                        i += 1;
+                    }
+                } else {
+                    i = skip_char_literal(bytes, i);
+                }
+            }
+            _ if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < bytes.len() && is_ident_byte(bytes[i]) {
+                    i += 1;
+                }
+                out.tokens.push(Token { kind: TokKind::Ident, text: &src[start..i], line });
+            }
+            _ if c.is_ascii_digit() => {
+                let start = i;
+                while i < bytes.len() && is_ident_byte(bytes[i]) {
+                    i += 1;
+                }
+                // Decimal tail (`1.5`, `1.5e3`) — but not `1.iter()`.
+                if i + 1 < bytes.len() && bytes[i] == b'.' && bytes[i + 1].is_ascii_digit() {
+                    i += 1;
+                    while i < bytes.len() && is_ident_byte(bytes[i]) {
+                        i += 1;
+                    }
+                }
+                out.tokens.push(Token { kind: TokKind::Number, text: &src[start..i], line });
+            }
+            _ if c.is_ascii() => {
+                out.tokens.push(Token { kind: TokKind::Punct, text: &src[i..i + 1], line });
+                i += 1;
+            }
+            // Non-ASCII outside strings/comments: skip the whole scalar so
+            // we never slice mid-character.
+            _ => {
+                let mut j = i + 1;
+                while j < bytes.len() && (bytes[j] & 0b1100_0000) == 0b1000_0000 {
+                    j += 1;
+                }
+                i = j;
+            }
+        }
+    }
+    out
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn memchr_newline(bytes: &[u8], mut i: usize) -> usize {
+    while i < bytes.len() && bytes[i] != b'\n' {
+        i += 1;
+    }
+    i
+}
+
+/// `i` sits on `/*`; returns (index past the matching `*/`, newlines seen).
+/// Block comments nest, as in real Rust.
+fn skip_block_comment(bytes: &[u8], mut i: usize) -> (usize, usize) {
+    let mut depth = 0usize;
+    let mut newlines = 0usize;
+    while i < bytes.len() {
+        if bytes[i] == b'\n' {
+            newlines += 1;
+            i += 1;
+        } else if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'*') {
+            depth += 1;
+            i += 2;
+        } else if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+            depth -= 1;
+            i += 2;
+            if depth == 0 {
+                break;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    (i, newlines)
+}
+
+/// True when `i` starts `r"`, `r#"`, `br"`, `br#"`, ... (a raw string).
+fn is_raw_string_start(bytes: &[u8], i: usize) -> bool {
+    let mut j = i;
+    if bytes[j] == b'b' {
+        j += 1;
+    }
+    if bytes.get(j) != Some(&b'r') {
+        return false;
+    }
+    j += 1;
+    while bytes.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    bytes.get(j) == Some(&b'"')
+}
+
+/// `i` sits on the `r`/`b` of a raw string; returns (index past the
+/// closing quote+hashes, newlines seen).
+fn skip_raw_string(bytes: &[u8], mut i: usize) -> (usize, usize) {
+    if bytes[i] == b'b' {
+        i += 1;
+    }
+    i += 1; // the `r`
+    let mut hashes = 0usize;
+    while bytes.get(i) == Some(&b'#') {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // the opening quote
+    let mut newlines = 0usize;
+    while i < bytes.len() {
+        if bytes[i] == b'\n' {
+            newlines += 1;
+            i += 1;
+            continue;
+        }
+        if bytes[i] == b'"' {
+            let mut j = i + 1;
+            let mut seen = 0usize;
+            while seen < hashes && bytes.get(j) == Some(&b'#') {
+                seen += 1;
+                j += 1;
+            }
+            if seen == hashes {
+                return (j, newlines);
+            }
+        }
+        i += 1;
+    }
+    (i, newlines)
+}
+
+/// `i` sits on the opening quote; returns (index past the closing quote,
+/// newlines seen).
+fn skip_string(bytes: &[u8], mut i: usize) -> (usize, usize) {
+    i += 1;
+    let mut newlines = 0usize;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => i += 2,
+            b'"' => return (i + 1, newlines),
+            b'\n' => {
+                newlines += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (i, newlines)
+}
+
+/// Distinguish `'a` / `'_` (lifetime) from `'x'` / `'\n'` (char literal):
+/// a lifetime's first byte is identifier-ish and is NOT followed by a
+/// closing quote.
+fn is_lifetime_start(bytes: &[u8], i: usize) -> bool {
+    match (bytes.get(i + 1), bytes.get(i + 2)) {
+        (Some(&c), Some(&n)) => (c.is_ascii_alphabetic() || c == b'_') && n != b'\'',
+        _ => false,
+    }
+}
+
+/// `i` sits on the opening quote of a char literal; returns the index
+/// past the closing quote.
+fn skip_char_literal(bytes: &[u8], mut i: usize) -> usize {
+    i += 1;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => i += 2,
+            b'\'' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Parse every [`ANNOTATION_MARKER`] occurrence inside one comment's
+/// text. Each marker must be followed by a well-formed
+/// `allow(RULE, reason="non-empty")`; anything else is recorded as a bad
+/// annotation so rule CPL000 can surface it.
+fn scan_annotations(comment: &str, line: usize, out: &mut Lexed<'_>) {
+    let mut rest = comment;
+    while let Some(pos) = rest.find(ANNOTATION_MARKER) {
+        let after = &rest[pos + ANNOTATION_MARKER.len()..];
+        match parse_allow(after) {
+            Ok(rule) => out.allows.push((line, rule)),
+            Err(why) => out.bad_annotations.push((line, why)),
+        }
+        rest = after;
+    }
+}
+
+/// Grammar: `allow(<RULE>, reason="<non-empty>")`, leading whitespace
+/// allowed. Returns the rule id as written.
+fn parse_allow(s: &str) -> Result<String, String> {
+    let s = s.trim_start();
+    let s = match s.strip_prefix("allow(") {
+        Some(rest) => rest,
+        None => return Err("expected `allow(RULE, reason=\"...\")` after marker".to_string()),
+    };
+    let comma = match s.find(',') {
+        Some(c) => c,
+        None => return Err("allow(...) is missing the `, reason=\"...\"` part".to_string()),
+    };
+    let rule = s[..comma].trim();
+    if rule.is_empty() || !rule.bytes().all(|b| b.is_ascii_alphanumeric()) {
+        return Err(format!("bad rule id '{rule}' in allow(...)"));
+    }
+    let s = s[comma + 1..].trim_start();
+    let s = match s.strip_prefix("reason") {
+        Some(rest) => rest.trim_start(),
+        None => return Err("allow(...) requires `reason=\"...\"`".to_string()),
+    };
+    let s = match s.strip_prefix('=') {
+        Some(rest) => rest.trim_start(),
+        None => return Err("allow(...) requires `reason=\"...\"`".to_string()),
+    };
+    let s = match s.strip_prefix('"') {
+        Some(rest) => rest,
+        None => return Err("allow(...) reason must be a \"quoted\" string".to_string()),
+    };
+    let close = match s.find('"') {
+        Some(c) => c,
+        None => return Err("allow(...) reason string is unterminated".to_string()),
+    };
+    if s[..close].trim().is_empty() {
+        return Err("allow(...) reason must not be empty".to_string());
+    }
+    if !s[close + 1..].trim_start().starts_with(')') {
+        return Err("allow(...) is missing its closing ')'".to_string());
+    }
+    Ok(rule.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<&str> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let src = "// unwrap() in a comment\n\
+                   /* HashMap in /* a nested */ block */\n\
+                   let x = \"partial_cmp inside a string\";\n";
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap"));
+        assert!(!ids.contains(&"HashMap"));
+        assert!(!ids.contains(&"partial_cmp"));
+        assert!(ids.contains(&"let"));
+    }
+
+    #[test]
+    fn raw_strings_are_stripped() {
+        let src = "let s = r#\"unwrap() HashMap\"#; let t = r\"Instant\"; done();";
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap"));
+        assert!(!ids.contains(&"HashMap"));
+        assert!(!ids.contains(&"Instant"));
+        assert!(ids.contains(&"done"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { m('x', '\\n', '\\''); }";
+        let ids = idents(src);
+        // the lifetime ident is skipped entirely, char contents never leak
+        assert!(!ids.contains(&"a"));
+        // the parameter `x` survives; the 'x' char literal does not
+        assert_eq!(ids.iter().filter(|s| **s == "x").count(), 1);
+        assert!(ids.contains(&"m"));
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_constructs() {
+        let src = "let a = \"two\nlines\";\n/* block\ncomment */\nlet b = 1;";
+        let lexed = lex(src);
+        let b = lexed.tokens.iter().find(|t| t.text == "b");
+        assert_eq!(b.map(|t| t.line), Some(5));
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_method_calls() {
+        let src = "for i in 0..n { x.0.lock(); let f = 1.5e3; }";
+        let lexed = lex(src);
+        let texts: Vec<&str> = lexed.tokens.iter().map(|t| t.text).collect();
+        assert!(texts.contains(&"lock"));
+        assert!(texts.contains(&"0"));
+    }
+
+    #[test]
+    fn well_formed_annotations_parse() {
+        let src = "let x = 1; // cprune-lint: allow(CPL005, reason=\"documented invariant\")";
+        let lexed = lex(src);
+        assert_eq!(lexed.allows, vec![(1, "CPL005".to_string())]);
+        assert!(lexed.bad_annotations.is_empty());
+    }
+
+    #[test]
+    fn malformed_annotations_are_reported() {
+        for bad in [
+            "// cprune-lint: allow(CPL005)",
+            "// cprune-lint: allow(CPL005, reason=\"\")",
+            "// cprune-lint: allow(CPL005, reason=unquoted)",
+            "// cprune-lint: suppress(CPL005)",
+            "// cprune-lint: allow(CPL005, reason=\"x\"",
+        ] {
+            let lexed = lex(bad);
+            assert!(lexed.allows.is_empty(), "{bad} parsed as well-formed");
+            assert_eq!(lexed.bad_annotations.len(), 1, "{bad} not reported");
+        }
+    }
+
+    #[test]
+    fn multiple_annotations_on_one_line() {
+        let src = "x(); // cprune-lint: allow(CPL002, reason=\"a\") cprune-lint: allow(CPL005, reason=\"b\")";
+        let lexed = lex(src);
+        assert_eq!(lexed.allows.len(), 2);
+    }
+}

@@ -1,0 +1,93 @@
+//! `cprune-lint` — the workspace's in-tree determinism & float-safety
+//! analysis pass (DESIGN.md §12 "Enforced invariants").
+//!
+//! CPrune's pruning decisions are only as trustworthy as the
+//! bit-identical tuner/replay infrastructure underneath them, and the
+//! project's worst historical bugs — NaN-panicking
+//! `partial_cmp().unwrap()` sorts, `DefaultHasher` nondeterminism, `f32`
+//! drift in the measurement noise path — were all invariant violations a
+//! machine could have caught. This crate makes those invariants
+//! machine-checked: a small hand-rolled lexer ([`lexer`]) feeds a set of
+//! token-level rules ([`rules`]) with stable IDs (`CPL000`–`CPL005`),
+//! `file:line` diagnostics and a per-site allow-annotation escape hatch.
+//! CI runs the pass deny-by-default over the whole workspace.
+//!
+//! The pass is deliberately a *lint*, not a type checker: rules operate
+//! on token patterns, scoped by path (library code vs. tests/bins,
+//! deterministic modules vs. the rest). False positives are expected to
+//! be rare and carry an annotation documenting why the flagged pattern
+//! is safe; false negatives are accepted.
+
+pub mod lexer;
+pub mod rules;
+
+use rules::Diagnostic;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Directory names the workspace walker never descends into. `fixtures`
+/// keeps the linter's own intentionally-failing test inputs out of the
+/// deny-by-default sweep.
+pub const SKIP_DIRS: [&str; 3] = ["target", ".git", "fixtures"];
+
+/// Walk every `.rs` file under `root` (the workspace root) and run all
+/// rules. Returns `(workspace-relative path, diagnostic)` pairs, sorted
+/// by path then line, already filtered through allow-annotations.
+pub fn check_workspace(root: &Path) -> Result<Vec<(String, Diagnostic)>, String> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in &files {
+        let rel = relative_path(root, path)?;
+        let src = fs::read_to_string(path)
+            .map_err(|e| format!("failed to read {}: {e}", path.display()))?;
+        for diag in rules::check_source(&rel, &src) {
+            out.push((rel.clone(), diag));
+        }
+    }
+    Ok(out)
+}
+
+/// Recursively gather `.rs` files, skipping [`SKIP_DIRS`] directories.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("failed to list {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("failed to list {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if !SKIP_DIRS.contains(&name.as_ref()) {
+                collect_rs_files(&path, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// `path` relative to `root`, `/`-separated regardless of platform —
+/// the form every rule's path scoping expects.
+fn relative_path(root: &Path, path: &Path) -> Result<String, String> {
+    let rel = path
+        .strip_prefix(root)
+        .map_err(|_| format!("{} is not under {}", path.display(), root.display()))?;
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    Ok(parts.join("/"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_paths_are_slash_separated() {
+        let root = Path::new("/repo");
+        let rel = relative_path(root, Path::new("/repo/rust/src/lib.rs")).unwrap();
+        assert_eq!(rel, "rust/src/lib.rs");
+        assert!(relative_path(root, Path::new("/elsewhere/x.rs")).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! The `cprune-lint` binary: walk a workspace, print diagnostics, exit
+//! nonzero on any finding (deny-by-default — CI fails on exit status).
+//!
+//! Usage: `cprune-lint [ROOT]` (default `.`), or `cprune-lint --rules`
+//! to list the rule IDs and what they enforce.
+
+use cprune_lint::rules::Rule;
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let arg = std::env::args().nth(1).unwrap_or_else(|| ".".to_string());
+    if arg == "--rules" {
+        for rule in Rule::ALL {
+            println!("{}  {}", rule.id(), rule.summary());
+        }
+        return ExitCode::SUCCESS;
+    }
+    if arg.starts_with('-') {
+        eprintln!("usage: cprune-lint [ROOT] | cprune-lint --rules");
+        return ExitCode::from(2);
+    }
+    match cprune_lint::check_workspace(Path::new(&arg)) {
+        Ok(diags) if diags.is_empty() => {
+            eprintln!("cprune-lint: workspace is clean");
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for (path, d) in &diags {
+                println!("{path}:{}: {}: {}", d.line, d.rule.id(), d.message);
+            }
+            eprintln!("cprune-lint: {} diagnostic(s)", diags.len());
+            ExitCode::FAILURE
+        }
+        Err(err) => {
+            eprintln!("cprune-lint: error: {err}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,580 @@
+//! The rule set: each rule has a stable ID, a path scope, and a checker
+//! over the token stream. DESIGN.md §12 documents the rationale (which
+//! historical bug motivated each rule) and the allow-annotation grammar.
+//!
+//! Scoping vocabulary:
+//!
+//! * **library code** — `rust/src/**` and `rust/lint/src/**` minus
+//!   `main.rs`, minus `#[cfg(test)]` / `#[test]` spans. Test code is
+//!   allowed to unwrap; the binary may exit however it likes.
+//! * **deterministic modules** — the measurement plane and everything
+//!   that feeds it: `tuner/`, `device/`, `serve/`, `compiler/`. A wall
+//!   clock, environment read or `f32` round-trip in these modules can
+//!   silently change tuning decisions between two "identical" runs.
+
+use crate::lexer::{lex, TokKind, Token};
+use std::collections::BTreeSet;
+
+/// One lint rule. IDs are stable and never reused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// CPL000 — a lint allow-annotation that does not parse, or names
+    /// an unknown rule. Not suppressible: a typo in an allow must never
+    /// silently disable checking.
+    BadAnnotation,
+    /// CPL001 — `.partial_cmp(..).unwrap()/.expect()`: panics on NaN
+    /// (the pre-PR-2 experiment-killer). Use `f64::total_cmp`.
+    FloatOrd,
+    /// CPL002 — `DefaultHasher`/`RandomState` anywhere, or iteration
+    /// over a `HashMap`/`HashSet` binding in library code: hash order is
+    /// seed-randomized and release-dependent (the PR-1 `stable_hash`
+    /// bug class). Use `BTreeMap` or sort before order escapes.
+    HashOrder,
+    /// CPL003 — `Instant`/`SystemTime`/`env::var` inside a deterministic
+    /// module: measurement must depend only on (inputs, RNG stream).
+    WallClock,
+    /// CPL004 — the `f32` type inside a deterministic module: the PR-5
+    /// noise-path drift bug. Latency math is f64 end-to-end.
+    F32Measure,
+    /// CPL005 — `.unwrap()`/`.expect()` in library code without an
+    /// annotation documenting why the panic is an invariant, not an
+    /// error path.
+    LibUnwrap,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 6] = [
+        Rule::BadAnnotation,
+        Rule::FloatOrd,
+        Rule::HashOrder,
+        Rule::WallClock,
+        Rule::F32Measure,
+        Rule::LibUnwrap,
+    ];
+
+    /// The stable diagnostic ID.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::BadAnnotation => "CPL000",
+            Rule::FloatOrd => "CPL001",
+            Rule::HashOrder => "CPL002",
+            Rule::WallClock => "CPL003",
+            Rule::F32Measure => "CPL004",
+            Rule::LibUnwrap => "CPL005",
+        }
+    }
+
+    /// One-line summary for `cprune-lint --rules`.
+    pub fn summary(self) -> &'static str {
+        match self {
+            Rule::BadAnnotation => "malformed or unknown cprune-lint allow-annotation",
+            Rule::FloatOrd => "float ordering via partial_cmp().unwrap(); use total_cmp",
+            Rule::HashOrder => "hash-ordered state (DefaultHasher/RandomState/HashMap iteration)",
+            Rule::WallClock => "wall clock or environment read in a deterministic module",
+            Rule::F32Measure => "f32 in a measurement/latency path; latency math is f64",
+            Rule::LibUnwrap => "unannotated unwrap()/expect() in library code",
+        }
+    }
+
+    /// Parse an ID as written in an allow-annotation. CPL000 itself is
+    /// excluded: the bad-annotation rule cannot be suppressed.
+    pub fn suppressible_from_id(id: &str) -> Option<Rule> {
+        Rule::ALL.into_iter().find(|r| r.id() == id && *r != Rule::BadAnnotation)
+    }
+}
+
+/// One finding, reported as `path:line: ID message` by the driver.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+/// Path prefixes of the deterministic modules (workspace-root-relative,
+/// `/`-separated). `serve/` is wider than the issue's `serve/sim` on
+/// purpose: the whole layer reports deterministic statistics.
+pub const DETERMINISTIC_PREFIXES: [&str; 4] =
+    ["rust/src/tuner/", "rust/src/device/", "rust/src/serve/", "rust/src/compiler/"];
+
+/// True for library (non-test-crate, non-bin) source paths.
+pub fn is_library_path(rel: &str) -> bool {
+    (rel.starts_with("rust/src/") || rel.starts_with("rust/lint/src/"))
+        && !rel.ends_with("/main.rs")
+}
+
+/// True for paths inside the deterministic measurement plane.
+pub fn is_deterministic_path(rel: &str) -> bool {
+    DETERMINISTIC_PREFIXES.iter().any(|p| rel.starts_with(p))
+}
+
+/// Run every rule over one file. `rel` is the workspace-root-relative
+/// path with `/` separators — rule scoping keys off it. Returned
+/// diagnostics are sorted by (line, rule) and already filtered through
+/// the allow-annotations.
+pub fn check_source(rel: &str, src: &str) -> Vec<Diagnostic> {
+    let lexed = lex(src);
+    let toks = &lexed.tokens;
+    let in_tests = test_lines(toks);
+    let in_lib = is_library_path(rel);
+    let in_det = is_deterministic_path(rel);
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    for (line, why) in &lexed.bad_annotations {
+        diags.push(Diagnostic { line: *line, rule: Rule::BadAnnotation, message: why.clone() });
+    }
+    for (line, id) in &lexed.allows {
+        if Rule::suppressible_from_id(id).is_none() {
+            diags.push(Diagnostic {
+                line: *line,
+                rule: Rule::BadAnnotation,
+                message: format!("allow({id}, ...) names an unknown or unsuppressible rule"),
+            });
+        }
+    }
+
+    let emit = |rule: Rule, line: usize, message: String, diags: &mut Vec<Diagnostic>| {
+        if !in_tests.contains(&line) {
+            diags.push(Diagnostic { line, rule, message });
+        }
+    };
+
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let prev = text_at(toks, i.wrapping_sub(1));
+        let next = text_at(toks, i + 1);
+        match t.text {
+            "partial_cmp" if prev == "." && next == "(" => {
+                if let Some(close) = matching_paren(toks, i + 1) {
+                    if text_at(toks, close + 1) == "."
+                        && matches!(text_at(toks, close + 2), "unwrap" | "expect")
+                    {
+                        emit(
+                            Rule::FloatOrd,
+                            t.line,
+                            "partial_cmp().unwrap() panics on NaN; use f64::total_cmp".to_string(),
+                            &mut diags,
+                        );
+                    }
+                }
+            }
+            "DefaultHasher" | "RandomState" => emit(
+                Rule::HashOrder,
+                t.line,
+                format!(
+                    "{} is seed-randomized/release-dependent; use util::rng::stable_hash \
+                     or a BTreeMap",
+                    t.text
+                ),
+                &mut diags,
+            ),
+            "Instant" | "SystemTime" if in_det => emit(
+                Rule::WallClock,
+                t.line,
+                format!("{} in a deterministic module; measurement depends on it", t.text),
+                &mut diags,
+            ),
+            "env" if in_det && is_env_read(toks, i) => emit(
+                Rule::WallClock,
+                t.line,
+                "environment read in a deterministic module".to_string(),
+                &mut diags,
+            ),
+            "f32" if in_det && prev != "." && prev != "fn" => emit(
+                Rule::F32Measure,
+                t.line,
+                "f32 in a measurement/latency path; latency math is f64 end-to-end".to_string(),
+                &mut diags,
+            ),
+            "unwrap" | "expect" if in_lib && prev == "." && next == "(" => emit(
+                Rule::LibUnwrap,
+                t.line,
+                format!(
+                    ".{}() in library code; return an error or annotate the invariant",
+                    t.text
+                ),
+                &mut diags,
+            ),
+            _ => {}
+        }
+    }
+
+    if in_lib {
+        check_hash_iteration(toks, &mut |line, message| {
+            if !in_tests.contains(&line) {
+                diags.push(Diagnostic { line, rule: Rule::HashOrder, message });
+            }
+        });
+    }
+
+    // Allow-annotations on the diagnostic's own line or the line above
+    // suppress it; CPL000 is never suppressible.
+    diags.retain(|d| {
+        d.rule == Rule::BadAnnotation
+            || !lexed.allows.iter().any(|(line, id)| {
+                (*line == d.line || *line + 1 == d.line)
+                    && Rule::suppressible_from_id(id) == Some(d.rule)
+            })
+    });
+    diags.sort();
+    diags
+}
+
+fn text_at<'a>(toks: &[Token<'a>], i: usize) -> &'a str {
+    toks.get(i).map(|t| t.text).unwrap_or("")
+}
+
+/// True when the ident at `i` begins an `env::var`/`var_os`/`vars` path.
+fn is_env_read(toks: &[Token<'_>], i: usize) -> bool {
+    text_at(toks, i + 1) == ":"
+        && text_at(toks, i + 2) == ":"
+        && matches!(text_at(toks, i + 3), "var" | "var_os" | "vars")
+}
+
+/// `toks[open]` is `(`; returns the index of its matching `)`.
+fn matching_paren(toks: &[Token<'_>], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (i, t) in toks.iter().enumerate().skip(open) {
+        match t.text {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Lines covered by `#[cfg(test)] mod { .. }` or `#[test]`-attributed
+/// items (including `#[should_panic]` companions).
+fn test_lines(toks: &[Token<'_>]) -> BTreeSet<usize> {
+    let mut lines = BTreeSet::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].text != "#" || text_at(toks, i + 1) != "[" {
+            i += 1;
+            continue;
+        }
+        let attr = attr_tokens(toks, i);
+        let after = skip_attr(toks, i);
+        let is_cfg_test = attr == ["[", "cfg", "(", "test", ")"];
+        let is_test_attr = attr.len() >= 2 && matches!(attr[1], "test" | "should_panic");
+        if !(is_cfg_test || is_test_attr) {
+            i = after;
+            continue;
+        }
+        // Skip any further attributes, then find the item's opening `{`
+        // (a `;` first means a declaration with no body — nothing to span).
+        let mut k = after;
+        while k < toks.len() && toks[k].text == "#" && text_at(toks, k + 1) == "[" {
+            k = skip_attr(toks, k);
+        }
+        let mut open = None;
+        while k < toks.len() {
+            match toks[k].text {
+                "{" => {
+                    open = Some(k);
+                    break;
+                }
+                ";" => break,
+                _ => k += 1,
+            }
+        }
+        let Some(mut k) = open else {
+            i = after;
+            continue;
+        };
+        let mut depth = 0usize;
+        while k < toks.len() {
+            lines.insert(toks[k].line);
+            match toks[k].text {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        i = k + 1;
+    }
+    lines
+}
+
+/// The token texts of the `#[...]` starting at `toks[i]` (the `#`),
+/// opening bracket included, closing bracket excluded.
+fn attr_tokens<'a>(toks: &[Token<'a>], i: usize) -> Vec<&'a str> {
+    let mut out = Vec::new();
+    let mut k = i + 1;
+    if text_at(toks, k) != "[" {
+        return out;
+    }
+    let mut depth = 0usize;
+    while k < toks.len() {
+        match toks[k].text {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        out.push(toks[k].text);
+        k += 1;
+    }
+    out
+}
+
+/// Index just past the `#[...]` starting at `toks[i]`.
+fn skip_attr(toks: &[Token<'_>], i: usize) -> usize {
+    let mut k = i + 1;
+    if text_at(toks, k) != "[" {
+        return k;
+    }
+    let mut depth = 0usize;
+    while k < toks.len() {
+        match toks[k].text {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    return k + 1;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    k
+}
+
+/// CPL002's iteration half: collect the file's `HashMap`/`HashSet`
+/// binding names (typed declarations and `= HashMap::new()` initializers),
+/// then flag ordered-iteration entry points on them. Name tracking is
+/// per-file and type-blind — false negatives are acceptable (this is a
+/// lint, not a type checker); false positives carry an annotation
+/// explaining why order does not escape.
+fn check_hash_iteration(toks: &[Token<'_>], emit: &mut dyn FnMut(usize, String)) {
+    const WRAPPERS: [&str; 10] =
+        ["<", "&", "mut", "Mutex", "Arc", "Rc", "RefCell", "Option", "Box", "Vec"];
+    const ITER_METHODS: [&str; 7] =
+        ["iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "drain"];
+
+    let mut names: BTreeSet<&str> = BTreeSet::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+            continue;
+        }
+        // Walk back over a `std::collections::` path prefix...
+        let mut j = i.wrapping_sub(1);
+        while j >= 1 && j < toks.len() && toks[j].text == ":" && toks[j - 1].text == ":" {
+            j = j.wrapping_sub(2);
+            if j < toks.len() && toks[j].kind == TokKind::Ident {
+                j = j.wrapping_sub(1);
+            }
+        }
+        // ...and over type wrappers (`Mutex<`, `&mut`, ...).
+        while j < toks.len() && WRAPPERS.contains(&toks[j].text) {
+            j = j.wrapping_sub(1);
+        }
+        if j >= 1 && j < toks.len() {
+            let at = toks[j].text;
+            let before = &toks[j - 1];
+            if at == ":" && before.kind == TokKind::Ident && (j < 2 || toks[j - 2].text != ":") {
+                names.insert(before.text);
+            } else if at == "=" && before.kind == TokKind::Ident {
+                names.insert(before.text);
+            }
+        }
+    }
+    if names.is_empty() {
+        return;
+    }
+
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Ident
+            && names.contains(t.text)
+            && text_at(toks, i + 1) == "."
+            && ITER_METHODS.contains(&text_at(toks, i + 2))
+        {
+            emit(
+                t.line,
+                format!(
+                    "iteration over hash-ordered `{}`; use a BTreeMap or sort before \
+                     the order can escape",
+                    t.text
+                ),
+            );
+        }
+        if t.text == "for" && t.kind == TokKind::Ident {
+            // Find the `in` of this for-loop, then flag tracked names
+            // consumed directly (not via a method call) before the `{`.
+            let mut j = i + 1;
+            while j < toks.len() && !matches!(toks[j].text, "in" | "{" | ";") {
+                j += 1;
+            }
+            if j >= toks.len() || toks[j].text != "in" {
+                continue;
+            }
+            let mut k = j + 1;
+            while k < toks.len() && toks[k].text != "{" {
+                if toks[k].kind == TokKind::Ident
+                    && names.contains(toks[k].text)
+                    && text_at(toks, k + 1) != "."
+                {
+                    emit(
+                        toks[k].line,
+                        format!(
+                            "for-loop over hash-ordered `{}`; use a BTreeMap or sort \
+                             before the order can escape",
+                            toks[k].text
+                        ),
+                    );
+                }
+                k += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lib(src: &str) -> Vec<Diagnostic> {
+        check_source("rust/src/sample.rs", src)
+    }
+
+    fn det(src: &str) -> Vec<Diagnostic> {
+        check_source("rust/src/tuner/sample.rs", src)
+    }
+
+    fn ids(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule.id()).collect()
+    }
+
+    #[test]
+    fn cpl001_fires_on_partial_cmp_unwrap() {
+        let src = "fn f(v: &mut Vec<f64>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }";
+        // In library scope the bare unwrap is flagged too, independently.
+        assert_eq!(ids(&lib(src)), ["CPL001", "CPL005"]);
+        let ok = "fn f(v: &mut Vec<f64>) { v.sort_by(f64::total_cmp); }";
+        assert!(lib(ok).is_empty());
+    }
+
+    #[test]
+    fn cpl001_fires_outside_library_scope_too() {
+        let src = "fn f(a: f64, b: f64) { a.partial_cmp(&b).expect(\"no NaN\"); }";
+        assert_eq!(ids(&check_source("rust/benches/sample.rs", src)), ["CPL001"]);
+    }
+
+    #[test]
+    fn cpl002_bans_default_hasher_everywhere() {
+        let src = "use std::collections::hash_map::DefaultHasher;";
+        assert_eq!(ids(&check_source("rust/tests/sample.rs", src)), ["CPL002"]);
+    }
+
+    #[test]
+    fn cpl002_flags_hash_iteration_in_lib_code() {
+        let src = "fn f(m: std::collections::HashMap<u32, u32>) -> Vec<u32> {\n\
+                   m.keys().copied().collect()\n}";
+        assert_eq!(ids(&lib(src)), ["CPL002"]);
+        let forloop = "fn f() { let mut s = std::collections::HashSet::new();\n\
+                       s.insert(1u32);\nfor x in &s { drop(x); } }";
+        assert_eq!(ids(&lib(forloop)), ["CPL002"]);
+    }
+
+    #[test]
+    fn cpl002_lookups_are_fine() {
+        let src = "fn f(m: std::collections::HashMap<u32, u32>) -> Option<u32> {\n\
+                   m.get(&1).copied()\n}";
+        assert!(lib(src).is_empty());
+    }
+
+    #[test]
+    fn cpl003_scoped_to_deterministic_modules() {
+        let src = "fn f() -> std::time::Instant { std::time::Instant::now() }";
+        assert!(!det(src).is_empty());
+        assert!(lib(src).is_empty());
+        let env = "fn f() -> Option<String> { std::env::var(\"X\").ok() }";
+        assert_eq!(ids(&det(env)), ["CPL003"]);
+    }
+
+    #[test]
+    fn cpl004_flags_f32_type_but_not_rng_method() {
+        assert_eq!(ids(&det("fn f(x: f32) -> f64 { x as f64 }")), ["CPL004"]);
+        assert!(det("fn f(rng: &mut Rng) -> bool { rng.f32() < 0.5 }").is_empty());
+        assert!(lib("fn f(x: f32) -> f32 { x }").is_empty());
+    }
+
+    #[test]
+    fn cpl005_scoped_to_library_code() {
+        let src = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert_eq!(ids(&lib(src)), ["CPL005"]);
+        assert!(check_source("rust/src/main.rs", src).is_empty());
+        assert!(check_source("rust/benches/sample.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cpl005_skips_test_modules() {
+        let src = "pub fn f() {}\n\
+                   #[cfg(test)]\nmod tests {\n#[test]\nfn t() { None::<u32>.unwrap(); }\n}";
+        assert!(lib(src).is_empty());
+        let not_test = "pub fn f() {}\n\
+                        #[cfg(not(test))]\nmod m {\npub fn g() { None::<u32>.unwrap(); }\n}";
+        assert_eq!(ids(&lib(not_test)), ["CPL005"]);
+    }
+
+    #[test]
+    fn allow_annotation_suppresses_same_and_next_line() {
+        let same = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() } \
+                    // cprune-lint: allow(CPL005, reason=\"demo\")";
+        assert!(lib(same).is_empty());
+        let above = "// cprune-lint: allow(CPL005, reason=\"demo\")\n\
+                     pub fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert!(lib(above).is_empty());
+        let distant = "// cprune-lint: allow(CPL005, reason=\"demo\")\n\n\
+                       pub fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert_eq!(ids(&lib(distant)), ["CPL005"]);
+    }
+
+    #[test]
+    fn wrong_rule_annotation_does_not_suppress() {
+        let src = "// cprune-lint: allow(CPL001, reason=\"wrong rule\")\n\
+                   pub fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert_eq!(ids(&lib(src)), ["CPL005"]);
+    }
+
+    #[test]
+    fn cpl000_fires_on_malformed_and_unknown_annotations() {
+        let src = "// cprune-lint: allow(CPL005)\npub fn f() {}";
+        assert_eq!(ids(&lib(src)), ["CPL000"]);
+        let unknown = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() } \
+                       // cprune-lint: allow(CPL999, reason=\"typo\")";
+        let diags = lib(unknown);
+        assert_eq!(ids(&diags), ["CPL000", "CPL005"]);
+    }
+
+    #[test]
+    fn cpl000_is_not_suppressible() {
+        let src = "// cprune-lint: allow(CPL000, reason=\"nice try\")\npub fn f() {}";
+        assert_eq!(ids(&lib(src)), ["CPL000"]);
+    }
+
+    #[test]
+    fn rule_ids_are_stable() {
+        let ids: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
+        assert_eq!(ids, ["CPL000", "CPL001", "CPL002", "CPL003", "CPL004", "CPL005"]);
+    }
+}

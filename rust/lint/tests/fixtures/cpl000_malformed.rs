@@ -1,0 +1,4 @@
+// A typo'd allow (missing the reason) must surface as CPL000 — never be
+// silently ignored, never suppress anything.
+// cprune-lint: allow(CPL005)
+pub fn f() {}

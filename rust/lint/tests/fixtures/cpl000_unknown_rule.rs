@@ -1,0 +1,3 @@
+// Well-formed grammar, but the rule ID does not exist: CPL000.
+// cprune-lint: allow(CPL999, reason="no such rule")
+pub fn f() {}

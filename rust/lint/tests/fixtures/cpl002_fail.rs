@@ -1,0 +1,5 @@
+use std::collections::HashMap;
+
+pub fn dump_keys(m: &HashMap<String, u64>) -> Vec<String> {
+    m.keys().cloned().collect()
+}

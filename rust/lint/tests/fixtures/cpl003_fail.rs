@@ -1,0 +1,3 @@
+pub fn now_marker() {
+    let _ = std::time::Instant::now();
+}

@@ -1,0 +1,4 @@
+// cprune-lint: allow(CPL004, reason="interop with an f32 on-disk format; widened immediately")
+pub fn widen(x: f32) -> f64 {
+    x as f64
+}

@@ -1,0 +1,3 @@
+pub fn widen(x: f32) -> f64 {
+    x as f64
+}

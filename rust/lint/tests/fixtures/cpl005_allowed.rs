@@ -1,0 +1,3 @@
+pub fn head(v: &[u64]) -> u64 {
+    *v.first().unwrap() // cprune-lint: allow(CPL005, reason="callers guarantee non-empty input")
+}

@@ -1,0 +1,85 @@
+//! Fixture tests pinning every rule's positive (fails) and
+//! suppressed-negative (annotated-allowed passes) behavior, plus the
+//! deny-by-default sweep: the real workspace must be clean.
+//!
+//! Fixtures live under `tests/fixtures/` — a directory the workspace
+//! walker skips — and are checked here under synthetic workspace paths
+//! so path-scoped rules see the scope they police.
+
+use cprune_lint::rules::check_source;
+use std::path::Path;
+
+/// Library-code scope (CPL002 iteration, CPL005).
+const LIB: &str = "rust/src/fixture.rs";
+/// Deterministic-module scope (CPL003, CPL004).
+const DET: &str = "rust/src/tuner/fixture.rs";
+/// Neither scope: only the global rules apply.
+const BENCH: &str = "rust/benches/fixture.rs";
+
+fn ids(path: &str, src: &str) -> Vec<&'static str> {
+    check_source(path, src).iter().map(|d| d.rule.id()).collect()
+}
+
+#[test]
+fn cpl000_malformed_annotation_is_reported() {
+    assert_eq!(ids(LIB, include_str!("fixtures/cpl000_malformed.rs")), ["CPL000"]);
+}
+
+#[test]
+fn cpl000_unknown_rule_is_reported() {
+    assert_eq!(ids(LIB, include_str!("fixtures/cpl000_unknown_rule.rs")), ["CPL000"]);
+}
+
+#[test]
+fn cpl001_partial_cmp_unwrap() {
+    // BENCH scope so the companion `.unwrap()` finding (CPL005, library
+    // scope only) stays out of the way — CPL001 itself is global.
+    assert_eq!(ids(BENCH, include_str!("fixtures/cpl001_fail.rs")), ["CPL001"]);
+    assert_eq!(ids(BENCH, include_str!("fixtures/cpl001_allowed.rs")), Vec::<&str>::new());
+}
+
+#[test]
+fn cpl002_hash_iteration() {
+    assert_eq!(ids(LIB, include_str!("fixtures/cpl002_fail.rs")), ["CPL002"]);
+    assert_eq!(ids(LIB, include_str!("fixtures/cpl002_allowed.rs")), Vec::<&str>::new());
+}
+
+#[test]
+fn cpl003_wall_clock() {
+    assert_eq!(ids(DET, include_str!("fixtures/cpl003_fail.rs")), ["CPL003"]);
+    assert_eq!(ids(DET, include_str!("fixtures/cpl003_allowed.rs")), Vec::<&str>::new());
+    // Outside the deterministic modules the same source is fine.
+    assert_eq!(ids(BENCH, include_str!("fixtures/cpl003_fail.rs")), Vec::<&str>::new());
+}
+
+#[test]
+fn cpl004_f32_in_measurement_path() {
+    assert_eq!(ids(DET, include_str!("fixtures/cpl004_fail.rs")), ["CPL004"]);
+    assert_eq!(ids(DET, include_str!("fixtures/cpl004_allowed.rs")), Vec::<&str>::new());
+    assert_eq!(ids(LIB, include_str!("fixtures/cpl004_fail.rs")), Vec::<&str>::new());
+}
+
+#[test]
+fn cpl005_library_unwrap() {
+    assert_eq!(ids(LIB, include_str!("fixtures/cpl005_fail.rs")), ["CPL005"]);
+    assert_eq!(ids(LIB, include_str!("fixtures/cpl005_allowed.rs")), Vec::<&str>::new());
+    // Bins and benches may unwrap freely.
+    let bin = "rust/src/main.rs";
+    assert_eq!(ids(bin, include_str!("fixtures/cpl005_fail.rs")), Vec::<&str>::new());
+    assert_eq!(ids(BENCH, include_str!("fixtures/cpl005_fail.rs")), Vec::<&str>::new());
+}
+
+#[test]
+fn workspace_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let diags = cprune_lint::check_workspace(&root).expect("workspace walk failed");
+    let rendered: Vec<String> = diags
+        .iter()
+        .map(|(p, d)| format!("{p}:{}: {}: {}", d.line, d.rule.id(), d.message))
+        .collect();
+    assert!(
+        diags.is_empty(),
+        "cprune-lint must run clean over the workspace; found:\n{}",
+        rendered.join("\n")
+    );
+}

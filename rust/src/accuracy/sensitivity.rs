@@ -45,7 +45,7 @@ pub fn scan(
                 &summarize(model, &st, Criterion::L1Norm),
                 TrainPhase::Short,
             );
-            let graph = apply(&model.graph, &st.cout).expect("valid pruned graph");
+            let graph = apply(&model.graph, &st.cout).expect("valid pruned graph"); // cprune-lint: allow(CPL005, reason="pruners emit only valid states")
             let lat = compiler::compile_tuned(&graph, session, &HashMap::new()).latency();
             out.push(SensitivityPoint {
                 conv,

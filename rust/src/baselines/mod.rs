@@ -118,7 +118,7 @@ pub fn evaluate(
     method: &str,
     baseline_latency: f64,
 ) -> Outcome {
-    let graph = apply(&model.graph, &state.cout).expect("valid pruned graph");
+    let graph = apply(&model.graph, &state.cout).expect("valid pruned graph"); // cprune-lint: allow(CPL005, reason="pruners emit only valid states")
     let compiled = compiler::compile_tuned(&graph, session, &HashMap::new());
     let (flops, params) = stats::flops_params(&graph);
     let summary = crate::pruner::summarize(model, state, criterion);
@@ -160,7 +160,7 @@ pub fn original_row(model: &Model, session: &TuningSession) -> (Outcome, f64) {
 /// Convenience: fully evaluate a state on a fresh tuned compile — used by
 /// benches that need FPS without the full Outcome.
 pub fn fps_of_state(model: &Model, state: &PruneState, session: &TuningSession) -> f64 {
-    let graph = apply(&model.graph, &state.cout).expect("valid pruned graph");
+    let graph = apply(&model.graph, &state.cout).expect("valid pruned graph"); // cprune-lint: allow(CPL005, reason="pruners emit only valid states")
     compiler::compile_tuned(&graph, session, &HashMap::new()).fps()
 }
 
@@ -168,7 +168,7 @@ pub fn fps_of_state(model: &Model, state: &PruneState, session: &TuningSession) 
 /// execution: naive schedules + per-op dispatch) — the "before compiler
 /// optimization" axis of Fig. 1.
 pub fn fps_of_state_untuned(model: &Model, state: &PruneState, target: &dyn Target) -> f64 {
-    let graph = apply(&model.graph, &state.cout).expect("valid pruned graph");
+    let graph = apply(&model.graph, &state.cout).expect("valid pruned graph"); // cprune-lint: allow(CPL005, reason="pruners emit only valid states")
     compiler::compile_eager(&graph, target).fps()
 }
 

@@ -40,7 +40,7 @@ impl CompiledModel {
 
 /// Latency contributed by non-fused ops (pooling, flatten): data movement.
 pub fn overhead_latency(graph: &Graph, target: &dyn Target) -> f64 {
-    let shapes = shape_infer::infer(graph).expect("graph must shape-infer");
+    let shapes = shape_infer::infer(graph).expect("graph must shape-infer"); // cprune-lint: allow(CPL005, reason="compile entry points require shape-valid graphs")
     let part = partition(graph);
     part.overhead_nodes
         .iter()
@@ -88,8 +88,8 @@ pub fn compile_fallback(graph: &Graph, target: &dyn Target) -> CompiledModel {
 /// conservative threading, no reduce-axis tiling.
 pub fn fallback_program(w: &Workload) -> Program {
     let sp = w.oh * w.ow;
-    let sp_inner = [8usize, 4, 2, 1].iter().copied().find(|f| sp % f == 0).unwrap();
-    let ff_inner = [8usize, 4, 2, 1].iter().copied().find(|f| w.ff % f == 0).unwrap();
+    let sp_inner = [8usize, 4, 2, 1].iter().copied().find(|f| sp % f == 0).unwrap_or(1);
+    let ff_inner = [8usize, 4, 2, 1].iter().copied().find(|f| w.ff % f == 0).unwrap_or(1);
     Program {
         spatial_splits: vec![sp / sp_inner, sp_inner],
         ff_splits: vec![w.ff / ff_inner, ff_inner],
@@ -134,7 +134,7 @@ pub fn compile_eager(graph: &Graph, target: &dyn Target) -> CompiledModel {
         crate::device::DeviceKind::Gpu => 40e-6,
         crate::device::DeviceKind::Cpu => 8e-6,
     };
-    let shapes = shape_infer::infer(graph).expect("graph must shape-infer");
+    let shapes = shape_infer::infer(graph).expect("graph must shape-infer"); // cprune-lint: allow(CPL005, reason="compile entry points require shape-valid graphs")
     let mut eager_overhead = 0.0;
     for node in &graph.nodes {
         let unit =

@@ -22,6 +22,10 @@
 //! al. [38]), device-specific optima (a program tuned for 8 cores/
 //! 128-bit NEON is wrong for a 18-core GPU), and task latencies that rank
 //! consistently. The simulator produces all four (see `sim.rs` tests).
+//!
+//! Determinism here is machine-enforced: `cprune-lint` (DESIGN.md §12)
+//! denies wall-clock/env reads, f32 latency math and hash-ordered
+//! iteration throughout `device/`.
 
 pub mod calibration;
 pub mod lut;

@@ -74,7 +74,7 @@ impl TargetRegistry {
     /// Built-ins plus every device file named by [`DEVICES_ENV`]
     /// (missing variable = built-ins only; unreadable files are loud).
     pub fn from_env() -> Result<TargetRegistry, String> {
-        match std::env::var(DEVICES_ENV) {
+        match std::env::var(DEVICES_ENV) { // cprune-lint: allow(CPL003, reason="explicit config entry point, not a measurement path")
             Ok(paths) => TargetRegistry::from_paths(&paths),
             Err(_) => Ok(TargetRegistry::builtin()),
         }

@@ -93,12 +93,12 @@ impl ReplayTarget {
     /// Total batch means currently held (recorded so far, or not yet
     /// consumed by a replay).
     pub fn recorded_measurements(&self) -> usize {
-        self.batches.lock().unwrap().values().map(|q| q.len()).sum()
+        self.batches.lock().unwrap().values().map(|q| q.len()).sum() // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
     }
 
     /// Serialize the trace (header + sorted entries; byte-stable).
     pub fn to_json(&self) -> Json {
-        let lats = self.latencies.lock().unwrap();
+        let lats = self.latencies.lock().unwrap(); // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
         let mut lat_entries: Vec<(String, Json)> = lats
             .iter()
             .map(|((w, p), seconds)| {
@@ -113,7 +113,8 @@ impl ReplayTarget {
             })
             .collect();
         lat_entries.sort_by(|a, b| a.0.cmp(&b.0));
-        let batches = self.batches.lock().unwrap();
+        let batches = self.batches.lock().unwrap(); // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
+        // cprune-lint: allow(CPL002, reason="entries are sorted by their serialized key below")
         let mut batch_entries: Vec<(String, Json)> = batches
             .iter()
             .map(|((w, p, repeats), means)| {
@@ -249,13 +250,13 @@ impl Target for ReplayTarget {
                 let seconds = inner.latency(w, p);
                 self.latencies
                     .lock()
-                    .unwrap()
+                    .unwrap() // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
                     .entry((w.clone(), p.clone()))
                     .or_insert(seconds);
                 seconds
             }
             Mode::Replay => {
-                match self.latencies.lock().unwrap().get(&(w.clone(), p.clone())) {
+                match self.latencies.lock().unwrap().get(&(w.clone(), p.clone())) { // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
                     Some(&seconds) => seconds,
                     None => panic!(
                         "replay trace for '{}' has no latency record for workload \
@@ -280,7 +281,7 @@ impl Target for ReplayTarget {
         match &self.mode {
             Mode::Record(inner) => {
                 let means = inner.measure_batch(w, programs, rng, repeats);
-                let mut batches = self.batches.lock().unwrap();
+                let mut batches = self.batches.lock().unwrap(); // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
                 for (&p, &mean) in programs.iter().zip(&means) {
                     batches
                         .entry((w.clone(), p.clone(), repeats))
@@ -290,7 +291,7 @@ impl Target for ReplayTarget {
                 means
             }
             Mode::Replay => {
-                let mut batches = self.batches.lock().unwrap();
+                let mut batches = self.batches.lock().unwrap(); // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
                 programs
                     .iter()
                     .map(|&p| {

@@ -35,7 +35,7 @@ pub fn run(scale: Scale, seed: u64) -> Vec<AlphaBetaCell> {
         .seed(seed)
         .tune_opts(scale.tune_opts())
         .build()
-        .expect("zoo model + known device");
+        .expect("zoo model + known device"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
     let mut out = Vec::new();
     for &alpha in &alphas {
         for &beta in &betas {
@@ -48,7 +48,7 @@ pub fn run(scale: Scale, seed: u64) -> Vec<AlphaBetaCell> {
                 target_accuracy: 0.90,
                 ..Default::default()
             };
-            let r = run.execute(&CPrune::with_cfg(cfg)).expect("sweep cell");
+            let r = run.execute(&CPrune::with_cfg(cfg)).expect("sweep cell"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
             out.push(AlphaBetaCell {
                 alpha,
                 beta,

@@ -31,7 +31,7 @@ pub fn run(scale: Scale, seed: u64) -> Fig11Result {
         .seed(seed)
         .tune_opts(scale.tune_opts())
         .build()
-        .expect("zoo model + known device");
+        .expect("zoo model + known device"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
 
     let cfg = CPruneConfig {
         max_iterations: scale.cprune_iters(),
@@ -40,7 +40,7 @@ pub fn run(scale: Scale, seed: u64) -> Fig11Result {
         target_accuracy: crate::exp::paper_accuracy_budget(kind),
         ..Default::default()
     };
-    let cp = run.execute(&CPrune::with_cfg(cfg)).expect("cprune run");
+    let cp = run.execute(&CPrune::with_cfg(cfg)).expect("cprune run"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
 
     // Exhaustive: NetAdapt driven to a comparable latency target.
     let target_ratio = (1.0 / cp.fps_increase_rate).clamp(0.3, 0.95);
@@ -49,7 +49,7 @@ pub fn run(scale: Scale, seed: u64) -> Fig11Result {
         max_iterations: scale.cprune_iters(),
         ..Default::default()
     };
-    let na = run.execute(&NetAdapt::with(na_cfg)).expect("netadapt run");
+    let na = run.execute(&NetAdapt::with(na_cfg)).expect("netadapt run"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
 
     Fig11Result {
         cprune_fps: cp.final_fps,

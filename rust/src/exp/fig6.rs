@@ -23,7 +23,7 @@ pub fn run(scale: Scale, seed: u64) -> Fig6Result {
         .seed(seed)
         .tune_opts(scale.tune_opts())
         .build()
-        .expect("zoo model + known device");
+        .expect("zoo model + known device"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
     let cfg = CPruneConfig {
         max_iterations: scale.cprune_iters(),
         tune_opts: scale.tune_opts(),
@@ -31,7 +31,7 @@ pub fn run(scale: Scale, seed: u64) -> Fig6Result {
         target_accuracy: crate::exp::paper_accuracy_budget(kind),
         ..Default::default()
     };
-    let outcome = run.execute(&CPrune::with_cfg(cfg)).expect("cprune run");
+    let outcome = run.execute(&CPrune::with_cfg(cfg)).expect("cprune run"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
     let series = outcome
         .iterations
         .iter()

@@ -42,7 +42,7 @@ pub fn run(scale: Scale, seed: u64) -> Vec<Fig7Row> {
                 .seed(seed)
                 .tune_opts(scale.tune_opts())
                 .build()
-                .expect("zoo model + known device");
+                .expect("zoo model + known device"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
             let fps_tflite = compiler::compile_fallback(&run.model.graph, run.target()).fps();
             let (orig, _) = run.original_row();
             let cfg = CPruneConfig {
@@ -52,7 +52,7 @@ pub fn run(scale: Scale, seed: u64) -> Vec<Fig7Row> {
                 target_accuracy: crate::exp::paper_accuracy_budget(kind),
                 ..Default::default()
             };
-            let res = run.execute(&CPrune::with_cfg(cfg)).expect("cprune run");
+            let res = run.execute(&CPrune::with_cfg(cfg)).expect("cprune run"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
             Fig7Row {
                 model: kind.name(),
                 device: device_name,

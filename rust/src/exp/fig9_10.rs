@@ -64,11 +64,11 @@ pub fn run(scale: Scale, seed: u64) -> Vec<AblationRow> {
         .seed(seed)
         .tune_opts(scale.tune_opts())
         .build()
-        .expect("zoo model + known device");
+        .expect("zoo model + known device"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
     variants
         .into_iter()
         .map(|(variant, cfg)| {
-            let out = run.execute(&CPrune::with_cfg(cfg)).expect("ablation run");
+            let out = run.execute(&CPrune::with_cfg(cfg)).expect("ablation run"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
             row(variant, &out)
         })
         .collect()

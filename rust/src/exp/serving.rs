@@ -79,11 +79,11 @@ pub fn build_registry(scale: Scale, seed: u64) -> (Registry, &'static str) {
                 device_name,
             )))
             .build()
-            .expect("zoo model + known device");
-        run.execute(&CPrune::default()).expect("cprune run");
+            .expect("zoo model + known device"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
+        run.execute(&CPrune::default()).expect("cprune run"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
     }
     let registry = Rc::try_unwrap(shared)
-        .expect("publishers dropped with their runs")
+        .expect("publishers dropped with their runs") // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
         .into_inner();
     (registry, kind.name())
 }
@@ -122,10 +122,10 @@ pub fn run(scale: Scale, seed: u64) -> Vec<ServingRow> {
             for spec in &specs {
                 let set = registry
                     .get(model_name, spec.name)
-                    .expect("build_registry covers every device");
-                sim.add_device(spec.name, set).expect("frontier is non-empty");
+                    .expect("build_registry covers every device"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
+                sim.add_device(spec.name, set).expect("frontier is non-empty"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
             }
-            let r = sim.run().expect("simulator has lanes");
+            let r = sim.run().expect("simulator has lanes"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
             rows.push(ServingRow {
                 rps,
                 slo_ms,

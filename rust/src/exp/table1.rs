@@ -64,12 +64,12 @@ pub fn run_cell(kind: ModelKind, spec: DeviceSpec, scale: Scale, seed: u64) -> T
         .seed(seed)
         .tune_opts(scale.tune_opts())
         .build()
-        .expect("zoo model + known device");
+        .expect("zoo model + known device"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
 
     let (orig, _) = run.original_row();
     let mut rows = vec![orig];
     for pruner in methods(kind, scale, seed) {
-        let out = run.execute(pruner.as_ref()).expect("pruner run");
+        let out = run.execute(pruner.as_ref()).expect("pruner run"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
         rows.push(out.to_outcome());
     }
 

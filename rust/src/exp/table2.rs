@@ -28,7 +28,7 @@ fn cifar_run(spec: DeviceSpec, scale: Scale, seed: u64) -> Run {
         .seed(seed)
         .tune_opts(scale.tune_opts())
         .build()
-        .expect("zoo model + known device")
+        .expect("zoo model + known device") // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
 }
 
 fn cifar_cfg(scale: Scale, seed: u64) -> CPruneConfig {
@@ -52,7 +52,7 @@ pub fn run(scale: Scale, seed: u64) -> Vec<Table2Block> {
         let (orig, _) = run.original_row();
         let cp = run
             .execute(&CPrune::with_cfg(cifar_cfg(scale, seed)))
-            .expect("cprune run");
+            .expect("cprune run"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
         blocks.push(Table2Block {
             device: "Kryo 280",
             rows: vec![orig, cp.to_outcome()],
@@ -66,7 +66,7 @@ pub fn run(scale: Scale, seed: u64) -> Vec<Table2Block> {
         let base = cifar_cfg(scale, seed);
         let cp = run
             .execute(&CPrune::with_cfg(base.clone()))
-            .expect("cprune run");
+            .expect("cprune run"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
         // Both ablations get the same search effort the tuned associated
         // run consumed (Figs. 9/10's fixed-budget comparisons).
         let ablations = [
@@ -85,7 +85,7 @@ pub fn run(scale: Scale, seed: u64) -> Vec<Table2Block> {
         ];
         let mut rows = vec![orig, cp.to_outcome()];
         for pruner in &ablations {
-            rows.push(run.execute(pruner).expect("ablation run").to_outcome());
+            rows.push(run.execute(pruner).expect("ablation run").to_outcome()); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
         }
         blocks.push(Table2Block { device: "Kryo 585", rows });
     }

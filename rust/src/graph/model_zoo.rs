@@ -92,8 +92,8 @@ impl Model {
             ModelKind::MnasNet10ImageNet => mnasnet10(),
             ModelKind::ResNet8Cifar => resnet8_cifar(),
         };
-        graph.validate().expect("builder produced invalid graph");
-        shape_infer::infer(&graph).expect("builder produced unshapeable graph");
+        graph.validate().expect("builder produced invalid graph"); // cprune-lint: allow(CPL005, reason="fail fast on builder bugs")
+        shape_infer::infer(&graph).expect("builder produced unshapeable graph"); // cprune-lint: allow(CPL005, reason="fail fast on builder bugs")
         let weights = Weights::generate(&graph, seed);
         let prunable = prunable_convs(&graph);
         Model { kind, graph, weights, prunable }

@@ -37,7 +37,7 @@ impl PruneState {
     /// Shrink `conv` by `k` channels; clamps at a floor of 2 channels and
     /// returns how many were actually removed.
     pub fn shrink(&mut self, conv: NodeId, k: usize) -> usize {
-        let c = self.cout.get_mut(&conv).expect("conv is prunable");
+        let c = self.cout.get_mut(&conv).expect("conv is prunable"); // cprune-lint: allow(CPL005, reason="conv ids come from this state's own map")
         let removable = c.saturating_sub(2).min(k);
         *c -= removable;
         removable

@@ -79,7 +79,7 @@ impl Weights {
 
     /// Drop the given filter indices from `conv` (after a pruning decision).
     pub fn remove_filters(&mut self, conv: usize, remove: &[usize]) {
-        let filters = self.convs.get_mut(&conv).expect("conv has weights");
+        let filters = self.convs.get_mut(&conv).expect("conv has weights"); // cprune-lint: allow(CPL005, reason="conv ids come from the graph's conv set")
         let removed: std::collections::BTreeSet<usize> = remove.iter().copied().collect();
         *filters = filters
             .iter()

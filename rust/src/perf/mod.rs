@@ -177,7 +177,7 @@ pub fn run_tuner_suite(tier: Tier, seed: u64) -> PerfReport {
     let w = hot_conv_workload();
     let target = TargetRegistry::builtin()
         .resolve("kryo385")
-        .expect("builtin device resolves");
+        .expect("builtin device resolves"); // cprune-lint: allow(CPL005, reason="builtin registry always has kryo385")
     let mut measured = 0usize;
     let t0 = Instant::now();
     for i in 0..task_iters {

@@ -33,7 +33,7 @@ pub struct Partition {
 
 /// Partition `g` into fused subgraphs (Fig. 4's ①).
 pub fn partition(g: &Graph) -> Partition {
-    let shapes = shape_infer::infer(g).expect("graph must shape-infer");
+    let shapes = shape_infer::infer(g).expect("graph must shape-infer"); // cprune-lint: allow(CPL005, reason="callers pass validated graphs")
     let mut claimed = vec![false; g.nodes.len()];
     let mut subgraphs = Vec::new();
 

@@ -261,7 +261,7 @@ pub(crate) fn finalize(ctx: &mut RunContext, end: SearchEnd) -> PruneOutcome {
     let session = ctx.session;
     let baseline_latency = ctx.baseline_latency();
     let graph =
-        crate::graph::prune::apply(&model.graph, &end.state.cout).expect("valid pruned graph");
+        crate::graph::prune::apply(&model.graph, &end.state.cout).expect("valid pruned graph"); // cprune-lint: allow(CPL005, reason="pruners emit only valid states")
     let compiled = compiler::compile_tuned(&graph, session, &HashMap::new());
     let (flops, params) = stats::flops_params(&graph);
     let summary = crate::pruner::summarize(model, &end.state, end.criterion);

@@ -20,6 +20,10 @@
 //!
 //! `cprune serve` wires this end-to-end; `exp::serving` sweeps the
 //! throughput-vs-SLO grid the `serving` bench regenerates.
+//!
+//! Determinism here is machine-enforced: `cprune-lint` (DESIGN.md §12)
+//! denies wall-clock/env reads, f32 latency math and hash-ordered
+//! iteration throughout `serve/`.
 
 pub mod pareto;
 pub mod registry;

@@ -236,7 +236,7 @@ impl Simulator {
             // free-lane ties deterministically go to the lowest index.
             let lane_idx = (0..self.lanes.len())
                 .min_by(|&a, &b| free_at[a].total_cmp(&free_at[b]))
-                .expect("at least one lane");
+                .expect("at least one lane"); // cprune-lint: allow(CPL005, reason="run() already errored if lanes were empty")
             let lane = &self.lanes[lane_idx];
             let start = arrivals[i].max(free_at[lane_idx]);
 

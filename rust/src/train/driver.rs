@@ -159,7 +159,7 @@ impl Trainer {
             .enumerate()
             .find(|(_, e)| e.name == w_name)
             .ok_or_else(|| anyhow!("no param {w_name}"))?;
-        let cout = *entry.shape.last().unwrap();
+        let cout = *entry.shape.last().ok_or_else(|| anyhow!("param {w_name} has empty shape"))?;
         let mut norms = vec![0.0f32; cout];
         for (i, v) in self.params[idx].iter().enumerate() {
             norms[i % cout] += v.abs();

@@ -46,7 +46,7 @@ impl TuneCache {
     }
 
     pub fn get(&self, w: &Workload) -> Option<(Program, f64, usize)> {
-        let found = self.map.lock().unwrap().get(w).cloned();
+        let found = self.map.lock().unwrap().get(w).cloned(); // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
         match &found {
             Some((_, _, measured)) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -62,15 +62,15 @@ impl TuneCache {
     /// Membership probe that does NOT touch the hit/miss counters (for
     /// bookkeeping questions, not lookups on the tuning path).
     pub fn contains(&self, w: &Workload) -> bool {
-        self.map.lock().unwrap().contains_key(w)
+        self.map.lock().unwrap().contains_key(w) // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
     }
 
     pub fn put(&self, w: Workload, p: Program, lat: f64, measured: usize) {
-        self.map.lock().unwrap().insert(w, (p, lat, measured));
+        self.map.lock().unwrap().insert(w, (p, lat, measured)); // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.map.lock().unwrap().len() // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
     }
 
     pub fn is_empty(&self) -> bool {
@@ -111,7 +111,7 @@ impl TuneCache {
         let mut entries: Vec<(String, Json)> = self
             .map
             .lock()
-            .unwrap()
+            .unwrap() // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
             .iter()
             .map(|(w, (p, lat, measured))| {
                 let wj = workload_to_json(w);
@@ -181,7 +181,7 @@ impl TuneCache {
                 .get("measured")
                 .and_then(Json::as_usize)
                 .ok_or("entry missing measured")?;
-            cache.map.lock().unwrap().insert(w, (p, lat, measured));
+            cache.map.lock().unwrap().insert(w, (p, lat, measured)); // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
         }
         Ok(cache)
     }

@@ -221,7 +221,7 @@ impl FleetSession {
                 if i == 0 {
                     0
                 } else {
-                    seeds.keys().filter(|w| !s.cache.contains(w)).count()
+                    seeds.keys().filter(|w| !s.cache.contains(w)).count() // cprune-lint: allow(CPL002, reason="order-insensitive count")
                 }
             })
             .collect();
@@ -276,7 +276,7 @@ impl FleetSession {
                         .collect();
                     handles
                         .into_iter()
-                        .flat_map(|h| h.join().expect("fleet worker panicked"))
+                        .flat_map(|h| h.join().expect("fleet worker panicked")) // cprune-lint: allow(CPL005, reason="propagate worker panics")
                         .collect()
                 });
                 for (i, c) in results {
@@ -287,7 +287,7 @@ impl FleetSession {
 
         let mut devices = Vec::with_capacity(n);
         for (i, (sess, c)) in sessions.iter().zip(compiled).enumerate() {
-            let c = c.expect("every device compiled");
+            let c = c.expect("every device compiled"); // cprune-lint: allow(CPL005, reason="loop above fills every slot")
             devices.push(FleetDeviceResult {
                 device: self.targets[i].spec().name,
                 latency: c.latency(),

@@ -28,6 +28,10 @@
 //! (`cprune bench`) records this module's hot-path wall clock and
 //! programs-measured counts into versioned `BENCH_*.json` files so every
 //! PR has a perf trajectory.
+//!
+//! Determinism here is machine-enforced: `cprune-lint` (DESIGN.md §12)
+//! denies wall-clock/env reads, f32 latency math and hash-ordered
+//! iteration throughout `tuner/`.
 
 pub mod cache;
 pub mod cost_model;

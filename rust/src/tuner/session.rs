@@ -136,7 +136,7 @@ impl<'a> TuningSession<'a> {
                     .collect();
                 handles
                     .into_iter()
-                    .flat_map(|h| h.join().expect("tuner thread panicked"))
+                    .flat_map(|h| h.join().expect("tuner thread panicked")) // cprune-lint: allow(CPL005, reason="propagate worker panics")
                     .collect()
             })
         };

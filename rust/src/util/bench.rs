@@ -69,7 +69,7 @@ fn summarize(name: &str, samples: &[f64]) -> BenchResult {
         median_ns: median,
         stddev_ns: super::stats::stddev(samples),
         min_ns: sorted[0],
-        max_ns: *sorted.last().unwrap(),
+        max_ns: *sorted.last().unwrap(), // cprune-lint: allow(CPL005, reason="samples is non-empty by construction")
     }
 }
 
