@@ -40,16 +40,24 @@ pub enum Rule {
     /// annotation documenting why the panic is an invariant, not an
     /// error path.
     LibUnwrap,
+    /// CPL006 — a lossy numeric cast inside a deterministic module:
+    /// `as f32` (narrows f64 measurement math), or a float value cast
+    /// to an integer type with `as` (silent truncation — `64.5 as usize`
+    /// is 64, the exact bug class `verify`'s canonical-key check hunts
+    /// in persisted artifacts). Use `round()`/checked conversions, or
+    /// keep the value in f64.
+    LossyCast,
 }
 
 impl Rule {
-    pub const ALL: [Rule; 6] = [
+    pub const ALL: [Rule; 7] = [
         Rule::BadAnnotation,
         Rule::FloatOrd,
         Rule::HashOrder,
         Rule::WallClock,
         Rule::F32Measure,
         Rule::LibUnwrap,
+        Rule::LossyCast,
     ];
 
     /// The stable diagnostic ID.
@@ -61,6 +69,7 @@ impl Rule {
             Rule::WallClock => "CPL003",
             Rule::F32Measure => "CPL004",
             Rule::LibUnwrap => "CPL005",
+            Rule::LossyCast => "CPL006",
         }
     }
 
@@ -73,6 +82,9 @@ impl Rule {
             Rule::WallClock => "wall clock or environment read in a deterministic module",
             Rule::F32Measure => "f32 in a measurement/latency path; latency math is f64",
             Rule::LibUnwrap => "unannotated unwrap()/expect() in library code",
+            Rule::LossyCast => {
+                "lossy numeric cast (as f32, float-to-int as) in a deterministic module"
+            }
         }
     }
 
@@ -118,6 +130,7 @@ pub fn check_source(rel: &str, src: &str) -> Vec<Diagnostic> {
     let in_tests = test_lines(toks);
     let in_lib = is_library_path(rel);
     let in_det = is_deterministic_path(rel);
+    let float_names = if in_det { collect_float_names(toks) } else { BTreeSet::new() };
     let mut diags: Vec<Diagnostic> = Vec::new();
 
     for (line, why) in &lexed.bad_annotations {
@@ -188,6 +201,33 @@ pub fn check_source(rel: &str, src: &str) -> Vec<Diagnostic> {
                 "f32 in a measurement/latency path; latency math is f64 end-to-end".to_string(),
                 &mut diags,
             ),
+            "as" if in_det && next == "f32" => emit(
+                Rule::LossyCast,
+                t.line,
+                "`as f32` narrows f64 measurement math in a deterministic module".to_string(),
+                &mut diags,
+            ),
+            "as" if in_det
+                && INT_TYPES.contains(&next)
+                && toks
+                    .get(i.wrapping_sub(1))
+                    .map(|p| match p.kind {
+                        TokKind::Number => is_float_literal(p.text),
+                        TokKind::Ident => float_names.contains(p.text),
+                        _ => false,
+                    })
+                    .unwrap_or(false) =>
+            {
+                emit(
+                    Rule::LossyCast,
+                    t.line,
+                    format!(
+                        "float-to-{next} `as` cast silently truncates in a deterministic \
+                         module; use round() or a checked conversion"
+                    ),
+                    &mut diags,
+                )
+            }
             "unwrap" | "expect" if in_lib && prev == "." && next == "(" => emit(
                 Rule::LibUnwrap,
                 t.line,
@@ -224,6 +264,56 @@ pub fn check_source(rel: &str, src: &str) -> Vec<Diagnostic> {
 
 fn text_at<'a>(toks: &[Token<'a>], i: usize) -> &'a str {
     toks.get(i).map(|t| t.text).unwrap_or("")
+}
+
+/// Integer types a float must not be `as`-cast into (CPL006).
+const INT_TYPES: [&str; 12] = [
+    "i8", "i16", "i32", "i64", "i128", "isize", "u8", "u16", "u32", "u64", "u128", "usize",
+];
+
+/// True for a float literal token: has a decimal point or an exponent
+/// (hex literals like `0x1E` lex as one token and are excluded).
+fn is_float_literal(text: &str) -> bool {
+    if text.starts_with("0x") || text.starts_with("0X") {
+        return false;
+    }
+    text.contains('.') || text.contains('e') || text.contains('E')
+}
+
+/// CPL006's name half: bindings known to hold floats — `name: f64`/`f32`
+/// typed declarations (params, fields, lets) and `let name = <float
+/// literal>` initializers. Per-file and type-blind, like CPL002's
+/// HashMap tracking: false negatives are acceptable in a lint.
+fn collect_float_names<'a>(toks: &[Token<'a>]) -> BTreeSet<&'a str> {
+    let mut names = BTreeSet::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Ident && (t.text == "f64" || t.text == "f32") {
+            // `name : f64` — but not a `::f64` path segment.
+            if i >= 2
+                && text_at(toks, i - 1) == ":"
+                && toks[i - 2].kind == TokKind::Ident
+                && (i < 3 || text_at(toks, i - 3) != ":")
+            {
+                names.insert(toks[i - 2].text);
+            }
+        }
+        if t.kind == TokKind::Ident && t.text == "let" {
+            let mut k = i + 1;
+            if text_at(toks, k) == "mut" {
+                k += 1;
+            }
+            if toks.get(k).map(|n| n.kind == TokKind::Ident).unwrap_or(false)
+                && text_at(toks, k + 1) == "="
+                && toks
+                    .get(k + 2)
+                    .map(|v| v.kind == TokKind::Number && is_float_literal(v.text))
+                    .unwrap_or(false)
+            {
+                names.insert(toks[k].text);
+            }
+        }
+    }
+    names
 }
 
 /// True when the ident at `i` begins an `env::var`/`var_os`/`vars` path.
@@ -573,8 +663,36 @@ mod tests {
     }
 
     #[test]
+    fn cpl006_flags_as_f32_in_deterministic_modules() {
+        // `x as f32` is both a lossy cast (CPL006) and an f32 type use
+        // (CPL004) — two independent findings on the same line.
+        let src = "fn f(x: f64) { let _ = x as f32; }";
+        assert_eq!(ids(&det(src)), ["CPL004", "CPL006"]);
+        assert!(lib(src).is_empty());
+    }
+
+    #[test]
+    fn cpl006_flags_float_to_int_casts() {
+        assert_eq!(ids(&det("fn f(x: f64) -> usize { x as usize }")), ["CPL006"]);
+        assert_eq!(ids(&det("fn f() -> u64 { 1.5e3 as u64 }")), ["CPL006"]);
+        let let_bound = "fn f() -> usize { let mut y = 2.5; y as usize }";
+        assert_eq!(ids(&det(let_bound)), ["CPL006"]);
+    }
+
+    #[test]
+    fn cpl006_ignores_int_and_untracked_casts() {
+        assert!(det("fn f(x: usize) -> u64 { x as u64 }").is_empty());
+        assert!(det("fn f() -> u64 { 0x1E as u64 }").is_empty());
+        // type-blind tracking: an untracked ident is a false negative
+        assert!(det("fn f(x: SomeOpaque) -> u64 { x.raw as u64 }").is_empty());
+        // f64 widening is lossless for the usize ranges we hold
+        assert!(det("fn f(x: usize) -> f64 { x as f64 }").is_empty());
+        assert!(lib("fn f(x: f64) -> usize { x as usize }").is_empty());
+    }
+
+    #[test]
     fn rule_ids_are_stable() {
         let ids: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
-        assert_eq!(ids, ["CPL000", "CPL001", "CPL002", "CPL003", "CPL004", "CPL005"]);
+        assert_eq!(ids, ["CPL000", "CPL001", "CPL002", "CPL003", "CPL004", "CPL005", "CPL006"]);
     }
 }

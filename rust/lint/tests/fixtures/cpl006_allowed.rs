@@ -1,0 +1,4 @@
+pub fn floor_bin(latency: f64) -> usize {
+    // cprune-lint: allow(CPL006, reason="floor is the intended binning semantics")
+    latency as usize
+}

@@ -1,0 +1,12 @@
+pub fn truncate(latency: f64) -> usize {
+    latency as usize
+}
+
+pub fn narrow(seconds: f64) -> f64 {
+    let narrowed = seconds as f32;
+    narrowed as f64
+}
+
+pub fn literal() -> u64 {
+    1.5e3 as u64
+}

@@ -70,6 +70,19 @@ fn cpl005_library_unwrap() {
 }
 
 #[test]
+fn cpl006_lossy_casts() {
+    // `seconds as f32` is both a lossy cast and an f32 type use, so the
+    // middle line carries CPL004 and CPL006 together.
+    assert_eq!(
+        ids(DET, include_str!("fixtures/cpl006_fail.rs")),
+        ["CPL006", "CPL004", "CPL006", "CPL006"]
+    );
+    assert_eq!(ids(DET, include_str!("fixtures/cpl006_allowed.rs")), Vec::<&str>::new());
+    // Outside the deterministic modules lossy casts are not policed.
+    assert_eq!(ids(LIB, include_str!("fixtures/cpl006_fail.rs")), Vec::<&str>::new());
+}
+
+#[test]
 fn workspace_is_clean() {
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
     let diags = cprune_lint::check_workspace(&root).expect("workspace walk failed");

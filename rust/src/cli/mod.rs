@@ -10,6 +10,8 @@
 //!   serve    — simulate SLO-bound traffic against the Pareto frontier
 //!   compare  — method comparison for one (model, device) cell
 //!   report   — regenerate a paper experiment (fig1..fig11, table1, table2)
+//!   check    — sweep persisted artifacts through the semantic verifier
+//!              (DESIGN.md §13; exits nonzero on findings)
 //!   e2e-info — show the AOT artifact inventory the e2e path consumes
 //!
 //! `run`/`prune`/`tune` accept `--cache FILE` and `fleet` accepts
@@ -302,6 +304,7 @@ USAGE:
                    [--registry FILE] [--no-search] [--seed S]
   cprune compare   [--model M] [--device D] [--seed S]
   cprune bench     [--tier quick|full] [--seed S] [--out-dir DIR]
+  cprune check     [PATH ...] [--codes]           # semantic artifact sweep (DESIGN.md §13)
   cprune report    <fig1|fig6|fig7|fig8|fig9|fig10|fig11|table1|table2> [--scale smoke|full]
   cprune devices   [--device-file FILE]           # list the target registry
   cprune dot       [--model M]                    # graphviz of graph+subgraphs+tasks
@@ -366,6 +369,16 @@ BENCH:
   the current directory). Wall times are host-dependent; the
   programs-measured counts are deterministic for a pinned seed, which CI
   smoke-checks. --tier quick is CI-sized; --tier full is trajectory-grade.
+
+CHECK:
+  `check` sweeps each PATH (directories recursively, default '.') for
+  cprune-format JSON/JSONL artifacts — tune caches, measurement traces,
+  Pareto registries, device files, calibration tables, bench reports and
+  run-event logs — and re-verifies their semantic invariants: canonical
+  keys, sorted entries, programs legal for their workloads, non-dominated
+  frontiers, event schemas. Findings print as `file: context: CPVnnn:
+  message` and the exit code is 1 when any are found; --codes prints the
+  diagnostic catalog. CI runs `cprune check .` over the committed tree.
 
 FEATURES:
   The optional `pjrt` cargo feature (cargo build --features pjrt) enables
@@ -804,6 +817,58 @@ pub fn run(argv: Vec<String>) -> i32 {
                 return code;
             }
             0
+        }
+        "check" => {
+            if args.flags.contains_key("codes") {
+                for c in crate::verify::Code::ALL {
+                    println!("{}  {}", c.id(), c.summary());
+                }
+                return 0;
+            }
+            let paths: Vec<String> = if args.positional.len() > 1 {
+                args.positional[1..].to_vec()
+            } else {
+                vec![".".to_string()]
+            };
+            let mut artifacts = 0usize;
+            let mut findings = 0usize;
+            for p in &paths {
+                let path = std::path::Path::new(p);
+                let results = if path.is_dir() {
+                    match crate::verify::sweep(path) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            eprintln!("{e}");
+                            return 1;
+                        }
+                    }
+                } else {
+                    match crate::verify::check_file(path) {
+                        Ok(Some(diags)) => vec![(p.clone(), diags)],
+                        Ok(None) => {
+                            println!("{p}: not a cprune artifact (skipped)");
+                            Vec::new()
+                        }
+                        Err(e) => {
+                            eprintln!("{e}");
+                            return 1;
+                        }
+                    }
+                };
+                for (file, diags) in results {
+                    artifacts += 1;
+                    for d in &diags {
+                        println!("{file}: {d}");
+                        findings += 1;
+                    }
+                }
+            }
+            println!("check: {artifacts} artifact(s) verified, {findings} finding(s)");
+            if findings > 0 {
+                1
+            } else {
+                0
+            }
         }
         "compare" => {
             let block = exp::table1::run_cell(model_kind, device, Scale::Smoke, seed);

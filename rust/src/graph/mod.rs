@@ -7,6 +7,12 @@
 //! L2 JAX model), synthetic-but-seeded weights for filter scoring, and the
 //! structured-pruning rewrite that removes output channels from a conv and
 //! fixes up every consumer.
+//!
+//! Graph legality is machine-checked: [`crate::verify::graph`]
+//! (DESIGN.md §13) walks the dataflow with per-edge `CPV10x`
+//! diagnostics, [`ops::Graph::validate`] delegates its structural pass
+//! there, and debug builds re-run the full walk after every
+//! [`prune::apply`].
 
 pub mod dot;
 pub mod model_zoo;

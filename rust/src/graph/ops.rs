@@ -124,31 +124,17 @@ impl Graph {
 
     /// Verify topological ordering + arity invariants. Used by tests and
     /// after every pruning rewrite.
+    ///
+    /// Delegates to [`crate::verify::graph::check_structure`] (DESIGN.md
+    /// §13) so ad-hoc validation and the `cprune check` sweep agree on
+    /// what "structurally valid" means; the first finding becomes the
+    /// error string. For the full dataflow/shape walk use
+    /// [`crate::verify::graph::check_graph`].
     pub fn validate(&self) -> Result<(), String> {
-        for (i, n) in self.nodes.iter().enumerate() {
-            if n.id != i {
-                return Err(format!("node {i} has mismatched id {}", n.id));
-            }
-            for &inp in &n.inputs {
-                if inp >= i {
-                    return Err(format!("node {i} ({}) uses forward input {inp}", n.name));
-                }
-            }
-            let arity_ok = match n.op {
-                OpKind::Input { .. } => n.inputs.is_empty(),
-                OpKind::Add => n.inputs.len() == 2,
-                _ => n.inputs.len() == 1,
-            };
-            if !arity_ok {
-                return Err(format!(
-                    "node {i} ({}, {}) has wrong arity {}",
-                    n.name,
-                    n.op.mnemonic(),
-                    n.inputs.len()
-                ));
-            }
+        match crate::verify::graph::check_structure(self).into_iter().next() {
+            None => Ok(()),
+            Some(d) => Err(d.to_string()),
         }
-        Ok(())
     }
 }
 

@@ -131,6 +131,12 @@ pub fn apply(base: &Graph, cout_override: &BTreeMap<NodeId, usize>) -> Result<Gr
     }
     g.validate()?;
     super::shape_infer::infer(&g)?; // double-check consistency
+    // Debug builds additionally run the full semantic walk (DESIGN.md §13);
+    // it must agree with the two release-mode checks above.
+    #[cfg(debug_assertions)]
+    for d in crate::verify::graph::check_graph(&g) {
+        panic!("prune::apply produced a graph the semantic checker rejects: {d}");
+    }
     Ok(g)
 }
 

@@ -18,7 +18,11 @@
 //!   [`run::Pruner`] trait over CPrune and all five baselines, the
 //!   fluent [`run::RunBuilder`] wiring (model/device/tuning/seed/cache/
 //!   budget), and the typed [`run::RunEvent`] stream with JSONL, CLI
-//!   progress and registry-publisher observers.
+//!   progress and registry-publisher observers. Cross-cutting semantic
+//!   checks live in `verify/` (DESIGN.md §13): one structured
+//!   [`verify::Diagnostic`] vocabulary (`CPV1xx`) over graphs, schedules
+//!   and persisted artifacts, enforced at mutation boundaries and by the
+//!   `cprune check` CLI sweep in CI.
 //! * **L2/L1 (python/, build-time only)** — JAX masked CNN + Pallas GEMM
 //!   kernels, AOT-lowered to HLO text and executed from `runtime/` +
 //!   `train/` via PJRT. Python never runs on the request path.
@@ -45,3 +49,4 @@ pub mod tir;
 pub mod train;
 pub mod tuner;
 pub mod util;
+pub mod verify;

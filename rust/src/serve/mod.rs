@@ -23,7 +23,11 @@
 //!
 //! Determinism here is machine-enforced: `cprune-lint` (DESIGN.md §12)
 //! denies wall-clock/env reads, f32 latency math and hash-ordered
-//! iteration throughout `serve/`.
+//! iteration throughout `serve/`. Frontier and registry data are
+//! machine-checked too: [`crate::verify::artifact`] (DESIGN.md §13)
+//! validates persisted registries (`CPV13x` frontier invariants),
+//! [`ParetoSet`] re-checks itself after every mutation in debug builds,
+//! and loading refuses to silently repair a corrupt frontier.
 
 pub mod pareto;
 pub mod registry;

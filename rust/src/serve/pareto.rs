@@ -127,7 +127,18 @@ impl ParetoSet {
         self.points.retain(|p| !c.dominates(p));
         let pos = self.points.partition_point(|p| p.latency < c.latency);
         self.points.insert(pos, c);
+        self.debug_check_canonical("insert");
         true
+    }
+
+    /// Debug-build re-check of the frontier invariant after a mutation,
+    /// through the same pass (DESIGN.md §13) the `cprune check` artifact
+    /// sweep applies to persisted registries.
+    fn debug_check_canonical(&self, _op: &str) {
+        #[cfg(debug_assertions)]
+        for d in crate::verify::artifact::frontier_diagnostics(&self.points) {
+            panic!("ParetoSet::{_op} broke the frontier invariant: {d}");
+        }
     }
 
     /// Frontier points, fastest (lowest-accuracy) first.
@@ -165,6 +176,7 @@ impl ParetoSet {
         for c in &other.points {
             self.insert(c.clone());
         }
+        self.debug_check_canonical("merge");
     }
 
     pub fn to_json(&self) -> Json {
@@ -174,16 +186,31 @@ impl ParetoSet {
         )])
     }
 
+    /// Parse a frontier serialized by [`ParetoSet::to_json`].
+    ///
+    /// Strict (DESIGN.md §13): the persisted points must already *be* a
+    /// canonical frontier — objectives in range, mutually non-dominated,
+    /// ascending in both latency and accuracy. A document that fails
+    /// [`crate::verify::artifact::frontier_diagnostics`] is refused with
+    /// the diagnostic rather than silently repaired, so registry
+    /// corruption surfaces instead of quietly dropping deployable
+    /// checkpoints.
     pub fn from_json(j: &Json) -> Result<ParetoSet, String> {
-        let mut set = ParetoSet::new();
-        let points = j
+        let arr = j
             .get("points")
             .and_then(Json::as_arr)
             .ok_or("pareto set missing points")?;
-        for p in points {
-            set.insert(Checkpoint::from_json(p)?);
+        let mut points = Vec::with_capacity(arr.len());
+        for p in arr {
+            points.push(Checkpoint::from_json(p)?);
         }
-        Ok(set)
+        if let Some(d) = crate::verify::artifact::frontier_diagnostics(&points).into_iter().next()
+        {
+            return Err(format!(
+                "persisted frontier is not canonical ({d}); refusing to repair silently"
+            ));
+        }
+        Ok(ParetoSet { points })
     }
 }
 

@@ -128,7 +128,16 @@ impl Registry {
         let mut tmp = path.as_os_str().to_os_string();
         tmp.push(format!(".{}.tmp", std::process::id()));
         let tmp = std::path::PathBuf::from(tmp);
-        std::fs::write(&tmp, self.to_json().to_string())
+        let text = self.to_json().to_string();
+        // Debug builds sweep the serialized document through the artifact
+        // checker (DESIGN.md §13) before it can reach disk.
+        #[cfg(debug_assertions)]
+        if let Some(d) =
+            crate::verify::artifact::check_text(&text).and_then(|ds| ds.into_iter().next())
+        {
+            panic!("Registry::save produced a non-canonical document: {d}");
+        }
+        std::fs::write(&tmp, text)
             .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
         std::fs::rename(&tmp, path)
             .map_err(|e| format!("renaming {} into place: {e}", tmp.display()))

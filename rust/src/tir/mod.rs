@@ -13,6 +13,11 @@
 //! [`Workload`] describes a conv task's extents; [`Program`] is one
 //! concrete schedule; [`Program::min_filter_prune_step`] is the paper's
 //! LCM rule.
+//!
+//! Schedule legality is machine-checked: [`Program::validate`] delegates
+//! to [`crate::verify::program`] (DESIGN.md §13), which also runs inside
+//! the artifact checker so a persisted program must stay legal for the
+//! workload key it is cached under.
 
 pub mod jsonio;
 pub mod loopnest;

@@ -141,24 +141,16 @@ impl Program {
     /// handles non-dividing tile sizes with tail iterations; the padded
     /// fraction is wasted work the simulator charges for). Exact products
     /// are the zero-waste special case.
+    /// Delegates to [`crate::verify::program::check_program`] (DESIGN.md
+    /// §13) — the same legality pass the `cprune check` artifact sweep
+    /// applies to cached programs — and reports the first finding. The
+    /// passing path allocates nothing, so the `debug_assert!` in
+    /// [`Program::sample_into`] stays cheap.
     pub fn validate(&self, w: &Workload) -> Result<(), String> {
-        let check = |name: &str, splits: &[usize], extent: usize| {
-            let prod: usize = splits.iter().product();
-            if prod >= extent
-                && prod < 2 * extent.max(1)
-                && !splits.is_empty()
-                && splits.iter().all(|&f| f >= 1)
-            {
-                Ok(())
-            } else {
-                Err(format!("{name} splits {splits:?} do not cover {extent}"))
-            }
-        };
-        check("spatial", &self.spatial_splits, w.oh * w.ow)?;
-        check("ff", &self.ff_splits, w.ff)?;
-        check("ax3", &self.ax3_splits, w.ff)?;
-        check("ic", &self.ic_splits, w.ic)?;
-        Ok(())
+        match crate::verify::program::check_program(self, w).into_iter().next() {
+            None => Ok(()),
+            Some(d) => Err(d.to_string()),
+        }
     }
 
     /// Wasted-work ratios (≥ 1) from padded tiling: (spatial, ff).

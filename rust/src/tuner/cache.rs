@@ -197,7 +197,16 @@ impl TuneCache {
         // truncate each other's in-progress temp file before the rename.
         tmp.push(format!(".{}.tmp", std::process::id()));
         let tmp = std::path::PathBuf::from(tmp);
-        std::fs::write(&tmp, self.to_json(device).to_string())
+        let text = self.to_json(device).to_string();
+        // Debug builds sweep the serialized document through the artifact
+        // checker (DESIGN.md §13) before it can reach disk.
+        #[cfg(debug_assertions)]
+        if let Some(d) =
+            crate::verify::artifact::check_text(&text).and_then(|ds| ds.into_iter().next())
+        {
+            panic!("TuneCache::save produced a non-canonical document: {d}");
+        }
+        std::fs::write(&tmp, text)
             .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
         std::fs::rename(&tmp, path)
             .map_err(|e| format!("renaming {} into place: {e}", tmp.display()))
@@ -209,7 +218,18 @@ impl TuneCache {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("reading {}: {e}", path.display()))?;
-        Self::parse(&text, Some(expected_device)).map_err(|e| format!("{}: {e}", path.display()))
+        let cache = Self::parse(&text, Some(expected_device))
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        // Debug builds re-check the accepted document semantically — cached
+        // programs must be legal for their workloads, keys canonical and
+        // sorted (DESIGN.md §13).
+        #[cfg(debug_assertions)]
+        if let Some(d) =
+            crate::verify::artifact::check_text(&text).and_then(|ds| ds.into_iter().next())
+        {
+            panic!("TuneCache::load accepted a non-canonical document {}: {d}", path.display());
+        }
+        Ok(cache)
     }
 }
 

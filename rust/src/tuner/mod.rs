@@ -31,7 +31,11 @@
 //!
 //! Determinism here is machine-enforced: `cprune-lint` (DESIGN.md §12)
 //! denies wall-clock/env reads, f32 latency math and hash-ordered
-//! iteration throughout `tuner/`.
+//! iteration throughout `tuner/`. Persisted tune caches are
+//! machine-checked as well: [`TuneCache::save`]/`load` sweep the
+//! document through [`crate::verify::artifact`] (DESIGN.md §13) in
+//! debug builds, and the CI `check-artifacts` job does the same for
+//! every committed artifact via `cprune check .`.
 
 pub mod cache;
 pub mod cost_model;

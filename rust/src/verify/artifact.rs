@@ -1,0 +1,868 @@
+//! ArtifactCheck: deep validation of every versioned JSON document the
+//! project persists (DESIGN.md §13).
+//!
+//! [`check_text`] recognizes a document by its `format` tag and
+//! dispatches to a per-format checker. Each checker verifies the header
+//! (CPV120), that every entry parses back into its typed form (CPV121),
+//! and the *semantic* invariants the writers guarantee: workload/program
+//! keys round-trip byte-identically through [`crate::tir::jsonio`] and
+//! entries arrive sorted by their canonical key (CPV122), numeric fields
+//! sit inside their domains (CPV123), cached/traced programs are legal
+//! for their workloads (CPV110–112 via [`super::program`]), and
+//! persisted Pareto frontiers are mutually non-dominated and ascending
+//! in both objectives (CPV130/131 via [`frontier_diagnostics`]).
+//!
+//! A document that does not claim a `cprune-*` format is not ours:
+//! `check_text` returns `None` and the [`super::sweep`] walker skips it.
+
+use super::program::check_program;
+use super::{Code, Diagnostic};
+use crate::device::calibration::{CALIBRATION_FORMAT, CALIBRATION_VERSION};
+use crate::device::registry::{DEVICES_FORMAT, DEVICES_VERSION};
+use crate::device::replay::{TRACE_FORMAT, TRACE_VERSION};
+use crate::device::DeviceSpec;
+use crate::perf::{BENCH_FORMAT, BENCH_VERSION};
+use crate::run::events::{EVENTS_FORMAT, EVENTS_VERSION};
+use crate::serve::{Checkpoint, REGISTRY_FORMAT, REGISTRY_VERSION};
+use crate::tir::jsonio::{program_from_json, program_to_json, workload_from_json, workload_to_json};
+use crate::tuner::cache::{CACHE_FORMAT, CACHE_VERSION};
+use crate::util::json::{self, Json};
+
+/// Format tag of `bench/golden-*.json` (written by hand, read by the
+/// bench-quick CI job; no Rust struct owns it, so the tag lives here).
+pub const BENCH_GOLDEN_FORMAT: &str = "cprune-bench-golden";
+
+/// Every format tag the checker understands. A file that fails to parse
+/// is only reported (CPV190) when it mentions one of these — arbitrary
+/// foreign JSON is none of our business.
+const KNOWN_FORMATS: [&str; 8] = [
+    CACHE_FORMAT,
+    TRACE_FORMAT,
+    REGISTRY_FORMAT,
+    DEVICES_FORMAT,
+    CALIBRATION_FORMAT,
+    BENCH_FORMAT,
+    BENCH_GOLDEN_FORMAT,
+    EVENTS_FORMAT,
+];
+
+/// Check a document. `None` = not a cprune artifact; `Some(vec![])` = a
+/// recognized, clean artifact.
+pub fn check_text(text: &str) -> Option<Vec<Diagnostic>> {
+    // Events logs are JSONL — the whole file is not one JSON value, so
+    // recognize them by their header line before whole-document parsing.
+    if let Some(line) = text.lines().find(|l| !l.trim().is_empty()) {
+        if let Ok(j) = json::parse(line) {
+            if j.get("format").and_then(Json::as_str) == Some(EVENTS_FORMAT) {
+                return Some(check_events(text));
+            }
+        }
+    }
+    match json::parse(text) {
+        Ok(j) => {
+            let format = j.get("format").and_then(Json::as_str)?.to_string();
+            let mut out = Vec::new();
+            match format.as_str() {
+                CACHE_FORMAT => check_cache(&j, &mut out),
+                TRACE_FORMAT => check_trace(&j, &mut out),
+                REGISTRY_FORMAT => check_registry(&j, &mut out),
+                DEVICES_FORMAT => check_devices(&j, &mut out),
+                CALIBRATION_FORMAT => check_calibration(&j, &mut out),
+                BENCH_FORMAT => check_bench(&j, &mut out),
+                BENCH_GOLDEN_FORMAT => check_bench_golden(&j, &mut out),
+                other if other.starts_with("cprune-") => {
+                    out.push(Diagnostic::new(
+                        Code::BadHeader,
+                        "header",
+                        format!(
+                            "unrecognized cprune format '{other}' — teach verify::artifact about it"
+                        ),
+                    ));
+                }
+                _ => return None,
+            }
+            Some(out)
+        }
+        Err(e) => {
+            if KNOWN_FORMATS.iter().any(|f| text.contains(f)) {
+                Some(vec![Diagnostic::new(
+                    Code::CorruptDocument,
+                    "document",
+                    format!("claims a cprune format but does not parse: {e}"),
+                )])
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Header version gate shared by every single-document format.
+fn check_version(j: &Json, want: u64, out: &mut Vec<Diagnostic>) {
+    match j.get("version").and_then(Json::as_usize) {
+        Some(v) if v as u64 == want => {}
+        other => out.push(Diagnostic::new(
+            Code::BadHeader,
+            "header",
+            format!("unsupported version {other:?} (want {want})"),
+        )),
+    }
+}
+
+/// The document's `entries`-style array, or a CPV120 when absent.
+fn doc_array<'j>(j: &'j Json, key: &str, out: &mut Vec<Diagnostic>) -> Option<&'j [Json]> {
+    match j.get(key).and_then(Json::as_arr) {
+        Some(a) => Some(a),
+        None => {
+            out.push(Diagnostic::new(
+                Code::BadHeader,
+                "header",
+                format!("missing top-level array '{key}'"),
+            ));
+            None
+        }
+    }
+}
+
+fn finite_positive(v: f64) -> bool {
+    v.is_finite() && v > 0.0
+}
+
+/// Emit CPV122 for adjacent canonical keys out of strictly ascending
+/// order (the byte-stability contract every writer sorts for; equality
+/// means a duplicate key, which a typed map could never have written).
+fn check_sorted(keys: &[Option<String>], what: &str, out: &mut Vec<Diagnostic>) {
+    for (i, w) in keys.windows(2).enumerate() {
+        if let (Some(a), Some(b)) = (&w[0], &w[1]) {
+            if a >= b {
+                out.push(Diagnostic::new(
+                    Code::NonCanonicalKey,
+                    format!("{what}[{}]", i + 1),
+                    format!("entries not sorted by canonical {what} key"),
+                ));
+            }
+        }
+    }
+}
+
+/// Parse `e[key]` as a workload/program pair, verifying both parse
+/// (CPV121), round-trip canonically (CPV122), and that the program is
+/// legal for the workload (nested CPV110–112). Returns the canonical
+/// workload/program key strings when both parsed.
+fn check_wp_entry(
+    e: &Json,
+    ctx: &str,
+    out: &mut Vec<Diagnostic>,
+) -> Option<(String, String)> {
+    let wj = match e.get("workload") {
+        Some(wj) => wj,
+        None => {
+            out.push(Diagnostic::new(Code::MalformedEntry, ctx, "missing workload"));
+            return None;
+        }
+    };
+    let pj = match e.get("program") {
+        Some(pj) => pj,
+        None => {
+            out.push(Diagnostic::new(Code::MalformedEntry, ctx, "missing program"));
+            return None;
+        }
+    };
+    let w = match workload_from_json(wj) {
+        Ok(w) => w,
+        Err(err) => {
+            out.push(Diagnostic::new(Code::MalformedEntry, ctx, format!("workload: {err}")));
+            return None;
+        }
+    };
+    let p = match program_from_json(pj) {
+        Ok(p) => p,
+        Err(err) => {
+            out.push(Diagnostic::new(Code::MalformedEntry, ctx, format!("program: {err}")));
+            return None;
+        }
+    };
+    let wk = workload_to_json(&w).to_string();
+    let pk = program_to_json(&p).to_string();
+    if wk != wj.to_string() {
+        out.push(Diagnostic::new(
+            Code::NonCanonicalKey,
+            ctx,
+            "workload key does not round-trip canonically through tir::jsonio",
+        ));
+    }
+    if pk != pj.to_string() {
+        out.push(Diagnostic::new(
+            Code::NonCanonicalKey,
+            ctx,
+            "program key does not round-trip canonically through tir::jsonio",
+        ));
+    }
+    for d in check_program(&p, &w) {
+        out.push(d.nested(ctx));
+    }
+    Some((wk, pk))
+}
+
+/// `cprune-tune-cache` v1 (`TuneCache::to_json`).
+fn check_cache(j: &Json, out: &mut Vec<Diagnostic>) {
+    check_version(j, CACHE_VERSION, out);
+    if j.get("device").and_then(Json::as_str).is_none() {
+        out.push(Diagnostic::new(Code::BadHeader, "header", "missing device name"));
+    }
+    let Some(entries) = doc_array(j, "entries", out) else { return };
+    let mut keys = Vec::with_capacity(entries.len());
+    for (i, e) in entries.iter().enumerate() {
+        let ctx = format!("entries[{i}]");
+        let key = check_wp_entry(e, &ctx, out).map(|(wk, _)| wk);
+        match e.get("latency").and_then(Json::as_f64) {
+            Some(lat) if finite_positive(lat) => {}
+            Some(lat) => out.push(Diagnostic::new(
+                Code::NumericRange,
+                &ctx,
+                format!("latency {lat} is not finite and positive"),
+            )),
+            None => out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing latency")),
+        }
+        if e.get("measured").and_then(Json::as_usize).is_none() {
+            out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing measured count"));
+        }
+        keys.push(key);
+    }
+    check_sorted(&keys, "entries", out);
+}
+
+/// `cprune-measure-trace` v1 (`ReplayTarget::to_json`).
+fn check_trace(j: &Json, out: &mut Vec<Diagnostic>) {
+    check_version(j, TRACE_VERSION, out);
+    match j.get("device") {
+        Some(dj) => match DeviceSpec::from_json(dj) {
+            Ok(spec) => {
+                if spec.to_json().to_string() != dj.to_string() {
+                    out.push(Diagnostic::new(
+                        Code::NonCanonicalKey,
+                        "device",
+                        "device spec does not round-trip canonically",
+                    ));
+                }
+            }
+            Err(err) => out.push(Diagnostic::new(Code::MalformedEntry, "device", err)),
+        },
+        None => out.push(Diagnostic::new(Code::BadHeader, "header", "missing device spec")),
+    }
+    match j.get("noise_sigma").and_then(Json::as_f64) {
+        Some(s) if s.is_finite() && s >= 0.0 => {}
+        Some(s) => out.push(Diagnostic::new(
+            Code::NumericRange,
+            "header",
+            format!("noise_sigma {s} is not finite and non-negative"),
+        )),
+        None => out.push(Diagnostic::new(Code::BadHeader, "header", "missing noise_sigma")),
+    }
+    if let Some(lats) = doc_array(j, "latencies", out) {
+        let mut keys = Vec::with_capacity(lats.len());
+        for (i, e) in lats.iter().enumerate() {
+            let ctx = format!("latencies[{i}]");
+            let key = check_wp_entry(e, &ctx, out).map(|(wk, pk)| format!("{wk}|{pk}"));
+            match e.get("seconds").and_then(Json::as_f64) {
+                Some(s) if finite_positive(s) => {}
+                Some(s) => out.push(Diagnostic::new(
+                    Code::NumericRange,
+                    &ctx,
+                    format!("seconds {s} is not finite and positive"),
+                )),
+                None => out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing seconds")),
+            }
+            keys.push(key);
+        }
+        check_sorted(&keys, "latencies", out);
+    }
+    if let Some(batches) = doc_array(j, "measurements", out) {
+        let mut keys = Vec::with_capacity(batches.len());
+        for (i, e) in batches.iter().enumerate() {
+            let ctx = format!("measurements[{i}]");
+            let wp = check_wp_entry(e, &ctx, out);
+            let repeats = e.get("repeats").and_then(Json::as_usize);
+            match repeats {
+                Some(r) if r >= 1 => {}
+                Some(r) => out.push(Diagnostic::new(
+                    Code::NumericRange,
+                    &ctx,
+                    format!("repeats {r} must be at least 1"),
+                )),
+                None => out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing repeats")),
+            }
+            match e.get("means").and_then(Json::as_arr) {
+                Some(means) => {
+                    for (k, m) in means.iter().enumerate() {
+                        match m.as_f64() {
+                            Some(v) if finite_positive(v) => {}
+                            Some(v) => out.push(Diagnostic::new(
+                                Code::NumericRange,
+                                format!("{ctx}.means[{k}]"),
+                                format!("mean {v} is not finite and positive"),
+                            )),
+                            None => out.push(Diagnostic::new(
+                                Code::MalformedEntry,
+                                format!("{ctx}.means[{k}]"),
+                                "non-number mean",
+                            )),
+                        }
+                    }
+                }
+                None => out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing means")),
+            }
+            keys.push(match (wp, repeats) {
+                (Some((wk, pk)), Some(r)) => Some(format!("{wk}|{pk}|r{r}")),
+                _ => None,
+            });
+        }
+        check_sorted(&keys, "measurements", out);
+    }
+}
+
+/// `cprune-pareto-registry` v1 (`Registry::to_json`).
+fn check_registry(j: &Json, out: &mut Vec<Diagnostic>) {
+    check_version(j, REGISTRY_VERSION, out);
+    let Some(entries) = doc_array(j, "entries", out) else { return };
+    let mut keys = Vec::with_capacity(entries.len());
+    for (i, e) in entries.iter().enumerate() {
+        let ctx = format!("entries[{i}]");
+        let model = e.get("model").and_then(Json::as_str);
+        let device = e.get("device").and_then(Json::as_str);
+        if model.is_none() {
+            out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing model"));
+        }
+        if device.is_none() {
+            out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing device"));
+        }
+        keys.push(match (model, device) {
+            (Some(m), Some(d)) => Some(format!("{m}\u{0}{d}")),
+            _ => None,
+        });
+        let Some(points) = e.get("pareto").and_then(|p| p.get("points")).and_then(Json::as_arr)
+        else {
+            out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing pareto points"));
+            continue;
+        };
+        let mut frontier = Vec::with_capacity(points.len());
+        for (k, pj) in points.iter().enumerate() {
+            match Checkpoint::from_json(pj) {
+                Ok(cp) => {
+                    if cp.to_json().to_string() != pj.to_string() {
+                        out.push(Diagnostic::new(
+                            Code::NonCanonicalKey,
+                            format!("{ctx}.points[{k}]"),
+                            "checkpoint does not round-trip canonically",
+                        ));
+                    }
+                    frontier.push(cp);
+                }
+                Err(err) => {
+                    out.push(Diagnostic::new(
+                        Code::MalformedEntry,
+                        format!("{ctx}.points[{k}]"),
+                        err,
+                    ));
+                }
+            }
+        }
+        for d in frontier_diagnostics(&frontier) {
+            out.push(d.nested(&ctx));
+        }
+    }
+    check_sorted(&keys, "entries", out);
+}
+
+/// The [`crate::serve::ParetoSet`] invariant over a slice of persisted
+/// checkpoints: every objective in range (CPV123), no dominated or
+/// duplicate point (CPV130), strictly ascending latency *and* accuracy
+/// (CPV131). Shared by the registry checker, the strict
+/// `ParetoSet::from_json`, and the frontier mutation `debug_assert`s.
+pub fn frontier_diagnostics(points: &[Checkpoint]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (i, c) in points.iter().enumerate() {
+        if !finite_positive(c.latency) {
+            out.push(Diagnostic::new(
+                Code::NumericRange,
+                format!("points[{i}]"),
+                format!("latency {} is not finite and positive", c.latency),
+            ));
+        }
+        if !c.accuracy.is_finite() || !(0.0..=1.0).contains(&c.accuracy) {
+            out.push(Diagnostic::new(
+                Code::NumericRange,
+                format!("points[{i}]"),
+                format!("accuracy {} outside [0, 1]", c.accuracy),
+            ));
+        }
+    }
+    if !out.is_empty() {
+        // Dominance over NaN/absurd objectives produces noise, not signal.
+        return out;
+    }
+    for (i, a) in points.iter().enumerate() {
+        for (k, b) in points.iter().enumerate().skip(i + 1) {
+            if a.dominates(b) || b.dominates(a) {
+                out.push(Diagnostic::new(
+                    Code::FrontierDominated,
+                    format!("points[{k}]"),
+                    format!("dominated pair: points[{i}] and points[{k}]"),
+                ));
+            } else if a.latency == b.latency && a.accuracy == b.accuracy {
+                out.push(Diagnostic::new(
+                    Code::FrontierDominated,
+                    format!("points[{k}]"),
+                    format!("duplicate objectives: points[{i}] and points[{k}]"),
+                ));
+            }
+        }
+    }
+    for (i, w) in points.windows(2).enumerate() {
+        if w[0].latency >= w[1].latency || w[0].accuracy >= w[1].accuracy {
+            out.push(Diagnostic::new(
+                Code::FrontierOrder,
+                format!("points[{}]", i + 1),
+                "frontier not strictly ascending in latency and accuracy",
+            ));
+        }
+    }
+    out
+}
+
+/// `cprune-devices` v1 (`TargetRegistry::load_str` input).
+fn check_devices(j: &Json, out: &mut Vec<Diagnostic>) {
+    check_version(j, DEVICES_VERSION, out);
+    let Some(devices) = doc_array(j, "devices", out) else { return };
+    for (i, e) in devices.iter().enumerate() {
+        let ctx = format!("devices[{i}]");
+        if let Err(err) = DeviceSpec::from_json(e) {
+            out.push(Diagnostic::new(Code::MalformedEntry, &ctx, err));
+        }
+        if let Some(short) = e.get("short") {
+            if short.as_str().is_none() {
+                out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "non-string short name"));
+            }
+        }
+    }
+}
+
+/// `cprune-calibration` v1 (`CalibrationTable::to_json`).
+fn check_calibration(j: &Json, out: &mut Vec<Diagnostic>) {
+    check_version(j, CALIBRATION_VERSION, out);
+    let Some(entries) = doc_array(j, "entries", out) else { return };
+    for (i, e) in entries.iter().enumerate() {
+        let ctx = format!("entries[{i}]");
+        if e.get("device").and_then(Json::as_str).is_none() {
+            out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing device"));
+        }
+        match e.get("scale").and_then(Json::as_f64) {
+            Some(s) if finite_positive(s) => {}
+            Some(s) => out.push(Diagnostic::new(
+                Code::NumericRange,
+                &ctx,
+                format!("scale {s} is not finite and positive"),
+            )),
+            None => out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing scale")),
+        }
+        match e.get("residual").and_then(Json::as_f64) {
+            Some(r) if r.is_finite() => {}
+            Some(r) => out.push(Diagnostic::new(
+                Code::NumericRange,
+                &ctx,
+                format!("residual {r} is not finite"),
+            )),
+            None => out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing residual")),
+        }
+    }
+}
+
+/// `cprune-bench` v1 (`PerfReport::to_json`).
+fn check_bench(j: &Json, out: &mut Vec<Diagnostic>) {
+    check_version(j, BENCH_VERSION, out);
+    if j.get("suite").and_then(Json::as_str).is_none() {
+        out.push(Diagnostic::new(Code::BadHeader, "header", "missing suite"));
+    }
+    match j.get("tier").and_then(Json::as_str) {
+        Some("quick" | "full") => {}
+        other => out.push(Diagnostic::new(
+            Code::BadHeader,
+            "header",
+            format!("tier {other:?} is not 'quick' or 'full'"),
+        )),
+    }
+    if j.get("seed").and_then(Json::as_usize).is_none() {
+        out.push(Diagnostic::new(Code::BadHeader, "header", "missing seed"));
+    }
+    let Some(records) = doc_array(j, "records", out) else { return };
+    for (i, r) in records.iter().enumerate() {
+        let ctx = format!("records[{i}]");
+        if r.get("name").and_then(Json::as_str).is_none() {
+            out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing name"));
+        }
+        match r.get("wall_s").and_then(Json::as_f64) {
+            Some(w) if w.is_finite() && w >= 0.0 => {}
+            Some(w) => out.push(Diagnostic::new(
+                Code::NumericRange,
+                &ctx,
+                format!("wall_s {w} is not finite and non-negative"),
+            )),
+            None => out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing wall_s")),
+        }
+        if r.get("programs_measured").and_then(Json::as_usize).is_none() {
+            out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing programs_measured"));
+        }
+        if let Json::Obj(m) = r {
+            for (k, v) in m {
+                if k != "name" && v.as_f64().map(|n| !n.is_finite()).unwrap_or(false) {
+                    out.push(Diagnostic::new(
+                        Code::NumericRange,
+                        format!("{ctx}.{k}"),
+                        "non-finite metric",
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// `cprune-bench-golden` v1 (`bench/golden-*.json`; hand-maintained).
+fn check_bench_golden(j: &Json, out: &mut Vec<Diagnostic>) {
+    check_version(j, 1, out);
+    if j.get("pinned").and_then(Json::as_bool).is_none() {
+        out.push(Diagnostic::new(Code::BadHeader, "header", "missing boolean 'pinned'"));
+    }
+    let Json::Obj(m) = j else { return };
+    for (key, v) in m {
+        if matches!(key.as_str(), "format" | "version" | "pinned" | "note") {
+            continue;
+        }
+        let ctx = key.as_str();
+        let Some(rows) = v.as_arr() else {
+            out.push(Diagnostic::new(Code::MalformedEntry, ctx, "suite entry is not an array"));
+            continue;
+        };
+        for (i, row) in rows.iter().enumerate() {
+            let ok = matches!(
+                row.as_arr(),
+                Some([name, count])
+                    if name.as_str().is_some()
+                        && (matches!(count, Json::Null) || count.as_usize().is_some())
+            );
+            if !ok {
+                out.push(Diagnostic::new(
+                    Code::MalformedEntry,
+                    format!("{ctx}[{i}]"),
+                    "expected a [record-name, count-or-null] pair",
+                ));
+            }
+        }
+    }
+}
+
+/// `cprune-run-events` v1 JSONL (`JsonlSink` output): a header line then
+/// one event object per line, each matching its kind's exact field set.
+fn check_events(text: &str) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    match lines.next() {
+        Some((_, header)) => match json::parse(header) {
+            Ok(h) => {
+                match h.get("format").and_then(Json::as_str) {
+                    Some(EVENTS_FORMAT) => {}
+                    other => out.push(Diagnostic::new(
+                        Code::BadHeader,
+                        "line 1",
+                        format!("not an events header (format {other:?})"),
+                    )),
+                }
+                match h.get("version").and_then(Json::as_usize) {
+                    Some(v) if v as u64 == EVENTS_VERSION => {}
+                    other => out.push(Diagnostic::new(
+                        Code::BadHeader,
+                        "line 1",
+                        format!("unsupported events version {other:?} (want {EVENTS_VERSION})"),
+                    )),
+                }
+            }
+            Err(e) => {
+                out.push(Diagnostic::new(Code::CorruptDocument, "line 1", e));
+                return out;
+            }
+        },
+        None => {
+            out.push(Diagnostic::new(Code::BadHeader, "line 1", "empty events log"));
+            return out;
+        }
+    }
+    for (idx, line) in lines {
+        let ctx = format!("line {}", idx + 1);
+        let ev = match json::parse(line) {
+            Ok(ev) => ev,
+            Err(e) => {
+                out.push(Diagnostic::new(Code::EventSchema, &ctx, format!("unparseable: {e}")));
+                continue;
+            }
+        };
+        check_event_line(&ev, &ctx, &mut out);
+    }
+    out
+}
+
+/// Per-kind required field names and their value shapes, mirroring
+/// `RunEvent::to_json` exactly (the golden-file contract).
+fn check_event_line(ev: &Json, ctx: &str, out: &mut Vec<Diagnostic>) {
+    #[derive(Clone, Copy)]
+    enum F {
+        Num,
+        NumOrNull,
+        Str,
+        Reason,
+        Checkpoint,
+    }
+    let kind = match ev.get("event").and_then(Json::as_str) {
+        Some(k) => k,
+        None => {
+            out.push(Diagnostic::new(Code::EventSchema, ctx, "missing 'event' kind tag"));
+            return;
+        }
+    };
+    let fields: &[(&str, F)] = match kind {
+        "baseline_tuned" => &[("latency", F::Num), ("fps", F::Num)],
+        "candidate_measured" => &[
+            ("iteration", F::Num),
+            ("latency", F::Num),
+            ("latency_target", F::Num),
+            ("candidates_tried", F::Num),
+        ],
+        "iteration_accepted" => &[
+            ("iteration", F::Num),
+            ("latency", F::Num),
+            ("latency_target", F::Num),
+            ("short_accuracy", F::Num),
+            ("accuracy_gate", F::Num),
+            ("filters_removed", F::Num),
+        ],
+        "iteration_rejected" => &[
+            ("iteration", F::Num),
+            ("latency", F::Num),
+            ("latency_target", F::Num),
+            ("short_accuracy", F::NumOrNull),
+            ("accuracy_gate", F::NumOrNull),
+            ("reason", F::Reason),
+        ],
+        "task_banned" => &[("conv", F::Num), ("reason", F::Str)],
+        "checkpoint_emitted" => &[("checkpoint", F::Checkpoint)],
+        "finished" => &[
+            ("pruner", F::Str),
+            ("method", F::Str),
+            ("model", F::Str),
+            ("device", F::Str),
+            ("final_latency", F::Num),
+            ("final_fps", F::Num),
+            ("fps_increase_rate", F::Num),
+            ("top1", F::Num),
+            ("top5", F::Num),
+            ("macs", F::Num),
+            ("params", F::Num),
+            ("iterations", F::Num),
+            ("search_candidates", F::Num),
+            ("pareto_points", F::Num),
+        ],
+        other => {
+            out.push(Diagnostic::new(
+                Code::EventSchema,
+                ctx,
+                format!("unknown event kind '{other}'"),
+            ));
+            return;
+        }
+    };
+    for (name, shape) in fields {
+        let v = match ev.get(name) {
+            Some(v) => v,
+            None => {
+                out.push(Diagnostic::new(
+                    Code::EventSchema,
+                    ctx,
+                    format!("{kind} missing field '{name}'"),
+                ));
+                continue;
+            }
+        };
+        let ok = match shape {
+            F::Num => v.as_f64().is_some(),
+            F::NumOrNull => v.as_f64().is_some() || matches!(v, Json::Null),
+            F::Str => v.as_str().is_some(),
+            F::Reason => matches!(
+                v.as_str(),
+                Some("latency_gate" | "accuracy_gate" | "accuracy_budget")
+            ),
+            F::Checkpoint => match Checkpoint::from_json(v) {
+                Ok(_) => true,
+                Err(e) => {
+                    out.push(Diagnostic::new(
+                        Code::EventSchema,
+                        ctx,
+                        format!("checkpoint: {e}"),
+                    ));
+                    continue;
+                }
+            },
+        };
+        if !ok {
+            out.push(Diagnostic::new(
+                Code::EventSchema,
+                ctx,
+                format!("{kind} field '{name}' has the wrong shape"),
+            ));
+        }
+    }
+    if let Json::Obj(m) = ev {
+        for key in m.keys() {
+            if key != "event" && !fields.iter().any(|(name, _)| *name == key.as_str()) {
+                out.push(Diagnostic::new(
+                    Code::EventSchema,
+                    ctx,
+                    format!("{kind} has unexpected field '{key}'"),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{ParetoSet, Registry};
+    use crate::tir::{Program, Workload};
+    use crate::tuner::TuneCache;
+    use std::collections::BTreeMap;
+
+    fn wl(ff: usize) -> Workload {
+        use crate::graph::ops::OpKind;
+        Workload::from_conv(
+            &OpKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: ff, stride: 1, padding: 1, groups: 1 },
+            [1, 14, 14, ff],
+            vec!["bn", "relu"],
+        )
+    }
+
+    fn cp(iteration: usize, latency: f64, accuracy: f64) -> Checkpoint {
+        Checkpoint { iteration, latency, accuracy, channels: BTreeMap::new() }
+    }
+
+    fn ids(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code.id()).collect()
+    }
+
+    #[test]
+    fn clean_cache_registry_and_foreign_json() {
+        let cache = TuneCache::new();
+        cache.put(wl(128), Program::naive(&wl(128)), 0.001, 5);
+        let text = cache.to_json("devA").to_string();
+        assert_eq!(check_text(&text), Some(vec![]));
+
+        let mut reg = Registry::new();
+        let mut set = ParetoSet::new();
+        set.insert(cp(0, 0.010, 0.93));
+        set.insert(cp(2, 0.004, 0.91));
+        reg.publish("m", "d", &set);
+        assert_eq!(check_text(&reg.to_json().to_string()), Some(vec![]));
+
+        assert_eq!(check_text(r#"{"hello": "world"}"#), None);
+        assert_eq!(check_text("not json at all"), None);
+    }
+
+    #[test]
+    fn truncated_cprune_document_is_cpv190() {
+        let diags = check_text(r#"{"format":"cprune-tune-cache","version":1,"#).unwrap();
+        assert_eq!(ids(&diags), ["CPV190"]);
+    }
+
+    #[test]
+    fn non_canonical_workload_key_is_cpv122() {
+        let cache = TuneCache::new();
+        cache.put(wl(64), Program::naive(&wl(64)), 0.001, 5);
+        let text = cache.to_json("devA").to_string();
+        // 64 → 64.5: as_usize truncates back to 64, so the file parses
+        // fine but its key no longer matches its canonical serialization.
+        let broken = text.replace("\"ff\":64", "\"ff\":64.5");
+        assert_ne!(text, broken);
+        let diags = check_text(&broken).unwrap();
+        assert!(ids(&diags).contains(&"CPV122"), "{diags:?}");
+    }
+
+    #[test]
+    fn dominated_frontier_point_is_cpv130_and_order_break_cpv131() {
+        // dominated: same accuracy, slower
+        let d = frontier_diagnostics(&[cp(0, 0.004, 0.91), cp(1, 0.010, 0.91)]);
+        assert_eq!(ids(&d), ["CPV130", "CPV131"]);
+        // out of order but mutually non-dominated
+        let d = frontier_diagnostics(&[cp(0, 0.010, 0.93), cp(1, 0.004, 0.91)]);
+        assert_eq!(ids(&d), ["CPV131"]);
+        // clean
+        assert!(frontier_diagnostics(&[cp(0, 0.004, 0.91), cp(1, 0.010, 0.93)]).is_empty());
+        // range problems mask dominance noise
+        let d = frontier_diagnostics(&[cp(0, -1.0, 0.91)]);
+        assert_eq!(ids(&d), ["CPV123"]);
+    }
+
+    #[test]
+    fn events_log_schema_violations_are_cpv140() {
+        let good = "{\"format\":\"cprune-run-events\",\"version\":1}\n\
+                    {\"event\":\"baseline_tuned\",\"fps\":4,\"latency\":0.25}\n";
+        assert_eq!(check_text(good), Some(vec![]));
+        let bad_kind = "{\"format\":\"cprune-run-events\",\"version\":1}\n\
+                        {\"event\":\"warp_core_breach\"}\n";
+        assert_eq!(ids(&check_text(bad_kind).unwrap()), ["CPV140"]);
+        let missing_field = "{\"format\":\"cprune-run-events\",\"version\":1}\n\
+                             {\"event\":\"baseline_tuned\",\"fps\":4}\n";
+        assert_eq!(ids(&check_text(missing_field).unwrap()), ["CPV140"]);
+        let bad_reason = "{\"format\":\"cprune-run-events\",\"version\":1}\n\
+            {\"event\":\"iteration_rejected\",\"iteration\":1,\"latency\":0.5,\
+             \"latency_target\":0.25,\"short_accuracy\":null,\"accuracy_gate\":null,\
+             \"reason\":\"vibes\"}\n";
+        assert_eq!(ids(&check_text(bad_reason).unwrap()), ["CPV140"]);
+    }
+
+    #[test]
+    fn unsorted_cache_entries_are_cpv122() {
+        let a = wl(64);
+        let b = wl(128);
+        let mk = |w: &Workload| {
+            Json::obj(vec![
+                ("workload", workload_to_json(w)),
+                ("program", program_to_json(&Program::naive(w))),
+                ("latency", Json::Num(0.001)),
+                ("measured", Json::Num(1.0)),
+            ])
+        };
+        let sorted_pair = {
+            let mut keys = [workload_to_json(&a).to_string(), workload_to_json(&b).to_string()];
+            keys.sort();
+            keys
+        };
+        // deliberately emit in descending canonical-key order
+        let (first, second) =
+            if workload_to_json(&a).to_string() == sorted_pair[0] { (b, a) } else { (a, b) };
+        let doc = Json::obj(vec![
+            ("format", Json::Str(CACHE_FORMAT.into())),
+            ("version", Json::Num(1.0)),
+            ("device", Json::Str("d".into())),
+            ("entries", Json::Arr(vec![mk(&first), mk(&second)])),
+        ]);
+        let diags = check_text(&doc.to_string()).unwrap();
+        assert_eq!(ids(&diags), ["CPV122"]);
+    }
+
+    #[test]
+    fn bench_golden_document_is_recognized_and_checked() {
+        let good = r#"{"format":"cprune-bench-golden","version":1,"pinned":false,
+                       "BENCH_tuner.json":[["tune_task_hot_conv",null]]}"#;
+        assert_eq!(check_text(good), Some(vec![]));
+        let bad = r#"{"format":"cprune-bench-golden","version":1,"pinned":false,
+                      "BENCH_tuner.json":[["tune_task_hot_conv"]]}"#;
+        assert_eq!(ids(&check_text(bad).unwrap()), ["CPV121"]);
+    }
+}

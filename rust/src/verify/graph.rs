@@ -1,0 +1,315 @@
+//! GraphCheck: dataflow legality of a [`Graph`] (DESIGN.md §13).
+//!
+//! Two passes. [`check_structure`] verifies the purely structural
+//! invariants `Graph::validate` has always enforced (id/index agreement,
+//! no forward inputs, operator arity) plus non-positive kernel/stride
+//! parameters — everything that must hold before shapes are even
+//! meaningful. [`check_graph`] then walks the dataflow in topological
+//! order with *checked* arithmetic, accumulating one diagnostic per edge
+//! problem (channel mismatch, group divisibility, residual mismatch,
+//! channel floor, spatial underflow) instead of stopping at the first,
+//! and finishes with a [`shape_infer::infer`] recheck so the two
+//! implementations can never silently disagree.
+
+use super::{Code, Diagnostic};
+use crate::graph::ops::{Graph, Node, OpKind};
+use crate::graph::shape_infer::{self, Shape};
+
+/// `node 3 (conv2d 'c1')` — the context string for a node finding.
+fn ctx(n: &Node) -> String {
+    format!("node {} ({} '{}')", n.id, n.op.mnemonic(), n.name)
+}
+
+/// Structural invariants only (what `Graph::validate` enforces; that
+/// method now delegates here and surfaces the first finding).
+pub fn check_structure(g: &Graph) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (i, n) in g.nodes.iter().enumerate() {
+        if n.id != i {
+            out.push(Diagnostic::new(
+                Code::GraphStructure,
+                ctx(n),
+                format!("node at index {i} has mismatched id {}", n.id),
+            ));
+        }
+        for &inp in &n.inputs {
+            if inp >= i {
+                out.push(Diagnostic::new(
+                    Code::GraphStructure,
+                    ctx(n),
+                    format!("uses forward input {inp}"),
+                ));
+            }
+        }
+        let arity_ok = match n.op {
+            OpKind::Input { .. } => n.inputs.is_empty(),
+            OpKind::Add => n.inputs.len() == 2,
+            _ => n.inputs.len() == 1,
+        };
+        if !arity_ok {
+            out.push(Diagnostic::new(
+                Code::GraphStructure,
+                ctx(n),
+                format!("wrong arity {}", n.inputs.len()),
+            ));
+        }
+        match n.op {
+            OpKind::Conv2d { kh, kw, stride, .. } => {
+                if kh == 0 || kw == 0 || stride == 0 {
+                    out.push(Diagnostic::new(
+                        Code::GraphStructure,
+                        ctx(n),
+                        format!("non-positive kernel/stride (kh {kh}, kw {kw}, stride {stride})"),
+                    ));
+                }
+            }
+            OpKind::MaxPool { k, stride } => {
+                if k == 0 || stride == 0 {
+                    out.push(Diagnostic::new(
+                        Code::GraphStructure,
+                        ctx(n),
+                        format!("non-positive pool kernel/stride (k {k}, stride {stride})"),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Full dataflow check: structure, then a tolerant shape walk, then the
+/// `shape_infer` recheck. Returns every finding (empty = legal graph).
+pub fn check_graph(g: &Graph) -> Vec<Diagnostic> {
+    let mut out = check_structure(g);
+    if !out.is_empty() {
+        // Shapes are meaningless on a structurally broken graph.
+        return out;
+    }
+    let mut shapes: Vec<Option<Shape>> = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        let shape = walk_node(g, n, &shapes, &mut out);
+        shapes.push(shape);
+    }
+    if out.is_empty() {
+        // The walk above mirrors every error/underflow condition in
+        // `shape_infer::infer` with checked arithmetic, so a clean walk
+        // guarantees `infer` cannot panic; run it anyway as the
+        // authoritative recheck (one implementation must not drift from
+        // the other unnoticed).
+        if let Err(e) = shape_infer::infer(g) {
+            out.push(Diagnostic::new(
+                Code::ShapeInference,
+                "graph",
+                format!("shape inference rejected a graph the dataflow walk passed: {e}"),
+            ));
+        }
+    }
+    out
+}
+
+/// One node of the tolerant walk: emit diagnostics for every violated
+/// edge invariant; return the node's output shape when it is still
+/// derivable (`None` poisons downstream shape checks without cascading
+/// spurious findings).
+fn walk_node(
+    g: &Graph,
+    n: &Node,
+    shapes: &[Option<Shape>],
+    out: &mut Vec<Diagnostic>,
+) -> Option<Shape> {
+    let input = |i: usize| shapes.get(n.inputs[i]).copied().flatten();
+    match &n.op {
+        OpKind::Input { shape } => Some(*shape),
+        OpKind::Conv2d { kh, kw, cin, cout, stride, padding, groups } => {
+            if *groups == 0 {
+                out.push(Diagnostic::new(Code::GroupDivisibility, ctx(n), "groups is 0"));
+                return None;
+            }
+            if cin % groups != 0 || cout % groups != 0 {
+                out.push(Diagnostic::new(
+                    Code::GroupDivisibility,
+                    ctx(n),
+                    format!("groups {groups} do not divide cin {cin} / cout {cout}"),
+                ));
+            }
+            if *cout < 2 {
+                out.push(Diagnostic::new(
+                    Code::ChannelFloor,
+                    ctx(n),
+                    format!("cout {cout} is below the 2-channel prune floor"),
+                ));
+            }
+            let [b, h, w, c] = input(0)?;
+            if c != *cin {
+                out.push(Diagnostic::new(
+                    Code::ChannelMismatch,
+                    ctx(n),
+                    format!("conv cin={cin} but input '{}' has {c} channels", producer(g, n, 0)),
+                ));
+                return None;
+            }
+            let oh = match (h + 2 * padding).checked_sub(*kh) {
+                Some(d) => d / stride + 1,
+                None => {
+                    out.push(Diagnostic::new(
+                        Code::ShapeInference,
+                        ctx(n),
+                        format!("kernel {kh} larger than padded input height {}", h + 2 * padding),
+                    ));
+                    return None;
+                }
+            };
+            let ow = match (w + 2 * padding).checked_sub(*kw) {
+                Some(d) => d / stride + 1,
+                None => {
+                    out.push(Diagnostic::new(
+                        Code::ShapeInference,
+                        ctx(n),
+                        format!("kernel {kw} larger than padded input width {}", w + 2 * padding),
+                    ));
+                    return None;
+                }
+            };
+            Some([b, oh, ow, *cout])
+        }
+        OpKind::Dense { cin, cout } => {
+            let [b, h, w, c] = input(0)?;
+            let feat = h * w * c;
+            if feat != *cin {
+                out.push(Diagnostic::new(
+                    Code::ChannelMismatch,
+                    ctx(n),
+                    format!("dense cin={cin} but input flattens to {feat}"),
+                ));
+                return None;
+            }
+            Some([b, 1, 1, *cout])
+        }
+        OpKind::BatchNorm { channels } => {
+            let s = input(0)?;
+            if s[3] != *channels {
+                out.push(Diagnostic::new(
+                    Code::ChannelMismatch,
+                    ctx(n),
+                    format!("bn over {channels} channels but input has {}", s[3]),
+                ));
+                return None;
+            }
+            Some(s)
+        }
+        OpKind::ReLU | OpKind::ReLU6 | OpKind::Softmax => input(0),
+        OpKind::Add => {
+            let a = input(0)?;
+            let b = input(1)?;
+            if a != b {
+                out.push(Diagnostic::new(
+                    Code::ResidualMismatch,
+                    ctx(n),
+                    format!(
+                        "add of mismatched shapes {a:?} (from '{}') vs {b:?} (from '{}')",
+                        producer(g, n, 0),
+                        producer(g, n, 1)
+                    ),
+                ));
+                return None;
+            }
+            Some(a)
+        }
+        OpKind::MaxPool { k, stride } => {
+            let [b, h, w, c] = input(0)?;
+            match (h.checked_sub(*k), w.checked_sub(*k)) {
+                (Some(dh), Some(dw)) => Some([b, dh / stride + 1, dw / stride + 1, c]),
+                _ => {
+                    out.push(Diagnostic::new(
+                        Code::ShapeInference,
+                        ctx(n),
+                        format!("pool kernel {k} larger than input {h}x{w}"),
+                    ));
+                    None
+                }
+            }
+        }
+        OpKind::GlobalAvgPool => {
+            let [b, _, _, c] = input(0)?;
+            Some([b, 1, 1, c])
+        }
+        OpKind::Flatten => {
+            let [b, h, w, c] = input(0)?;
+            Some([b, 1, 1, h * w * c])
+        }
+    }
+}
+
+/// Name of the node feeding `n`'s `i`-th input (diagnostics only).
+fn producer<'g>(g: &'g Graph, n: &Node, i: usize) -> &'g str {
+    &g.node(n.inputs[i]).name
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(cin: usize, cout: usize, groups: usize) -> OpKind {
+        OpKind::Conv2d { kh: 3, kw: 3, cin, cout, stride: 1, padding: 1, groups }
+    }
+
+    fn ids(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code.id()).collect()
+    }
+
+    #[test]
+    fn clean_graph_has_no_findings() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 3] }, vec![]);
+        let c = g.add("c", conv(3, 16, 1), vec![x]);
+        g.add("bn", OpKind::BatchNorm { channels: 16 }, vec![c]);
+        assert!(check_graph(&g).is_empty());
+    }
+
+    #[test]
+    fn channel_break_is_cpv101() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 4] }, vec![]);
+        g.add("c", conv(8, 16, 1), vec![x]);
+        assert_eq!(ids(&check_graph(&g)), ["CPV101"]);
+    }
+
+    #[test]
+    fn residual_break_is_cpv102_and_does_not_cascade() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 4] }, vec![]);
+        let a = g.add("a", conv(4, 8, 1), vec![x]);
+        let b = g.add("b", conv(4, 16, 1), vec![x]);
+        let s = g.add("add", OpKind::Add, vec![a, b]);
+        g.add("relu", OpKind::ReLU, vec![s]);
+        assert_eq!(ids(&check_graph(&g)), ["CPV102"]);
+    }
+
+    #[test]
+    fn group_and_floor_violations_found_together() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 9] }, vec![]);
+        let c = g.add("c", conv(9, 2, 2), vec![x]); // 2 does not divide 9
+        g.add("c2", conv(2, 1, 1), vec![c]); // cout 1 below the floor
+        assert_eq!(ids(&check_graph(&g)), ["CPV103", "CPV104"]);
+    }
+
+    #[test]
+    fn structural_breaks_short_circuit_the_shape_walk() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 3] }, vec![]);
+        let c = g.add("c", conv(3, 16, 1), vec![x]);
+        g.nodes[c].inputs.push(x); // conv with arity 2
+        assert_eq!(ids(&check_graph(&g)), ["CPV100"]);
+        assert_eq!(check_structure(&g).len(), 1);
+    }
+
+    #[test]
+    fn oversized_pool_is_cpv105_not_a_panic() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 2, 2, 4] }, vec![]);
+        g.add("p", OpKind::MaxPool { k: 5, stride: 1 }, vec![x]);
+        assert_eq!(ids(&check_graph(&g)), ["CPV105"]);
+    }
+}

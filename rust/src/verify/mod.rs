@@ -1,0 +1,299 @@
+//! `cprune-verify` — the semantic checker over the project's three
+//! meaning-carrying layers (DESIGN.md §13 "Semantic verification").
+//!
+//! `cprune-lint` (DESIGN.md §12) polices *source* invariants; this module
+//! polices *data* invariants — the structures whose silent corruption
+//! would poison the search itself:
+//!
+//! * [`graph`] — dataflow legality of a [`crate::graph::ops::Graph`]:
+//!   channel agreement along every edge, group divisibility, residual-add
+//!   shape coupling, min-channel floors, and a full
+//!   [`crate::graph::shape_infer`] recheck;
+//! * [`program`] — schedule legality of a [`crate::tir::Program`]
+//!   against its [`crate::tir::Workload`]: split-tree coverage and
+//!   annotation bounds;
+//! * [`artifact`] — deep validation of every versioned JSON document the
+//!   project persists (tune caches, measurement traces, Pareto
+//!   registries, device files, calibration tables, bench reports,
+//!   run-event JSONL): schema shape *plus* semantic invariants such as
+//!   frontier non-domination and canonical key round-trips through
+//!   [`crate::tir::jsonio`].
+//!
+//! Every finding is a [`Diagnostic`] with a stable [`Code`] (`CPV1xx`,
+//! IDs never reused — the mirror of cprune-lint's `CPL0xx`), a context
+//! string locating the finding (node, entry, line), and a `Display` form
+//! matching the linter's `location: ID: message` output.
+//!
+//! Enforcement happens at three boundaries: `debug_assert`-gated checks
+//! at every mutation site (`graph::prune::apply`, `ParetoSet` insertion,
+//! artifact save/load), the `cprune check [PATH...]` CLI subcommand
+//! ([`sweep`]) that CI runs over the committed tree, and the
+//! mutation-fuzz tests in `rust/tests/verify_tests.rs` that pin each
+//! corruption class to its `CPV` ID.
+
+pub mod artifact;
+pub mod graph;
+pub mod program;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Stable diagnostic identifiers. IDs are never reused; retired checks
+/// leave holes. Grouped by layer: `CPV10x` graph, `CPV11x` program,
+/// `CPV12x` artifact schema, `CPV13x` frontier, `CPV14x` event stream,
+/// `CPV19x` document-level corruption.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Code {
+    /// CPV100 — graph structure: id/index mismatch, forward-referencing
+    /// input, wrong operator arity, or a non-positive kernel/stride.
+    GraphStructure,
+    /// CPV101 — channel disagreement along a dataflow edge (conv `cin`
+    /// vs producer channels, bn width, dense flatten width).
+    ChannelMismatch,
+    /// CPV102 — residual `Add` of two differently-shaped operands.
+    ResidualMismatch,
+    /// CPV103 — grouped conv whose `groups` no longer divide `cin`/`cout`.
+    GroupDivisibility,
+    /// CPV104 — conv pruned below the 2-channel floor
+    /// (`graph::prune::PruneState` clamps there; a graph below it cannot
+    /// have come from a legal prune).
+    ChannelFloor,
+    /// CPV105 — shape inference fails or would underflow (kernel larger
+    /// than its padded input, pool larger than its input).
+    ShapeInference,
+    /// CPV110 — malformed split tree: empty, or containing a zero factor.
+    SplitMalformed,
+    /// CPV111 — split tree does not cover its extent, or pads ≥ 2×
+    /// (`extent ≤ Π factors < 2·extent` is the schedule-space contract).
+    SplitCoverage,
+    /// CPV112 — annotation out of bounds: zero parallel/vectorize/unroll,
+    /// or a non-power-of-two vector/unroll width.
+    AnnotationBounds,
+    /// CPV120 — versioned-document header problems: wrong/missing
+    /// `format`, unsupported `version`, missing top-level field.
+    BadHeader,
+    /// CPV121 — an entry of a versioned document fails to parse back
+    /// into its typed form.
+    MalformedEntry,
+    /// CPV122 — a persisted key is not canonical: it does not round-trip
+    /// byte-identically through [`crate::tir::jsonio`], or entries are
+    /// not sorted by their canonical key.
+    NonCanonicalKey,
+    /// CPV123 — a numeric field outside its domain: non-finite or
+    /// non-positive latency/seconds, accuracy outside `[0, 1]`, negative
+    /// noise sigma, zero repeats.
+    NumericRange,
+    /// CPV130 — a persisted frontier holds a dominated or duplicate
+    /// point (the [`crate::serve::ParetoSet`] invariant).
+    FrontierDominated,
+    /// CPV131 — frontier points not strictly ascending in both latency
+    /// and accuracy.
+    FrontierOrder,
+    /// CPV140 — a run-event JSONL line violates the event schema:
+    /// unparseable, unknown kind, missing/mistyped field, bad reason.
+    EventSchema,
+    /// CPV190 — a document that claims a `cprune-*` format but cannot be
+    /// parsed at all.
+    CorruptDocument,
+}
+
+impl Code {
+    /// Every code, in ID order.
+    pub const ALL: [Code; 17] = [
+        Code::GraphStructure,
+        Code::ChannelMismatch,
+        Code::ResidualMismatch,
+        Code::GroupDivisibility,
+        Code::ChannelFloor,
+        Code::ShapeInference,
+        Code::SplitMalformed,
+        Code::SplitCoverage,
+        Code::AnnotationBounds,
+        Code::BadHeader,
+        Code::MalformedEntry,
+        Code::NonCanonicalKey,
+        Code::NumericRange,
+        Code::FrontierDominated,
+        Code::FrontierOrder,
+        Code::EventSchema,
+        Code::CorruptDocument,
+    ];
+
+    /// Stable ID string (`CPV100`…). Never renumbered.
+    pub fn id(self) -> &'static str {
+        match self {
+            Code::GraphStructure => "CPV100",
+            Code::ChannelMismatch => "CPV101",
+            Code::ResidualMismatch => "CPV102",
+            Code::GroupDivisibility => "CPV103",
+            Code::ChannelFloor => "CPV104",
+            Code::ShapeInference => "CPV105",
+            Code::SplitMalformed => "CPV110",
+            Code::SplitCoverage => "CPV111",
+            Code::AnnotationBounds => "CPV112",
+            Code::BadHeader => "CPV120",
+            Code::MalformedEntry => "CPV121",
+            Code::NonCanonicalKey => "CPV122",
+            Code::NumericRange => "CPV123",
+            Code::FrontierDominated => "CPV130",
+            Code::FrontierOrder => "CPV131",
+            Code::EventSchema => "CPV140",
+            Code::CorruptDocument => "CPV190",
+        }
+    }
+
+    /// One-line description (for `cprune check --codes`).
+    pub fn summary(self) -> &'static str {
+        match self {
+            Code::GraphStructure => "graph structure: ids, forward inputs, arity, kernel/stride",
+            Code::ChannelMismatch => "channel disagreement along a dataflow edge",
+            Code::ResidualMismatch => "residual add of mismatched shapes",
+            Code::GroupDivisibility => "grouped conv whose groups do not divide its channels",
+            Code::ChannelFloor => "conv pruned below the 2-channel floor",
+            Code::ShapeInference => "shape inference fails or underflows",
+            Code::SplitMalformed => "empty split tree or zero split factor",
+            Code::SplitCoverage => "split product outside [extent, 2*extent)",
+            Code::AnnotationBounds => "parallel/vectorize/unroll annotation out of bounds",
+            Code::BadHeader => "versioned-document header missing/unsupported",
+            Code::MalformedEntry => "document entry fails to parse into its typed form",
+            Code::NonCanonicalKey => "persisted key not canonical or entries unsorted",
+            Code::NumericRange => "numeric field outside its domain",
+            Code::FrontierDominated => "frontier holds a dominated or duplicate point",
+            Code::FrontierOrder => "frontier not ascending in latency and accuracy",
+            Code::EventSchema => "run-event line violates the event schema",
+            Code::CorruptDocument => "cprune-format document does not parse",
+        }
+    }
+}
+
+/// One verification finding: a stable code, a context string locating it
+/// (graph node, document entry, JSONL line), and a human message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    pub code: Code,
+    /// Where in the checked structure the finding sits, e.g.
+    /// `node 3 (conv2d 'c1')`, `entries[2]`, `line 5`.
+    pub context: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(code: Code, context: impl Into<String>, message: impl Into<String>) -> Diagnostic {
+        Diagnostic { code, context: context.into(), message: message.into() }
+    }
+
+    /// The same diagnostic, nested one level deeper (artifact checkers
+    /// prefix entry context onto the program/frontier checkers' output).
+    pub fn nested(mut self, prefix: &str) -> Diagnostic {
+        self.context = format!("{prefix}: {}", self.context);
+        self
+    }
+}
+
+/// `context: CPVnnn: message` — the same shape as cprune-lint's
+/// `file:line: CPLnnn: message`, so CI output reads uniformly.
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}: {}", self.context, self.code.id(), self.message)
+    }
+}
+
+/// Directory names [`sweep`] never descends into — the same skip set as
+/// `cprune-lint`'s workspace walker (`fixtures` keeps intentionally
+/// corrupt test inputs out of the deny-by-default CI sweep).
+pub const SKIP_DIRS: [&str; 3] = ["target", ".git", "fixtures"];
+
+/// Walk `root` for `.json`/`.jsonl` files, run [`artifact::check_text`]
+/// on each, and return `(workspace-relative path, findings)` for every
+/// file recognized as a cprune artifact — including clean ones (empty
+/// findings), so callers can report coverage. Sorted by path.
+pub fn sweep(root: &Path) -> Result<Vec<(String, Vec<Diagnostic>)>, String> {
+    let mut files = Vec::new();
+    collect_artifact_files(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("failed to read {}: {e}", path.display()))?;
+        if let Some(diags) = artifact::check_text(&text) {
+            out.push((relative_path(root, path), diags));
+        }
+    }
+    Ok(out)
+}
+
+/// Check one file directly (the CLI's file-argument path). Returns
+/// `None` when the file is not a recognized cprune artifact.
+pub fn check_file(path: &Path) -> Result<Option<Vec<Diagnostic>>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("failed to read {}: {e}", path.display()))?;
+    Ok(artifact::check_text(&text))
+}
+
+/// Recursively gather `.json`/`.jsonl` files, skipping [`SKIP_DIRS`].
+fn collect_artifact_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("failed to list {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("failed to list {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if !SKIP_DIRS.contains(&name.as_ref()) {
+                collect_artifact_files(&path, out)?;
+            }
+        } else if name.ends_with(".json") || name.ends_with(".jsonl") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// `path` relative to `root`, `/`-separated (falls back to the full path
+/// when `path` is not under `root`, e.g. explicit absolute arguments).
+fn relative_path(root: &Path, path: &Path) -> String {
+    match path.strip_prefix(root) {
+        Ok(rel) => {
+            let parts: Vec<String> =
+                rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+            parts.join("/")
+        }
+        Err(_) => path.display().to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn code_ids_are_stable() {
+        let ids: Vec<&str> = Code::ALL.iter().map(|c| c.id()).collect();
+        assert_eq!(
+            ids,
+            [
+                "CPV100", "CPV101", "CPV102", "CPV103", "CPV104", "CPV105", "CPV110", "CPV111",
+                "CPV112", "CPV120", "CPV121", "CPV122", "CPV123", "CPV130", "CPV131", "CPV140",
+                "CPV190",
+            ]
+        );
+    }
+
+    #[test]
+    fn diagnostic_display_matches_lint_shape() {
+        let d = Diagnostic::new(Code::ChannelMismatch, "node 3 (conv2d 'c1')", "cin 64 != 32");
+        assert_eq!(d.to_string(), "node 3 (conv2d 'c1'): CPV101: cin 64 != 32");
+        let n = d.nested("entries[2]");
+        assert_eq!(n.to_string(), "entries[2]: node 3 (conv2d 'c1'): CPV101: cin 64 != 32");
+    }
+
+    #[test]
+    fn summaries_are_nonempty_and_distinct() {
+        let mut seen = std::collections::BTreeSet::new();
+        for c in Code::ALL {
+            assert!(!c.summary().is_empty());
+            assert!(seen.insert(c.summary()), "duplicate summary for {}", c.id());
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! ProgramCheck: schedule legality of a [`Program`] against its
+//! [`Workload`] (DESIGN.md §13).
+//!
+//! Grown out of `Program::validate` (which now delegates here and
+//! surfaces the first finding): every tile-split axis must be
+//! well-formed (CPV110) and cover its loop extent without more than 2×
+//! overshoot (CPV111), and the parallel/vectorize/unroll annotations
+//! must be positive — with vectorize and unroll powers of two, matching
+//! the tuner's sample sets and the lowering's assumptions (CPV112).
+//! The check is allocation-free on the passing path so the tuner's
+//! `debug_assert!(validate(..).is_ok())` in `sample_into` stays cheap.
+
+use super::{Code, Diagnostic};
+use crate::tir::loopnest::Workload;
+use crate::tir::program::Program;
+
+/// Every schedule-legality finding for `p` scheduled over `w` (empty =
+/// legal program).
+pub fn check_program(p: &Program, w: &Workload) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let axes: [(&str, &[usize], usize); 4] = [
+        ("spatial", &p.spatial_splits, w.oh * w.ow),
+        ("ff", &p.ff_splits, w.ff),
+        ("ax3", &p.ax3_splits, w.ff),
+        ("ic", &p.ic_splits, w.ic),
+    ];
+    for (name, splits, extent) in axes {
+        if splits.is_empty() {
+            out.push(Diagnostic::new(
+                Code::SplitMalformed,
+                format!("{name} splits"),
+                "axis has no tile factors",
+            ));
+            continue;
+        }
+        if splits.contains(&0) {
+            out.push(Diagnostic::new(
+                Code::SplitMalformed,
+                format!("{name} splits"),
+                format!("zero tile factor in {splits:?}"),
+            ));
+            continue;
+        }
+        let prod: usize = splits.iter().product();
+        if prod < extent || prod >= 2 * extent.max(1) {
+            out.push(Diagnostic::new(
+                Code::SplitCoverage,
+                format!("{name} splits"),
+                format!("{splits:?} (product {prod}) do not cover extent {extent} within 2x"),
+            ));
+        }
+    }
+    if p.parallel == 0 {
+        out.push(Diagnostic::new(Code::AnnotationBounds, "annotations", "parallel degree is 0"));
+    }
+    if p.vectorize == 0 || !p.vectorize.is_power_of_two() {
+        out.push(Diagnostic::new(
+            Code::AnnotationBounds,
+            "annotations",
+            format!("vectorize width {} is not a power of two", p.vectorize),
+        ));
+    }
+    if p.unroll == 0 || !p.unroll.is_power_of_two() {
+        out.push(Diagnostic::new(
+            Code::AnnotationBounds,
+            "annotations",
+            format!("unroll factor {} is not a power of two", p.unroll),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::OpKind;
+
+    fn wl(ff: usize) -> Workload {
+        let op =
+            OpKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: ff, stride: 1, padding: 1, groups: 1 };
+        Workload::from_conv(&op, [1, 14, 14, 64], vec![])
+    }
+
+    fn ids(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code.id()).collect()
+    }
+
+    #[test]
+    fn naive_program_is_legal() {
+        let w = wl(128);
+        let p = Program::naive(&w);
+        assert!(check_program(&p, &w).is_empty());
+        assert!(p.validate(&w).is_ok());
+    }
+
+    #[test]
+    fn undercovering_axis_is_cpv111() {
+        let w = wl(128);
+        let mut p = Program::naive(&w);
+        p.ff_splits = vec![4, 4]; // product 16 < 128
+        assert_eq!(ids(&check_program(&p, &w)), ["CPV111"]);
+    }
+
+    #[test]
+    fn zero_factor_and_empty_axis_are_cpv110() {
+        let w = wl(128);
+        let mut p = Program::naive(&w);
+        p.ff_splits = vec![128, 0];
+        p.ic_splits = Vec::new();
+        assert_eq!(ids(&check_program(&p, &w)), ["CPV110", "CPV110"]);
+    }
+
+    #[test]
+    fn non_pow2_vectorize_is_cpv112() {
+        let w = wl(128);
+        let mut p = Program::naive(&w);
+        p.vectorize = 3;
+        assert_eq!(ids(&check_program(&p, &w)), ["CPV112"]);
+    }
+
+    #[test]
+    fn findings_accumulate_across_axes_and_annotations() {
+        let w = wl(128);
+        let mut p = Program::naive(&w);
+        p.spatial_splits = vec![7]; // 7 < 196
+        p.unroll = 0;
+        assert_eq!(ids(&check_program(&p, &w)), ["CPV111", "CPV112"]);
+    }
+}

@@ -1,0 +1,281 @@
+//! Mutation-fuzz integration tests for the semantic verifier
+//! (DESIGN.md §13): start from known-valid graphs, schedules and
+//! persisted artifacts, apply one seeded single-field corruption per
+//! case, and pin every corruption class to its stable `CPVnnn` ID.
+
+use cprune::device::DeviceSpec;
+use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::graph::ops::OpKind;
+use cprune::graph::prune::{self, PruneState};
+use cprune::serve::Registry;
+use cprune::tir::jsonio::{program_to_json, workload_to_json};
+use cprune::tir::{Program, Workload};
+use cprune::tuner::TuneCache;
+use cprune::util::json::Json;
+use cprune::verify::{artifact, graph as vgraph, program as vprogram, Diagnostic};
+
+fn wl(ff: usize) -> Workload {
+    let op = OpKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: ff, stride: 1, padding: 1, groups: 1 };
+    Workload::from_conv(&op, [1, 14, 14, 64], vec!["bn", "relu"])
+}
+
+fn ids(diags: &[Diagnostic]) -> Vec<&'static str> {
+    diags.iter().map(|d| d.code.id()).collect()
+}
+
+// ---------------------------------------------------------------- graphs
+
+#[test]
+fn model_zoo_graphs_are_clean() {
+    for kind in [
+        ModelKind::ResNet8Cifar,
+        ModelKind::Vgg16Cifar,
+        ModelKind::ResNet18ImageNet,
+        ModelKind::MobileNetV2ImageNet,
+        ModelKind::MnasNet10ImageNet,
+    ] {
+        let m = Model::build(kind, 0);
+        let diags = vgraph::check_graph(&m.graph);
+        assert!(diags.is_empty(), "{}: {:?}", m.kind.name(), diags);
+    }
+}
+
+#[test]
+fn pruned_graphs_stay_clean() {
+    let m = Model::build(ModelKind::Vgg16Cifar, 0);
+    let mut st = PruneState::full(&m);
+    st.shrink(m.prunable[0], 32);
+    let g = prune::apply(&m.graph, &st.cout).unwrap();
+    assert!(vgraph::check_graph(&g).is_empty());
+
+    let m = Model::build(ModelKind::ResNet18ImageNet, 0);
+    let mut st = PruneState::full(&m);
+    st.shrink(m.prunable[2], 16);
+    let g = prune::apply(&m.graph, &st.cout).unwrap();
+    assert!(vgraph::check_graph(&g).is_empty());
+}
+
+#[test]
+fn conv_cin_corruption_is_cpv101() {
+    let mut g = Model::build(ModelKind::Vgg16Cifar, 0).graph;
+    let conv = g.conv_ids()[0];
+    if let OpKind::Conv2d { cin, .. } = &mut g.nodes[conv].op {
+        *cin += 1;
+    }
+    assert_eq!(ids(&vgraph::check_graph(&g)), ["CPV101"]);
+}
+
+#[test]
+fn residual_rewire_is_cpv102() {
+    let mut g = Model::build(ModelKind::ResNet8Cifar, 0).graph;
+    let add = g
+        .nodes
+        .iter()
+        .find(|n| matches!(n.op, OpKind::Add))
+        .map(|n| n.id)
+        .expect("resnet-8 has residual adds");
+    // Point one operand at the network input (different shape entirely).
+    g.nodes[add].inputs[1] = 0;
+    let diags = vgraph::check_graph(&g);
+    assert!(ids(&diags).contains(&"CPV102"), "{diags:?}");
+}
+
+#[test]
+fn group_divisibility_corruption_is_cpv103() {
+    let mut g = Model::build(ModelKind::MobileNetV2ImageNet, 0).graph;
+    let dw = g
+        .nodes
+        .iter()
+        .find(|n| n.op.mnemonic() == "dwconv2d")
+        .map(|n| n.id)
+        .expect("mobilenet-v2 has depthwise convs");
+    if let OpKind::Conv2d { groups, .. } = &mut g.nodes[dw].op {
+        *groups -= 1; // no longer divides cin/cout
+    }
+    let diags = vgraph::check_graph(&g);
+    assert!(ids(&diags).contains(&"CPV103"), "{diags:?}");
+}
+
+#[test]
+fn channel_floor_corruption_is_cpv104() {
+    let mut g = Model::build(ModelKind::Vgg16Cifar, 0).graph;
+    let conv = g.conv_ids()[0];
+    if let OpKind::Conv2d { cout, .. } = &mut g.nodes[conv].op {
+        *cout = 1;
+    }
+    let diags = vgraph::check_graph(&g);
+    assert!(ids(&diags).contains(&"CPV104"), "{diags:?}");
+}
+
+#[test]
+fn arity_corruption_is_cpv100_and_fails_validate() {
+    let mut g = Model::build(ModelKind::Vgg16Cifar, 0).graph;
+    let conv = g.conv_ids()[0];
+    let input = g.nodes[conv].inputs[0];
+    g.nodes[conv].inputs.push(input);
+    assert_eq!(ids(&vgraph::check_graph(&g)), ["CPV100"]);
+    // Graph::validate delegates to the same pass.
+    let err = g.validate().unwrap_err();
+    assert!(err.contains("CPV100"), "{err}");
+}
+
+// -------------------------------------------------------------- programs
+
+#[test]
+fn tile_factor_corruptions_have_stable_ids() {
+    let w = wl(64);
+    let base = Program::naive(&w);
+    assert!(vprogram::check_program(&base, &w).is_empty());
+
+    let mut p = base.clone();
+    p.ff_splits = vec![7]; // product 7 < 64: illegal tile factor
+    assert_eq!(ids(&vprogram::check_program(&p, &w)), ["CPV111"]);
+
+    let mut p = base.clone();
+    p.ic_splits = vec![64, 0];
+    assert_eq!(ids(&vprogram::check_program(&p, &w)), ["CPV110"]);
+
+    let mut p = base.clone();
+    p.spatial_splits = Vec::new();
+    assert_eq!(ids(&vprogram::check_program(&p, &w)), ["CPV110"]);
+
+    let mut p = base.clone();
+    p.vectorize = 3;
+    assert_eq!(ids(&vprogram::check_program(&p, &w)), ["CPV112"]);
+
+    // Program::validate surfaces the same diagnostic.
+    let err = p.validate(&w).unwrap_err();
+    assert!(err.contains("CPV112"), "{err}");
+}
+
+// ------------------------------------------------------------- artifacts
+
+#[test]
+fn cache_corruptions_have_stable_ids() {
+    let cache = TuneCache::new();
+    cache.put(wl(64), Program::naive(&wl(64)), 0.001, 5);
+    let text = cache.to_json("devA").to_string();
+    assert_eq!(artifact::check_text(&text), Some(vec![]));
+
+    // negative latency
+    let broken = text.replace("\"latency\":0.001", "\"latency\":-1");
+    assert_ne!(broken, text);
+    assert!(ids(&artifact::check_text(&broken).unwrap()).contains(&"CPV123"));
+
+    // non-canonical workload key (64.5 truncates back to 64 on parse)
+    let broken = text.replace("\"ff\":64", "\"ff\":64.5");
+    assert_ne!(broken, text);
+    assert!(ids(&artifact::check_text(&broken).unwrap()).contains(&"CPV122"));
+
+    // cached program no longer legal for its workload
+    let broken = text.replace("\"ff_splits\":[64]", "\"ff_splits\":[7]");
+    assert_ne!(broken, text);
+    assert!(ids(&artifact::check_text(&broken).unwrap()).contains(&"CPV111"));
+}
+
+#[test]
+fn trace_key_corruption_is_cpv122() {
+    let w = wl(64);
+    let p = Program::naive(&w);
+    let entry = Json::obj(vec![
+        ("workload", workload_to_json(&w)),
+        ("program", program_to_json(&p)),
+        ("seconds", Json::Num(0.001)),
+    ]);
+    let text = Json::obj(vec![
+        ("format", Json::Str("cprune-measure-trace".into())),
+        ("version", Json::Num(1.0)),
+        ("device", DeviceSpec::kryo385().to_json()),
+        ("noise_sigma", Json::Num(0.0)),
+        ("latencies", Json::Arr(vec![entry])),
+        ("measurements", Json::Arr(Vec::new())),
+    ])
+    .to_string();
+    assert_eq!(artifact::check_text(&text), Some(vec![]));
+
+    let broken = text.replace("\"ff\":64", "\"ff\":64.5");
+    assert_ne!(broken, text);
+    assert!(ids(&artifact::check_text(&broken).unwrap()).contains(&"CPV122"));
+}
+
+#[test]
+fn registry_frontier_corruptions_have_stable_ids() {
+    let point = |lat: f64, acc: f64| {
+        format!("{{\"iteration\":0,\"latency\":{lat},\"accuracy\":{acc},\"channels\":{{}}}}")
+    };
+    let doc = |points: &[String]| {
+        format!(
+            "{{\"format\":\"cprune-pareto-registry\",\"version\":1,\"entries\":[{{\
+             \"model\":\"m\",\"device\":\"d\",\"pareto\":{{\"points\":[{}]}}}}]}}",
+            points.join(",")
+        )
+    };
+
+    let clean = doc(&[point(0.004, 0.91), point(0.010, 0.93)]);
+    assert_eq!(artifact::check_text(&clean), Some(vec![]));
+    assert!(Registry::parse(&clean).is_ok());
+
+    // dominated point: same accuracy, strictly slower
+    let dominated = doc(&[point(0.004, 0.91), point(0.010, 0.91)]);
+    assert!(ids(&artifact::check_text(&dominated).unwrap()).contains(&"CPV130"));
+
+    // order break: mutually non-dominated but sorted descending
+    let unsorted = doc(&[point(0.010, 0.93), point(0.004, 0.91)]);
+    assert!(ids(&artifact::check_text(&unsorted).unwrap()).contains(&"CPV131"));
+
+    // strict load: no silent repair of a corrupt persisted frontier
+    for broken in [&dominated, &unsorted] {
+        let err = Registry::parse(broken).unwrap_err();
+        assert!(err.contains("refusing to repair"), "{err}");
+    }
+}
+
+#[test]
+fn events_log_corruptions_are_cpv140() {
+    let golden = include_str!("golden/run_events.jsonl");
+    assert_eq!(artifact::check_text(golden), Some(vec![]));
+
+    let truncated = format!("{golden}{{\"event\":\"baseline_tuned\",\"fps\":4}}\n");
+    assert!(ids(&artifact::check_text(&truncated).unwrap()).contains(&"CPV140"));
+
+    let unknown = format!("{golden}{{\"event\":\"mystery\"}}\n");
+    assert!(ids(&artifact::check_text(&unknown).unwrap()).contains(&"CPV140"));
+}
+
+// ------------------------------------------------------------------- CLI
+
+#[test]
+fn cli_check_sweeps_and_sets_exit_codes() {
+    let dir = std::env::temp_dir().join(format!("cprune_check_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |args: &[&str]| cprune::cli::run(args.iter().map(|s| s.to_string()).collect());
+
+    let cache = TuneCache::new();
+    cache.put(wl(64), Program::naive(&wl(64)), 0.001, 5);
+    let text = cache.to_json("devA").to_string();
+    std::fs::write(dir.join("cache.json"), &text).unwrap();
+    std::fs::write(dir.join("foreign.json"), "{\"hello\":\"world\"}").unwrap();
+    let dir_arg = dir.to_str().unwrap();
+    assert_eq!(run(&["check", dir_arg]), 0);
+    assert_eq!(run(&["check", dir.join("cache.json").to_str().unwrap()]), 0);
+
+    std::fs::write(dir.join("bad.json"), text.replace("\"latency\":0.001", "\"latency\":-1"))
+        .unwrap();
+    assert_eq!(run(&["check", dir_arg]), 1);
+    assert_eq!(run(&["check", dir.join("bad.json").to_str().unwrap()]), 1);
+
+    assert_eq!(run(&["check", "--codes"]), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// The committed tree itself must be clean — the same contract the CI
+// `check-artifacts` job enforces with `cprune check .`.
+#[test]
+fn committed_artifacts_are_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let results = cprune::verify::sweep(&root).expect("sweep failed");
+    assert!(!results.is_empty(), "sweep found no artifacts — walker broken?");
+    for (file, diags) in &results {
+        assert!(diags.is_empty(), "{file}: {:?}", diags);
+    }
+}
