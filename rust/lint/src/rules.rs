@@ -11,6 +11,13 @@
 //!   that feeds it: `tuner/`, `device/`, `serve/`, `compiler/`. A wall
 //!   clock, environment read or `f32` round-trip in these modules can
 //!   silently change tuning decisions between two "identical" runs.
+//! * **wall-clock exemption** — `device/remote/` is the remote plane's
+//!   IO edge (DESIGN.md §14): it may read `Instant` for deadlines and
+//!   retry backoff, because timeouts only decide *which worker* computes
+//!   a value, never the value itself (jitter is RNG-drawn client-side
+//!   and results reassemble by batch index). Only the `Instant`/
+//!   `SystemTime` arm of CPL003 is exempt there — environment reads,
+//!   `f32` and lossy casts stay policed.
 
 use crate::lexer::{lex, TokKind, Token};
 use std::collections::BTreeSet;
@@ -120,6 +127,18 @@ pub fn is_deterministic_path(rel: &str) -> bool {
     DETERMINISTIC_PREFIXES.iter().any(|p| rel.starts_with(p))
 }
 
+/// Path prefixes where the `Instant`/`SystemTime` arm of CPL003 is
+/// exempt: the remote measurement plane's IO edge (DESIGN.md §14) reads
+/// the clock for deadlines and retry backoff, which never feed a
+/// measured value. Environment reads and CPL004/CPL006 stay policed.
+pub const WALLCLOCK_EXEMPT_PREFIXES: [&str; 1] = ["rust/src/device/remote/"];
+
+/// True for deterministic-module paths that may still read the wall
+/// clock (see [`WALLCLOCK_EXEMPT_PREFIXES`]).
+pub fn is_wallclock_exempt_path(rel: &str) -> bool {
+    WALLCLOCK_EXEMPT_PREFIXES.iter().any(|p| rel.starts_with(p))
+}
+
 /// Run every rule over one file. `rel` is the workspace-root-relative
 /// path with `/` separators — rule scoping keys off it. Returned
 /// diagnostics are sorted by (line, rule) and already filtered through
@@ -130,6 +149,7 @@ pub fn check_source(rel: &str, src: &str) -> Vec<Diagnostic> {
     let in_tests = test_lines(toks);
     let in_lib = is_library_path(rel);
     let in_det = is_deterministic_path(rel);
+    let clock_exempt = is_wallclock_exempt_path(rel);
     let float_names = if in_det { collect_float_names(toks) } else { BTreeSet::new() };
     let mut diags: Vec<Diagnostic> = Vec::new();
 
@@ -183,7 +203,7 @@ pub fn check_source(rel: &str, src: &str) -> Vec<Diagnostic> {
                 ),
                 &mut diags,
             ),
-            "Instant" | "SystemTime" if in_det => emit(
+            "Instant" | "SystemTime" if in_det && !clock_exempt => emit(
                 Rule::WallClock,
                 t.line,
                 format!("{} in a deterministic module; measurement depends on it", t.text),
@@ -599,6 +619,24 @@ mod tests {
         assert!(lib(src).is_empty());
         let env = "fn f() -> Option<String> { std::env::var(\"X\").ok() }";
         assert_eq!(ids(&det(env)), ["CPL003"]);
+    }
+
+    #[test]
+    fn cpl003_clock_arm_is_exempt_in_device_remote_only() {
+        let clock = "fn f() -> std::time::Instant { std::time::Instant::now() }";
+        // the remote plane's IO edge may read the clock for deadlines...
+        assert!(check_source("rust/src/device/remote/transport.rs", clock).is_empty());
+        // ...but the rest of device/ (exemption boundary) may not
+        assert_eq!(ids(&check_source("rust/src/device/target.rs", clock)), ["CPL003"]);
+        assert_eq!(ids(&check_source("rust/src/device/replay.rs", clock)), ["CPL003"]);
+        // and the exemption does not reach the other CPL003 arm or CPL004/6
+        let env = "fn f() -> Option<String> { std::env::var(\"X\").ok() }";
+        assert_eq!(ids(&check_source("rust/src/device/remote/pool.rs", env)), ["CPL003"]);
+        let f32src = "fn f(x: f32) -> f32 { x }";
+        assert_eq!(
+            ids(&check_source("rust/src/device/remote/pool.rs", f32src)),
+            ["CPL004", "CPL004"]
+        );
     }
 
     #[test]

@@ -1,0 +1,3 @@
+pub fn env_marker() -> Option<String> {
+    std::env::var("CPRUNE_THREADS").ok()
+}

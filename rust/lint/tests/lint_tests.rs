@@ -15,6 +15,9 @@ const LIB: &str = "rust/src/fixture.rs";
 const DET: &str = "rust/src/tuner/fixture.rs";
 /// Neither scope: only the global rules apply.
 const BENCH: &str = "rust/benches/fixture.rs";
+/// Deterministic scope carrying the CPL003 clock carve-out (the remote
+/// measurement plane's IO edge, DESIGN.md §14).
+const REMOTE: &str = "rust/src/device/remote/fixture.rs";
 
 fn ids(path: &str, src: &str) -> Vec<&'static str> {
     check_source(path, src).iter().map(|d| d.rule.id()).collect()
@@ -50,6 +53,21 @@ fn cpl003_wall_clock() {
     assert_eq!(ids(DET, include_str!("fixtures/cpl003_allowed.rs")), Vec::<&str>::new());
     // Outside the deterministic modules the same source is fine.
     assert_eq!(ids(BENCH, include_str!("fixtures/cpl003_fail.rs")), Vec::<&str>::new());
+}
+
+#[test]
+fn cpl003_clock_carve_out_is_scoped_to_the_remote_plane() {
+    // `rust/src/device/remote/` is the remote plane's IO edge: its
+    // deadline/backoff `Instant` reads are the one documented CPL003
+    // clock exemption (DESIGN.md §14).
+    assert_eq!(ids(REMOTE, include_str!("fixtures/cpl003_fail.rs")), Vec::<&str>::new());
+    // The carve-out is surgical: environment reads (CPL003's other
+    // arm) and the float rules still apply under the exempt prefix.
+    assert_eq!(ids(REMOTE, include_str!("fixtures/cpl003_env_fail.rs")), ["CPL003"]);
+    assert_eq!(ids(REMOTE, include_str!("fixtures/cpl004_fail.rs")), ["CPL004"]);
+    // And elsewhere in the device layer the clock arm still fires.
+    let det_device = "rust/src/device/fixture.rs";
+    assert_eq!(ids(det_device, include_str!("fixtures/cpl003_fail.rs")), ["CPL003"]);
 }
 
 #[test]

@@ -12,14 +12,22 @@
 //!   report   — regenerate a paper experiment (fig1..fig11, table1, table2)
 //!   check    — sweep persisted artifacts through the semantic verifier
 //!              (DESIGN.md §13; exits nonzero on findings)
+//!   worker   — serve `cprune-remote` measurement frames (DESIGN.md §14)
+//!              over stdin/stdout or TCP for a `--target remote:...` run
 //!   e2e-info — show the AOT artifact inventory the e2e path consumes
 //!
 //! `run`/`prune`/`tune` accept `--cache FILE` and `fleet` accepts
 //! `--cache-dir DIR`: tuned programs persist as versioned JSON, so a
 //! repeated run warm-starts and re-measures (close to) nothing.
+//!
+//! `run`/`prune` also accept `--target remote:NAME` (spawning `--workers`
+//! `cprune worker` subprocesses) or `remote:NAME@HOST:PORT,...` (TCP),
+//! and `fleet --workers N` measures every device on its own remote pool —
+//! both bit-identical to in-process measurement (DESIGN.md §14).
 
 use crate::compiler;
-use crate::device::{DeviceSpec, Simulator, Target, TargetRegistry};
+use crate::device::remote::{worker, RemoteOptions, RemoteTarget};
+use crate::device::{AnalyticTarget, DeviceSpec, Simulator, Target, TargetRegistry};
 use crate::exp::{self, Scale};
 use crate::graph::model_zoo::{Model, ModelKind};
 use crate::run::{
@@ -181,8 +189,9 @@ fn flag_or<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T
 
 /// Shared wiring of the `run`/`prune` subcommands: a [`RunBuilder`] from
 /// the common flags (`--iters`, `--target-acc`, `--seed`, `--cache`,
-/// `--events`, `--target`, `--record-trace`, `--replay-trace`). `Err`
-/// carries the process exit code — diagnostics are already printed.
+/// `--events`, `--target`, `--record-trace`, `--replay-trace`,
+/// `--workers`, `--remote-trace`). `Err` carries the process exit code —
+/// diagnostics are already printed.
 fn run_builder_from_flags(
     args: &Args,
     model_kind: ModelKind,
@@ -214,6 +223,16 @@ fn run_builder_from_flags(
     }
     if let Some(path) = args.flags.get("record-trace") {
         builder = builder.record_trace(path);
+    }
+    match flag_or(args, "workers", 1usize) {
+        Ok(n) => builder = builder.workers(n),
+        Err(e) => {
+            eprintln!("{e}");
+            return Err(2);
+        }
+    }
+    if let Some(path) = args.flags.get("remote-trace") {
+        builder = builder.remote_trace(path);
     }
     if let Some(path) = args.flags.get("calibration") {
         match crate::device::calibration::CalibrationTable::load(path) {
@@ -293,12 +312,16 @@ USAGE:
   cprune run       [--pruner P] [--model M] [--device D | --target T] [--target-acc A] [--iters N]
                    [--seed S] [--cache FILE] [--events FILE.jsonl] [--registry FILE]
                    [--record-trace FILE] [--replay-trace FILE] [--device-file FILE]
-                   [--calibration FILE] [--verbose] [--quiet]
+                   [--calibration FILE] [--workers N] [--remote-trace FILE]
+                   [--verbose] [--quiet]
   cprune prune     [--model M] [--device D | --target T] [--target-acc A] [--iters N] [--seed S]
                    [--out FILE.json] [--cache FILE] [--events FILE.jsonl]
-                   [--record-trace FILE] [--replay-trace FILE]
+                   [--record-trace FILE] [--replay-trace FILE] [--workers N]
+                   [--remote-trace FILE]
   cprune tune      [--model M] [--device D] [--seed S] [--cache FILE]
   cprune fleet     [--model M] [--devices d1,d2,...] [--seed S] [--threads N] [--quick] [--cache-dir DIR]
+                   [--workers N]
+  cprune worker    [--stdio | --listen ADDR] [--device D]     # remote measurement worker (DESIGN.md §14)
   cprune serve     [--model M] [--devices d1,d2,...] [--rps R] [--requests N] [--slo-ms T]
                    [--accuracy-floor A] [--trace-seed S] [--max-batch B] [--iters N]
                    [--registry FILE] [--no-search] [--seed S]
@@ -323,9 +346,10 @@ USAGE:
 TARGETS (DESIGN.md §11):
   Every measurement flows through one `device::Target` plane. --device D
   picks the analytic roofline for a registry device; `run`/`prune` also
-  accept --target with a provider prefix: `analytic:D` (default) or
+  accept --target with a provider prefix: `analytic:D` (default),
   `lut:D` (per-layer latency tables built for the model at startup,
-  analytic fallback for uncovered workloads); --calibration FILE applies
+  analytic fallback for uncovered workloads), or `remote:D` (below);
+  --calibration FILE applies
   a `cprune calibrate --save` table to the device spec first.
   --record-trace FILE saves
   every measurement as a versioned `cprune-measure-trace` JSON;
@@ -333,6 +357,18 @@ TARGETS (DESIGN.md §11):
   recorded run's results and event stream byte-for-byte on any machine
   (same model/seed/budget flags). User-defined devices load from
   `cprune-devices` JSON files via --device-file or CPRUNE_DEVICES.
+
+REMOTE (DESIGN.md §14):
+  --target remote:D measures on a pool of out-of-process workers:
+  --workers N spawns N `cprune worker --stdio` subprocesses of this
+  binary; `remote:D@HOST:PORT[,HOST:PORT...]` connects one TCP worker
+  per address (each running `cprune worker --listen ADDR --device D`).
+  Results are bit-identical to in-process measurement for any worker
+  count — partitioning, completion order, worker death and retries never
+  change values. --remote-trace FILE records every remote measurement
+  (with its jitter draws) as a `cprune-remote-trace` JSON that
+  --replay-trace replays offline; `fleet --workers N` gives every device
+  its own pool.
 
 RUN:
   `run` executes any pruning algorithm through the uniform run layer
@@ -414,9 +450,10 @@ pub fn run(argv: Vec<String>) -> i32 {
         }
     }
     // The spec subcommands consume (default Kryo 385). --target may carry
-    // a provider prefix (analytic:/lut:); only run/prune build non-analytic
-    // providers, so a lut: request anywhere else is an error, not a silent
-    // analytic downgrade — and --device never takes a prefix.
+    // a provider prefix (analytic:/lut:/remote:); only run/prune build
+    // non-analytic providers, so a lut:/remote: request anywhere else is
+    // an error, not a silent analytic downgrade — and --device never
+    // takes a prefix.
     let device = {
         let (name, from_target) = match (args.flags.get("target"), args.flags.get("device")) {
             (Some(t), _) => (t.as_str(), true),
@@ -434,11 +471,22 @@ pub fn run(argv: Vec<String>) -> i32 {
                 }
                 rest
             }
+            Some(("remote", rest)) if from_target => {
+                if !matches!(cmd.as_str(), "run" | "prune") {
+                    eprintln!(
+                        "--target remote:... is only supported by `run`/`prune` \
+                         (fleet takes --workers instead); got '{name}'"
+                    );
+                    return 2;
+                }
+                // remote:NAME@HOST:PORT,... — the registry only sees NAME
+                rest.split_once('@').map_or(rest, |(b, _)| b)
+            }
             Some((provider, _)) => {
                 if from_target {
                     eprintln!(
                         "unknown target provider '{provider}:' in '{name}' \
-                         (want analytic:NAME or lut:NAME)"
+                         (want analytic:NAME, lut:NAME or remote:NAME[@HOST:PORT,...])"
                     );
                 } else {
                     eprintln!(
@@ -550,10 +598,29 @@ pub fn run(argv: Vec<String>) -> i32 {
             if let Some(path) = args.flags.get("record-trace") {
                 println!("trace: recorded measurement trace to {path}");
             }
+            if let Some(path) = args.flags.get("remote-trace") {
+                println!("trace: recorded remote measurement trace to {path}");
+            }
             if let Some(path) = args.flags.get("replay-trace") {
                 println!("trace: replayed measurements from {path}");
             }
             0
+        }
+        "worker" => {
+            // Stdout is the wire in --stdio mode: anything human goes to
+            // stderr (serve_listen logs there too).
+            let target = AnalyticTarget::new(device);
+            let outcome = match args.flags.get("listen") {
+                Some(addr) => worker::serve_listen(addr, &target),
+                None => worker::serve_stdio(&target),
+            };
+            match outcome {
+                Ok(()) => 0,
+                Err(e) => {
+                    eprintln!("cprune worker: {e}");
+                    1
+                }
+            }
         }
         "prune" => {
             let builder =
@@ -627,9 +694,21 @@ pub fn run(argv: Vec<String>) -> i32 {
         }
         "fleet" => {
             let model = Model::build(model_kind, seed);
+            let device_list = args
+                .flags
+                .get("devices")
+                .cloned()
+                .unwrap_or_else(|| "kryo280,kryo385,kryo585,mali-g72".to_string());
             let specs = match parse_devices(&args, &registry, "kryo280,kryo385,kryo585,mali-g72") {
                 Ok(s) => s,
                 Err(code) => return code,
+            };
+            let workers = match flag_or(&args, "workers", 0usize) {
+                Ok(n) => n,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
             };
             let threads = match args.flags.get("threads") {
                 Some(t) => match t.parse() {
@@ -650,7 +729,29 @@ pub fn run(argv: Vec<String>) -> i32 {
                 threads,
                 cross_seed: true,
             };
-            let mut fleet = FleetSession::new(specs, opts, seed);
+            // --workers N: one remote pool of N subprocess workers per
+            // device (DESIGN.md §14) — same results as in-process, the
+            // registry names resolve again inside each worker process.
+            let mut fleet = if workers > 0 {
+                let mut targets: Vec<Box<dyn Target>> = Vec::new();
+                for name in device_list.split(',').filter(|s| !s.is_empty()) {
+                    match RemoteTarget::spawn(name, workers, RemoteOptions::default()) {
+                        Ok(t) => targets.push(Box::new(t)),
+                        Err(e) => {
+                            eprintln!("remote pool for '{name}': {e}");
+                            return 1;
+                        }
+                    }
+                }
+                println!(
+                    "fleet: {} remote worker(s) per device across {} device(s)",
+                    workers,
+                    targets.len()
+                );
+                FleetSession::from_targets(targets, opts, seed)
+            } else {
+                FleetSession::new(specs, opts, seed)
+            };
             if let Some(dir) = args.flags.get("cache-dir") {
                 match fleet.load_caches(dir) {
                     Ok(n) if n > 0 => println!("cache: warm-started {n} device(s) from {dir}"),
@@ -920,9 +1021,10 @@ pub fn run(argv: Vec<String>) -> i32 {
                 &rows,
             );
             println!(
-                "\nresolve with --device/--target (run/prune also take lut:NAME or \
-                 analytic:NAME); add devices via --device-file FILE or the \
-                 CPRUNE_DEVICES environment variable (':'-separated files)."
+                "\nresolve with --device/--target (run/prune also take lut:NAME, \
+                 analytic:NAME or remote:NAME[@HOST:PORT,...]); add devices via \
+                 --device-file FILE or the CPRUNE_DEVICES environment variable \
+                 (':'-separated files)."
             );
             0
         }

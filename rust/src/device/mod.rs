@@ -8,13 +8,16 @@
 //!
 //! Everything above this module talks to devices through one seam: the
 //! [`Target`] trait (`target.rs`) — `spec()`, `latency()`,
-//! `measure_batch()` — with three providers: [`AnalyticTarget`] (the
+//! `measure_batch()` — with four providers: [`AnalyticTarget`] (the
 //! roofline), [`LutTarget`] (calibrated per-layer tables from `lut.rs` /
-//! `calibration.rs`, analytic fallback) and [`ReplayTarget`]
+//! `calibration.rs`, analytic fallback), [`ReplayTarget`]
 //! (`replay.rs`: record every measurement to a versioned JSON trace,
-//! replay it byte-identically). Devices resolve by name through
-//! [`TargetRegistry`] (`registry.rs`): the five built-ins plus
-//! user-defined JSON specs (`--device-file` / `CPRUNE_DEVICES`).
+//! replay it byte-identically) and [`RemoteTarget`] (`remote/`: a pool
+//! of out-of-process workers speaking the `cprune-remote` wire protocol,
+//! DESIGN.md §14 — bit-identical to the in-process provider it wraps).
+//! Devices resolve by name through [`TargetRegistry`] (`registry.rs`):
+//! the five built-ins plus user-defined JSON specs (`--device-file` /
+//! `CPRUNE_DEVICES`).
 //!
 //! What matters for reproducing the paper is not absolute numbers but the
 //! *decision landscape*: schedule quality spreads of ~5–30× between worst
@@ -25,17 +28,22 @@
 //!
 //! Determinism here is machine-enforced: `cprune-lint` (DESIGN.md §12)
 //! denies wall-clock/env reads, f32 latency math and hash-ordered
-//! iteration throughout `device/`.
+//! iteration throughout `device/`. One documented carve-out: `remote/`'s
+//! IO edge may read `Instant` for deadlines/backoff (the values it
+//! returns stay RNG-derived and timing-independent — see the lint's
+//! `WALLCLOCK_EXEMPT_PREFIXES`).
 
 pub mod calibration;
 pub mod lut;
 pub mod registry;
+pub mod remote;
 pub mod replay;
 pub mod sim;
 pub mod spec;
 pub mod target;
 
 pub use registry::{TargetRegistry, DEVICES_ENV};
+pub use remote::{RemoteOptions, RemoteTarget};
 pub use replay::ReplayTarget;
 pub use sim::Simulator;
 pub use spec::{DeviceKind, DeviceSpec};

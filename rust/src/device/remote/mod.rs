@@ -1,0 +1,30 @@
+//! The remote measurement plane: out-of-process workers behind the
+//! [`crate::device::Target`] seam (DESIGN.md §14).
+//!
+//! The reference CPrune measures candidate programs over TVM RPC on
+//! real phones; this subsystem is that seam's equivalent. A
+//! [`RemoteTarget`] multiplexes N workers — `cprune worker` child
+//! processes over stdin/stdout, TCP peers, or in-memory loopback
+//! threads — behind one `Target`, so the tuner, fleet, compiler and
+//! serve layers work unchanged.
+//!
+//! Layout:
+//!
+//! * [`protocol`] — `cprune-remote` v1 frames and length-prefixed
+//!   framing;
+//! * [`transport`] — [`transport::Connection`]: stdio child processes,
+//!   TCP, loopback; the wall-clock (deadline) edge;
+//! * [`worker`] — the serve loop behind `cprune worker`;
+//! * [`pool`] — [`RemoteTarget`]/partitioning/retry (the determinism
+//!   invariant lives here);
+//! * [`trace`] — `cprune-remote-trace` v1 recording for offline replay.
+
+pub mod pool;
+pub mod protocol;
+pub mod trace;
+pub mod transport;
+pub mod worker;
+
+pub use pool::{RemoteOptions, RemoteTarget};
+pub use trace::{load_trace_target, RemoteTrace};
+pub use transport::{Connection, LoopbackFault};

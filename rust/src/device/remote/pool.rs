@@ -1,0 +1,509 @@
+//! [`RemoteTarget`]: a pool of out-of-process workers behind the
+//! [`Target`] seam (DESIGN.md §14).
+//!
+//! ## Determinism invariant
+//!
+//! A remote run is bit-identical to the same run on the in-process
+//! provider the workers wrap, for any worker count ≥ 1, because nothing
+//! the result depends on happens remotely:
+//!
+//! 1. the client draws every jitter multiplier from the run's RNG —
+//!    exactly `repeats` per program, in batch order, preserving the
+//!    measurement contract — and ships the draws in the request;
+//! 2. each worker folds `mean(latency(w, p) * jitter)` in the same
+//!    order and with the same f64 operations as the provided
+//!    [`Target::measure_batch`];
+//! 3. results reassemble by original batch index, so partitioning and
+//!    completion order are invisible.
+//!
+//! Worker death or a deadline miss re-partitions the *pending* programs
+//! over the surviving workers (bounded retries with exponential
+//! backoff); the values are reproduced identically on whichever worker
+//! re-runs them.
+//!
+//! ## Concurrency shape
+//!
+//! Within one `measure_batch` call the pool writes every worker's chunk
+//! before reading any reply, so N workers compute concurrently while
+//! the client assembles results. Across tuner threads the pool is
+//! serialized by a mutex — each in-flight batch owns all workers, which
+//! keeps request routing deterministic; the fleet's work-stealing
+//! threads interleave *batches*, not frames.
+
+use super::protocol::Frame;
+use super::trace::RemoteTrace;
+use super::transport::Connection;
+use crate::device::spec::DeviceSpec;
+use crate::device::target::Target;
+use crate::tir::{Program, Workload};
+use crate::util::rng::Rng;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Timeout/retry policy of a [`RemoteTarget`].
+#[derive(Clone, Copy, Debug)]
+pub struct RemoteOptions {
+    /// Per-round deadline for a worker's reply.
+    pub timeout: Duration,
+    /// How many re-partition rounds a failed batch may consume.
+    pub retries: usize,
+    /// First retry backoff; doubles per round (capped at 2^16×).
+    pub backoff: Duration,
+}
+
+impl Default for RemoteOptions {
+    fn default() -> RemoteOptions {
+        RemoteOptions {
+            timeout: Duration::from_secs(30),
+            retries: 3,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Mutable pool state behind the [`RemoteTarget`] mutex.
+struct WorkerPool {
+    workers: Vec<Connection>,
+    next_id: u64,
+}
+
+impl WorkerPool {
+    fn fresh_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+}
+
+/// N remote workers multiplexed behind one [`Target`].
+pub struct RemoteTarget {
+    spec: DeviceSpec,
+    noise_sigma: f64,
+    opts: RemoteOptions,
+    pool: Mutex<WorkerPool>,
+    trace: Mutex<Option<RemoteTrace>>,
+}
+
+impl RemoteTarget {
+    /// Handshake every connection and build the pool. Fails unless every
+    /// worker reports a byte-identical device spec and noise sigma — a
+    /// pool mixing devices would silently corrupt the search.
+    pub fn new(connections: Vec<Connection>, opts: RemoteOptions) -> Result<RemoteTarget, String> {
+        if connections.is_empty() {
+            return Err("remote target needs at least one worker".to_string());
+        }
+        let mut workers = Vec::with_capacity(connections.len());
+        let mut head: Option<(DeviceSpec, f64, String)> = None;
+        for mut conn in connections {
+            conn.send(&Frame::Hello)?;
+            let deadline = Instant::now() + opts.timeout;
+            match conn.recv_deadline(deadline)? {
+                Frame::HelloAck { spec, noise_sigma } => {
+                    let key = spec.to_json().to_string();
+                    match &head {
+                        None => head = Some((spec, noise_sigma, key)),
+                        Some((_, sigma0, key0)) => {
+                            if *key0 != key || sigma0.to_bits() != noise_sigma.to_bits() {
+                                return Err(format!(
+                                    "{}: worker measures a different device than the pool \
+                                     ({key} / sigma {noise_sigma} vs {key0} / sigma {sigma0})",
+                                    conn.desc()
+                                ));
+                            }
+                        }
+                    }
+                }
+                Frame::Error { message, .. } => {
+                    return Err(format!("{}: handshake refused: {message}", conn.desc()))
+                }
+                other => {
+                    return Err(format!(
+                        "{}: unexpected handshake reply '{}'",
+                        conn.desc(),
+                        other.kind()
+                    ))
+                }
+            }
+            workers.push(conn);
+        }
+        let Some((spec, noise_sigma, _)) = head else {
+            return Err("remote target needs at least one worker".to_string());
+        };
+        Ok(RemoteTarget {
+            spec,
+            noise_sigma,
+            opts,
+            pool: Mutex::new(WorkerPool { workers, next_id: 0 }),
+            trace: Mutex::new(None),
+        })
+    }
+
+    /// Pool of in-process loopback workers, each an
+    /// [`crate::device::AnalyticTarget`] over `spec` (tests, CI).
+    pub fn loopback(
+        spec: DeviceSpec,
+        workers: usize,
+        opts: RemoteOptions,
+    ) -> Result<RemoteTarget, String> {
+        let conns = (0..workers)
+            .map(|i| {
+                Connection::loopback(
+                    Box::new(crate::device::target::AnalyticTarget::new(spec.clone())),
+                    i,
+                )
+            })
+            .collect();
+        RemoteTarget::new(conns, opts)
+    }
+
+    /// Pool of `workers` stdio subprocess workers spawned from `exe`
+    /// (`exe worker --stdio --device NAME`).
+    pub fn spawn_with_exe(
+        exe: &Path,
+        device: &str,
+        workers: usize,
+        opts: RemoteOptions,
+    ) -> Result<RemoteTarget, String> {
+        let conns = (0..workers.max(1))
+            .map(|_| Connection::spawn_with_exe(exe, device))
+            .collect::<Result<Vec<_>, _>>()?;
+        RemoteTarget::new(conns, opts)
+    }
+
+    /// Pool of stdio subprocess workers spawned from the running
+    /// executable (the CLI's `--target remote:NAME` path).
+    pub fn spawn(
+        device: &str,
+        workers: usize,
+        opts: RemoteOptions,
+    ) -> Result<RemoteTarget, String> {
+        let exe =
+            std::env::current_exe().map_err(|e| format!("cannot locate own executable: {e}"))?;
+        RemoteTarget::spawn_with_exe(&exe, device, workers, opts)
+    }
+
+    /// Pool of TCP workers, one connection per address
+    /// (`--target remote:NAME@HOST:PORT,HOST:PORT`).
+    pub fn connect(addrs: &[String], opts: RemoteOptions) -> Result<RemoteTarget, String> {
+        let conns = addrs
+            .iter()
+            .map(|a| Connection::connect_tcp(a))
+            .collect::<Result<Vec<_>, _>>()?;
+        RemoteTarget::new(conns, opts)
+    }
+
+    /// Workers still alive (drops as failures remove them).
+    pub fn healthy_workers(&self) -> usize {
+        self.lock_pool().workers.len()
+    }
+
+    /// Start recording every query into a `cprune-remote-trace`
+    /// (retrievable via [`RemoteTarget::save_trace`]).
+    pub fn start_trace(&self) {
+        let workers = self.healthy_workers();
+        let mut trace = self.lock_trace();
+        *trace = Some(RemoteTrace::new(self.spec.clone(), self.noise_sigma, workers));
+    }
+
+    /// Persist the recording started by [`RemoteTarget::start_trace`].
+    pub fn save_trace(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        match self.lock_trace().as_ref() {
+            Some(trace) => trace.save(path),
+            None => Err("save_trace without start_trace".to_string()),
+        }
+    }
+
+    fn lock_pool(&self) -> std::sync::MutexGuard<'_, WorkerPool> {
+        self.pool.lock().unwrap() // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
+    }
+
+    fn lock_trace(&self) -> std::sync::MutexGuard<'_, Option<RemoteTrace>> {
+        self.trace.lock().unwrap() // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
+    }
+
+    /// Remove `failed` workers (descending-index order) from the pool,
+    /// loudly: a silent shrink would hide capacity loss until the last
+    /// worker died.
+    fn remove_failed(pool: &mut WorkerPool, mut failed: Vec<(usize, String)>) {
+        failed.sort_by(|a, b| b.0.cmp(&a.0));
+        failed.dedup_by_key(|f| f.0);
+        for (idx, why) in failed {
+            let conn = pool.workers.remove(idx);
+            eprintln!(
+                "cprune-remote: removing dead worker {} ({} left): {why}",
+                conn.desc(),
+                pool.workers.len()
+            );
+        }
+    }
+
+    /// Back off before retry round `attempt` (1-based): base * 2^(n-1).
+    fn backoff(&self, attempt: usize) {
+        let shift = (attempt - 1).min(16) as u32;
+        std::thread::sleep(self.opts.backoff * (1u32 << shift));
+    }
+
+    /// One latency request against the first healthy worker, with the
+    /// same retry/removal discipline as batches.
+    fn request_latency(&self, w: &Workload, p: &Program) -> f64 {
+        let mut pool = self.lock_pool();
+        for attempt in 0..=self.opts.retries {
+            if attempt > 0 {
+                self.backoff(attempt);
+            }
+            if pool.workers.is_empty() {
+                break;
+            }
+            let id = pool.fresh_id();
+            let conn = &mut pool.workers[0];
+            let outcome = conn
+                .send(&Frame::Latency { id, workload: w.clone(), program: p.clone() })
+                .and_then(|()| {
+                    let deadline = Instant::now() + self.opts.timeout;
+                    loop {
+                        match conn.recv_deadline(deadline)? {
+                            Frame::LatencyResult { id: rid, seconds } if rid == id => {
+                                return Ok(seconds)
+                            }
+                            Frame::Error { message, .. } => return Err(message),
+                            _stale => continue,
+                        }
+                    }
+                });
+            match outcome {
+                Ok(seconds) => return seconds,
+                Err(why) => Self::remove_failed(&mut pool, vec![(0, why)]),
+            }
+        }
+        panic!(
+            "cprune-remote: latency query failed on every worker of the '{}' pool",
+            self.spec.name
+        );
+    }
+
+    /// Partition `pending` (original batch indices) into one contiguous
+    /// chunk per worker. Purely a throughput decision — results
+    /// reassemble by index, so the partition never affects values.
+    fn partition(pending: &[usize], workers: usize) -> Vec<Vec<usize>> {
+        let base = pending.len() / workers;
+        let extra = pending.len() % workers;
+        let mut chunks = Vec::with_capacity(workers);
+        let mut at = 0;
+        for w in 0..workers {
+            let len = base + usize::from(w < extra);
+            chunks.push(pending[at..at + len].to_vec());
+            at += len;
+        }
+        chunks
+    }
+
+    /// Measure `pending` programs over the pool, retrying failures on
+    /// the survivors. Returns means indexed like `programs`.
+    fn measure_on_pool(
+        &self,
+        pool: &mut WorkerPool,
+        w: &Workload,
+        programs: &[&Program],
+        repeats: usize,
+        jitter: &[Vec<f64>],
+    ) -> Vec<f64> {
+        let n = programs.len();
+        let mut results: Vec<Option<f64>> = vec![None; n];
+        let mut pending: Vec<usize> = (0..n).collect();
+        for attempt in 0..=self.opts.retries {
+            if attempt > 0 {
+                self.backoff(attempt);
+            }
+            if pool.workers.is_empty() {
+                break;
+            }
+            let chunks = Self::partition(&pending, pool.workers.len());
+            // Submit every chunk before reading any reply: the workers
+            // overlap while this thread turns around to collect.
+            let mut inflight: Vec<(usize, u64, Vec<usize>)> = Vec::new();
+            let mut failed: Vec<(usize, String)> = Vec::new();
+            for (widx, chunk) in chunks.into_iter().enumerate() {
+                if chunk.is_empty() {
+                    continue;
+                }
+                let id = pool.next_id + 1;
+                pool.next_id = id;
+                let frame = Frame::MeasureBatch {
+                    id,
+                    workload: w.clone(),
+                    programs: chunk.iter().map(|&i| programs[i].clone()).collect(),
+                    repeats,
+                    jitter: chunk.iter().map(|&i| jitter[i].clone()).collect(),
+                };
+                match pool.workers[widx].send(&frame) {
+                    Ok(()) => inflight.push((widx, id, chunk)),
+                    Err(why) => failed.push((widx, why)),
+                }
+            }
+            let deadline = Instant::now() + self.opts.timeout;
+            for (widx, id, chunk) in inflight {
+                match Self::collect_means(&mut pool.workers[widx], id, chunk.len(), deadline) {
+                    Ok(means) => {
+                        for (&i, mean) in chunk.iter().zip(means) {
+                            results[i] = Some(mean);
+                        }
+                    }
+                    Err(why) => failed.push((widx, why)),
+                }
+            }
+            Self::remove_failed(pool, failed);
+            pending.retain(|&i| results[i].is_none());
+            if pending.is_empty() {
+                return results.into_iter().flatten().collect();
+            }
+        }
+        panic!(
+            "cprune-remote: {} measurements still unserved after {} retries \
+             ({} worker(s) left) on the '{}' pool",
+            pending.len(),
+            self.opts.retries,
+            pool.workers.len(),
+            self.spec.name
+        );
+    }
+
+    /// Collect one worker's `measure_result`, validating shape and
+    /// domain (a malformed reply condemns the worker, not the run).
+    fn collect_means(
+        conn: &mut Connection,
+        id: u64,
+        want: usize,
+        deadline: Instant,
+    ) -> Result<Vec<f64>, String> {
+        loop {
+            match conn.recv_deadline(deadline)? {
+                Frame::MeasureResult { id: rid, means } if rid == id => {
+                    if means.len() != want {
+                        return Err(format!("{} means for a {want}-program chunk", means.len()));
+                    }
+                    if let Some(bad) = means.iter().find(|m| !m.is_finite() || **m <= 0.0) {
+                        return Err(format!("non-positive/non-finite mean {bad}"));
+                    }
+                    return Ok(means);
+                }
+                Frame::Error { message, .. } => return Err(message),
+                // A reply to an older request on a reused connection:
+                // skip it and keep waiting for ours.
+                _stale => continue,
+            }
+        }
+    }
+}
+
+impl Target for RemoteTarget {
+    fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    fn noise_sigma(&self) -> f64 {
+        self.noise_sigma
+    }
+
+    fn latency(&self, w: &Workload, p: &Program) -> f64 {
+        let seconds = self.request_latency(w, p);
+        if let Some(trace) = self.lock_trace().as_mut() {
+            trace.record_latency(w, p, seconds);
+        }
+        seconds
+    }
+
+    fn measure_batch(
+        &self,
+        w: &Workload,
+        programs: &[&Program],
+        rng: &mut Rng,
+        repeats: usize,
+    ) -> Vec<f64> {
+        // Draw the contract's jitter here, client-side, in batch order —
+        // the RNG stream must be byte-identical to an in-process run's.
+        let sigma = self.noise_sigma;
+        let jitter: Vec<Vec<f64>> = programs
+            .iter()
+            .map(|_| (0..repeats).map(|_| rng.lognormal(sigma)).collect())
+            .collect();
+        if programs.is_empty() {
+            return Vec::new();
+        }
+        let means = {
+            let mut pool = self.lock_pool();
+            self.measure_on_pool(&mut pool, w, programs, repeats, &jitter)
+        };
+        if let Some(trace) = self.lock_trace().as_mut() {
+            for (i, &p) in programs.iter().enumerate() {
+                trace.record_measurement(w, p, repeats, jitter[i].clone(), means[i]);
+            }
+        }
+        means
+    }
+
+    fn as_remote(&self) -> Option<&RemoteTarget> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::target::AnalyticTarget;
+
+    fn wl(ff: usize) -> Workload {
+        Workload {
+            n: 1,
+            oh: 8,
+            ow: 8,
+            ff,
+            ic: 16,
+            kh: 3,
+            kw: 3,
+            groups: 1,
+            stride: 1,
+            epilogue: vec![],
+        }
+    }
+
+    #[test]
+    fn partition_is_contiguous_and_covers_everything() {
+        let pending: Vec<usize> = (0..7).collect();
+        for workers in 1..=8 {
+            let chunks = RemoteTarget::partition(&pending, workers);
+            assert_eq!(chunks.len(), workers);
+            let flat: Vec<usize> = chunks.concat();
+            assert_eq!(flat, pending, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn mismatched_worker_specs_fail_construction() {
+        let a = Connection::loopback(
+            Box::new(AnalyticTarget::new(DeviceSpec::kryo385())),
+            0,
+        );
+        let b = Connection::loopback(
+            Box::new(AnalyticTarget::new(DeviceSpec::kryo585())),
+            1,
+        );
+        let err = RemoteTarget::new(vec![a, b], RemoteOptions::default())
+            .err()
+            .expect("mixed pool must fail");
+        assert!(err.contains("different device"), "{err}");
+    }
+
+    #[test]
+    fn empty_pool_fails_construction() {
+        let err = RemoteTarget::new(vec![], RemoteOptions::default()).err().unwrap();
+        assert!(err.contains("at least one worker"), "{err}");
+    }
+
+    #[test]
+    fn empty_batch_is_served_locally() {
+        let remote =
+            RemoteTarget::loopback(DeviceSpec::kryo385(), 1, RemoteOptions::default()).unwrap();
+        let mut rng = Rng::new(0);
+        assert!(remote.measure_batch(&wl(64), &[], &mut rng, 3).is_empty());
+    }
+}

@@ -1,0 +1,380 @@
+//! Wire protocol of the remote measurement plane: `cprune-remote` v1
+//! (DESIGN.md §14).
+//!
+//! Frames are JSON documents with a length prefix: an ASCII decimal byte
+//! count, `\n`, the payload, `\n`. The prefix lets both sides read a
+//! frame without a streaming JSON parser, and the trailing newline keeps
+//! the stream greppable when captured to a file.
+//!
+//! Version negotiation happens in the opening exchange: the client's
+//! [`Frame::Hello`] and the worker's [`Frame::HelloAck`] each carry
+//! `format`/`version`, and either side drops the connection on a
+//! mismatch. `HelloAck` also carries the worker's device spec and
+//! `noise_sigma` so the pool can verify every worker measures the same
+//! device before any measurement is issued.
+//!
+//! Floats cross the wire as plain JSON numbers: [`Json`]'s writer uses
+//! Rust's shortest-round-trip formatting, so every `f64` parses back to
+//! the identical bits — the same property the `cprune-measure-trace`
+//! schema already relies on.
+
+use crate::device::DeviceSpec;
+use crate::tir::jsonio::{
+    program_from_json, program_to_json, workload_from_json, workload_to_json,
+};
+use crate::tir::{Program, Workload};
+use crate::util::json::{self, Json};
+use std::io::{BufRead, Write};
+
+/// Format tag carried by `Hello`/`HelloAck`.
+pub const REMOTE_FORMAT: &str = "cprune-remote";
+/// Protocol version negotiated in the opening exchange.
+pub const REMOTE_VERSION: u64 = 1;
+
+/// One protocol message (either direction).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client → worker: opening handshake (carries format/version).
+    Hello,
+    /// Worker → client: handshake reply with the worker's device.
+    HelloAck {
+        /// The device the worker measures.
+        spec: DeviceSpec,
+        /// The worker's measurement-noise sigma (the client draws the
+        /// actual jitter — see [`Frame::MeasureBatch::jitter`]).
+        noise_sigma: f64,
+    },
+    /// Client → worker: measure a batch of programs.
+    MeasureBatch {
+        /// Request id echoed by the matching [`Frame::MeasureResult`].
+        id: u64,
+        workload: Workload,
+        programs: Vec<Program>,
+        repeats: usize,
+        /// Per-program jitter multipliers, drawn client-side from the
+        /// run's RNG (`jitter[i]` has exactly `repeats` draws): shipping
+        /// the draws keeps the RNG stream — and therefore every result —
+        /// bit-identical to an in-process provider, regardless of how
+        /// the pool partitions the batch.
+        jitter: Vec<Vec<f64>>,
+    },
+    /// Worker → client: one mean latency per program, in request order.
+    MeasureResult { id: u64, means: Vec<f64> },
+    /// Client → worker: noise-free latency of one program.
+    Latency { id: u64, workload: Workload, program: Program },
+    /// Worker → client: reply to [`Frame::Latency`].
+    LatencyResult { id: u64, seconds: f64 },
+    /// Client → worker: finish up; the worker replies [`Frame::Bye`]
+    /// and exits its serve loop.
+    Shutdown,
+    /// Worker → client: acknowledges [`Frame::Shutdown`].
+    Bye,
+    /// Either direction: the peer could not serve a request.
+    Error {
+        /// The request that failed, when attributable.
+        id: Option<u64>,
+        message: String,
+    },
+}
+
+impl Frame {
+    /// Frame type tag on the wire.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::Hello => "hello",
+            Frame::HelloAck { .. } => "hello_ack",
+            Frame::MeasureBatch { .. } => "measure_batch",
+            Frame::MeasureResult { .. } => "measure_result",
+            Frame::Latency { .. } => "latency",
+            Frame::LatencyResult { .. } => "latency_result",
+            Frame::Shutdown => "shutdown",
+            Frame::Bye => "bye",
+            Frame::Error { .. } => "error",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("type", Json::Str(self.kind().to_string()))];
+        match self {
+            Frame::Hello => {
+                pairs.push(("format", Json::Str(REMOTE_FORMAT.to_string())));
+                pairs.push(("version", Json::Num(REMOTE_VERSION as f64)));
+            }
+            Frame::HelloAck { spec, noise_sigma } => {
+                pairs.push(("format", Json::Str(REMOTE_FORMAT.to_string())));
+                pairs.push(("version", Json::Num(REMOTE_VERSION as f64)));
+                pairs.push(("device", spec.to_json()));
+                pairs.push(("noise_sigma", Json::Num(*noise_sigma)));
+            }
+            Frame::MeasureBatch { id, workload, programs, repeats, jitter } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("workload", workload_to_json(workload)));
+                pairs.push((
+                    "programs",
+                    Json::Arr(programs.iter().map(program_to_json).collect()),
+                ));
+                pairs.push(("repeats", Json::Num(*repeats as f64)));
+                pairs.push((
+                    "jitter",
+                    Json::Arr(
+                        jitter
+                            .iter()
+                            .map(|js| Json::Arr(js.iter().map(|&j| Json::Num(j)).collect()))
+                            .collect(),
+                    ),
+                ));
+            }
+            Frame::MeasureResult { id, means } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("means", Json::Arr(means.iter().map(|&m| Json::Num(m)).collect())));
+            }
+            Frame::Latency { id, workload, program } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("workload", workload_to_json(workload)));
+                pairs.push(("program", program_to_json(program)));
+            }
+            Frame::LatencyResult { id, seconds } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("seconds", Json::Num(*seconds)));
+            }
+            Frame::Shutdown | Frame::Bye => {}
+            Frame::Error { id, message } => {
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
+                }
+                pairs.push(("message", Json::Str(message.clone())));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Frame, String> {
+        let kind = j.get("type").and_then(Json::as_str).ok_or("frame missing type")?;
+        let id = |j: &Json| -> Result<u64, String> {
+            j.get("id")
+                .and_then(Json::as_f64)
+                .map(|n| n as u64)
+                .ok_or_else(|| format!("{kind} frame missing id"))
+        };
+        let f64_field = |j: &Json, key: &str| -> Result<f64, String> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("{kind} frame missing {key}"))
+        };
+        let workload = |j: &Json| -> Result<Workload, String> {
+            let w = j.get("workload").ok_or_else(|| format!("{kind} frame missing workload"))?;
+            workload_from_json(w)
+        };
+        let check_version = |j: &Json| -> Result<(), String> {
+            let format = j.get("format").and_then(Json::as_str).unwrap_or("?");
+            let version = j.get("version").and_then(Json::as_f64).map(|v| v as u64);
+            if format != REMOTE_FORMAT || version != Some(REMOTE_VERSION) {
+                return Err(format!(
+                    "peer speaks {format} v{} but this side speaks {REMOTE_FORMAT} v{REMOTE_VERSION}",
+                    version.map(|v| v.to_string()).unwrap_or_else(|| "?".to_string()),
+                ));
+            }
+            Ok(())
+        };
+        match kind {
+            "hello" => {
+                check_version(j)?;
+                Ok(Frame::Hello)
+            }
+            "hello_ack" => {
+                check_version(j)?;
+                let spec = DeviceSpec::from_json(
+                    j.get("device").ok_or("hello_ack frame missing device")?,
+                )?;
+                Ok(Frame::HelloAck { spec, noise_sigma: f64_field(j, "noise_sigma")? })
+            }
+            "measure_batch" => {
+                let programs = j
+                    .get("programs")
+                    .and_then(Json::as_arr)
+                    .ok_or("measure_batch frame missing programs")?
+                    .iter()
+                    .map(program_from_json)
+                    .collect::<Result<Vec<_>, _>>()?;
+                let jitter = j
+                    .get("jitter")
+                    .and_then(Json::as_arr)
+                    .ok_or("measure_batch frame missing jitter")?
+                    .iter()
+                    .map(|row| {
+                        row.as_arr()
+                            .ok_or("measure_batch jitter row is not an array")?
+                            .iter()
+                            .map(|v| v.as_f64().ok_or("jitter draw is not a number".to_string()))
+                            .collect::<Result<Vec<f64>, String>>()
+                    })
+                    .collect::<Result<Vec<Vec<f64>>, String>>()?;
+                Ok(Frame::MeasureBatch {
+                    id: id(j)?,
+                    workload: workload(j)?,
+                    programs,
+                    repeats: j
+                        .get("repeats")
+                        .and_then(Json::as_usize)
+                        .ok_or("measure_batch frame missing repeats")?,
+                    jitter,
+                })
+            }
+            "measure_result" => {
+                let means = j
+                    .get("means")
+                    .and_then(Json::as_arr)
+                    .ok_or("measure_result frame missing means")?
+                    .iter()
+                    .map(|v| v.as_f64().ok_or("measure_result mean is not a number".to_string()))
+                    .collect::<Result<Vec<f64>, String>>()?;
+                Ok(Frame::MeasureResult { id: id(j)?, means })
+            }
+            "latency" => Ok(Frame::Latency {
+                id: id(j)?,
+                workload: workload(j)?,
+                program: program_from_json(
+                    j.get("program").ok_or("latency frame missing program")?,
+                )?,
+            }),
+            "latency_result" => {
+                Ok(Frame::LatencyResult { id: id(j)?, seconds: f64_field(j, "seconds")? })
+            }
+            "shutdown" => Ok(Frame::Shutdown),
+            "bye" => Ok(Frame::Bye),
+            "error" => Ok(Frame::Error {
+                id: j.get("id").and_then(Json::as_f64).map(|n| n as u64),
+                message: j
+                    .get("message")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unspecified peer error")
+                    .to_string(),
+            }),
+            other => Err(format!("unknown frame type '{other}'")),
+        }
+    }
+}
+
+/// Write one length-prefixed frame. The caller flushes (transports
+/// decide their own flush cadence; the serve loop flushes per reply).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), String> {
+    let payload = frame.to_json().to_string();
+    writeln!(w, "{}\n{payload}", payload.len()).map_err(|e| format!("write failed: {e}"))
+}
+
+/// Read one frame; `Ok(None)` is a clean EOF *between* frames (the peer
+/// closed the stream). EOF inside a frame is an error — a truncated
+/// frame must not look like an orderly close.
+pub fn read_frame(r: &mut impl BufRead) -> Result<Option<Frame>, String> {
+    let mut header = String::new();
+    let n = r.read_line(&mut header).map_err(|e| format!("read failed: {e}"))?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let len: usize = header
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad frame length prefix {:?}", header.trim()))?;
+    let mut payload = vec![0u8; len + 1];
+    r.read_exact(&mut payload)
+        .map_err(|e| format!("truncated frame (wanted {len} bytes): {e}"))?;
+    let text = std::str::from_utf8(&payload[..len])
+        .map_err(|e| format!("frame payload is not UTF-8: {e}"))?;
+    let j = json::parse(text).map_err(|e| format!("frame payload is not JSON: {e}"))?;
+    Frame::from_json(&j).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn wl(ff: usize) -> Workload {
+        Workload {
+            n: 1,
+            oh: 8,
+            ow: 8,
+            ff,
+            ic: 16,
+            kh: 3,
+            kw: 3,
+            groups: 1,
+            stride: 1,
+            epilogue: vec!["relu"],
+        }
+    }
+
+    fn frames() -> Vec<Frame> {
+        let w = wl(64);
+        let p = Program::naive(&w);
+        vec![
+            Frame::Hello,
+            Frame::HelloAck { spec: DeviceSpec::kryo385(), noise_sigma: 0.03 },
+            Frame::MeasureBatch {
+                id: 7,
+                workload: w.clone(),
+                programs: vec![p.clone(), p.clone()],
+                repeats: 3,
+                jitter: vec![vec![1.0, 0.981_234_567_8, 1.019_999_999_3]; 2],
+            },
+            Frame::MeasureResult { id: 7, means: vec![1.5e-3, 2.5e-3] },
+            Frame::Latency { id: 8, workload: w, program: p },
+            Frame::LatencyResult { id: 8, seconds: 1.25e-3 },
+            Frame::Shutdown,
+            Frame::Bye,
+            Frame::Error { id: Some(9), message: "boom".to_string() },
+            Frame::Error { id: None, message: "handshake refused".to_string() },
+        ]
+    }
+
+    #[test]
+    fn frames_round_trip_through_the_wire_format() {
+        let mut buf = Vec::new();
+        for f in frames() {
+            write_frame(&mut buf, &f).unwrap();
+        }
+        let mut r = BufReader::new(&buf[..]);
+        for want in frames() {
+            let got = read_frame(&mut r).unwrap().expect("frame expected");
+            assert_eq!(got, want);
+        }
+        assert_eq!(read_frame(&mut r).unwrap(), None, "then clean EOF");
+    }
+
+    #[test]
+    fn jitter_round_trips_bit_exactly() {
+        // Shortest-round-trip float formatting is what makes the wire
+        // format determinism-safe; pin it on awkward values.
+        let vals = [1.0, 0.030_000_000_000_000_002, 1e-300, 0.981_234_567_891_234_5];
+        let mut buf = Vec::new();
+        write_frame(
+            &mut buf,
+            &Frame::MeasureResult { id: 1, means: vals.to_vec() },
+        )
+        .unwrap();
+        match read_frame(&mut BufReader::new(&buf[..])).unwrap().unwrap() {
+            Frame::MeasureResult { means, .. } => {
+                for (a, b) in vals.iter().zip(&means) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{a} mangled into {b}");
+                }
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let j = json::parse(r#"{"type":"hello","format":"cprune-remote","version":2}"#).unwrap();
+        let err = Frame::from_json(&j).unwrap_err();
+        assert!(err.contains("v2") && err.contains("v1"), "{err}");
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Hello).unwrap();
+        buf.truncate(buf.len() - 4);
+        let err = read_frame(&mut BufReader::new(&buf[..])).unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+    }
+}

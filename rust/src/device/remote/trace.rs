@@ -1,0 +1,364 @@
+//! `cprune-remote-trace` v1 — the remote plane's recording format
+//! (DESIGN.md §14).
+//!
+//! Where a `cprune-measure-trace` stores batch *means*, a remote trace
+//! stores each measurement's jitter draws *and* its mean: the jitter is
+//! what the client drew from the run's RNG, so the trace documents the
+//! exact randomness a remote run consumed. `cprune check` validates the
+//! extra structure under the `CPV15x` codes
+//! ([`crate::verify::Code::RemoteEntry`] and friends).
+//!
+//! [`RemoteTrace::replay`] converts a trace into a
+//! [`ReplayTarget`] (dropping the per-draw detail, keeping the means in
+//! call order), so `--replay-trace` accepts either format — see
+//! [`load_trace_target`].
+
+use crate::device::replay::ReplayTarget;
+use crate::device::spec::DeviceSpec;
+use crate::tir::jsonio::{program_from_json, program_to_json, workload_from_json, workload_to_json};
+use crate::tir::{Program, Workload};
+use crate::util::json::{self, Json};
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+
+/// Format tag of the on-disk remote trace header.
+pub const REMOTE_TRACE_FORMAT: &str = "cprune-remote-trace";
+/// Bump when the trace schema changes; `parse` rejects other versions.
+pub const REMOTE_TRACE_VERSION: u64 = 1;
+
+/// One recorded `measure_batch` result for one program: the jitter
+/// multipliers the client drew (exactly `repeats` of them) and the mean
+/// the worker folded from them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub jitter: Vec<f64>,
+    pub mean: f64,
+}
+
+/// In-memory recording of a remote run, serializable as
+/// [`REMOTE_TRACE_FORMAT`] v[`REMOTE_TRACE_VERSION`].
+pub struct RemoteTrace {
+    spec: DeviceSpec,
+    noise_sigma: f64,
+    /// Worker count the pool started with (documentation, not replay
+    /// input — results do not depend on it).
+    workers: usize,
+    latencies: HashMap<(Workload, Program), f64>,
+    /// Samples per (workload, program, repeats), in call order.
+    measurements: HashMap<(Workload, Program, usize), Vec<Sample>>,
+}
+
+/// Serialized ordering key — same discipline as the measure-trace's.
+fn sort_key(w: &Workload, p: &Program, repeats: Option<usize>) -> String {
+    match repeats {
+        Some(r) => format!("{}|{}|r{r}", workload_to_json(w), program_to_json(p)),
+        None => format!("{}|{}", workload_to_json(w), program_to_json(p)),
+    }
+}
+
+impl RemoteTrace {
+    pub fn new(spec: DeviceSpec, noise_sigma: f64, workers: usize) -> RemoteTrace {
+        RemoteTrace {
+            spec,
+            noise_sigma,
+            workers,
+            latencies: HashMap::new(),
+            measurements: HashMap::new(),
+        }
+    }
+
+    pub fn record_latency(&mut self, w: &Workload, p: &Program, seconds: f64) {
+        self.latencies.entry((w.clone(), p.clone())).or_insert(seconds);
+    }
+
+    pub fn record_measurement(
+        &mut self,
+        w: &Workload,
+        p: &Program,
+        repeats: usize,
+        jitter: Vec<f64>,
+        mean: f64,
+    ) {
+        self.measurements
+            .entry((w.clone(), p.clone(), repeats))
+            .or_default()
+            .push(Sample { jitter, mean });
+    }
+
+    /// Total samples recorded.
+    pub fn recorded_measurements(&self) -> usize {
+        let samples_by_key = &self.measurements;
+        samples_by_key.values().map(|s| s.len()).sum()
+    }
+
+    /// Serialize (header + sorted entries; byte-stable).
+    pub fn to_json(&self) -> Json {
+        let lats = &self.latencies;
+        let mut lat_entries: Vec<(String, Json)> = lats
+            .iter()
+            .map(|((w, p), seconds)| {
+                (
+                    sort_key(w, p, None),
+                    Json::obj(vec![
+                        ("workload", workload_to_json(w)),
+                        ("program", program_to_json(p)),
+                        ("seconds", Json::Num(*seconds)),
+                    ]),
+                )
+            })
+            .collect();
+        lat_entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let samples_by_key = &self.measurements;
+        // iteration order is immaterial: entries are sorted by their
+        // serialized key below, so the document is byte-stable
+        let mut batch_entries: Vec<(String, Json)> = samples_by_key
+            .iter()
+            .map(|((w, p, repeats), samples)| {
+                (
+                    sort_key(w, p, Some(*repeats)),
+                    Json::obj(vec![
+                        ("workload", workload_to_json(w)),
+                        ("program", program_to_json(p)),
+                        ("repeats", Json::Num(*repeats as f64)),
+                        (
+                            "samples",
+                            Json::Arr(
+                                samples
+                                    .iter()
+                                    .map(|s| {
+                                        Json::obj(vec![
+                                            (
+                                                "jitter",
+                                                Json::Arr(
+                                                    s.jitter
+                                                        .iter()
+                                                        .map(|&j| Json::Num(j))
+                                                        .collect(),
+                                                ),
+                                            ),
+                                            ("mean", Json::Num(s.mean)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ]),
+                )
+            })
+            .collect();
+        batch_entries.sort_by(|a, b| a.0.cmp(&b.0));
+        Json::obj(vec![
+            ("format", Json::Str(REMOTE_TRACE_FORMAT.to_string())),
+            ("version", Json::Num(REMOTE_TRACE_VERSION as f64)),
+            ("device", self.spec.to_json()),
+            ("noise_sigma", Json::Num(self.noise_sigma)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("latencies", Json::Arr(lat_entries.into_iter().map(|(_, e)| e).collect())),
+            ("measurements", Json::Arr(batch_entries.into_iter().map(|(_, e)| e).collect())),
+        ])
+    }
+
+    /// Parse a remote-trace document.
+    pub fn parse(text: &str) -> Result<RemoteTrace, String> {
+        let j = json::parse(text)?;
+        match j.get("format").and_then(Json::as_str) {
+            Some(REMOTE_TRACE_FORMAT) => {}
+            other => return Err(format!("not a remote trace (format {other:?})")),
+        }
+        match j.get("version").and_then(Json::as_usize) {
+            Some(v) if v as u64 == REMOTE_TRACE_VERSION => {}
+            other => {
+                return Err(format!(
+                    "unsupported remote-trace version {other:?} (want {REMOTE_TRACE_VERSION})"
+                ))
+            }
+        }
+        let spec = DeviceSpec::from_json(j.get("device").ok_or("remote trace missing device")?)?;
+        let noise_sigma = j
+            .get("noise_sigma")
+            .and_then(Json::as_f64)
+            .ok_or("remote trace missing noise_sigma")?;
+        let workers = j
+            .get("workers")
+            .and_then(Json::as_usize)
+            .ok_or("remote trace missing workers")?;
+        let mut trace = RemoteTrace::new(spec, noise_sigma, workers);
+        for e in j.get("latencies").and_then(Json::as_arr).ok_or("remote trace missing latencies")?
+        {
+            let workload =
+                workload_from_json(e.get("workload").ok_or("latency missing workload")?)?;
+            let program = program_from_json(e.get("program").ok_or("latency missing program")?)?;
+            let seconds =
+                e.get("seconds").and_then(Json::as_f64).ok_or("latency missing seconds")?;
+            trace.latencies.insert((workload, program), seconds);
+        }
+        for e in j
+            .get("measurements")
+            .and_then(Json::as_arr)
+            .ok_or("remote trace missing measurements")?
+        {
+            let workload = workload_from_json(e.get("workload").ok_or("batch missing workload")?)?;
+            let program = program_from_json(e.get("program").ok_or("batch missing program")?)?;
+            let repeats =
+                e.get("repeats").and_then(Json::as_usize).ok_or("batch missing repeats")?;
+            let mut samples = Vec::new();
+            for s in e.get("samples").and_then(Json::as_arr).ok_or("batch missing samples")? {
+                let jitter = s
+                    .get("jitter")
+                    .and_then(Json::as_arr)
+                    .ok_or("sample missing jitter")?
+                    .iter()
+                    .map(|v| v.as_f64().ok_or_else(|| "non-number jitter draw".to_string()))
+                    .collect::<Result<Vec<f64>, _>>()?;
+                let mean = s.get("mean").and_then(Json::as_f64).ok_or("sample missing mean")?;
+                samples.push(Sample { jitter, mean });
+            }
+            trace.measurements.insert((workload, program, repeats), samples);
+        }
+        Ok(trace)
+    }
+
+    /// Persist the trace (temp-file + rename; debug builds sweep the
+    /// output through the artifact checker first, like
+    /// [`ReplayTarget::save`]).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        let path = path.as_ref();
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(format!(".{}.tmp", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        let text = self.to_json().to_string();
+        #[cfg(debug_assertions)]
+        if let Some(d) =
+            crate::verify::artifact::check_text(&text).and_then(|ds| ds.into_iter().next())
+        {
+            panic!("RemoteTrace::save produced a non-canonical document: {d}");
+        }
+        std::fs::write(&tmp, text).map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("renaming {} into place: {e}", tmp.display()))
+    }
+
+    /// Load a remote trace from disk.
+    pub fn load(path: impl AsRef<Path>) -> Result<RemoteTrace, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Convert into a replay-mode [`ReplayTarget`]: per-sample means in
+    /// call order become the replay queues. `source` labels divergence
+    /// diagnostics (a file path, or `<remote-trace>`).
+    pub fn replay(&self, source: &str) -> ReplayTarget {
+        let samples_by_key = &self.measurements;
+        // hash-order safe: collected straight back into a map
+        let queues: HashMap<(Workload, Program, usize), VecDeque<f64>> = samples_by_key
+            .iter()
+            .map(|(k, samples)| (k.clone(), samples.iter().map(|s| s.mean).collect()))
+            .collect();
+        ReplayTarget::from_parts(
+            self.spec.clone(),
+            self.noise_sigma,
+            source.to_string(),
+            self.latencies.clone(),
+            queues,
+        )
+    }
+}
+
+/// Open either trace format as a replayable target: peeks the `format`
+/// tag and dispatches to [`ReplayTarget::load`] (measure traces) or
+/// [`RemoteTrace::load`] + [`RemoteTrace::replay`] (remote traces).
+/// `--replay-trace` accepts both.
+pub fn load_trace_target(path: impl AsRef<Path>) -> Result<ReplayTarget, String> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    let format = json::parse(&text)
+        .ok()
+        .and_then(|j| j.get("format").and_then(Json::as_str).map(str::to_string));
+    if format.as_deref() == Some(REMOTE_TRACE_FORMAT) {
+        let trace = RemoteTrace::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok(trace.replay(&path.display().to_string()))
+    } else {
+        ReplayTarget::load(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Target;
+    use crate::util::rng::Rng;
+
+    fn wl(ff: usize) -> Workload {
+        Workload {
+            n: 1,
+            oh: 8,
+            ow: 8,
+            ff,
+            ic: 16,
+            kh: 3,
+            kw: 3,
+            groups: 1,
+            stride: 1,
+            epilogue: vec!["relu"],
+        }
+    }
+
+    fn sample_trace() -> (RemoteTrace, Workload, Program, Vec<f64>, f64) {
+        let w = wl(64);
+        let p = Program::naive(&w);
+        let mut trace = RemoteTrace::new(DeviceSpec::kryo385(), 0.03, 2);
+        let mut rng = Rng::new(3);
+        let jitter: Vec<f64> = (0..2).map(|_| rng.lognormal(0.03)).collect();
+        let mean = jitter.iter().map(|j| 1.5e-3 * j).sum::<f64>() / 2.0;
+        trace.record_latency(&w, &p, 1.5e-3);
+        trace.record_measurement(&w, &p, 2, jitter.clone(), mean);
+        (trace, w, p, jitter, mean)
+    }
+
+    #[test]
+    fn remote_trace_round_trips_byte_stably() {
+        let (trace, ..) = sample_trace();
+        let a = trace.to_json().to_string();
+        assert_eq!(a, trace.to_json().to_string());
+        let j = json::parse(&a).unwrap();
+        assert_eq!(j.get("format").and_then(Json::as_str), Some(REMOTE_TRACE_FORMAT));
+        assert_eq!(j.get("workers").and_then(Json::as_usize), Some(2));
+        // parse → serialize is the identity
+        assert_eq!(RemoteTrace::parse(&a).unwrap().to_json().to_string(), a);
+        // foreign documents rejected
+        assert!(RemoteTrace::parse("{}").is_err());
+    }
+
+    #[test]
+    fn replay_conversion_reproduces_means_and_rng_stream() {
+        let (trace, w, p, _, mean) = sample_trace();
+        let rep = trace.replay("<remote-trace>");
+        assert_eq!(rep.spec().name, "Kryo 385 (Galaxy S9)");
+        let mut rng = Rng::new(99);
+        let got = rep.measure_batch(&w, &[&p], &mut rng, 2);
+        assert_eq!(got[0].to_bits(), mean.to_bits());
+        assert_eq!(rep.latency(&w, &p).to_bits(), 1.5e-3_f64.to_bits());
+        // replay burned exactly the contract's two draws
+        let mut fresh = Rng::new(99);
+        let _ = fresh.lognormal(0.0);
+        let _ = fresh.lognormal(0.0);
+        assert_eq!(rng.next_u64(), fresh.next_u64());
+    }
+
+    #[test]
+    fn save_load_and_format_dispatch() {
+        let (trace, w, p, _, mean) = sample_trace();
+        let path = std::env::temp_dir().join("cprune_remote_trace_unit_test.json");
+        trace.save(&path).unwrap();
+        let back = RemoteTrace::load(&path).unwrap();
+        assert_eq!(back.recorded_measurements(), 1);
+        // load_trace_target dispatches on the format tag
+        let rep = load_trace_target(&path).unwrap();
+        let mut rng = Rng::new(0);
+        assert_eq!(rep.measure_batch(&w, &[&p], &mut rng, 2)[0].to_bits(), mean.to_bits());
+        let _ = std::fs::remove_file(&path);
+    }
+}

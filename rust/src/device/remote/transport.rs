@@ -1,0 +1,240 @@
+//! Connections to measurement workers: child processes over
+//! stdin/stdout, TCP sockets, and in-memory loopback threads for tests.
+//!
+//! Every transport is wrapped in the same [`Connection`] shape: a boxed
+//! writer for requests plus a dedicated reader thread that parses frames
+//! into a channel. The channel is what gives every transport a portable
+//! deadline — [`Connection::recv_deadline`] is a `recv_timeout`, whether
+//! the peer is a pipe, a socket, or a thread.
+//!
+//! This module is the remote plane's wall-clock edge: deadlines and
+//! backoff need `Instant`, which is why `rust/src/device/remote/` holds
+//! cprune-lint's one documented CPL003 wall-clock exemption (DESIGN.md
+//! §14). Nothing here feeds timing into a measurement value — the
+//! numbers a pool returns are computed from client-drawn RNG jitter.
+
+use super::protocol::{read_frame, write_frame, Frame};
+use super::worker;
+use crate::device::Target;
+use std::io::{self, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Fault injected into a loopback worker, for death/timeout tests:
+/// counts requests served *after* the handshake.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopbackFault {
+    /// Serve faithfully forever.
+    None,
+    /// Serve `n` requests, then drop the connection (client sees EOF).
+    DieAfter(usize),
+    /// Serve `n` requests, then swallow requests without replying
+    /// (client sees a deadline timeout).
+    HangAfter(usize),
+}
+
+/// Writer half of an in-memory byte pipe.
+struct PipeWriter {
+    tx: mpsc::Sender<Vec<u8>>,
+}
+
+impl Write for PipeWriter {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.tx
+            .send(buf.to_vec())
+            .map_err(|_| io::Error::new(io::ErrorKind::BrokenPipe, "loopback peer closed"))?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Reader half of an in-memory byte pipe; a dropped sender reads as EOF.
+struct PipeReader {
+    rx: mpsc::Receiver<Vec<u8>>,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl PipeReader {
+    fn new(rx: mpsc::Receiver<Vec<u8>>) -> PipeReader {
+        PipeReader { rx, buf: Vec::new(), pos: 0 }
+    }
+}
+
+impl Read for PipeReader {
+    fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+        if self.pos >= self.buf.len() {
+            match self.rx.recv() {
+                Ok(chunk) => {
+                    self.buf = chunk;
+                    self.pos = 0;
+                }
+                Err(_) => return Ok(0),
+            }
+        }
+        let n = out.len().min(self.buf.len() - self.pos);
+        out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// One live worker connection, transport-agnostic.
+pub struct Connection {
+    desc: String,
+    writer: Box<dyn Write + Send>,
+    rx: mpsc::Receiver<Result<Frame, String>>,
+    child: Option<Child>,
+}
+
+impl Connection {
+    /// Wrap a raw reader/writer pair: spawns the reader thread that
+    /// parses frames into the receive channel.
+    fn over(
+        desc: String,
+        reader: impl Read + Send + 'static,
+        writer: impl Write + Send + 'static,
+        child: Option<Child>,
+    ) -> Connection {
+        let (tx, rx) = mpsc::channel();
+        std::thread::Builder::new()
+            .name(format!("cprune-remote-rx {desc}"))
+            .spawn(move || {
+                let mut r = BufReader::new(reader);
+                loop {
+                    match read_frame(&mut r) {
+                        Ok(Some(frame)) => {
+                            if tx.send(Ok(frame)).is_err() {
+                                return; // connection dropped client-side
+                            }
+                        }
+                        Ok(None) => return, // clean EOF: channel disconnect
+                        Err(e) => {
+                            let _ = tx.send(Err(e));
+                            return;
+                        }
+                    }
+                }
+            })
+            .map(drop)
+            .unwrap_or_else(|e| panic!("cannot spawn reader thread for {desc}: {e}"));
+        Connection { desc, writer: Box::new(writer), rx, child }
+    }
+
+    /// Human-readable peer description (`loopback#2`, `worker-pid:1234`,
+    /// `tcp:host:port`) used in every diagnostic about this worker.
+    pub fn desc(&self) -> &str {
+        &self.desc
+    }
+
+    /// Send one frame and flush it to the peer.
+    pub fn send(&mut self, frame: &Frame) -> Result<(), String> {
+        write_frame(&mut self.writer, frame)
+            .and_then(|()| self.writer.flush().map_err(|e| format!("flush failed: {e}")))
+            .map_err(|e| format!("{}: {e}", self.desc))
+    }
+
+    /// Receive the next frame, failing once `deadline` passes.
+    pub fn recv_deadline(&mut self, deadline: Instant) -> Result<Frame, String> {
+        let timeout = deadline.saturating_duration_since(Instant::now());
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok(frame)) => Ok(frame),
+            Ok(Err(e)) => Err(format!("{}: {e}", self.desc)),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(format!("{}: no response within the deadline", self.desc))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(format!("{}: connection closed", self.desc))
+            }
+        }
+    }
+
+    /// In-memory worker serving `target` on its own thread.
+    pub fn loopback(target: Box<dyn Target>, index: usize) -> Connection {
+        Self::loopback_with(target, LoopbackFault::None, index)
+    }
+
+    /// In-memory worker with an injected fault (tests).
+    pub fn loopback_with(
+        target: Box<dyn Target>,
+        fault: LoopbackFault,
+        index: usize,
+    ) -> Connection {
+        let (client_tx, worker_rx) = mpsc::channel::<Vec<u8>>();
+        let (worker_tx, client_rx) = mpsc::channel::<Vec<u8>>();
+        std::thread::Builder::new()
+            .name(format!("cprune-remote-loopback#{index}"))
+            .spawn(move || {
+                let r = PipeReader::new(worker_rx);
+                let w = PipeWriter { tx: worker_tx };
+                // A loopback worker's failure surfaces client-side as
+                // EOF/timeout; the Err itself carries no extra signal.
+                let _ = worker::serve_with_fault(r, w, target.as_ref(), fault);
+            })
+            .map(drop)
+            .unwrap_or_else(|e| panic!("cannot spawn loopback worker: {e}"));
+        Connection::over(
+            format!("loopback#{index}"),
+            PipeReader::new(client_rx),
+            PipeWriter { tx: client_tx },
+            None,
+        )
+    }
+
+    /// Spawn `exe worker --stdio --device NAME` as a child process and
+    /// connect over its stdin/stdout. `exe` is normally
+    /// [`std::env::current_exe`]; tests pass `CARGO_BIN_EXE_cprune`.
+    pub fn spawn_with_exe(exe: &Path, device: &str) -> Result<Connection, String> {
+        let mut child = Command::new(exe)
+            .args(["worker", "--stdio", "--device", device])
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .spawn()
+            .map_err(|e| format!("cannot spawn worker {}: {e}", exe.display()))?;
+        let stdin = child.stdin.take().ok_or("worker child has no stdin")?;
+        let stdout = child.stdout.take().ok_or("worker child has no stdout")?;
+        let desc = format!("worker-pid:{}", child.id());
+        Ok(Connection::over(desc, stdout, stdin, Some(child)))
+    }
+
+    /// Spawn a worker subprocess from the currently running executable.
+    pub fn spawn_worker(device: &str) -> Result<Connection, String> {
+        let exe =
+            std::env::current_exe().map_err(|e| format!("cannot locate own executable: {e}"))?;
+        Self::spawn_with_exe(&exe, device)
+    }
+
+    /// Connect to a `cprune worker --listen ADDR` over TCP.
+    pub fn connect_tcp(addr: &str) -> Result<Connection, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("cannot connect {addr}: {e}"))?;
+        let reader = stream.try_clone().map_err(|e| format!("cannot clone socket: {e}"))?;
+        Ok(Connection::over(format!("tcp:{addr}"), reader, stream, None))
+    }
+}
+
+impl Drop for Connection {
+    /// Orderly close: ask the worker to shut down, then reap a child
+    /// process with a bounded wait (a wedged child is killed rather than
+    /// hanging our own exit).
+    fn drop(&mut self) {
+        let _ = write_frame(&mut self.writer, &Frame::Shutdown);
+        let _ = self.writer.flush();
+        if let Some(child) = self.child.as_mut() {
+            for _ in 0..200 {
+                match child.try_wait() {
+                    Ok(Some(_)) => return,
+                    Ok(None) => std::thread::sleep(Duration::from_millis(10)),
+                    Err(_) => break,
+                }
+            }
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}

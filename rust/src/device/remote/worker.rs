@@ -1,0 +1,286 @@
+//! The worker side of the remote measurement plane: a serve loop that
+//! answers `cprune-remote` v1 frames against any local [`Target`].
+//!
+//! Workers are deliberately dumb: they hold no RNG and no retry logic.
+//! The client draws every jitter multiplier and ships it in the request
+//! (see [`super::protocol::Frame::MeasureBatch`]); the worker computes
+//! `base = target.latency(w, p)` and folds `mean(base * jitter)` in the
+//! exact order [`Target::measure_batch`]'s default does, so a pool of N
+//! workers reproduces an in-process provider bit-for-bit.
+//!
+//! Protocol errors on a request are answered with an `error` frame and
+//! the loop keeps serving; a malformed *stream* (bad framing, non-JSON)
+//! ends the loop with `Err` — the transport is gone, not one request.
+
+use super::protocol::{read_frame, write_frame, Frame};
+use super::transport::LoopbackFault;
+use crate::device::Target;
+use std::io::{BufReader, Read, Write};
+use std::net::TcpListener;
+
+/// Serve one connection until EOF or `shutdown`.
+pub fn serve(reader: impl Read, writer: impl Write, target: &dyn Target) -> Result<(), String> {
+    serve_with_fault(reader, writer, target, LoopbackFault::None)
+}
+
+/// [`serve`] with an injected fault (loopback tests only — real workers
+/// always serve with [`LoopbackFault::None`]).
+pub fn serve_with_fault(
+    reader: impl Read,
+    writer: impl Write,
+    target: &dyn Target,
+    fault: LoopbackFault,
+) -> Result<(), String> {
+    let mut r = BufReader::new(reader);
+    let mut w = writer;
+    let mut served = 0usize;
+    loop {
+        let frame = match read_frame(&mut r)? {
+            Some(f) => f,
+            None => return Ok(()), // client closed the stream
+        };
+        let is_request = matches!(frame, Frame::MeasureBatch { .. } | Frame::Latency { .. });
+        if is_request {
+            served += 1;
+            match fault {
+                LoopbackFault::DieAfter(n) if served > n => return Ok(()),
+                LoopbackFault::HangAfter(n) if served > n => continue,
+                _ => {}
+            }
+        }
+        let reply = match frame {
+            Frame::Hello => {
+                Frame::HelloAck { spec: target.spec().clone(), noise_sigma: target.noise_sigma() }
+            }
+            Frame::MeasureBatch { id, workload, programs, repeats, jitter } => {
+                measure_reply(target, id, &workload, &programs, repeats, &jitter)
+            }
+            Frame::Latency { id, workload, program } => {
+                Frame::LatencyResult { id, seconds: target.latency(&workload, &program) }
+            }
+            Frame::Shutdown => {
+                let _ = write_frame(&mut w, &Frame::Bye);
+                let _ = w.flush();
+                return Ok(());
+            }
+            other => Frame::Error {
+                id: None,
+                message: format!("worker cannot serve a {} frame", other.kind()),
+            },
+        };
+        write_frame(&mut w, &reply)?;
+        w.flush().map_err(|e| format!("flush failed: {e}"))?;
+    }
+}
+
+/// Compute one `measure_batch` reply. The fold per program must stay
+/// identical to [`Target::measure_batch`]'s default — sum of
+/// `base * jitter[k]` in draw order, divided by `repeats` — or remote
+/// runs stop being bit-identical to in-process ones.
+fn measure_reply(
+    target: &dyn Target,
+    id: u64,
+    workload: &crate::tir::Workload,
+    programs: &[crate::tir::Program],
+    repeats: usize,
+    jitter: &[Vec<f64>],
+) -> Frame {
+    if repeats == 0 {
+        return Frame::Error { id: Some(id), message: "measure_batch with repeats 0".to_string() };
+    }
+    if jitter.len() != programs.len() {
+        return Frame::Error {
+            id: Some(id),
+            message: format!(
+                "measure_batch has {} programs but {} jitter rows",
+                programs.len(),
+                jitter.len()
+            ),
+        };
+    }
+    let mut means = Vec::with_capacity(programs.len());
+    for (p, draws) in programs.iter().zip(jitter) {
+        if draws.len() != repeats {
+            return Frame::Error {
+                id: Some(id),
+                message: format!(
+                    "measure_batch has {} jitter draws for repeats {repeats}",
+                    draws.len()
+                ),
+            };
+        }
+        let base = target.latency(workload, p);
+        means.push(draws.iter().map(|j| base * j).sum::<f64>() / repeats as f64);
+    }
+    Frame::MeasureResult { id, means }
+}
+
+/// Serve frames over stdin/stdout (the `cprune worker --stdio` mode).
+/// Stdout carries the protocol, so anything human-readable a worker
+/// wants to say must go to stderr.
+pub fn serve_stdio(target: &dyn Target) -> Result<(), String> {
+    serve(std::io::stdin(), std::io::stdout(), target)
+}
+
+/// Serve TCP clients sequentially (the `cprune worker --listen ADDR`
+/// mode): one connection at a time, accepting the next after the
+/// current client disconnects. N-worker TCP deployments run N processes.
+pub fn serve_listen(addr: &str, target: &dyn Target) -> Result<(), String> {
+    let listener = TcpListener::bind(addr).map_err(|e| format!("cannot listen on {addr}: {e}"))?;
+    eprintln!("cprune worker: listening on {addr} (device '{}')", target.spec().name);
+    for stream in listener.incoming() {
+        let stream = stream.map_err(|e| format!("accept failed: {e}"))?;
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".to_string());
+        let reader = stream.try_clone().map_err(|e| format!("cannot clone socket: {e}"))?;
+        match serve(reader, stream, target) {
+            Ok(()) => eprintln!("cprune worker: client {peer} disconnected"),
+            Err(e) => eprintln!("cprune worker: client {peer} failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{AnalyticTarget, DeviceSpec};
+    use crate::tir::{Program, Workload};
+    use crate::util::rng::Rng;
+
+    fn wl(ff: usize) -> Workload {
+        Workload {
+            n: 1,
+            oh: 8,
+            ow: 8,
+            ff,
+            ic: 16,
+            kh: 3,
+            kw: 3,
+            groups: 1,
+            stride: 1,
+            epilogue: vec![],
+        }
+    }
+
+    /// Run `frames` through a serve loop and return the replies.
+    fn serve_script(target: &dyn Target, frames: &[Frame]) -> Vec<Frame> {
+        let mut input = Vec::new();
+        for f in frames {
+            write_frame(&mut input, f).unwrap();
+        }
+        let mut output = Vec::new();
+        serve(&input[..], &mut output, target).unwrap();
+        let mut r = BufReader::new(&output[..]);
+        let mut replies = Vec::new();
+        while let Some(f) = read_frame(&mut r).unwrap() {
+            replies.push(f);
+        }
+        replies
+    }
+
+    #[test]
+    fn serve_answers_hello_measure_latency_and_shutdown() {
+        let spec = DeviceSpec::kryo385();
+        let target = AnalyticTarget::new(spec.clone());
+        let w = wl(64);
+        let p = Program::naive(&w);
+        let mut rng = Rng::new(11);
+        let jitter: Vec<f64> = (0..3).map(|_| rng.lognormal(target.noise_sigma())).collect();
+        let replies = serve_script(
+            &target,
+            &[
+                Frame::Hello,
+                Frame::MeasureBatch {
+                    id: 1,
+                    workload: w.clone(),
+                    programs: vec![p.clone()],
+                    repeats: 3,
+                    jitter: vec![jitter.clone()],
+                },
+                Frame::Latency { id: 2, workload: w.clone(), program: p.clone() },
+                Frame::Shutdown,
+            ],
+        );
+        assert_eq!(replies.len(), 4);
+        match &replies[0] {
+            Frame::HelloAck { spec: s, noise_sigma } => {
+                assert_eq!(s.name, spec.name);
+                assert_eq!(noise_sigma.to_bits(), target.noise_sigma().to_bits());
+            }
+            other => panic!("wanted hello_ack, got {other:?}"),
+        }
+        // the fold matches the in-process default bit-for-bit
+        let base = target.latency(&w, &p);
+        let want = jitter.iter().map(|j| base * j).sum::<f64>() / 3.0;
+        match &replies[1] {
+            Frame::MeasureResult { means, .. } => {
+                assert_eq!(means.len(), 1);
+                assert_eq!(means[0].to_bits(), want.to_bits());
+            }
+            other => panic!("wanted measure_result, got {other:?}"),
+        }
+        match &replies[2] {
+            Frame::LatencyResult { seconds, .. } => {
+                assert_eq!(seconds.to_bits(), base.to_bits());
+            }
+            other => panic!("wanted latency_result, got {other:?}"),
+        }
+        assert_eq!(replies[3], Frame::Bye);
+    }
+
+    #[test]
+    fn malformed_requests_get_error_frames_not_a_dead_worker() {
+        let target = AnalyticTarget::new(DeviceSpec::kryo385());
+        let w = wl(64);
+        let p = Program::naive(&w);
+        let replies = serve_script(
+            &target,
+            &[
+                // jitter arity mismatch
+                Frame::MeasureBatch {
+                    id: 5,
+                    workload: w.clone(),
+                    programs: vec![p.clone()],
+                    repeats: 3,
+                    jitter: vec![vec![1.0, 1.0]],
+                },
+                // a frame only clients should receive
+                Frame::MeasureResult { id: 6, means: vec![] },
+                // the worker must still be alive to answer this
+                Frame::Latency { id: 7, workload: w, program: p },
+                Frame::Shutdown,
+            ],
+        );
+        assert!(matches!(&replies[0], Frame::Error { id: Some(5), .. }), "{:?}", replies[0]);
+        assert!(matches!(&replies[1], Frame::Error { id: None, .. }), "{:?}", replies[1]);
+        assert!(matches!(&replies[2], Frame::LatencyResult { id: 7, .. }), "{:?}", replies[2]);
+    }
+
+    #[test]
+    fn die_after_fault_cuts_the_stream() {
+        let target = AnalyticTarget::new(DeviceSpec::kryo385());
+        let w = wl(64);
+        let p = Program::naive(&w);
+        let mut input = Vec::new();
+        for f in [
+            Frame::Hello,
+            Frame::Latency { id: 1, workload: w.clone(), program: p.clone() },
+            Frame::Latency { id: 2, workload: w, program: p },
+        ] {
+            write_frame(&mut input, &f).unwrap();
+        }
+        let mut output = Vec::new();
+        serve_with_fault(&input[..], &mut output, &target, LoopbackFault::DieAfter(1)).unwrap();
+        let mut r = BufReader::new(&output[..]);
+        let mut replies = Vec::new();
+        while let Some(f) = read_frame(&mut r).unwrap() {
+            replies.push(f);
+        }
+        // hello + first latency answered; the second died unanswered
+        assert_eq!(replies.len(), 2);
+        assert!(matches!(&replies[1], Frame::LatencyResult { id: 1, .. }));
+    }
+}

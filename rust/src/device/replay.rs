@@ -19,10 +19,14 @@
 //! the `repeats` jitter draws per program the measurement contract
 //! guarantees the recorder consumed (see `device::target`).
 //!
-//! Replay is strict: a query the trace does not cover panics with a
-//! descriptive message — a divergence means the replayed run is not the
-//! recorded run (different model/seed/budget), and silently falling back
-//! to the analytic model would defeat the point.
+//! Replay is strict: a query the trace does not cover means the
+//! replayed run is not the recorded run (different model/seed/budget),
+//! and silently falling back to the analytic model would defeat the
+//! point. Divergence unwinds with a [`Divergence`] payload — a
+//! [`crate::verify::Diagnostic`] (code `CPV124`) rendered
+//! `source: pointer: CPV124: message`, the same shape `cprune check`
+//! prints — which `run::Run::execute` catches and converts into a plain
+//! `Err`, so the CLI reports it with exit 1 instead of a crash.
 //!
 //! In memory the trace is keyed by the typed `(Workload, Program)`
 //! values themselves (both are `Eq + Hash`) — the tuner hot loop never
@@ -37,14 +41,43 @@ use crate::tir::jsonio::{program_from_json, program_to_json, workload_from_json,
 use crate::tir::{Program, Workload};
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
+use crate::verify::{Code, Diagnostic};
 use std::collections::{HashMap, VecDeque};
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Mutex, Once};
 
 /// Format tag of the on-disk trace header.
 pub const TRACE_FORMAT: &str = "cprune-measure-trace";
 /// Bump when the trace schema changes; `parse` rejects other versions.
 pub const TRACE_VERSION: u64 = 1;
+
+/// Panic payload of a replay divergence: a structured diagnostic
+/// (`CPV124`) instead of a bare string, so catchers up the stack —
+/// `run::Run::execute`, thence the CLI — can recognize the failure and
+/// turn it into an error message + exit 1.
+pub struct Divergence(pub Diagnostic);
+
+impl std::fmt::Display for Divergence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+/// The default panic hook prints `Box<dyn Any>` for non-string payloads,
+/// which is useless noise on top of the message the catcher renders.
+/// Install (once) a hook that stays silent for [`Divergence`] payloads
+/// and delegates everything else to the previous hook.
+fn silence_divergence_hook() {
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let previous = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<Divergence>().is_none() {
+                previous(info);
+            }
+        }));
+    });
+}
 
 enum Mode {
     Record(Box<dyn Target>),
@@ -56,6 +89,10 @@ pub struct ReplayTarget {
     spec: DeviceSpec,
     noise_sigma: f64,
     mode: Mode,
+    /// Where the trace came from (a file path for [`ReplayTarget::load`],
+    /// `<trace>`/`<recording>` otherwise) — the `file` half of a
+    /// divergence diagnostic's `file: pointer: CPVnnn: message` shape.
+    source: String,
     /// Deterministic-latency queries: (workload, program) → seconds.
     latencies: Mutex<HashMap<(Workload, Program), f64>>,
     /// Batch means per (workload, program, repeats), in call order;
@@ -80,9 +117,43 @@ impl ReplayTarget {
             spec: inner.spec().clone(),
             noise_sigma: inner.noise_sigma(),
             mode: Mode::Record(inner),
+            source: "<recording>".to_string(),
             latencies: Mutex::new(HashMap::new()),
             batches: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Assemble a replay-mode target from already-decoded parts — how a
+    /// `cprune-remote-trace` ([`super::remote::trace::RemoteTrace`])
+    /// becomes replayable without re-encoding itself as a measure-trace
+    /// document. `source` labels divergence diagnostics.
+    pub(crate) fn from_parts(
+        spec: DeviceSpec,
+        noise_sigma: f64,
+        source: String,
+        latencies: HashMap<(Workload, Program), f64>,
+        batches: HashMap<(Workload, Program, usize), VecDeque<f64>>,
+    ) -> ReplayTarget {
+        ReplayTarget {
+            spec,
+            noise_sigma,
+            mode: Mode::Replay,
+            source,
+            latencies: Mutex::new(latencies),
+            batches: Mutex::new(batches),
+        }
+    }
+
+    /// Unwind with a structured divergence diagnostic (see the module
+    /// docs): `pointer` locates the query within the trace, `message`
+    /// says what was missing.
+    fn diverge(&self, pointer: &str, message: String) -> ! {
+        silence_divergence_hook();
+        std::panic::panic_any(Divergence(Diagnostic::new(
+            Code::ReplayDivergence,
+            format!("{}: {pointer}", self.source),
+            message,
+        )))
     }
 
     /// True in record mode.
@@ -209,6 +280,7 @@ impl ReplayTarget {
             spec,
             noise_sigma,
             mode: Mode::Replay,
+            source: "<trace>".to_string(),
             latencies: Mutex::new(latencies),
             batches: Mutex::new(batches),
         })
@@ -240,7 +312,9 @@ impl ReplayTarget {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("reading {}: {e}", path.display()))?;
-        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+        let mut target = Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        target.source = path.display().to_string();
+        Ok(target)
     }
 }
 
@@ -267,13 +341,16 @@ impl Target for ReplayTarget {
             Mode::Replay => {
                 match self.latencies.lock().unwrap().get(&(w.clone(), p.clone())) { // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
                     Some(&seconds) => seconds,
-                    None => panic!(
-                        "replay trace for '{}' has no latency record for workload \
-                         {} / program {} — the replayed run diverged from the \
-                         recorded one (different model, seed or budget?)",
-                        self.spec.name,
-                        workload_to_json(w),
-                        program_to_json(p)
+                    None => self.diverge(
+                        "latencies",
+                        format!(
+                            "trace for '{}' has no latency record for workload \
+                             {} / program {} — the replayed run diverged from the \
+                             recorded one (different model, seed or budget?)",
+                            self.spec.name,
+                            workload_to_json(w),
+                            program_to_json(p)
+                        ),
                     ),
                 }
             }
@@ -312,22 +389,29 @@ impl Target for ReplayTarget {
                         }
                         match batches.get_mut(&(w.clone(), p.clone(), repeats)) {
                             Some(q) => q.pop_front().unwrap_or_else(|| {
-                                panic!(
-                                    "replay trace for '{}' exhausted for workload {} / \
-                                     program {} (repeats {repeats}) — the replayed run \
-                                     measured this program more often than the recording",
+                                self.diverge(
+                                    "measurements",
+                                    format!(
+                                        "trace for '{}' exhausted for workload {} / \
+                                         program {} (repeats {repeats}) — the replayed run \
+                                         diverged: it measured this program more often \
+                                         than the recording",
+                                        self.spec.name,
+                                        workload_to_json(w),
+                                        program_to_json(p)
+                                    ),
+                                )
+                            }),
+                            None => self.diverge(
+                                "measurements",
+                                format!(
+                                    "trace for '{}' has no measurements for workload \
+                                     {} / program {} (repeats {repeats}) — the replayed run \
+                                     diverged from the recorded one",
                                     self.spec.name,
                                     workload_to_json(w),
                                     program_to_json(p)
-                                )
-                            }),
-                            None => panic!(
-                                "replay trace for '{}' has no measurements for workload \
-                                 {} / program {} (repeats {repeats}) — the replayed run \
-                                 diverged from the recorded one",
-                                self.spec.name,
-                                workload_to_json(w),
-                                program_to_json(p)
+                                ),
                             ),
                         }
                     })
@@ -350,6 +434,15 @@ impl Target for ReplayTarget {
 
     fn as_replay(&self) -> Option<&ReplayTarget> {
         Some(self)
+    }
+
+    fn as_remote(&self) -> Option<&super::remote::RemoteTarget> {
+        match &self.mode {
+            // Recording a remote pool: let the run layer find the pool's
+            // own trace hook, so --record-trace and --remote-trace compose.
+            Mode::Record(inner) => inner.as_remote(),
+            Mode::Replay => None,
+        }
     }
 }
 
@@ -423,14 +516,34 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "diverged")]
-    fn replay_divergence_panics_loudly() {
+    fn replay_divergence_carries_a_structured_diagnostic() {
         let rec = ReplayTarget::record(Box::new(AnalyticTarget::new(DeviceSpec::kryo385())));
         let rep = ReplayTarget::parse(&rec.to_json().to_string()).unwrap();
         let w = wl(64);
         let p = Program::naive(&w);
-        let mut rng = Rng::new(0);
-        let _ = rep.measure_batch(&w, &[&p], &mut rng, 2);
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(0);
+            let _ = rep.measure_batch(&w, &[&p], &mut rng, 2);
+        }))
+        .expect_err("divergence must unwind");
+        let d = payload.downcast::<Divergence>().expect("payload is a Divergence");
+        let text = d.to_string();
+        assert_eq!(d.0.code.id(), "CPV124");
+        assert!(text.starts_with("<trace>: measurements: CPV124: "), "{text}");
+        assert!(text.contains("diverged"), "{text}");
+
+        // ...and the latency path, with the file path as the source
+        let path = std::env::temp_dir().join("cprune_replay_divergence_test.json");
+        rec.save(&path).unwrap();
+        let rep = ReplayTarget::load(&path).unwrap();
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = rep.latency(&w, &p);
+        }))
+        .expect_err("divergence must unwind");
+        let d = payload.downcast::<Divergence>().expect("payload is a Divergence");
+        let text = d.to_string();
+        assert!(text.contains("cprune_replay_divergence_test.json: latencies: CPV124"), "{text}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

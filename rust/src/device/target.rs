@@ -5,7 +5,7 @@
 //! desktop GPU over TVM's RPC measurement plane; everything above it (the
 //! tuner, CPrune's gates, the experiment harnesses) only ever asks two
 //! questions — *"what does this program cost?"* and *"measure this batch
-//! for me"*. [`Target`] is that seam. Three providers ship:
+//! for me"*. [`Target`] is that seam. Four providers ship:
 //!
 //! * [`AnalyticTarget`] — wraps the roofline [`Simulator`]; bit-for-bit
 //!   identical to the pre-trait `Simulator` wiring (pinned by
@@ -15,7 +15,10 @@
 //!   with analytic fallback for uncovered workloads;
 //! * [`super::ReplayTarget`] — records every measurement to a versioned
 //!   JSON trace and replays it byte-identically (deterministic
-//!   cross-machine CI, offline debugging of tuner decisions).
+//!   cross-machine CI, offline debugging of tuner decisions);
+//! * [`super::RemoteTarget`] — a pool of out-of-process workers speaking
+//!   the `cprune-remote` wire protocol (DESIGN.md §14), bit-identical to
+//!   the in-process provider the workers wrap.
 //!
 //! Devices resolve by name through [`super::TargetRegistry`] — the five
 //! built-ins plus user-defined specs loaded from JSON device files.
@@ -100,6 +103,14 @@ pub trait Target: Send + Sync {
     /// Downcast hook for the replay provider, so the run layer can
     /// persist a recording target's trace without `Any` plumbing.
     fn as_replay(&self) -> Option<&ReplayTarget> {
+        None
+    }
+
+    /// Downcast hook for the remote provider, so the run layer can
+    /// persist a pool's `cprune-remote-trace` recording without `Any`
+    /// plumbing. [`super::ReplayTarget`] delegates to its inner target
+    /// while recording, so `--record-trace` and `--remote-trace` compose.
+    fn as_remote(&self) -> Option<&super::remote::RemoteTarget> {
         None
     }
 }

@@ -24,14 +24,19 @@
 //! Device selection goes through the [`crate::device::TargetRegistry`]
 //! (built-ins plus `CPRUNE_DEVICES` device files): [`RunBuilder::device`]
 //! and [`RunBuilder::target_name`] resolve names (the latter also
-//! accepts an `analytic:`/`lut:` provider prefix), [`RunBuilder::target`]
-//! injects any provider directly, and
+//! accepts an `analytic:`/`lut:`/`remote:` provider prefix),
+//! [`RunBuilder::target`] injects any provider directly, and
 //! [`RunBuilder::record_trace`]/[`RunBuilder::replay_trace`] wrap the run
 //! in the record/replay provider for deterministic cross-machine replays.
+//! `remote:` targets (DESIGN.md §14) measure on a pool of out-of-process
+//! workers — [`RunBuilder::workers`] sizes the pool,
+//! [`RunBuilder::remote_trace`] records its wire-level measurements.
 
 use super::{PruneOutcome, Pruner, RunContext, RunObserver};
 use crate::accuracy::{AccuracyOracle, ProxyOracle};
 use crate::device::calibration::{self, CalibrationTable};
+use crate::device::remote::{load_trace_target, RemoteOptions, RemoteTarget};
+use crate::device::replay::Divergence;
 use crate::device::{AnalyticTarget, DeviceSpec, LutTarget, ReplayTarget, Target, TargetRegistry};
 use crate::graph::model_zoo::{Model, ModelKind};
 use crate::tuner::{TuneCache, TuneOptions, TuningSession};
@@ -49,6 +54,11 @@ enum TargetChoice {
     Explicit(Box<dyn Target>),
     /// Replay provider loaded from a recorded trace.
     Replay(PathBuf),
+    /// Remote worker pool (DESIGN.md §14): stdio subprocess workers when
+    /// `endpoints` is empty (pool size from [`RunBuilder::workers`]),
+    /// one TCP connection per endpoint otherwise. `spec` is the
+    /// registry-resolved device the pool's Hello replies must match.
+    Remote { spec: DeviceSpec, device: String, endpoints: Vec<String> },
 }
 
 /// Builder for a [`Run`]. Defaults: Kryo 385 (analytic),
@@ -61,6 +71,8 @@ pub struct RunBuilder {
     registry: Option<TargetRegistry>,
     calibration: Option<CalibrationTable>,
     record_path: Option<PathBuf>,
+    remote_trace_path: Option<PathBuf>,
+    workers: usize,
     tune_opts: TuneOptions,
     seed: u64,
     cache_path: Option<PathBuf>,
@@ -79,6 +91,8 @@ impl RunBuilder {
             registry: None,
             calibration: None,
             record_path: None,
+            remote_trace_path: None,
+            workers: 1,
             tune_opts: TuneOptions::quick(),
             seed: 0,
             cache_path: None,
@@ -142,11 +156,27 @@ impl RunBuilder {
     }
 
     /// Target by registry name with an optional provider prefix:
-    /// `NAME`/`analytic:NAME` (roofline) or `lut:NAME` (calibrated
+    /// `NAME`/`analytic:NAME` (roofline), `lut:NAME` (calibrated
     /// per-layer tables built for the run's model at build time, analytic
-    /// fallback for uncovered workloads). Unknown names fail at
+    /// fallback for uncovered workloads), or `remote:NAME` /
+    /// `remote:NAME@HOST:PORT[,HOST:PORT...]` (a pool of out-of-process
+    /// workers, DESIGN.md §14 — spawned `cprune worker` subprocesses
+    /// without addresses, TCP peers with). Unknown names fail at
     /// [`build`](Self::build) listing the registry's valid names.
     pub fn target_name(mut self, name: &str) -> RunBuilder {
+        if let Some(rest) = name.strip_prefix("remote:") {
+            let (bare, endpoints) = match rest.split_once('@') {
+                Some((b, addrs)) => {
+                    (b, addrs.split(',').filter(|a| !a.is_empty()).map(str::to_string).collect())
+                }
+                None => (rest, Vec::new()),
+            };
+            if let Some(spec) = self.resolve_spec(bare) {
+                self.choice =
+                    TargetChoice::Remote { spec, device: bare.to_string(), endpoints };
+            }
+            return self;
+        }
         let (provider, bare) = match name.split_once(':') {
             Some((p, rest)) if p == "lut" || p == "analytic" => (p, rest),
             _ => ("analytic", name),
@@ -165,8 +195,10 @@ impl RunBuilder {
     /// `cprune calibrate --save` output): if the table holds an entry
     /// for the device's display name, `calibration::apply` adjusts the
     /// spec before the analytic/LUT provider is built. Devices absent
-    /// from the table run uncalibrated; explicit-provider and replay
-    /// targets are unaffected (the replay trace carries its own spec).
+    /// from the table run uncalibrated; explicit-provider, replay and
+    /// remote targets are unaffected (the replay trace carries its own
+    /// spec; remote workers answer from their own device model, so
+    /// scale-fitting the client's copy would only break the Hello check).
     pub fn calibration(mut self, table: CalibrationTable) -> RunBuilder {
         self.calibration = Some(table);
         self
@@ -183,9 +215,27 @@ impl RunBuilder {
     /// Replay a recorded trace instead of measuring: the device spec
     /// comes from the trace, and the run reproduces the recorded run's
     /// results and event stream byte-for-byte (given the same model,
-    /// seed and budgets).
+    /// seed and budgets). Accepts a `cprune-measure-trace` or a
+    /// `cprune-remote-trace` (the format tag decides).
     pub fn replay_trace(mut self, path: impl Into<PathBuf>) -> RunBuilder {
         self.choice = TargetChoice::Replay(path.into());
+        self
+    }
+
+    /// Pool size for `remote:NAME` subprocess targets (default 1; 0 is
+    /// clamped to 1). Ignored for TCP endpoint lists, where each address
+    /// is one worker. Never affects results — only wall-clock.
+    pub fn workers(mut self, n: usize) -> RunBuilder {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Record every remote measurement — including the client-drawn
+    /// jitter multipliers — into a `cprune-remote-trace` file, written
+    /// after each [`Run::execute`]. Requires a remote target (checked at
+    /// [`build`](Self::build)).
+    pub fn remote_trace(mut self, path: impl Into<PathBuf>) -> RunBuilder {
+        self.remote_trace_path = Some(path.into());
         self
     }
 
@@ -257,13 +307,39 @@ impl RunBuilder {
                 Box::new(LutTarget::for_model(fitted(spec), &model, &self.tune_opts, self.seed))
             }
             TargetChoice::Explicit(t) => t,
-            TargetChoice::Replay(path) => Box::new(ReplayTarget::load(&path)?),
+            // Either trace format replays (load_trace_target dispatches
+            // on the document's format tag).
+            TargetChoice::Replay(path) => Box::new(load_trace_target(&path)?),
+            TargetChoice::Remote { spec, device, endpoints } => {
+                let opts = RemoteOptions::default();
+                let remote = if endpoints.is_empty() {
+                    RemoteTarget::spawn(&device, self.workers, opts)?
+                } else {
+                    RemoteTarget::connect(&endpoints, opts)?
+                };
+                // The workers' Hello already proved they agree with each
+                // other; now prove they measure the device the user named.
+                if remote.spec().to_json().to_string() != spec.to_json().to_string() {
+                    return Err(format!(
+                        "remote pool measures '{}' but '{device}' resolves to '{}'",
+                        remote.spec().name,
+                        spec.name
+                    ));
+                }
+                Box::new(remote)
+            }
         };
         let target: Box<dyn Target> = if self.record_path.is_some() {
             Box::new(ReplayTarget::record(base))
         } else {
             base
         };
+        if self.remote_trace_path.is_some() {
+            match target.as_remote() {
+                Some(remote) => remote.start_trace(),
+                None => return Err("remote_trace set but target is not a remote pool".to_string()),
+            }
+        }
         let cache = match &self.cache_path {
             Some(p) if p.exists() => TuneCache::load(p, target.spec().name)?,
             _ => TuneCache::new(),
@@ -272,6 +348,7 @@ impl RunBuilder {
             model,
             target,
             trace_path: self.record_path,
+            remote_trace_path: self.remote_trace_path,
             tune_opts: self.tune_opts,
             seed: self.seed,
             cache_path: self.cache_path,
@@ -293,6 +370,9 @@ pub struct Run {
     target: Box<dyn Target>,
     /// Where to persist the recording target's trace after each execute.
     trace_path: Option<PathBuf>,
+    /// Where to persist the remote pool's wire-level trace after each
+    /// execute.
+    remote_trace_path: Option<PathBuf>,
     tune_opts: TuneOptions,
     seed: u64,
     cache_path: Option<PathBuf>,
@@ -306,7 +386,11 @@ pub struct Run {
 impl Run {
     /// Execute `pruner` against this run's wiring. Emits the
     /// [`crate::run::RunEvent::Finished`] event after the pruner returns,
-    /// then persists the tune cache and measurement trace when configured.
+    /// then persists the tune cache and measurement trace(s) when
+    /// configured. A replay divergence (the structured [`Divergence`]
+    /// unwind, CPV124) is caught here and returned as a plain `Err`, so
+    /// the CLI reports it with exit 1 instead of a crash; every other
+    /// panic keeps unwinding.
     pub fn execute(&mut self, pruner: &dyn Pruner) -> Result<PruneOutcome, String> {
         let cache = std::mem::take(&mut self.cache);
         let session =
@@ -320,7 +404,16 @@ impl Run {
             );
             ctx.accuracy_budget = self.accuracy_budget;
             ctx.max_iterations = self.max_iterations;
-            pruner.run(&mut ctx)
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pruner.run(&mut ctx)
+            }));
+            match caught {
+                Ok(outcome) => outcome,
+                Err(payload) => match payload.downcast::<Divergence>() {
+                    Ok(d) => return Err(d.to_string()),
+                    Err(other) => std::panic::resume_unwind(other),
+                },
+            }
         };
         let finished = outcome.finished_event();
         for obs in self.observers.iter_mut() {
@@ -334,6 +427,14 @@ impl Run {
             match self.target.as_replay() {
                 Some(trace) => trace.save(path)?,
                 None => return Err("record_trace set but target is not recording".to_string()),
+            }
+        }
+        if let Some(path) = &self.remote_trace_path {
+            match self.target.as_remote() {
+                Some(remote) => remote.save_trace(path)?,
+                None => {
+                    return Err("remote_trace set but target is not a remote pool".to_string())
+                }
             }
         }
         // A broken observer (sink write error, registry save failure)
@@ -397,6 +498,28 @@ mod tests {
             Ok(_) => panic!("unknown target must fail"),
         };
         assert!(err.contains("galaxy-s10") && err.contains("kryo585"), "{err}");
+        // ...and the remote prefix resolves its bare name the same way
+        let err = match RunBuilder::new(ModelKind::ResNet8Cifar)
+            .target_name("remote:galaxy-s10@127.0.0.1:9999")
+            .build()
+        {
+            Err(e) => e,
+            Ok(_) => panic!("unknown remote device must fail"),
+        };
+        assert!(err.contains("galaxy-s10") && err.contains("kryo385"), "{err}");
+    }
+
+    #[test]
+    fn remote_trace_without_a_remote_target_fails_at_build() {
+        let err = match RunBuilder::new(ModelKind::ResNet8Cifar)
+            .device("kryo385")
+            .remote_trace("unused.json")
+            .build()
+        {
+            Err(e) => e,
+            Ok(_) => panic!("remote_trace needs a remote pool"),
+        };
+        assert!(err.contains("not a remote pool"), "{err}");
     }
 
     #[test]

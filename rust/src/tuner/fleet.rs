@@ -15,6 +15,10 @@
 //! Determinism: per-device sessions derive per-workload RNG streams, the
 //! pilot runs before every follower, and followers only read the pilot's
 //! (fixed) results — so the outcome is identical at any thread budget.
+//! That also holds when targets are [`crate::device::RemoteTarget`]
+//! pools of out-of-process workers (DESIGN.md §14): the remote plane is
+//! bit-identical to in-process measurement for any worker count, so
+//! fleet results stay independent of both knobs.
 
 use super::cache::TuneCache;
 use super::search::TuneOptions;
@@ -276,7 +280,12 @@ impl FleetSession {
                         .collect();
                     handles
                         .into_iter()
-                        .flat_map(|h| h.join().expect("fleet worker panicked")) // cprune-lint: allow(CPL005, reason="propagate worker panics")
+                        // Re-raise worker panics with their payload intact,
+                        // so a structured replay Divergence (CPV124) survives
+                        // to the catcher in `run::Run::execute`.
+                        .flat_map(|h| {
+                            h.join().unwrap_or_else(|e| std::panic::resume_unwind(e))
+                        })
                         .collect()
                 });
                 for (i, c) in results {

@@ -20,8 +20,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// Tunes models for one device; owns the cache and the RNG seed policy.
 ///
 /// The device is any [`Target`] measurement provider (DESIGN.md §11):
-/// the analytic roofline, a calibrated LUT target, or a record/replay
-/// target — the session neither knows nor cares which.
+/// the analytic roofline, a calibrated LUT target, a record/replay
+/// target, or a [`crate::device::RemoteTarget`] pool of out-of-process
+/// workers (DESIGN.md §14) — the session neither knows nor cares which.
 pub struct TuningSession<'a> {
     pub target: &'a dyn Target,
     pub opts: TuneOptions,
@@ -136,7 +137,10 @@ impl<'a> TuningSession<'a> {
                     .collect();
                 handles
                     .into_iter()
-                    .flat_map(|h| h.join().expect("tuner thread panicked")) // cprune-lint: allow(CPL005, reason="propagate worker panics")
+                    // Re-raise worker panics with their payload intact, so a
+                    // structured replay Divergence (CPV124) survives to the
+                    // catcher in `run::Run::execute`.
+                    .flat_map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
                     .collect()
             })
         };

@@ -8,9 +8,10 @@
 //! keys round-trip byte-identically through [`crate::tir::jsonio`] and
 //! entries arrive sorted by their canonical key (CPV122), numeric fields
 //! sit inside their domains (CPV123), cached/traced programs are legal
-//! for their workloads (CPV110–112 via [`super::program`]), and
-//! persisted Pareto frontiers are mutually non-dominated and ascending
-//! in both objectives (CPV130/131 via [`frontier_diagnostics`]).
+//! for their workloads (CPV110–112 via [`super::program`]), persisted
+//! Pareto frontiers are mutually non-dominated and ascending in both
+//! objectives (CPV130/131 via [`frontier_diagnostics`]), and remote
+//! traces carry well-formed jitter samples (CPV150–152, DESIGN.md §14).
 //!
 //! A document that does not claim a `cprune-*` format is not ours:
 //! `check_text` returns `None` and the [`super::sweep`] walker skips it.
@@ -19,6 +20,7 @@ use super::program::check_program;
 use super::{Code, Diagnostic};
 use crate::device::calibration::{CALIBRATION_FORMAT, CALIBRATION_VERSION};
 use crate::device::registry::{DEVICES_FORMAT, DEVICES_VERSION};
+use crate::device::remote::trace::{REMOTE_TRACE_FORMAT, REMOTE_TRACE_VERSION};
 use crate::device::replay::{TRACE_FORMAT, TRACE_VERSION};
 use crate::device::DeviceSpec;
 use crate::perf::{BENCH_FORMAT, BENCH_VERSION};
@@ -35,9 +37,10 @@ pub const BENCH_GOLDEN_FORMAT: &str = "cprune-bench-golden";
 /// Every format tag the checker understands. A file that fails to parse
 /// is only reported (CPV190) when it mentions one of these — arbitrary
 /// foreign JSON is none of our business.
-const KNOWN_FORMATS: [&str; 8] = [
+const KNOWN_FORMATS: [&str; 9] = [
     CACHE_FORMAT,
     TRACE_FORMAT,
+    REMOTE_TRACE_FORMAT,
     REGISTRY_FORMAT,
     DEVICES_FORMAT,
     CALIBRATION_FORMAT,
@@ -65,6 +68,7 @@ pub fn check_text(text: &str) -> Option<Vec<Diagnostic>> {
             match format.as_str() {
                 CACHE_FORMAT => check_cache(&j, &mut out),
                 TRACE_FORMAT => check_trace(&j, &mut out),
+                REMOTE_TRACE_FORMAT => check_remote_trace(&j, &mut out),
                 REGISTRY_FORMAT => check_registry(&j, &mut out),
                 DEVICES_FORMAT => check_devices(&j, &mut out),
                 CALIBRATION_FORMAT => check_calibration(&j, &mut out),
@@ -232,9 +236,10 @@ fn check_cache(j: &Json, out: &mut Vec<Diagnostic>) {
     check_sorted(&keys, "entries", out);
 }
 
-/// `cprune-measure-trace` v1 (`ReplayTarget::to_json`).
-fn check_trace(j: &Json, out: &mut Vec<Diagnostic>) {
-    check_version(j, TRACE_VERSION, out);
+/// `device` + `noise_sigma` header checks shared by both trace formats;
+/// returns the parsed sigma when present (remote jitter-domain checks
+/// depend on it).
+fn check_trace_header(j: &Json, out: &mut Vec<Diagnostic>) -> Option<f64> {
     match j.get("device") {
         Some(dj) => match DeviceSpec::from_json(dj) {
             Ok(spec) => {
@@ -251,14 +256,24 @@ fn check_trace(j: &Json, out: &mut Vec<Diagnostic>) {
         None => out.push(Diagnostic::new(Code::BadHeader, "header", "missing device spec")),
     }
     match j.get("noise_sigma").and_then(Json::as_f64) {
-        Some(s) if s.is_finite() && s >= 0.0 => {}
-        Some(s) => out.push(Diagnostic::new(
-            Code::NumericRange,
-            "header",
-            format!("noise_sigma {s} is not finite and non-negative"),
-        )),
-        None => out.push(Diagnostic::new(Code::BadHeader, "header", "missing noise_sigma")),
+        Some(s) if s.is_finite() && s >= 0.0 => Some(s),
+        Some(s) => {
+            out.push(Diagnostic::new(
+                Code::NumericRange,
+                "header",
+                format!("noise_sigma {s} is not finite and non-negative"),
+            ));
+            Some(s)
+        }
+        None => {
+            out.push(Diagnostic::new(Code::BadHeader, "header", "missing noise_sigma"));
+            None
+        }
     }
+}
+
+/// The `latencies` array shared by both trace formats.
+fn check_latency_entries(j: &Json, out: &mut Vec<Diagnostic>) {
     if let Some(lats) = doc_array(j, "latencies", out) {
         let mut keys = Vec::with_capacity(lats.len());
         for (i, e) in lats.iter().enumerate() {
@@ -277,6 +292,13 @@ fn check_trace(j: &Json, out: &mut Vec<Diagnostic>) {
         }
         check_sorted(&keys, "latencies", out);
     }
+}
+
+/// `cprune-measure-trace` v1 (`ReplayTarget::to_json`).
+fn check_trace(j: &Json, out: &mut Vec<Diagnostic>) {
+    check_version(j, TRACE_VERSION, out);
+    let _ = check_trace_header(j, out);
+    check_latency_entries(j, out);
     if let Some(batches) = doc_array(j, "measurements", out) {
         let mut keys = Vec::with_capacity(batches.len());
         for (i, e) in batches.iter().enumerate() {
@@ -318,6 +340,114 @@ fn check_trace(j: &Json, out: &mut Vec<Diagnostic>) {
             });
         }
         check_sorted(&keys, "measurements", out);
+    }
+}
+
+/// `cprune-remote-trace` v1 (`RemoteTrace::to_json`, DESIGN.md §14):
+/// the measure-trace invariants plus the remote plane's own — a worker
+/// count ≥ 1, and per-sample jitter draws that exist (CPV150), match
+/// `repeats` in number (CPV151) and sit in the lognormal's domain
+/// (CPV152; exactly 1 when the header's noise_sigma is 0).
+fn check_remote_trace(j: &Json, out: &mut Vec<Diagnostic>) {
+    check_version(j, REMOTE_TRACE_VERSION, out);
+    let sigma = check_trace_header(j, out);
+    match j.get("workers").and_then(Json::as_usize) {
+        Some(n) if n >= 1 => {}
+        Some(n) => out.push(Diagnostic::new(
+            Code::NumericRange,
+            "header",
+            format!("workers {n} must be at least 1"),
+        )),
+        None => out.push(Diagnostic::new(Code::BadHeader, "header", "missing workers")),
+    }
+    check_latency_entries(j, out);
+    let Some(batches) = doc_array(j, "measurements", out) else { return };
+    let mut keys = Vec::with_capacity(batches.len());
+    for (i, e) in batches.iter().enumerate() {
+        let ctx = format!("measurements[{i}]");
+        let wp = check_wp_entry(e, &ctx, out);
+        let repeats = e.get("repeats").and_then(Json::as_usize);
+        match repeats {
+            Some(r) if r >= 1 => {}
+            Some(r) => out.push(Diagnostic::new(
+                Code::NumericRange,
+                &ctx,
+                format!("repeats {r} must be at least 1"),
+            )),
+            None => out.push(Diagnostic::new(Code::MalformedEntry, &ctx, "missing repeats")),
+        }
+        match e.get("samples").and_then(Json::as_arr) {
+            Some(samples) => {
+                for (k, s) in samples.iter().enumerate() {
+                    check_remote_sample(s, &format!("{ctx}.samples[{k}]"), repeats, sigma, out);
+                }
+            }
+            None => out.push(Diagnostic::new(Code::RemoteEntry, &ctx, "missing samples")),
+        }
+        keys.push(match (wp, repeats) {
+            (Some((wk, pk)), Some(r)) => Some(format!("{wk}|{pk}|r{r}")),
+            _ => None,
+        });
+    }
+    check_sorted(&keys, "measurements", out);
+}
+
+/// One remote-trace sample: structure (CPV150), jitter arity (CPV151),
+/// jitter domain (CPV152) and mean range (CPV123).
+fn check_remote_sample(
+    s: &Json,
+    ctx: &str,
+    repeats: Option<usize>,
+    sigma: Option<f64>,
+    out: &mut Vec<Diagnostic>,
+) {
+    match s.get("jitter").and_then(Json::as_arr) {
+        Some(draws) => {
+            if let Some(r) = repeats {
+                if draws.len() != r {
+                    out.push(Diagnostic::new(
+                        Code::RemoteJitterArity,
+                        ctx,
+                        format!("{} jitter draws for repeats {r}", draws.len()),
+                    ));
+                }
+            }
+            for (d, v) in draws.iter().enumerate() {
+                match v.as_f64() {
+                    Some(x) if finite_positive(x) => {
+                        // lognormal(0.0) is exactly 1, so a sigma-0 trace
+                        // with any other draw was not written by our client
+                        if sigma == Some(0.0) && x != 1.0 {
+                            out.push(Diagnostic::new(
+                                Code::RemoteJitterRange,
+                                format!("{ctx}.jitter[{d}]"),
+                                format!("jitter {x} with noise_sigma 0 must be exactly 1"),
+                            ));
+                        }
+                    }
+                    Some(x) => out.push(Diagnostic::new(
+                        Code::RemoteJitterRange,
+                        format!("{ctx}.jitter[{d}]"),
+                        format!("jitter {x} is not finite and positive"),
+                    )),
+                    None => out.push(Diagnostic::new(
+                        Code::RemoteEntry,
+                        format!("{ctx}.jitter[{d}]"),
+                        "non-number jitter draw",
+                    )),
+                }
+            }
+        }
+        None => out.push(Diagnostic::new(Code::RemoteEntry, ctx, "missing jitter")),
+    }
+    match s.get("mean").and_then(Json::as_f64) {
+        Some(m) if finite_positive(m) => {}
+        Some(m) => out.push(Diagnostic::new(
+            Code::NumericRange,
+            ctx,
+            format!("mean {m} is not finite and positive"),
+        )),
+        None => out.push(Diagnostic::new(Code::RemoteEntry, ctx, "missing mean")),
     }
 }
 

@@ -41,7 +41,7 @@ use std::path::{Path, PathBuf};
 /// Stable diagnostic identifiers. IDs are never reused; retired checks
 /// leave holes. Grouped by layer: `CPV10x` graph, `CPV11x` program,
 /// `CPV12x` artifact schema, `CPV13x` frontier, `CPV14x` event stream,
-/// `CPV19x` document-level corruption.
+/// `CPV15x` remote traces, `CPV19x` document-level corruption.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Code {
     /// CPV100 — graph structure: id/index mismatch, forward-referencing
@@ -83,6 +83,10 @@ pub enum Code {
     /// non-positive latency/seconds, accuracy outside `[0, 1]`, negative
     /// noise sigma, zero repeats.
     NumericRange,
+    /// CPV124 — a replayed run queried outside its recorded trace (the
+    /// [`crate::device::ReplayTarget`] divergence diagnostic — raised at
+    /// run time, not by a document checker).
+    ReplayDivergence,
     /// CPV130 — a persisted frontier holds a dominated or duplicate
     /// point (the [`crate::serve::ParetoSet`] invariant).
     FrontierDominated,
@@ -92,6 +96,17 @@ pub enum Code {
     /// CPV140 — a run-event JSONL line violates the event schema:
     /// unparseable, unknown kind, missing/mistyped field, bad reason.
     EventSchema,
+    /// CPV150 — a `cprune-remote-trace` measurement entry is malformed:
+    /// missing/mistyped `samples`, `jitter` or `mean`.
+    RemoteEntry,
+    /// CPV151 — a remote-trace sample's jitter draw count differs from
+    /// its entry's `repeats` (replaying it would desynchronize the RNG
+    /// stream the measurement contract guarantees).
+    RemoteJitterArity,
+    /// CPV152 — a remote-trace jitter multiplier outside its domain:
+    /// non-finite, non-positive, or ≠ 1 under `noise_sigma` 0 (lognormal
+    /// jitter with sigma 0 is exactly 1).
+    RemoteJitterRange,
     /// CPV190 — a document that claims a `cprune-*` format but cannot be
     /// parsed at all.
     CorruptDocument,
@@ -99,7 +114,7 @@ pub enum Code {
 
 impl Code {
     /// Every code, in ID order.
-    pub const ALL: [Code; 17] = [
+    pub const ALL: [Code; 21] = [
         Code::GraphStructure,
         Code::ChannelMismatch,
         Code::ResidualMismatch,
@@ -113,9 +128,13 @@ impl Code {
         Code::MalformedEntry,
         Code::NonCanonicalKey,
         Code::NumericRange,
+        Code::ReplayDivergence,
         Code::FrontierDominated,
         Code::FrontierOrder,
         Code::EventSchema,
+        Code::RemoteEntry,
+        Code::RemoteJitterArity,
+        Code::RemoteJitterRange,
         Code::CorruptDocument,
     ];
 
@@ -135,9 +154,13 @@ impl Code {
             Code::MalformedEntry => "CPV121",
             Code::NonCanonicalKey => "CPV122",
             Code::NumericRange => "CPV123",
+            Code::ReplayDivergence => "CPV124",
             Code::FrontierDominated => "CPV130",
             Code::FrontierOrder => "CPV131",
             Code::EventSchema => "CPV140",
+            Code::RemoteEntry => "CPV150",
+            Code::RemoteJitterArity => "CPV151",
+            Code::RemoteJitterRange => "CPV152",
             Code::CorruptDocument => "CPV190",
         }
     }
@@ -158,9 +181,13 @@ impl Code {
             Code::MalformedEntry => "document entry fails to parse into its typed form",
             Code::NonCanonicalKey => "persisted key not canonical or entries unsorted",
             Code::NumericRange => "numeric field outside its domain",
+            Code::ReplayDivergence => "replayed run queried outside its recorded trace",
             Code::FrontierDominated => "frontier holds a dominated or duplicate point",
             Code::FrontierOrder => "frontier not ascending in latency and accuracy",
             Code::EventSchema => "run-event line violates the event schema",
+            Code::RemoteEntry => "remote-trace entry missing samples/jitter/mean",
+            Code::RemoteJitterArity => "remote-trace jitter draw count differs from repeats",
+            Code::RemoteJitterRange => "remote-trace jitter multiplier outside its domain",
             Code::CorruptDocument => "cprune-format document does not parse",
         }
     }
@@ -274,8 +301,8 @@ mod tests {
             ids,
             [
                 "CPV100", "CPV101", "CPV102", "CPV103", "CPV104", "CPV105", "CPV110", "CPV111",
-                "CPV112", "CPV120", "CPV121", "CPV122", "CPV123", "CPV130", "CPV131", "CPV140",
-                "CPV190",
+                "CPV112", "CPV120", "CPV121", "CPV122", "CPV123", "CPV124", "CPV130", "CPV131",
+                "CPV140", "CPV150", "CPV151", "CPV152", "CPV190",
             ]
         );
     }

@@ -1,0 +1,320 @@
+//! Integration: the remote measurement plane (DESIGN.md §14).
+//!
+//! The acceptance pins:
+//!
+//! 1. **Bit-identity** — a `RemoteTarget` pool of loopback workers
+//!    reproduces `AnalyticTarget` measurements (values *and* RNG stream)
+//!    bit-for-bit for any worker count ≥ 1, and a whole seeded run's
+//!    RunEvent JSONL is byte-identical across worker counts;
+//! 2. **Fleet stress** — fleet work-stealing over remote pools is
+//!    invariant across thread budgets 1/8/0 × worker counts 1/2/4;
+//! 3. **Fault injection** — a worker dying or hanging mid-run is
+//!    removed loudly and its chunk retried on the survivors with an
+//!    identical final result; an exhausted pool panics;
+//! 4. **Trace** — `--remote-trace` recordings pass `cprune check` and
+//!    replay bit-identically through `load_trace_target`;
+//! 5. **Subprocess** — real `cprune worker --stdio` children serve a
+//!    pool bit-identically to the in-process provider.
+
+use cprune::device::remote::{
+    load_trace_target, Connection, LoopbackFault, RemoteOptions, RemoteTarget,
+};
+use cprune::device::{AnalyticTarget, DeviceSpec, Target};
+use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::graph::ops::OpKind;
+use cprune::run::{CPrune, JsonlSink, RunBuilder};
+use cprune::tir::{Program, Workload};
+use cprune::tuner::{FleetOptions, FleetSession, TuneOptions};
+use cprune::util::rng::Rng;
+use cprune::verify::artifact::check_text;
+use std::panic::AssertUnwindSafe;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn wl(ff: usize) -> Workload {
+    Workload::from_conv(
+        &OpKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: ff, stride: 1, padding: 1, groups: 1 },
+        [1, 28, 28, ff],
+        vec!["bn", "relu"],
+    )
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+/// A batch of distinct candidate programs for `w` (seeded sampling).
+fn batch(w: &Workload, n: usize) -> Vec<Program> {
+    let mut rng = Rng::new(42);
+    (0..n).map(|_| Program::sample(w, &mut rng)).collect()
+}
+
+/// Fast-failing retry policy for fault-injection tests.
+fn fast_opts() -> RemoteOptions {
+    RemoteOptions {
+        timeout: Duration::from_millis(500),
+        retries: 2,
+        backoff: Duration::from_millis(1),
+    }
+}
+
+#[test]
+fn pool_measurements_bit_identical_to_analytic_for_any_worker_count() {
+    let w = wl(96);
+    let programs = batch(&w, 7);
+    let refs: Vec<&Program> = programs.iter().collect();
+    let analytic = AnalyticTarget::new(DeviceSpec::kryo385());
+    let mut base_rng = Rng::new(9);
+    let want = analytic.measure_batch(&w, &refs, &mut base_rng, 3);
+    let stream_marker = base_rng.next_u64();
+
+    for workers in [1usize, 2, 3, 4] {
+        let remote =
+            RemoteTarget::loopback(DeviceSpec::kryo385(), workers, RemoteOptions::default())
+                .unwrap();
+        assert_eq!(remote.healthy_workers(), workers);
+        assert_eq!(remote.spec().name, analytic.spec().name);
+        assert_eq!(remote.noise_sigma().to_bits(), analytic.noise_sigma().to_bits());
+        let mut rng = Rng::new(9);
+        let got = remote.measure_batch(&w, &refs, &mut rng, 3);
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "workers={workers} program={i}");
+        }
+        // the pool consumed exactly the contract's RNG draws
+        assert_eq!(rng.next_u64(), stream_marker, "workers={workers} RNG stream drifted");
+        // single latency queries match too
+        let p = &programs[0];
+        assert_eq!(remote.latency(&w, p).to_bits(), analytic.latency(&w, p).to_bits());
+    }
+}
+
+#[test]
+fn run_event_jsonl_byte_identical_across_worker_counts() {
+    let events = |tag: &str, target: Option<Box<dyn Target>>| -> Vec<u8> {
+        let path = tmp(&format!("cprune_remote_events_{tag}.jsonl"));
+        let _ = std::fs::remove_file(&path);
+        let builder = RunBuilder::new(ModelKind::ResNet8Cifar).seed(1).max_iterations(3);
+        let builder = match target {
+            Some(t) => builder.target(t),
+            None => builder.device("kryo385"),
+        };
+        let mut run = builder
+            .observer(Box::new(JsonlSink::create(&path).unwrap()))
+            .build()
+            .unwrap();
+        run.execute(&CPrune::default()).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        bytes
+    };
+
+    let baseline = events("analytic", None);
+    assert!(!baseline.is_empty());
+    for workers in [1usize, 2, 4] {
+        let remote =
+            RemoteTarget::loopback(DeviceSpec::kryo385(), workers, RemoteOptions::default())
+                .unwrap();
+        let got = events(&format!("w{workers}"), Some(Box::new(remote)));
+        assert_eq!(got, baseline, "worker count {workers} changed the event stream");
+    }
+}
+
+#[test]
+fn fleet_work_stealing_over_remote_pools_is_invariant() {
+    // Satellite stress: thread budgets {1, 8, 0 (= all cores)} crossed
+    // with worker counts {1, 2, 4} all reproduce the plain analytic
+    // fleet bit-for-bit.
+    let m = Model::build(ModelKind::ResNet8Cifar, 0);
+    let specs = || vec![DeviceSpec::kryo385(), DeviceSpec::kryo585()];
+    let opts = |threads: usize| FleetOptions {
+        tune: TuneOptions::quick(),
+        threads,
+        cross_seed: true,
+    };
+    let baseline = FleetSession::new(specs(), opts(1), 4).tune_graph(&m.graph);
+
+    for threads in [1usize, 8, 0] {
+        for workers in [1usize, 2, 4] {
+            let targets: Vec<Box<dyn Target>> = specs()
+                .into_iter()
+                .map(|s| {
+                    let pool =
+                        RemoteTarget::loopback(s, workers, RemoteOptions::default()).unwrap();
+                    Box::new(pool) as Box<dyn Target>
+                })
+                .collect();
+            let mut fleet = FleetSession::from_targets(targets, opts(threads), 4);
+            let got = fleet.tune_graph(&m.graph);
+            assert_eq!(got.devices.len(), baseline.devices.len());
+            for (a, b) in baseline.devices.iter().zip(&got.devices) {
+                let ctx = format!("threads={threads} workers={workers} device={}", a.device);
+                assert_eq!(a.device, b.device, "{ctx}");
+                assert_eq!(a.latency.to_bits(), b.latency.to_bits(), "{ctx}: latency drifted");
+                assert_eq!(a.fps.to_bits(), b.fps.to_bits(), "{ctx}: fps drifted");
+                assert_eq!(a.measured, b.measured, "{ctx}: measured drifted");
+                assert_eq!(
+                    a.table.model_latency().to_bits(),
+                    b.table.model_latency().to_bits(),
+                    "{ctx}: table drifted"
+                );
+            }
+            assert_eq!(baseline.total_measured(), got.total_measured());
+        }
+    }
+}
+
+#[test]
+fn dead_worker_mid_run_retries_on_survivors_with_identical_result() {
+    let spec = DeviceSpec::kryo385();
+    let w = wl(64);
+    let programs = batch(&w, 5);
+    let refs: Vec<&Program> = programs.iter().collect();
+
+    // Expected stream: two batches against the in-process provider.
+    let analytic = AnalyticTarget::new(spec.clone());
+    let mut rng = Rng::new(7);
+    let want1 = analytic.measure_batch(&w, &refs, &mut rng, 2);
+    let want2 = analytic.measure_batch(&w, &refs, &mut rng, 2);
+
+    // Worker 0 serves one request then drops the connection (EOF
+    // mid-run); worker 1 stays healthy.
+    let conns = vec![
+        Connection::loopback_with(
+            Box::new(AnalyticTarget::new(spec.clone())),
+            LoopbackFault::DieAfter(1),
+            0,
+        ),
+        Connection::loopback(Box::new(AnalyticTarget::new(spec.clone())), 1),
+    ];
+    let remote = RemoteTarget::new(conns, fast_opts()).unwrap();
+    assert_eq!(remote.healthy_workers(), 2);
+
+    let mut rng = Rng::new(7);
+    let got1 = remote.measure_batch(&w, &refs, &mut rng, 2);
+    let got2 = remote.measure_batch(&w, &refs, &mut rng, 2);
+    for (i, (a, b)) in want1.iter().zip(&got1).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "batch 1 program {i}");
+    }
+    for (i, (a, b)) in want2.iter().zip(&got2).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "batch 2 program {i} (after worker death)");
+    }
+    assert_eq!(remote.healthy_workers(), 1, "the dead worker must be removed");
+}
+
+#[test]
+fn hung_worker_times_out_and_retries_on_survivors() {
+    let spec = DeviceSpec::kryo385();
+    let w = wl(64);
+    let programs = batch(&w, 4);
+    let refs: Vec<&Program> = programs.iter().collect();
+
+    let analytic = AnalyticTarget::new(spec.clone());
+    let mut rng = Rng::new(3);
+    let want1 = analytic.measure_batch(&w, &refs, &mut rng, 2);
+    let want2 = analytic.measure_batch(&w, &refs, &mut rng, 2);
+
+    // Worker 0 swallows its second request without replying — the
+    // client's deadline fires and the chunk re-runs on worker 1.
+    let conns = vec![
+        Connection::loopback_with(
+            Box::new(AnalyticTarget::new(spec.clone())),
+            LoopbackFault::HangAfter(1),
+            0,
+        ),
+        Connection::loopback(Box::new(AnalyticTarget::new(spec.clone())), 1),
+    ];
+    let remote = RemoteTarget::new(conns, fast_opts()).unwrap();
+
+    let mut rng = Rng::new(3);
+    let got1 = remote.measure_batch(&w, &refs, &mut rng, 2);
+    let got2 = remote.measure_batch(&w, &refs, &mut rng, 2);
+    for (a, b) in want1.iter().zip(&got1) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    for (a, b) in want2.iter().zip(&got2) {
+        assert_eq!(a.to_bits(), b.to_bits(), "timeout retry changed a value");
+    }
+    assert_eq!(remote.healthy_workers(), 1, "the hung worker must be removed");
+}
+
+#[test]
+fn exhausted_pool_panics_loudly() {
+    let spec = DeviceSpec::kryo385();
+    let w = wl(64);
+    let programs = batch(&w, 3);
+    let refs: Vec<&Program> = programs.iter().collect();
+    // The handshake is not a request, so DieAfter(0) acks Hello and
+    // then dies on the first real work.
+    let conns = vec![Connection::loopback_with(
+        Box::new(AnalyticTarget::new(spec)),
+        LoopbackFault::DieAfter(0),
+        0,
+    )];
+    let remote = RemoteTarget::new(conns, fast_opts()).unwrap();
+    let mut rng = Rng::new(1);
+    let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        remote.measure_batch(&w, &refs, &mut rng, 2)
+    }));
+    let payload = result.expect_err("an exhausted pool must panic, not return");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("unserved"), "unexpected panic message: {msg}");
+}
+
+#[test]
+fn remote_trace_records_checks_and_replays_identically() {
+    let spec = DeviceSpec::kryo385();
+    let w = wl(96);
+    let programs = batch(&w, 4);
+    let refs: Vec<&Program> = programs.iter().collect();
+    let remote = RemoteTarget::loopback(spec, 2, RemoteOptions::default()).unwrap();
+    remote.start_trace();
+    let lat = remote.latency(&w, &programs[0]);
+    let mut rng = Rng::new(5);
+    let means = remote.measure_batch(&w, &refs, &mut rng, 3);
+
+    let path = tmp("cprune_remote_trace_integration_test.json");
+    let _ = std::fs::remove_file(&path);
+    remote.save_trace(&path).unwrap();
+
+    // the recording is a clean `cprune check` artifact (CPV15x)
+    let text = std::fs::read_to_string(&path).unwrap();
+    let diags = check_text(&text).expect("remote traces are a recognized artifact");
+    assert!(diags.is_empty(), "trace failed verification: {diags:?}");
+
+    // and replays bit-identically through the shared dispatcher
+    let rep = load_trace_target(&path).unwrap();
+    assert_eq!(rep.latency(&w, &programs[0]).to_bits(), lat.to_bits());
+    let mut rng = Rng::new(5);
+    let replayed = rep.measure_batch(&w, &refs, &mut rng, 3);
+    for (a, b) in means.iter().zip(&replayed) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn subprocess_stdio_workers_reproduce_the_in_process_pool() {
+    // Real `cprune worker --stdio` children over stdin/stdout — the
+    // transport the CLI's `--target remote:NAME` uses.
+    let exe = std::path::Path::new(env!("CARGO_BIN_EXE_cprune"));
+    let w = wl(64);
+    let programs = batch(&w, 6);
+    let refs: Vec<&Program> = programs.iter().collect();
+    let analytic = AnalyticTarget::new(DeviceSpec::kryo385());
+    let mut rng = Rng::new(13);
+    let want = analytic.measure_batch(&w, &refs, &mut rng, 2);
+
+    let remote =
+        RemoteTarget::spawn_with_exe(exe, "kryo385", 2, RemoteOptions::default()).unwrap();
+    assert_eq!(remote.spec().name, analytic.spec().name);
+    let mut rng = Rng::new(13);
+    let got = remote.measure_batch(&w, &refs, &mut rng, 2);
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "subprocess program {i}");
+    }
+}

@@ -3,6 +3,7 @@
 //! persisted artifacts, apply one seeded single-field corruption per
 //! case, and pin every corruption class to its stable `CPVnnn` ID.
 
+use cprune::device::remote::RemoteTrace;
 use cprune::device::DeviceSpec;
 use cprune::graph::model_zoo::{Model, ModelKind};
 use cprune::graph::ops::OpKind;
@@ -240,6 +241,37 @@ fn events_log_corruptions_are_cpv140() {
 
     let unknown = format!("{golden}{{\"event\":\"mystery\"}}\n");
     assert!(ids(&artifact::check_text(&unknown).unwrap()).contains(&"CPV140"));
+}
+
+#[test]
+fn remote_trace_corruptions_have_stable_ids() {
+    let w = wl(64);
+    let p = Program::naive(&w);
+    let mut trace = RemoteTrace::new(DeviceSpec::kryo385(), 0.0, 1);
+    trace.record_latency(&w, &p, 0.001);
+    trace.record_measurement(&w, &p, 2, vec![1.0, 1.0], 0.001);
+    let text = trace.to_json().to_string();
+    assert_eq!(artifact::check_text(&text), Some(vec![]));
+
+    // a sample missing its mean
+    let broken = text.replace("\"mean\":0.001", "\"meen\":0.001");
+    assert_ne!(broken, text);
+    assert!(ids(&artifact::check_text(&broken).unwrap()).contains(&"CPV150"));
+
+    // jitter arity no longer matches the entry's repeats
+    let broken = text.replace("\"repeats\":2", "\"repeats\":3");
+    assert_ne!(broken, text);
+    assert!(ids(&artifact::check_text(&broken).unwrap()).contains(&"CPV151"));
+
+    // a non-positive jitter multiplier
+    let broken = text.replace("\"jitter\":[1,1]", "\"jitter\":[1,-1]");
+    assert_ne!(broken, text);
+    assert!(ids(&artifact::check_text(&broken).unwrap()).contains(&"CPV152"));
+
+    // sigma 0 demands unit jitter
+    let broken = text.replace("\"jitter\":[1,1]", "\"jitter\":[1,1.5]");
+    assert_ne!(broken, text);
+    assert!(ids(&artifact::check_text(&broken).unwrap()).contains(&"CPV152"));
 }
 
 // ------------------------------------------------------------------- CLI
