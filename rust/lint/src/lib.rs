@@ -8,7 +8,7 @@
 //! drift in the measurement noise path — were all invariant violations a
 //! machine could have caught. This crate makes those invariants
 //! machine-checked: a small hand-rolled lexer ([`lexer`]) feeds a set of
-//! token-level rules ([`rules`]) with stable IDs (`CPL000`–`CPL006`),
+//! token-level rules ([`rules`]) with stable IDs (`CPL000`–`CPL007`),
 //! `file:line` diagnostics and a per-site allow-annotation escape hatch.
 //! CI runs the pass deny-by-default over the whole workspace.
 //!

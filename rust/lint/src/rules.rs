@@ -54,10 +54,16 @@ pub enum Rule {
     /// in persisted artifacts). Use `round()`/checked conversions, or
     /// keep the value in f64.
     LossyCast,
+    /// CPL007 — a direct `std::fs::write` or `File::create` in library
+    /// code outside `util/io.rs`: every persisted artifact must go
+    /// through the atomic-write seam (temp + fsync + rename, fault
+    /// injectable — DESIGN.md §15) so a crash leaves the old document or
+    /// the new one, never a torn half.
+    FsWrite,
 }
 
 impl Rule {
-    pub const ALL: [Rule; 7] = [
+    pub const ALL: [Rule; 8] = [
         Rule::BadAnnotation,
         Rule::FloatOrd,
         Rule::HashOrder,
@@ -65,6 +71,7 @@ impl Rule {
         Rule::F32Measure,
         Rule::LibUnwrap,
         Rule::LossyCast,
+        Rule::FsWrite,
     ];
 
     /// The stable diagnostic ID.
@@ -77,6 +84,7 @@ impl Rule {
             Rule::F32Measure => "CPL004",
             Rule::LibUnwrap => "CPL005",
             Rule::LossyCast => "CPL006",
+            Rule::FsWrite => "CPL007",
         }
     }
 
@@ -91,6 +99,9 @@ impl Rule {
             Rule::LibUnwrap => "unannotated unwrap()/expect() in library code",
             Rule::LossyCast => {
                 "lossy numeric cast (as f32, float-to-int as) in a deterministic module"
+            }
+            Rule::FsWrite => {
+                "direct fs::write/File::create in library code; use util::io::atomic_write"
             }
         }
     }
@@ -138,6 +149,11 @@ pub const WALLCLOCK_EXEMPT_PREFIXES: [&str; 1] = ["rust/src/device/remote/"];
 pub fn is_wallclock_exempt_path(rel: &str) -> bool {
     WALLCLOCK_EXEMPT_PREFIXES.iter().any(|p| rel.starts_with(p))
 }
+
+/// The one library module sanctioned to call `std::fs::write`/
+/// `File::create` directly: the atomic-write seam itself (CPL007,
+/// DESIGN.md §15).
+pub const FSWRITE_EXEMPT_PATH: &str = "rust/src/util/io.rs";
 
 /// Run every rule over one file. `rel` is the workspace-root-relative
 /// path with `/` separators — rule scoping keys off it. Returned
@@ -248,6 +264,29 @@ pub fn check_source(rel: &str, src: &str) -> Vec<Diagnostic> {
                     &mut diags,
                 )
             }
+            "fs" if in_lib && rel != FSWRITE_EXEMPT_PATH && is_fs_write(toks, i) => emit(
+                Rule::FsWrite,
+                t.line,
+                "std::fs::write bypasses atomic persistence; use util::io::atomic_write"
+                    .to_string(),
+                &mut diags,
+            ),
+            "File"
+                if in_lib
+                    && rel != FSWRITE_EXEMPT_PATH
+                    && text_at(toks, i + 1) == ":"
+                    && text_at(toks, i + 2) == ":"
+                    && text_at(toks, i + 3) == "create" =>
+            {
+                emit(
+                    Rule::FsWrite,
+                    t.line,
+                    "File::create bypasses atomic persistence; use util::io::atomic_write \
+                     or create_sink"
+                        .to_string(),
+                    &mut diags,
+                )
+            }
             "unwrap" | "expect" if in_lib && prev == "." && next == "(" => emit(
                 Rule::LibUnwrap,
                 t.line,
@@ -334,6 +373,13 @@ fn collect_float_names<'a>(toks: &[Token<'a>]) -> BTreeSet<&'a str> {
         }
     }
     names
+}
+
+/// True when the ident at `i` begins an `fs::write` path (CPL007).
+fn is_fs_write(toks: &[Token<'_>], i: usize) -> bool {
+    text_at(toks, i + 1) == ":"
+        && text_at(toks, i + 2) == ":"
+        && text_at(toks, i + 3) == "write"
 }
 
 /// True when the ident at `i` begins an `env::var`/`var_os`/`vars` path.
@@ -729,8 +775,30 @@ mod tests {
     }
 
     #[test]
+    fn cpl007_flags_direct_writes_outside_util_io() {
+        let w = "pub fn f() { std::fs::write(\"x\", \"y\").ok(); }";
+        assert_eq!(ids(&lib(w)), ["CPL007"]);
+        let c = "pub fn f() { let _ = std::fs::File::create(\"x\"); }";
+        assert_eq!(ids(&lib(c)), ["CPL007"]);
+        // the atomic-write seam itself is the one sanctioned caller
+        assert!(check_source("rust/src/util/io.rs", w).is_empty());
+        assert!(check_source("rust/src/util/io.rs", c).is_empty());
+        // test crates and test modules may write fixtures freely
+        assert!(check_source("rust/tests/sample.rs", w).is_empty());
+        let in_test =
+            "#[cfg(test)]\nmod tests {\n#[test]\nfn t() { std::fs::write(\"x\", \"y\").ok(); }\n}";
+        assert!(lib(in_test).is_empty());
+        // reads and OpenOptions appends are not writes-through-the-seam
+        assert!(lib("pub fn f() { let _ = std::fs::read(\"x\"); }").is_empty());
+        assert!(lib("pub fn f() { let _ = std::fs::OpenOptions::new(); }").is_empty());
+    }
+
+    #[test]
     fn rule_ids_are_stable() {
         let ids: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
-        assert_eq!(ids, ["CPL000", "CPL001", "CPL002", "CPL003", "CPL004", "CPL005", "CPL006"]);
+        assert_eq!(
+            ids,
+            ["CPL000", "CPL001", "CPL002", "CPL003", "CPL004", "CPL005", "CPL006", "CPL007"]
+        );
     }
 }

@@ -1,0 +1,7 @@
+pub fn persist(path: &str, doc: &str) -> std::io::Result<()> {
+    std::fs::write(path, doc) // cprune-lint: allow(CPL007, reason="escape hatch demo")
+}
+
+pub fn open_sink(path: &str) -> std::io::Result<std::fs::File> {
+    std::fs::File::create(path) // cprune-lint: allow(CPL007, reason="escape hatch demo")
+}

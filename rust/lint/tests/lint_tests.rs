@@ -101,6 +101,22 @@ fn cpl006_lossy_casts() {
 }
 
 #[test]
+fn cpl007_direct_writes() {
+    assert_eq!(
+        ids(LIB, include_str!("fixtures/cpl007_fail.rs")),
+        ["CPL007", "CPL007"]
+    );
+    assert_eq!(ids(LIB, include_str!("fixtures/cpl007_allowed.rs")), Vec::<&str>::new());
+    // The atomic-write seam itself is the one sanctioned caller, and
+    // bins, benches and integration tests may write files directly.
+    let seam = "rust/src/util/io.rs";
+    assert_eq!(ids(seam, include_str!("fixtures/cpl007_fail.rs")), Vec::<&str>::new());
+    let bin = "rust/src/main.rs";
+    assert_eq!(ids(bin, include_str!("fixtures/cpl007_fail.rs")), Vec::<&str>::new());
+    assert_eq!(ids(BENCH, include_str!("fixtures/cpl007_fail.rs")), Vec::<&str>::new());
+}
+
+#[test]
 fn workspace_is_clean() {
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
     let diags = cprune_lint::check_workspace(&root).expect("workspace walk failed");

@@ -313,6 +313,7 @@ USAGE:
                    [--seed S] [--cache FILE] [--events FILE.jsonl] [--registry FILE]
                    [--record-trace FILE] [--replay-trace FILE] [--device-file FILE]
                    [--calibration FILE] [--workers N] [--remote-trace FILE]
+                   [--journal FILE | --resume FILE] [--faults SPEC]
                    [--verbose] [--quiet]
   cprune prune     [--model M] [--device D | --target T] [--target-acc A] [--iters N] [--seed S]
                    [--out FILE.json] [--cache FILE] [--events FILE.jsonl]
@@ -406,6 +407,22 @@ BENCH:
   programs-measured counts are deterministic for a pinned seed, which CI
   smoke-checks. --tier quick is CI-sized; --tier full is trajectory-grade.
 
+CRASH SAFETY (DESIGN.md §15):
+  `run --journal FILE` appends a fsync'd `cprune-run-journal` record at
+  every accepted iteration; after a crash, `run --resume FILE` restores
+  the original configuration (seed, pruner, model, device, budgets) from
+  the journal, preloads every journaled tuned program, and re-executes —
+  pre-crash iterations replay as pure cache hits, so the resumed event
+  stream is byte-identical to an uninterrupted run's. Every versioned
+  artifact is written atomically (temp + fsync + rename), so a crash
+  leaves the old file or the new one, never a torn half.
+  --faults SPEC injects deterministic failures for testing: comma-
+  separated clauses seed:S, fail@SITE[:K], torn@SITE[:K],
+  abort@BARRIER (baseline | iter:N | finish), die@worker:N,
+  hang@worker:N. Write sites: cache registry trace remote-trace
+  calibration devices report out events journal. An abort@ clause exits
+  the process with code 86 at the matching journal barrier.
+
 CHECK:
   `check` sweeps each PATH (directories recursively, default '.') for
   cprune-format JSON/JSONL artifacts — tune caches, measurement traces,
@@ -422,13 +439,63 @@ FEATURES:
   Default builds are pure-Rust, offline and dependency-free.";
 
 pub fn run(argv: Vec<String>) -> i32 {
-    let args = match parse_args(&argv) {
+    let mut args = match parse_args(&argv) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("{e}");
             return 2;
         }
     };
+    // Fault injection (DESIGN.md §15): install the plan first so every
+    // write site, journal barrier and loopback worker spawned below sees
+    // it. The guard keeps the thread-local hook alive for the whole
+    // command.
+    let _fault_guard = match args.flags.get("faults") {
+        Some(spec) => match crate::util::fault::FaultPlan::parse(spec) {
+            Ok(plan) => Some(crate::util::fault::install(Box::new(plan))),
+            Err(e) => {
+                eprintln!("--faults: {e}");
+                return 2;
+            }
+        },
+        None => None,
+    };
+    // --resume JOURNAL restores the crashed run's configuration from the
+    // journal's config record before any flag resolution, so a bare
+    // `cprune run --resume FILE` reproduces the original invocation
+    // (seed, pruner, model, device, budgets). Output flags (--events,
+    // --cache, --quiet, ...) still come from this command line.
+    if let Some(path) = args.flags.get("resume").cloned() {
+        if args.positional.first().map(String::as_str) != Some("run") {
+            eprintln!("--resume is only supported by `run`");
+            return 2;
+        }
+        let cfg = match crate::run::journal::read_config(&path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("--resume {path}: {e}");
+                return 1;
+            }
+        };
+        args.flags.insert("seed".to_string(), cfg.seed.to_string());
+        args.flags.insert("iters".to_string(), cfg.iters.to_string());
+        args.flags.insert("pruner".to_string(), cfg.pruner);
+        args.flags.insert("model".to_string(), cfg.model);
+        match cfg.target_acc {
+            Some(a) => args.flags.insert("target-acc".to_string(), a.to_string()),
+            None => args.flags.remove("target-acc"),
+        };
+        // The journaled device token is whatever --target/--device was
+        // given originally; provider-prefixed tokens go back to --target.
+        if cfg.device.contains(':') {
+            args.flags.insert("target".to_string(), cfg.device);
+            args.flags.remove("device");
+        } else {
+            args.flags.insert("device".to_string(), cfg.device);
+            args.flags.remove("target");
+        }
+    }
+    let args = args;
     let Some(cmd) = args.positional.first() else {
         println!("{USAGE}");
         return 0;
@@ -528,6 +595,31 @@ pub fn run(argv: Vec<String>) -> i32 {
                     Ok(b) => b,
                     Err(code) => return code,
                 };
+            // Crash-safety journal (DESIGN.md §15): --resume continues an
+            // interrupted journal; --journal starts a fresh one recording
+            // this invocation's configuration tokens.
+            if let Some(path) = args.flags.get("resume") {
+                builder = builder.resume(path);
+            } else if let Some(path) = args.flags.get("journal") {
+                let config = crate::run::journal::JournalConfig {
+                    seed,
+                    pruner: pruner_name.to_string(),
+                    model: args
+                        .flags
+                        .get("model")
+                        .cloned()
+                        .unwrap_or_else(|| "resnet18-imagenet".to_string()),
+                    device: args
+                        .flags
+                        .get("target")
+                        .or_else(|| args.flags.get("device"))
+                        .cloned()
+                        .unwrap_or_else(|| "kryo385".to_string()),
+                    iters: flag_or(&args, "iters", 20usize).unwrap_or(20),
+                    target_acc: args.flags.get("target-acc").and_then(|v| v.parse().ok()),
+                };
+                builder = builder.journal(path, config);
+            }
             if !args.flags.contains_key("quiet") {
                 let printer = if args.flags.contains_key("verbose") {
                     ProgressPrinter::new().verbose()
@@ -645,7 +737,7 @@ pub fn run(argv: Vec<String>) -> i32 {
             };
             if let Some(path) = args.flags.get("out") {
                 let j = crate::pruner::report::outcome_to_json(&out);
-                if let Err(e) = std::fs::write(path, j.to_string()) {
+                if let Err(e) = crate::util::io::atomic_write(path, &j.to_string(), "out") {
                     eprintln!("writing {path}: {e}");
                     return 1;
                 }

@@ -182,16 +182,10 @@ impl CalibrationTable {
         Ok(table)
     }
 
-    /// Write the table (temp-file + rename, like the tuning cache).
+    /// Write the table atomically ([`crate::util::io::atomic_write`],
+    /// DESIGN.md §15).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
-        let path = path.as_ref();
-        let mut tmp = path.as_os_str().to_os_string();
-        tmp.push(format!(".{}.tmp", std::process::id()));
-        let tmp = std::path::PathBuf::from(tmp);
-        std::fs::write(&tmp, self.to_json().to_string())
-            .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .map_err(|e| format!("renaming {} into place: {e}", tmp.display()))
+        crate::util::io::atomic_write(path, &self.to_json().to_string(), "calibration")
     }
 
     /// Load a table previously written by [`CalibrationTable::save`].

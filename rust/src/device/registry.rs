@@ -288,7 +288,7 @@ mod tests {
             {"short":"tdev","name":"Test Device","kind":"gpu","cores":2,
              "peak_macs_per_core":1e9,"simd_lanes":8,"l1_bytes":1024,
              "l2_bytes":2048,"mem_bytes_per_s":1e9,"dispatch_overhead_s":1e-6}]}"#;
-        std::fs::write(&path, doc).unwrap();
+        crate::util::io::atomic_write(&path, doc, "devices").unwrap();
         let r = TargetRegistry::from_paths(&path.display().to_string()).unwrap();
         assert!(r.spec("tdev").is_some());
         assert!(TargetRegistry::from_paths("").unwrap().spec("tdev").is_none());

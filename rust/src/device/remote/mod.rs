@@ -18,6 +18,12 @@
 //! * [`pool`] — [`RemoteTarget`]/partitioning/retry (the determinism
 //!   invariant lives here);
 //! * [`trace`] — `cprune-remote-trace` v1 recording for offline replay.
+//!
+//! Worker death/hang injection now rides the crate-wide fault plane
+//! ([`crate::util::fault::WorkerFault`], DESIGN.md §15): `--faults
+//! die@worker:N`/`hang@worker:N` reaches loopback workers through the
+//! per-thread hook, and the pool's dead-worker recovery is what those
+//! tests exercise.
 
 pub mod pool;
 pub mod protocol;
@@ -25,6 +31,7 @@ pub mod trace;
 pub mod transport;
 pub mod worker;
 
+pub use crate::util::fault::WorkerFault;
 pub use pool::{RemoteOptions, RemoteTarget};
 pub use trace::{load_trace_target, RemoteTrace};
-pub use transport::{Connection, LoopbackFault};
+pub use transport::Connection;

@@ -218,14 +218,11 @@ impl RemoteTrace {
         Ok(trace)
     }
 
-    /// Persist the trace (temp-file + rename; debug builds sweep the
-    /// output through the artifact checker first, like
-    /// [`ReplayTarget::save`]).
+    /// Persist the trace atomically ([`crate::util::io::atomic_write`],
+    /// DESIGN.md §15; debug builds sweep the output through the artifact
+    /// checker first, like [`ReplayTarget::save`]).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
         let path = path.as_ref();
-        let mut tmp = path.as_os_str().to_os_string();
-        tmp.push(format!(".{}.tmp", std::process::id()));
-        let tmp = std::path::PathBuf::from(tmp);
         let text = self.to_json().to_string();
         #[cfg(debug_assertions)]
         if let Some(d) =
@@ -233,9 +230,7 @@ impl RemoteTrace {
         {
             panic!("RemoteTrace::save produced a non-canonical document: {d}");
         }
-        std::fs::write(&tmp, text).map_err(|e| format!("writing {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .map_err(|e| format!("renaming {} into place: {e}", tmp.display()))
+        crate::util::io::atomic_write(path, &text, "remote-trace")
     }
 
     /// Load a remote trace from disk.

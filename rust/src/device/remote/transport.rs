@@ -16,25 +16,13 @@
 use super::protocol::{read_frame, write_frame, Frame};
 use super::worker;
 use crate::device::Target;
+use crate::util::fault::{self, WorkerFault};
 use std::io::{self, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::path::Path;
 use std::process::{Child, Command, Stdio};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
-
-/// Fault injected into a loopback worker, for death/timeout tests:
-/// counts requests served *after* the handshake.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum LoopbackFault {
-    /// Serve faithfully forever.
-    None,
-    /// Serve `n` requests, then drop the connection (client sees EOF).
-    DieAfter(usize),
-    /// Serve `n` requests, then swallow requests without replying
-    /// (client sees a deadline timeout).
-    HangAfter(usize),
-}
 
 /// Writer half of an in-memory byte pipe.
 struct PipeWriter {
@@ -155,15 +143,19 @@ impl Connection {
         }
     }
 
-    /// In-memory worker serving `target` on its own thread.
+    /// In-memory worker serving `target` on its own thread. Consults the
+    /// calling thread's fault plan ([`crate::util::fault`]) — a
+    /// `die@worker:N`/`hang@worker:N` clause from `--faults` injects the
+    /// corresponding [`WorkerFault`] into every loopback worker spawned
+    /// here (DESIGN.md §15).
     pub fn loopback(target: Box<dyn Target>, index: usize) -> Connection {
-        Self::loopback_with(target, LoopbackFault::None, index)
+        Self::loopback_with(target, fault::worker_fault(), index)
     }
 
-    /// In-memory worker with an injected fault (tests).
+    /// In-memory worker with an explicit injected fault (tests).
     pub fn loopback_with(
         target: Box<dyn Target>,
-        fault: LoopbackFault,
+        fault: WorkerFault,
         index: usize,
     ) -> Connection {
         let (client_tx, worker_rx) = mpsc::channel::<Vec<u8>>();

@@ -13,23 +13,24 @@
 //! ends the loop with `Err` — the transport is gone, not one request.
 
 use super::protocol::{read_frame, write_frame, Frame};
-use super::transport::LoopbackFault;
 use crate::device::Target;
+use crate::util::fault::WorkerFault;
 use std::io::{BufReader, Read, Write};
 use std::net::TcpListener;
 
 /// Serve one connection until EOF or `shutdown`.
 pub fn serve(reader: impl Read, writer: impl Write, target: &dyn Target) -> Result<(), String> {
-    serve_with_fault(reader, writer, target, LoopbackFault::None)
+    serve_with_fault(reader, writer, target, WorkerFault::None)
 }
 
-/// [`serve`] with an injected fault (loopback tests only — real workers
-/// always serve with [`LoopbackFault::None`]).
+/// [`serve`] with an injected fault (loopback tests and `--faults`
+/// `die@worker:N`/`hang@worker:N` clauses — real workers always serve
+/// with [`WorkerFault::None`]).
 pub fn serve_with_fault(
     reader: impl Read,
     writer: impl Write,
     target: &dyn Target,
-    fault: LoopbackFault,
+    fault: WorkerFault,
 ) -> Result<(), String> {
     let mut r = BufReader::new(reader);
     let mut w = writer;
@@ -43,8 +44,8 @@ pub fn serve_with_fault(
         if is_request {
             served += 1;
             match fault {
-                LoopbackFault::DieAfter(n) if served > n => return Ok(()),
-                LoopbackFault::HangAfter(n) if served > n => continue,
+                WorkerFault::DieAfter(n) if served > n => return Ok(()),
+                WorkerFault::HangAfter(n) if served > n => continue,
                 _ => {}
             }
         }
@@ -273,7 +274,7 @@ mod tests {
             write_frame(&mut input, &f).unwrap();
         }
         let mut output = Vec::new();
-        serve_with_fault(&input[..], &mut output, &target, LoopbackFault::DieAfter(1)).unwrap();
+        serve_with_fault(&input[..], &mut output, &target, WorkerFault::DieAfter(1)).unwrap();
         let mut r = BufReader::new(&output[..]);
         let mut replies = Vec::new();
         while let Some(f) = read_frame(&mut r).unwrap() {

@@ -286,12 +286,10 @@ impl ReplayTarget {
         })
     }
 
-    /// Persist the trace (temp-file + rename, like the tuning cache).
+    /// Persist the trace atomically ([`crate::util::io::atomic_write`],
+    /// DESIGN.md §15).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
         let path = path.as_ref();
-        let mut tmp = path.as_os_str().to_os_string();
-        tmp.push(format!(".{}.tmp", std::process::id()));
-        let tmp = std::path::PathBuf::from(tmp);
         let text = self.to_json().to_string();
         // Debug builds sweep the serialized trace through the artifact
         // checker (DESIGN.md §13) before it can reach disk.
@@ -301,10 +299,7 @@ impl ReplayTarget {
         {
             panic!("ReplayTarget::save produced a non-canonical document: {d}");
         }
-        std::fs::write(&tmp, text)
-            .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .map_err(|e| format!("renaming {} into place: {e}", tmp.display()))
+        crate::util::io::atomic_write(path, &text, "trace")
     }
 
     /// Load a trace into a replay-mode target.

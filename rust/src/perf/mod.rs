@@ -126,8 +126,7 @@ impl PerfReport {
         let dir = dir.as_ref();
         std::fs::create_dir_all(dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
         let path = dir.join(self.file_name());
-        std::fs::write(&path, self.to_json().to_string())
-            .map_err(|e| format!("writing {}: {e}", path.display()))?;
+        crate::util::io::atomic_write(&path, &self.to_json().to_string(), "report")?;
         Ok(path)
     }
 }

@@ -375,6 +375,11 @@ pub fn cprune_run(ctx: &mut RunContext, cfg: &CPruneConfig) -> CPruneResult {
                     accuracy_gate: cfg.alpha * a_p,
                     filters_removed: removed_total,
                 });
+                // The journal barrier below records the gates this
+                // candidate was judged against — capture them before the
+                // line-14 updates move the targets.
+                let accepted_target = l_t;
+                let accepted_gate = cfg.alpha * a_p;
                 l_t = cfg.beta * l_m;
                 a_p = a_s;
                 // Snapshot the accepted candidate as a deployable
@@ -386,6 +391,18 @@ pub fn cprune_run(ctx: &mut RunContext, cfg: &CPruneConfig) -> CPruneResult {
                     channels: state.cout.clone(),
                 };
                 ctx.emit(&RunEvent::CheckpointEmitted {
+                    checkpoint: accepted_checkpoint.clone(),
+                });
+                // Recovery barrier (DESIGN.md §15): fsync the accepted
+                // iteration + tune-cache delta into the run journal.
+                ctx.journal_accept(crate::run::journal::IterationRecord {
+                    iteration: iter_no + 1,
+                    latency: l_m,
+                    latency_target: accepted_target,
+                    short_accuracy: a_s,
+                    accuracy_gate: accepted_gate,
+                    filters_removed: removed_total,
+                    candidates_tried,
                     checkpoint: accepted_checkpoint.clone(),
                 });
                 pareto.insert(accepted_checkpoint);

@@ -32,6 +32,7 @@
 //! workers — [`RunBuilder::workers`] sizes the pool,
 //! [`RunBuilder::remote_trace`] records its wire-level measurements.
 
+use super::journal::{JournalConfig, RunJournal};
 use super::{PruneOutcome, Pruner, RunContext, RunObserver};
 use crate::accuracy::{AccuracyOracle, ProxyOracle};
 use crate::device::calibration::{self, CalibrationTable};
@@ -80,6 +81,9 @@ pub struct RunBuilder {
     max_iterations: Option<usize>,
     observers: Vec<Box<dyn RunObserver>>,
     oracle: Option<Box<dyn AccuracyOracle>>,
+    journal_path: Option<PathBuf>,
+    journal_config: Option<JournalConfig>,
+    resume_path: Option<PathBuf>,
 }
 
 impl RunBuilder {
@@ -100,6 +104,9 @@ impl RunBuilder {
             max_iterations: None,
             observers: Vec::new(),
             oracle: None,
+            journal_path: None,
+            journal_config: None,
+            resume_path: None,
         }
     }
 
@@ -274,6 +281,31 @@ impl RunBuilder {
         self
     }
 
+    /// Journal the run to `path` (DESIGN.md §15): the header and
+    /// `config` records are written at [`build`](Self::build) time, then
+    /// a fsync'd barrier is appended at the baseline and at every
+    /// accepted iteration, so a crash loses at most the in-flight
+    /// iteration. `config` pins what [`resume`](Self::resume) later
+    /// rebuilds the run from.
+    pub fn journal(mut self, path: impl Into<PathBuf>, config: JournalConfig) -> RunBuilder {
+        self.journal_path = Some(path.into());
+        self.journal_config = Some(config);
+        self
+    }
+
+    /// Resume an interrupted journaled run (DESIGN.md §15): preloads
+    /// every journaled tune-cache entry so the pre-crash iterations
+    /// replay as pure cache hits, suppresses the already-journaled
+    /// barriers, and appends new ones to the same journal — the full
+    /// event stream comes out byte-identical to an uninterrupted run's.
+    /// The caller must configure the builder to match the journal's own
+    /// `config` record (read it via [`super::journal::read_config`]);
+    /// a seed mismatch is rejected at [`build`](Self::build).
+    pub fn resume(mut self, path: impl Into<PathBuf>) -> RunBuilder {
+        self.resume_path = Some(path.into());
+        self
+    }
+
     /// Register an observer for the run's event stream (repeatable).
     pub fn observer(mut self, obs: Box<dyn RunObserver>) -> RunBuilder {
         self.observers.push(obs);
@@ -344,6 +376,31 @@ impl RunBuilder {
             Some(p) if p.exists() => TuneCache::load(p, target.spec().name)?,
             _ => TuneCache::new(),
         };
+        // Journal wiring (DESIGN.md §15): resume reopens an interrupted
+        // journal and preloads its cache entries on top of any cache
+        // file; a fresh journal pins the config for later resumes.
+        let journal = match (&self.resume_path, &self.journal_path) {
+            (Some(path), _) => {
+                let (journal, state) = RunJournal::resume(path)?;
+                if state.config.seed != self.seed {
+                    return Err(format!(
+                        "{}: journal was recorded with seed {}, builder configured with \
+                         seed {} — resume must replay the original configuration",
+                        path.display(),
+                        state.config.seed,
+                        self.seed
+                    ));
+                }
+                state.preload(&cache).map_err(|e| format!("{}: {e}", path.display()))?;
+                Some(journal)
+            }
+            (None, Some(path)) => {
+                let config =
+                    self.journal_config.as_ref().ok_or("journal path set without a config")?;
+                Some(RunJournal::create(path, config)?)
+            }
+            (None, None) => None,
+        };
         Ok(Run {
             model,
             target,
@@ -357,6 +414,7 @@ impl RunBuilder {
             max_iterations: self.max_iterations,
             observers: self.observers,
             oracle: self.oracle.unwrap_or_else(|| Box::new(ProxyOracle::new())),
+            journal,
         })
     }
 }
@@ -381,6 +439,9 @@ pub struct Run {
     max_iterations: Option<usize>,
     observers: Vec<Box<dyn RunObserver>>,
     oracle: Box<dyn AccuracyOracle>,
+    /// Crash-safety journal (DESIGN.md §15) — attached to the context
+    /// during execution, retrieved after to append `finished`.
+    journal: Option<RunJournal>,
 }
 
 impl Run {
@@ -395,7 +456,7 @@ impl Run {
         let cache = std::mem::take(&mut self.cache);
         let session =
             TuningSession::with_cache(self.target.as_ref(), self.tune_opts, self.seed, cache);
-        let outcome = {
+        let (outcome, events_emitted) = {
             let mut ctx = RunContext::new(
                 &self.model,
                 &session,
@@ -404,20 +465,30 @@ impl Run {
             );
             ctx.accuracy_budget = self.accuracy_budget;
             ctx.max_iterations = self.max_iterations;
+            if let Some(j) = self.journal.take() {
+                ctx.attach_journal(j);
+            }
             let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 pruner.run(&mut ctx)
             }));
-            match caught {
+            let outcome = match caught {
                 Ok(outcome) => outcome,
                 Err(payload) => match payload.downcast::<Divergence>() {
                     Ok(d) => return Err(d.to_string()),
                     Err(other) => std::panic::resume_unwind(other),
                 },
-            }
+            };
+            self.journal = ctx.detach_journal();
+            (outcome, ctx.events_emitted())
         };
         let finished = outcome.finished_event();
         for obs in self.observers.iter_mut() {
             obs.on_event(&finished);
+        }
+        if let Some(j) = self.journal.as_mut() {
+            // +1: the Finished event is dispatched here, outside the
+            // context's emit() counter.
+            j.record_finished(events_emitted + 1);
         }
         self.cache = session.cache;
         if let Some(path) = &self.cache_path {
@@ -442,6 +513,11 @@ impl Run {
         // frontier must not look like success.
         if let Some(e) = self.observers.iter().find_map(|o| o.failure()) {
             return Err(e);
+        }
+        // Same discipline for the journal: a run whose crash-safety net
+        // silently failed to persist must not look recoverable.
+        if let Some(e) = self.journal.as_ref().and_then(|j| j.error()) {
+            return Err(format!("run journal: {e}"));
         }
         Ok(outcome)
     }
@@ -556,6 +632,44 @@ mod tests {
         let b = warm.execute(&CPrune::default()).unwrap();
         assert_eq!(b.programs_measured, 0, "warm builder re-measured");
         assert_eq!(a.final_latency, b.final_latency);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn journaled_run_writes_and_finishes_a_journal() {
+        let path = std::env::temp_dir().join("cprune_builder_journal_test.journal");
+        let _ = std::fs::remove_file(&path);
+        let config = JournalConfig {
+            seed: 0,
+            pruner: "cprune".to_string(),
+            model: "resnet8-cifar".to_string(),
+            device: "kryo385".to_string(),
+            iters: 2,
+            target_acc: None,
+        };
+        let mut run = RunBuilder::new(ModelKind::ResNet8Cifar)
+            .device("kryo385")
+            .max_iterations(2)
+            .journal(&path, config)
+            .build()
+            .unwrap();
+        run.execute(&CPrune::default()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("{\"format\":\"cprune-run-journal\""), "{text}");
+        assert!(text.contains("\"record\":\"config\""), "{text}");
+        assert!(text.contains("\"record\":\"baseline\""), "{text}");
+        assert!(text.contains("\"record\":\"finished\""), "{text}");
+        // a finished journal refuses resume
+        let err = match RunBuilder::new(ModelKind::ResNet8Cifar)
+            .device("kryo385")
+            .max_iterations(2)
+            .resume(&path)
+            .build()
+        {
+            Err(e) => e,
+            Ok(_) => panic!("resuming a finished journal must fail"),
+        };
+        assert!(err.contains("finished"), "{err}");
         let _ = std::fs::remove_file(&path);
     }
 

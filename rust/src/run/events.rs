@@ -263,7 +263,9 @@ impl RunObserver for NullObserver {
 }
 
 /// JSONL sink: a `{format, version}` header line, then one JSON object
-/// per event. Flushes on [`RunEvent::Finished`] and on drop.
+/// per event. Line-buffered with an explicit flush per event (plus on
+/// drop), so a crash loses at most the in-flight line — the same
+/// discipline as the run journal (DESIGN.md §15).
 pub struct JsonlSink {
     out: Box<dyn Write>,
     /// First write error, if any (subsequent events are dropped).
@@ -271,11 +273,11 @@ pub struct JsonlSink {
 }
 
 impl JsonlSink {
-    /// Create (truncate) `path` and write the schema header.
+    /// Create (truncate) `path` and write the schema header. Goes
+    /// through [`crate::util::io::create_sink`] (fault site `events`).
     pub fn create(path: impl Into<PathBuf>) -> Result<JsonlSink, String> {
         let path = path.into();
-        let f = std::fs::File::create(&path)
-            .map_err(|e| format!("creating {}: {e}", path.display()))?;
+        let f = crate::util::io::create_sink(&path, "events")?;
         Ok(Self::to_writer(Box::new(std::io::BufWriter::new(f))))
     }
 
@@ -304,11 +306,12 @@ impl JsonlSink {
 impl RunObserver for JsonlSink {
     fn on_event(&mut self, event: &RunEvent) {
         self.write_line(&event.to_json());
-        if matches!(event, RunEvent::Finished { .. }) {
-            if let Err(e) = self.out.flush() {
-                if self.error.is_none() {
-                    self.error = Some(e.to_string());
-                }
+        // Flush per event, not just on Finished: after a crash the log
+        // holds every delivered event except at most the in-flight line,
+        // which is what lets --resume stitch a byte-identical stream.
+        if let Err(e) = self.out.flush() {
+            if self.error.is_none() {
+                self.error = Some(e.to_string());
             }
         }
     }

@@ -1,0 +1,642 @@
+//! Crash-safe run journal: `cprune-run-journal` v1 (DESIGN.md §15).
+//!
+//! A journaled run appends one JSONL record per recovery barrier —
+//! run config, baseline, each accepted pruning iteration — and fsyncs
+//! at every barrier, so a crash loses at most the in-flight iteration.
+//! Each iteration record carries the accepted [`Checkpoint`] (the
+//! channels map / frontier point), the gates it was judged against, and
+//! the *tune-cache delta* since the previous barrier, in the exact
+//! entry shape [`TuneCache::to_json`] uses.
+//!
+//! **Resume invariant** (pinned by `rust/tests/journal_tests.rs` and
+//! the `crash-resume` CI job): a run is a pure function of
+//! seed + tune cache, so `cprune run --resume <journal>` rebuilds the
+//! run config from the journal, preloads every journaled cache entry,
+//! and re-executes from iteration 0 — the pre-crash iterations replay
+//! as pure cache hits, and the full [`super::RunEvent`] JSONL comes out
+//! **byte-identical** to an uninterrupted run's. Already-journaled
+//! barriers are suppressed on replay; the first live barrier captures
+//! exactly the entries tuned after the crash point.
+//!
+//! Crash-safety of the journal file itself: records are appended with
+//! `write_all` + `sync_all`, so the only malformed state a crash can
+//! leave is a torn final line. [`RunJournal::resume`] truncates that
+//! torn tail before appending a `resumed` marker; any damage *before*
+//! the final newline is corruption and refuses to resume (and
+//! `cprune check` flags it as CPV16x).
+
+use crate::serve::Checkpoint;
+use crate::tuner::TuneCache;
+use crate::util::fault;
+use crate::util::json::{self, Json};
+use std::collections::HashSet;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Format tag of the journal header line.
+pub const JOURNAL_FORMAT: &str = "cprune-run-journal";
+/// Bump when the record schema changes; `resume` rejects other versions.
+pub const JOURNAL_VERSION: u64 = 1;
+
+/// The run configuration a journal pins — everything `--resume` needs
+/// to rebuild the run besides the cache entries (model/pruner/device
+/// are the CLI-level tokens, so the resumed process resolves them the
+/// same way the original invocation did).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalConfig {
+    /// Run seed (`--seed`).
+    pub seed: u64,
+    /// Pruner registry token (`--pruner`).
+    pub pruner: String,
+    /// Model token (`--model`).
+    pub model: String,
+    /// Device or remote-target token (`--device` / `--target`).
+    pub device: String,
+    /// Iteration budget (`--iters`).
+    pub iters: usize,
+    /// Optional accuracy budget (`--target-acc`).
+    pub target_acc: Option<f64>,
+}
+
+impl JournalConfig {
+    /// Serialize as the journal's `config` record.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("record", Json::Str("config".to_string())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("pruner", Json::Str(self.pruner.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("device", Json::Str(self.device.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("target_acc", self.target_acc.map(Json::Num).unwrap_or(Json::Null)),
+        ])
+    }
+
+    /// Parse a `config` record.
+    pub fn from_json(j: &Json) -> Result<JournalConfig, String> {
+        let str_field = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("config record missing '{k}'"))
+        };
+        let num_field = |k: &str| {
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| format!("config record missing '{k}'"))
+        };
+        Ok(JournalConfig {
+            seed: num_field("seed")? as u64,
+            pruner: str_field("pruner")?,
+            model: str_field("model")?,
+            device: str_field("device")?,
+            iters: num_field("iters")?,
+            target_acc: match j.get("target_acc") {
+                None | Some(Json::Null) => None,
+                Some(v) => {
+                    Some(v.as_f64().ok_or("config record has a non-numeric 'target_acc'")?)
+                }
+            },
+        })
+    }
+}
+
+/// One accepted iteration's barrier payload — what
+/// [`super::RunContext::journal_accept`] hands the journal.
+#[derive(Clone, Debug)]
+pub struct IterationRecord {
+    /// 1-based accepted iteration number.
+    pub iteration: usize,
+    /// Measured latency of the accepted candidate (seconds).
+    pub latency: f64,
+    /// Latency target the candidate was judged against (pre-update).
+    pub latency_target: f64,
+    /// Short-train accuracy of the accepted candidate.
+    pub short_accuracy: f64,
+    /// Accuracy gate the candidate was judged against (pre-update).
+    pub accuracy_gate: f64,
+    /// Filters removed from the chosen layer this iteration.
+    pub filters_removed: usize,
+    /// Candidate layers evaluated before one was accepted.
+    pub candidates_tried: usize,
+    /// The accepted frontier point (channels map included).
+    pub checkpoint: Checkpoint,
+}
+
+/// What [`RunJournal::resume`] recovered from an interrupted journal:
+/// the pinned config plus every journaled tune-cache entry, ready to
+/// warm-start the re-execution.
+pub struct ResumeState {
+    /// Run configuration pinned by the journal's `config` record.
+    pub config: JournalConfig,
+    /// Last iteration with a journaled barrier (0 = baseline only).
+    pub last_iteration: usize,
+    entries: Vec<Json>,
+}
+
+impl ResumeState {
+    /// Merge every journaled tune-cache entry into `cache` — the warm
+    /// start that makes pre-crash iterations replay as pure hits.
+    pub fn preload(&self, cache: &TuneCache) -> Result<(), String> {
+        for e in &self.entries {
+            cache.merge_entry_json(e).map_err(|err| format!("journaled cache entry: {err}"))?;
+        }
+        Ok(())
+    }
+
+    /// Number of journaled cache entries recovered.
+    pub fn entry_count(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// Append-only writer for one run's journal.
+///
+/// Journal failures never abort a run mid-flight (the run itself is the
+/// valuable computation); the first append error is latched and the run
+/// surfaces it as its own failure once finished — see
+/// [`RunJournal::error`].
+pub struct RunJournal {
+    path: PathBuf,
+    file: std::fs::File,
+    /// Canonical workload keys already journaled — the complement of
+    /// the next barrier's cache delta.
+    known: HashSet<String>,
+    /// Barriers for iterations `<= skip_through` are suppressed: they
+    /// were journaled before the crash and replay as cache hits.
+    skip_through: usize,
+    baseline_logged: bool,
+    finished: bool,
+    error: Option<String>,
+}
+
+impl RunJournal {
+    /// Start a fresh journal at `path`: writes and fsyncs the header and
+    /// `config` records (truncating any previous journal there).
+    pub fn create(path: impl Into<PathBuf>, config: &JournalConfig) -> Result<RunJournal, String> {
+        let path = path.into();
+        // OpenOptions rather than File::create: the journal is an append
+        // log, not an atomic_write document (CPL007 sanctions only the
+        // latter outside util/io.rs).
+        let file = std::fs::OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| format!("{}: cannot create journal: {e}", path.display()))?;
+        let mut j = RunJournal {
+            path,
+            file,
+            known: HashSet::new(),
+            skip_through: 0,
+            baseline_logged: false,
+            finished: false,
+            error: None,
+        };
+        j.append_json(&Json::obj(vec![
+            ("format", Json::Str(JOURNAL_FORMAT.to_string())),
+            ("version", Json::Num(JOURNAL_VERSION as f64)),
+        ]));
+        j.append_json(&config.to_json());
+        match j.error.take() {
+            Some(e) => Err(e),
+            None => Ok(j),
+        }
+    }
+
+    /// Reopen an interrupted journal for appending: parses the intact
+    /// prefix, truncates a torn final line (the expected shape of a
+    /// crash mid-append), appends a `resumed` marker, and returns the
+    /// recovered [`ResumeState`]. Refuses corruption before the final
+    /// newline, a finished run, and foreign/other-version documents.
+    pub fn resume(path: impl Into<PathBuf>) -> Result<(RunJournal, ResumeState), String> {
+        let path = path.into();
+        let label = path.display().to_string();
+        let bytes =
+            std::fs::read(&path).map_err(|e| format!("{label}: cannot read journal: {e}"))?;
+        let keep = bytes.iter().rposition(|&b| b == b'\n').map(|i| i + 1).unwrap_or(0);
+        let intact = std::str::from_utf8(&bytes[..keep])
+            .map_err(|_| format!("{label}: journal prefix is not UTF-8"))?;
+        let parsed = parse_journal(intact, &label)?;
+        if parsed.finished {
+            return Err(format!("{label}: journal records a finished run — nothing to resume"));
+        }
+        let file = std::fs::OpenOptions::new()
+            .write(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| format!("{label}: cannot reopen journal: {e}"))?;
+        if (keep as u64) < bytes.len() as u64 {
+            // Drop the torn tail so the resumed log stays valid JSONL.
+            file.set_len(keep as u64)
+                .map_err(|e| format!("{label}: cannot truncate torn tail: {e}"))?;
+        }
+        let mut known = HashSet::new();
+        for e in &parsed.entries {
+            if let Some(w) = e.get("workload") {
+                known.insert(w.to_string());
+            }
+        }
+        let mut j = RunJournal {
+            path,
+            file,
+            known,
+            skip_through: parsed.last_iteration,
+            baseline_logged: parsed.baseline_logged,
+            finished: false,
+            error: None,
+        };
+        j.append_json(&Json::obj(vec![
+            ("record", Json::Str("resumed".to_string())),
+            ("from_iteration", Json::Num(parsed.last_iteration as f64)),
+        ]));
+        if let Some(e) = j.error.take() {
+            return Err(e);
+        }
+        let state = ResumeState {
+            config: parsed.config,
+            last_iteration: parsed.last_iteration,
+            entries: parsed.entries,
+        };
+        Ok((j, state))
+    }
+
+    /// Journal path (diagnostics).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// First append failure, if any — checked by the run after finishing
+    /// so a journaled run never claims success with a broken journal.
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+
+    /// Baseline barrier: the run's pre-pruning measurement plus every
+    /// cache entry the baseline tuning produced. Suppressed on resume
+    /// replay (the baseline is already journaled). May abort at barrier
+    /// site `baseline` under `--faults`.
+    pub fn record_baseline(&mut self, latency: f64, fps: f64, events: usize, cache: &TuneCache) {
+        if self.finished || self.baseline_logged {
+            return;
+        }
+        self.baseline_logged = true;
+        let delta = self.take_delta(cache);
+        self.append_json(&Json::obj(vec![
+            ("record", Json::Str("baseline".to_string())),
+            ("latency", Json::Num(latency)),
+            ("fps", Json::Num(fps)),
+            ("events", Json::Num(events as f64)),
+            ("cache", delta),
+        ]));
+        fault::at_barrier("baseline");
+    }
+
+    /// Accepted-iteration barrier: the accepted checkpoint, the gates it
+    /// passed, measurement/event counters, and the cache delta since the
+    /// previous barrier. Suppressed on resume replay for iterations that
+    /// were journaled before the crash. May abort at barrier site
+    /// `iter:N` under `--faults`.
+    pub fn record_iteration(
+        &mut self,
+        rec: &IterationRecord,
+        programs_measured: usize,
+        events: usize,
+        cache: &TuneCache,
+    ) {
+        if self.finished || rec.iteration <= self.skip_through {
+            return;
+        }
+        self.skip_through = rec.iteration;
+        let delta = self.take_delta(cache);
+        self.append_json(&Json::obj(vec![
+            ("record", Json::Str("iteration".to_string())),
+            ("iteration", Json::Num(rec.iteration as f64)),
+            ("latency", Json::Num(rec.latency)),
+            ("latency_target", Json::Num(rec.latency_target)),
+            ("short_accuracy", Json::Num(rec.short_accuracy)),
+            ("accuracy_gate", Json::Num(rec.accuracy_gate)),
+            ("filters_removed", Json::Num(rec.filters_removed as f64)),
+            ("candidates_tried", Json::Num(rec.candidates_tried as f64)),
+            ("checkpoint", rec.checkpoint.to_json()),
+            ("programs_measured", Json::Num(programs_measured as f64)),
+            ("events", Json::Num(events as f64)),
+            ("cache", delta),
+        ]));
+        fault::at_barrier(&format!("iter:{}", rec.iteration));
+    }
+
+    /// Final barrier: the run completed; `events` is the total RunEvent
+    /// count including `Finished`. A finished journal refuses `resume`.
+    /// May abort at barrier site `finish` under `--faults`.
+    pub fn record_finished(&mut self, events: usize) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        self.append_json(&Json::obj(vec![
+            ("record", Json::Str("finished".to_string())),
+            ("events", Json::Num(events as f64)),
+        ]));
+        fault::at_barrier("finish");
+    }
+
+    /// Cache entries not yet journaled, consumed into the next record.
+    fn take_delta(&mut self, cache: &TuneCache) -> Json {
+        let fresh = cache.entries_not_in(&self.known);
+        let mut arr = Vec::with_capacity(fresh.len());
+        for (key, entry) in fresh {
+            self.known.insert(key);
+            arr.push(entry);
+        }
+        Json::Arr(arr)
+    }
+
+    /// Append one record line and fsync it (the journal's durability
+    /// barrier). Consults the fault hook at site `journal`: an injected
+    /// tear writes a partial line with no trailing newline — exactly the
+    /// state a mid-append crash leaves — and latches the error.
+    fn append_json(&mut self, record: &Json) {
+        if self.error.is_some() {
+            return;
+        }
+        let mut line = record.to_string();
+        line.push('\n');
+        let fail = |e: String| format!("{}: {e}", self.path.display());
+        match fault::write_fault("journal") {
+            Some(fault::WriteFault::FailBefore) => {
+                self.error = Some(fail("injected journal write failure".to_string()));
+                return;
+            }
+            Some(fault::WriteFault::Torn { keep }) => {
+                let keep = keep.min(line.len().saturating_sub(1));
+                let _ = self.file.write_all(&line.as_bytes()[..keep]);
+                let _ = self.file.sync_all();
+                self.error = Some(fail("injected torn journal append".to_string()));
+                return;
+            }
+            None => {}
+        }
+        if let Err(e) = self.file.write_all(line.as_bytes()) {
+            self.error = Some(fail(format!("journal append failed: {e}")));
+            return;
+        }
+        if let Err(e) = self.file.sync_all() {
+            self.error = Some(fail(format!("journal fsync failed: {e}")));
+        }
+    }
+}
+
+/// Read only the `config` record of a journal (what `cprune run
+/// --resume` uses to rebuild the CLI configuration before the run
+/// itself reopens the journal for appending).
+pub fn read_config(path: impl AsRef<Path>) -> Result<JournalConfig, String> {
+    let path = path.as_ref();
+    let label = path.display().to_string();
+    let bytes = std::fs::read(path).map_err(|e| format!("{label}: cannot read journal: {e}"))?;
+    let keep = bytes.iter().rposition(|&b| b == b'\n').map(|i| i + 1).unwrap_or(0);
+    let intact = std::str::from_utf8(&bytes[..keep])
+        .map_err(|_| format!("{label}: journal prefix is not UTF-8"))?;
+    Ok(parse_journal(intact, &label)?.config)
+}
+
+/// Parsed intact prefix of a journal.
+struct ParsedJournal {
+    config: JournalConfig,
+    entries: Vec<Json>,
+    last_iteration: usize,
+    baseline_logged: bool,
+    finished: bool,
+}
+
+/// Strict reader for the intact (newline-terminated) prefix of a
+/// journal. A torn *final* line is the caller's problem (it is sliced
+/// off before this runs); anything malformed in the intact prefix is
+/// corruption, not a crash artifact, and errors out.
+fn parse_journal(intact: &str, label: &str) -> Result<ParsedJournal, String> {
+    let mut lines = intact.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or_else(|| format!("{label}: journal has no header"))?;
+    let h = json::parse(header).map_err(|e| format!("{label}: bad journal header: {e}"))?;
+    match h.get("format").and_then(Json::as_str) {
+        Some(JOURNAL_FORMAT) => {}
+        other => return Err(format!("{label}: not a run journal (format {other:?})")),
+    }
+    match h.get("version").and_then(Json::as_usize) {
+        Some(v) if v as u64 == JOURNAL_VERSION => {}
+        other => {
+            return Err(format!(
+                "{label}: unsupported journal version {other:?} (want {JOURNAL_VERSION})"
+            ))
+        }
+    }
+    let cline = lines.next().ok_or_else(|| format!("{label}: journal has no config record"))?;
+    let cj = json::parse(cline).map_err(|e| format!("{label}: bad config record: {e}"))?;
+    if cj.get("record").and_then(Json::as_str) != Some("config") {
+        return Err(format!("{label}: first journal record must be 'config'"));
+    }
+    let config = JournalConfig::from_json(&cj).map_err(|e| format!("{label}: {e}"))?;
+    let mut entries = Vec::new();
+    let mut last_iteration = 0usize;
+    let mut baseline_logged = false;
+    let mut finished = false;
+    for line in lines {
+        if finished {
+            return Err(format!("{label}: journal record after 'finished'"));
+        }
+        let j = json::parse(line)
+            .map_err(|e| format!("{label}: corrupt journal record (not a torn tail): {e}"))?;
+        let collect = |j: &Json, entries: &mut Vec<Json>| -> Result<(), String> {
+            let arr = j
+                .get("cache")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("{label}: journal record missing cache delta"))?;
+            entries.extend(arr.iter().cloned());
+            Ok(())
+        };
+        match j.get("record").and_then(Json::as_str) {
+            Some("baseline") => {
+                baseline_logged = true;
+                collect(&j, &mut entries)?;
+            }
+            Some("iteration") => {
+                let n = j
+                    .get("iteration")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("{label}: iteration record missing number"))?;
+                last_iteration = last_iteration.max(n);
+                collect(&j, &mut entries)?;
+            }
+            Some("resumed") => {}
+            Some("finished") => finished = true,
+            other => return Err(format!("{label}: unknown journal record {other:?}")),
+        }
+    }
+    Ok(ParsedJournal { config, entries, last_iteration, baseline_logged, finished })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> JournalConfig {
+        JournalConfig {
+            seed: 7,
+            pruner: "cprune".to_string(),
+            model: "resnet8-cifar".to_string(),
+            device: "kryo385".to_string(),
+            iters: 3,
+            target_acc: None,
+        }
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cprune-journal-{}-{name}", std::process::id()))
+    }
+
+    fn checkpoint() -> Checkpoint {
+        Checkpoint {
+            iteration: 1,
+            latency: 0.5,
+            accuracy: 0.9,
+            channels: [(0, 16)].into_iter().collect(),
+        }
+    }
+
+    #[test]
+    fn config_round_trips() {
+        let c = cfg();
+        assert_eq!(JournalConfig::from_json(&c.to_json()).unwrap(), c);
+        let with_acc = JournalConfig { target_acc: Some(0.75), ..cfg() };
+        assert_eq!(JournalConfig::from_json(&with_acc.to_json()).unwrap(), with_acc);
+    }
+
+    #[test]
+    fn create_resume_round_trip_preserves_progress() {
+        let path = tmp_path("roundtrip.journal");
+        let cache = TuneCache::new();
+        {
+            let mut j = RunJournal::create(&path, &cfg()).unwrap();
+            j.record_baseline(1.5, 2.0, 3, &cache);
+            let rec = IterationRecord {
+                iteration: 1,
+                latency: 1.2,
+                latency_target: 1.4,
+                short_accuracy: 0.91,
+                accuracy_gate: 0.89,
+                filters_removed: 4,
+                candidates_tried: 2,
+                checkpoint: checkpoint(),
+            };
+            j.record_iteration(&rec, 10, 9, &cache);
+            assert!(j.error().is_none());
+        }
+        assert_eq!(read_config(&path).unwrap(), cfg());
+        let (j, state) = RunJournal::resume(&path).unwrap();
+        assert_eq!(state.config, cfg());
+        assert_eq!(state.last_iteration, 1);
+        assert_eq!(state.entry_count(), 0);
+        assert!(j.error().is_none());
+        drop(j);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"record\":\"resumed\""));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resume_truncates_a_torn_tail() {
+        let path = tmp_path("torn.journal");
+        {
+            let mut j = RunJournal::create(&path, &cfg()).unwrap();
+            j.record_baseline(1.5, 2.0, 3, &TuneCache::new());
+        }
+        let intact = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, format!("{intact}{{\"record\":\"iterat")).unwrap();
+        let (j, state) = RunJournal::resume(&path).unwrap();
+        drop(j);
+        assert_eq!(state.last_iteration, 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.contains("iterat\n"), "torn tail must be dropped: {text}");
+        assert!(text.ends_with("\"record\":\"resumed\"}\n") || text.contains("resumed"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resume_refuses_finished_and_corrupt_journals() {
+        let path = tmp_path("refuse.journal");
+        {
+            let mut j = RunJournal::create(&path, &cfg()).unwrap();
+            j.record_finished(12);
+        }
+        let e = RunJournal::resume(&path).unwrap_err();
+        assert!(e.contains("finished"), "{e}");
+        // corruption before the final newline is not a torn tail
+        let intact = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, format!("not json\n{intact}")).unwrap();
+        assert!(RunJournal::resume(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replayed_barriers_are_suppressed() {
+        let path = tmp_path("suppress.journal");
+        let cache = TuneCache::new();
+        {
+            let mut j = RunJournal::create(&path, &cfg()).unwrap();
+            j.record_baseline(1.5, 2.0, 3, &cache);
+            let rec = IterationRecord {
+                iteration: 1,
+                latency: 1.2,
+                latency_target: 1.4,
+                short_accuracy: 0.91,
+                accuracy_gate: 0.89,
+                filters_removed: 4,
+                candidates_tried: 2,
+                checkpoint: checkpoint(),
+            };
+            j.record_iteration(&rec, 10, 9, &cache);
+        }
+        let before = std::fs::read_to_string(&path).unwrap().lines().count();
+        {
+            let (mut j, _state) = RunJournal::resume(&path).unwrap();
+            // replayed barriers: baseline + iteration 1 must not re-append
+            j.record_baseline(1.5, 2.0, 3, &cache);
+            let rec = IterationRecord {
+                iteration: 1,
+                latency: 1.2,
+                latency_target: 1.4,
+                short_accuracy: 0.91,
+                accuracy_gate: 0.89,
+                filters_removed: 4,
+                candidates_tried: 2,
+                checkpoint: checkpoint(),
+            };
+            j.record_iteration(&rec, 10, 9, &cache);
+            let live = IterationRecord { iteration: 2, ..rec };
+            j.record_iteration(&live, 12, 15, &cache);
+            assert!(j.error().is_none());
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        // one `resumed` + one live iteration on top of the original log
+        assert_eq!(text.lines().count(), before + 2, "{text}");
+        assert_eq!(text.matches("\"record\":\"iteration\"").count(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_append_latches_an_error_and_resume_recovers() {
+        let path = tmp_path("torn-append.journal");
+        let cache = TuneCache::new();
+        {
+            let mut j = RunJournal::create(&path, &cfg()).unwrap();
+            // tear the NEXT journal append (create already wrote twice)
+            let _guard = crate::util::fault::install(Box::new(
+                crate::util::fault::FaultPlan::parse("seed:5,torn@journal").unwrap(),
+            ));
+            j.record_baseline(1.5, 2.0, 3, &cache);
+            assert!(j.error().is_some(), "torn append must latch an error");
+        }
+        // the torn baseline line has no newline; resume drops it
+        let (j, state) = RunJournal::resume(&path).unwrap();
+        drop(j);
+        assert_eq!(state.last_iteration, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+}

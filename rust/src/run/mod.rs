@@ -32,9 +32,15 @@
 //! The legacy free functions (`pruner::cprune`, `baselines::*`) remain
 //! as thin shims over the trait, so both spellings stay byte-identical
 //! for a fixed seed (pinned by `tests/run_api_tests.rs`).
+//!
+//! Runs are crash-safe (DESIGN.md §15): [`RunBuilder::journal`] appends
+//! a fsync'd [`journal::RunJournal`] barrier per accepted iteration, and
+//! [`RunBuilder::resume`] rebuilds an interrupted run from its journal,
+//! replaying to a byte-identical [`RunEvent`] stream.
 
 pub mod builder;
 pub mod events;
+pub mod journal;
 pub mod pruners;
 
 pub use builder::{Run, RunBuilder};
@@ -42,6 +48,7 @@ pub use events::{
     JsonlSink, NullObserver, ProgressPrinter, RegistryPublisher, RejectReason, RunEvent,
     RunObserver, EVENTS_FORMAT, EVENTS_VERSION,
 };
+pub use journal::{IterationRecord, JournalConfig, RunJournal, JOURNAL_FORMAT, JOURNAL_VERSION};
 pub use pruners::{pruner_by_name, Amc, CPrune, Fpgm, Magnitude, NetAdapt, Pqf, PRUNER_NAMES};
 
 use crate::accuracy::{AccuracyOracle, Criterion, TrainPhase};
@@ -87,6 +94,13 @@ pub struct RunContext<'s> {
     pub max_iterations: Option<usize>,
     baseline_latency: Option<f64>,
     observers: &'s mut [Box<dyn RunObserver>],
+    /// Crash-safety journal (DESIGN.md §15), attached by [`Run::execute`]
+    /// for journaled runs; barriers are appended at baseline and at each
+    /// accepted iteration.
+    journal: Option<journal::RunJournal>,
+    /// Events delivered through [`RunContext::emit`] so far — journaled
+    /// at each barrier for audit (`cprune check` cross-checks it).
+    events_emitted: usize,
 }
 
 impl<'s> RunContext<'s> {
@@ -105,6 +119,8 @@ impl<'s> RunContext<'s> {
             max_iterations: None,
             baseline_latency: None,
             observers,
+            journal: None,
+            events_emitted: 0,
         }
     }
 
@@ -132,8 +148,36 @@ impl<'s> RunContext<'s> {
 
     /// Deliver an event to every observer, in registration order.
     pub fn emit(&mut self, event: &RunEvent) {
+        self.events_emitted += 1;
         for obs in self.observers.iter_mut() {
             obs.on_event(event);
+        }
+    }
+
+    /// Attach the crash-safety journal ([`Run::execute`] does this for
+    /// journaled runs before handing the context to the pruner).
+    pub(crate) fn attach_journal(&mut self, journal: journal::RunJournal) {
+        self.journal = Some(journal);
+    }
+
+    /// Take the journal back out (so [`Run::execute`] can append the
+    /// `finished` record after dispatching the final event).
+    pub(crate) fn detach_journal(&mut self) -> Option<journal::RunJournal> {
+        self.journal.take()
+    }
+
+    /// Events delivered through [`RunContext::emit`] so far.
+    pub(crate) fn events_emitted(&self) -> usize {
+        self.events_emitted
+    }
+
+    /// Journal barrier for an accepted iteration (DESIGN.md §15): a
+    /// no-op when the run is unjournaled, or when the iteration was
+    /// already journaled before a crash (resume replay).
+    pub fn journal_accept(&mut self, rec: journal::IterationRecord) {
+        if let Some(j) = self.journal.as_mut() {
+            let measured = self.session.measured_count();
+            j.record_iteration(&rec, measured, self.events_emitted, &self.session.cache);
         }
     }
 
@@ -152,10 +196,14 @@ impl<'s> RunContext<'s> {
 
     /// Record an externally measured baseline and emit
     /// [`RunEvent::BaselineTuned`] (CPrune measures the baseline itself
-    /// as Alg. 1 line 1).
+    /// as Alg. 1 line 1). For journaled runs this is also the `baseline`
+    /// journal barrier (DESIGN.md §15).
     pub fn set_baseline(&mut self, latency: f64, fps: f64) {
         self.baseline_latency = Some(latency);
         self.emit(&RunEvent::BaselineTuned { latency, fps });
+        if let Some(j) = self.journal.as_mut() {
+            j.record_baseline(latency, fps, self.events_emitted, &self.session.cache);
+        }
     }
 }
 

@@ -18,7 +18,7 @@
 use crate::tir::jsonio::{program_from_json, program_to_json, workload_from_json, workload_to_json};
 use crate::tir::{Program, Workload};
 use crate::util::json::{self, Json};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -134,6 +134,49 @@ impl TuneCache {
         ])
     }
 
+    /// Serialized entries whose workload key is NOT in `known` — the run
+    /// journal's per-barrier cache delta (DESIGN.md §15). Keys are the
+    /// canonical workload JSON, the same string [`TuneCache::to_json`]
+    /// sorts by, and entries come back sorted by that key so journals
+    /// are byte-stable.
+    pub fn entries_not_in(&self, known: &HashSet<String>) -> Vec<(String, Json)> {
+        let mut entries: Vec<(String, Json)> = self
+            .map
+            .lock()
+            .unwrap() // cprune-lint: allow(CPL005, reason="poisoning only follows a prior panic")
+            .iter()
+            .filter_map(|(w, (p, lat, measured))| {
+                let wj = workload_to_json(w);
+                let key = wj.to_string();
+                if known.contains(&key) {
+                    return None;
+                }
+                let entry = Json::obj(vec![
+                    ("workload", wj),
+                    ("program", program_to_json(p)),
+                    ("latency", Json::Num(*lat)),
+                    ("measured", Json::Num(*measured as f64)),
+                ]);
+                Some((key, entry))
+            })
+            .collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        entries
+    }
+
+    /// Merge one serialized entry (the shape [`TuneCache::to_json`] emits
+    /// and the run journal stores) into the cache, replacing any existing
+    /// entry for the same workload.
+    pub fn merge_entry_json(&self, e: &Json) -> Result<(), String> {
+        let w = workload_from_json(e.get("workload").ok_or("entry missing workload")?)?;
+        let p = program_from_json(e.get("program").ok_or("entry missing program")?)?;
+        let lat = e.get("latency").and_then(Json::as_f64).ok_or("entry missing latency")?;
+        let measured =
+            e.get("measured").and_then(Json::as_usize).ok_or("entry missing measured")?;
+        self.put(w, p, lat, measured);
+        Ok(())
+    }
+
     /// Parse a document produced by [`TuneCache::to_json`]. When
     /// `expected_device` is given, a file recorded for a different device
     /// is rejected — latencies are device-specific, so silently serving
@@ -187,16 +230,11 @@ impl TuneCache {
     }
 
     /// Write the cache to `path` (versioned JSON), recording the device
-    /// the latencies belong to. Writes a sibling temp file first and
-    /// renames it into place, so an interrupted save never leaves a
-    /// truncated cache that would brick later warm starts.
+    /// the latencies belong to. Persisted via
+    /// [`crate::util::io::atomic_write`] (temp + fsync + rename,
+    /// DESIGN.md §15), so an interrupted save never leaves a truncated
+    /// cache that would brick later warm starts.
     pub fn save(&self, path: impl AsRef<Path>, device: &str) -> Result<(), String> {
-        let path = path.as_ref();
-        let mut tmp = path.as_os_str().to_os_string();
-        // pid-unique temp name: concurrent saves to the same path must not
-        // truncate each other's in-progress temp file before the rename.
-        tmp.push(format!(".{}.tmp", std::process::id()));
-        let tmp = std::path::PathBuf::from(tmp);
         let text = self.to_json(device).to_string();
         // Debug builds sweep the serialized document through the artifact
         // checker (DESIGN.md §13) before it can reach disk.
@@ -206,10 +244,7 @@ impl TuneCache {
         {
             panic!("TuneCache::save produced a non-canonical document: {d}");
         }
-        std::fs::write(&tmp, text)
-            .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .map_err(|e| format!("renaming {} into place: {e}", tmp.display()))
+        crate::util::io::atomic_write(path, &text, "cache")
     }
 
     /// Load a cache previously written by [`TuneCache::save`], verifying

@@ -1,0 +1,294 @@
+//! Deterministic fault injection for the crash-safety plane
+//! (DESIGN.md §15).
+//!
+//! Every recovery path in the project — atomic artifact writes
+//! ([`crate::util::io::atomic_write`]), run-journal barriers
+//! ([`crate::run::journal::RunJournal`]), and remote-worker
+//! death/timeout handling — is exercised through one seam: a per-thread
+//! [`FaultHook`] consulted at named *sites*. Production runs install no
+//! hook and pay one thread-local read per site; tests and the
+//! `--faults SPEC` CLI flag install a [`FaultPlan`], a deterministic,
+//! seeded schedule of failures, so every "what if the process dies
+//! here?" question is answered by a test or CI job instead of an
+//! argument.
+//!
+//! Site vocabulary (DESIGN.md §15): write sites are the artifact being
+//! persisted (`cache`, `registry`, `trace`, `remote-trace`,
+//! `calibration`, `devices`, `report`, `out`, `events`, `journal`);
+//! barrier sites are `baseline`, `iter:N` and `finish` (the journal's
+//! fsync points); `worker` names the loopback measurement workers.
+
+use crate::util::rng::Rng;
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Exit code of a [`at_barrier`] abort — distinguishable from ordinary
+/// error exits (1) so the `crash-resume` CI job can assert the process
+/// died *at the injected barrier* and not of an unrelated failure.
+pub const ABORT_EXIT_CODE: i32 = 86;
+
+/// What happens to one artifact write at a named site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteFault {
+    /// The write fails before any byte reaches the filesystem.
+    FailBefore,
+    /// The write tears: at most `keep` bytes of the payload land — in
+    /// the temp file for [`crate::util::io::atomic_write`] (the target
+    /// document is untouched), at the tail for journal appends — and
+    /// the write reports failure.
+    Torn { keep: usize },
+}
+
+/// Fault injected into a loopback measurement worker (death/timeout
+/// tests); counts requests served *after* the handshake.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WorkerFault {
+    /// Serve faithfully forever.
+    #[default]
+    None,
+    /// Serve `n` requests, then drop the connection (client sees EOF).
+    DieAfter(usize),
+    /// Serve `n` requests, then swallow requests without replying
+    /// (client sees a deadline timeout).
+    HangAfter(usize),
+}
+
+/// Decides, per named site, whether an operation fails. Installed
+/// per-thread via [`install`] so parallel tests cannot interfere.
+pub trait FaultHook {
+    /// Consulted once per artifact write to `site`; `None` = write
+    /// normally.
+    fn write_fault(&mut self, site: &str) -> Option<WriteFault> {
+        let _ = site;
+        None
+    }
+
+    /// Consulted at a journal barrier; `true` aborts the process with
+    /// [`ABORT_EXIT_CODE`] (a simulated crash whose recovery `--resume`
+    /// must handle).
+    fn abort_at(&mut self, site: &str) -> bool {
+        let _ = site;
+        false
+    }
+
+    /// Fault to inject into loopback measurement workers spawned from
+    /// this thread.
+    fn worker_fault(&self) -> WorkerFault {
+        WorkerFault::None
+    }
+}
+
+/// One `fail@`/`torn@` clause: fires on the `nth` write to `site`.
+#[derive(Clone, Debug)]
+struct WriteClause {
+    site: String,
+    nth: usize,
+    torn: bool,
+    fired: bool,
+}
+
+/// A deterministic, seeded schedule of injected failures — what
+/// `--faults SPEC` parses into.
+///
+/// Grammar (comma-separated clauses):
+///
+/// * `seed:S` — seed for the torn-write length draws (default 0);
+/// * `abort@SITE` — abort the process at journal barrier `SITE`
+///   (`baseline`, `iter:N`, `finish`);
+/// * `fail@SITE[:K]` — the `K`-th write to `SITE` fails before any byte
+///   lands (`K` is 1-based, default 1);
+/// * `torn@SITE[:K]` — the `K`-th write to `SITE` tears mid-payload;
+/// * `die@worker:N` — loopback workers die after serving `N` requests;
+/// * `hang@worker:N` — loopback workers hang after serving `N`.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    writes: Vec<WriteClause>,
+    aborts: Vec<String>,
+    worker: WorkerFault,
+    counts: HashMap<String, usize>,
+    rng: Rng,
+}
+
+impl FaultPlan {
+    /// Parse a `--faults` spec (see the type-level grammar).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut writes = Vec::new();
+        let mut aborts = Vec::new();
+        let mut worker = WorkerFault::None;
+        let mut seed = 0u64;
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            if let Some(n) = clause.strip_prefix("seed:") {
+                seed = n.parse().map_err(|_| format!("bad fault seed in '{clause}'"))?;
+            } else if let Some(site) = clause.strip_prefix("abort@") {
+                if site.is_empty() {
+                    return Err(format!("empty barrier site in '{clause}'"));
+                }
+                aborts.push(site.to_string());
+            } else if let Some(n) = clause.strip_prefix("die@worker:") {
+                let n = n.parse().map_err(|_| format!("bad worker count in '{clause}'"))?;
+                worker = WorkerFault::DieAfter(n);
+            } else if let Some(n) = clause.strip_prefix("hang@worker:") {
+                let n = n.parse().map_err(|_| format!("bad worker count in '{clause}'"))?;
+                worker = WorkerFault::HangAfter(n);
+            } else if clause.starts_with("fail@") || clause.starts_with("torn@") {
+                let torn = clause.starts_with("torn@");
+                let rest = &clause[5..];
+                let (site, nth) = match rest.rsplit_once(':') {
+                    Some((s, k)) => match k.parse::<usize>() {
+                        Ok(n) if n >= 1 => (s, n),
+                        _ => return Err(format!("bad write ordinal in '{clause}'")),
+                    },
+                    None => (rest, 1),
+                };
+                if site.is_empty() {
+                    return Err(format!("empty write site in '{clause}'"));
+                }
+                writes.push(WriteClause { site: site.to_string(), nth, torn, fired: false });
+            } else {
+                return Err(format!(
+                    "unknown fault clause '{clause}' (want seed:S, abort@SITE, \
+                     fail@SITE[:K], torn@SITE[:K], die@worker:N or hang@worker:N)"
+                ));
+            }
+        }
+        Ok(FaultPlan { writes, aborts, worker, counts: HashMap::new(), rng: Rng::new(seed) })
+    }
+}
+
+impl FaultHook for FaultPlan {
+    fn write_fault(&mut self, site: &str) -> Option<WriteFault> {
+        let n = self.counts.entry(site.to_string()).or_insert(0);
+        *n += 1;
+        let count = *n;
+        for c in self.writes.iter_mut() {
+            if !c.fired && c.site == site && c.nth == count {
+                c.fired = true;
+                return Some(if c.torn {
+                    // Seeded draw: the tear length is reproducible for a
+                    // fixed `seed:S`, never wall-clock or address noise.
+                    WriteFault::Torn { keep: self.rng.below(4096) }
+                } else {
+                    WriteFault::FailBefore
+                });
+            }
+        }
+        None
+    }
+
+    fn abort_at(&mut self, site: &str) -> bool {
+        self.aborts.iter().any(|s| s == site)
+    }
+
+    fn worker_fault(&self) -> WorkerFault {
+        self.worker
+    }
+}
+
+thread_local! {
+    /// The current thread's hook. Thread-local (not global) so parallel
+    /// `cargo test` threads cannot inject faults into each other.
+    static HOOK: RefCell<Option<Box<dyn FaultHook>>> = RefCell::new(None);
+}
+
+/// RAII guard returned by [`install`]: removes the thread's hook on
+/// drop, so a panicking test cannot leak its faults into the next test
+/// scheduled on the same thread.
+pub struct HookGuard {
+    _private: (),
+}
+
+impl Drop for HookGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+/// Install `hook` for the current thread (replacing any previous one);
+/// hold the returned guard for the hook's intended lifetime.
+pub fn install(hook: Box<dyn FaultHook>) -> HookGuard {
+    HOOK.with(|h| *h.borrow_mut() = Some(hook));
+    HookGuard { _private: () }
+}
+
+/// Remove the current thread's hook (also done by [`HookGuard`]).
+pub fn clear() {
+    HOOK.with(|h| *h.borrow_mut() = None);
+}
+
+/// Consult the thread's hook about a write to `site` (`None` without an
+/// installed hook — the production path).
+pub fn write_fault(site: &str) -> Option<WriteFault> {
+    HOOK.with(|h| h.borrow_mut().as_mut().and_then(|hook| hook.write_fault(site)))
+}
+
+/// Journal barrier: when the installed plan schedules an abort here the
+/// process exits with [`ABORT_EXIT_CODE`] — the journal record for this
+/// barrier is already fsync'd, so this simulates the worst-timed crash
+/// `cprune run --resume` has to recover from.
+pub fn at_barrier(site: &str) {
+    let fire = HOOK
+        .with(|h| h.borrow_mut().as_mut().map(|hook| hook.abort_at(site)).unwrap_or(false));
+    if fire {
+        eprintln!("[faults] aborting at barrier '{site}'");
+        std::process::exit(ABORT_EXIT_CODE);
+    }
+}
+
+/// Worker fault for loopback connections spawned from this thread.
+pub fn worker_fault() -> WorkerFault {
+    HOOK.with(|h| h.borrow().as_ref().map(|hook| hook.worker_fault()).unwrap_or_default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_grammar() {
+        let mut plan =
+            FaultPlan::parse("seed:3, abort@iter:2, fail@cache, torn@registry:2, die@worker:1")
+                .unwrap();
+        assert!(plan.abort_at("iter:2"));
+        assert!(!plan.abort_at("iter:1"));
+        assert_eq!(plan.worker_fault(), WorkerFault::DieAfter(1));
+        // fail@cache fires on the first cache write only
+        assert_eq!(plan.write_fault("cache"), Some(WriteFault::FailBefore));
+        assert_eq!(plan.write_fault("cache"), None);
+        // torn@registry:2 skips the first registry write
+        assert_eq!(plan.write_fault("registry"), None);
+        assert!(matches!(plan.write_fault("registry"), Some(WriteFault::Torn { .. })));
+        assert_eq!(plan.write_fault("registry"), None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in ["explode@cache", "fail@", "fail@cache:0", "seed:x", "abort@", "die@worker:x"] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted '{bad}'");
+        }
+        // empty and whitespace-only specs are fine (no faults)
+        assert!(FaultPlan::parse("").is_ok());
+        assert!(FaultPlan::parse(" , ").is_ok());
+    }
+
+    #[test]
+    fn torn_lengths_are_seeded_and_reproducible() {
+        let draw = |seed: u64| {
+            let mut p = FaultPlan::parse(&format!("seed:{seed},torn@cache")).unwrap();
+            match p.write_fault("cache") {
+                Some(WriteFault::Torn { keep }) => keep,
+                other => panic!("expected a torn fault, got {other:?}"),
+            }
+        };
+        assert_eq!(draw(7), draw(7));
+    }
+
+    #[test]
+    fn thread_local_hook_is_consulted_and_cleared() {
+        assert_eq!(write_fault("cache"), None, "no hook installed yet");
+        {
+            let _guard = install(Box::new(FaultPlan::parse("fail@cache").unwrap()));
+            assert_eq!(write_fault("cache"), Some(WriteFault::FailBefore));
+        }
+        assert_eq!(write_fault("cache"), None, "guard drop must clear the hook");
+    }
+}

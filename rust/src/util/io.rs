@@ -1,0 +1,152 @@
+//! Crash-safe persistence: the single sanctioned write path for every
+//! versioned artifact (DESIGN.md §15).
+//!
+//! [`atomic_write`] is temp + fsync + rename: readers of the target
+//! path see either the old document or the new one, never a torn
+//! prefix, even if the process dies mid-write. Every artifact saver
+//! (tune cache, pareto registry, replay/remote traces, calibration,
+//! device specs, bench reports, `prune --out`) routes through here —
+//! cprune-lint's CPL007 flags any direct `std::fs::write`/
+//! `File::create` in library code outside this module.
+//!
+//! Both entry points consult the per-thread fault hook
+//! ([`crate::util::fault`]) at a named *site* before touching the
+//! filesystem, which is how `--faults torn@cache` and the torn-write
+//! fuzz tests exercise the recovery path deterministically.
+
+use crate::util::fault::{self, WriteFault};
+use std::io::Write;
+use std::path::Path;
+
+/// Atomically replace the document at `path` with `text`.
+///
+/// Discipline (DESIGN.md §15): write to a pid-unique sibling temp file,
+/// fsync it, then rename over `path` (and best-effort fsync the parent
+/// directory so the rename itself is durable). `site` names the
+/// artifact for fault injection — an injected [`WriteFault::Torn`]
+/// corrupts only the temp file, so the target keeps old-or-new
+/// semantics even under injected tears.
+pub fn atomic_write(path: impl AsRef<Path>, text: &str, site: &str) -> Result<(), String> {
+    let path = path.as_ref();
+    let fail = |e: std::io::Error, what: &str| format!("{}: {what}: {e}", path.display());
+    let injected = fault::write_fault(site);
+    if injected == Some(WriteFault::FailBefore) {
+        return Err(format!("{}: injected write failure at site '{site}'", path.display()));
+    }
+    // Pid-unique sibling: concurrent writers never share a temp file,
+    // and the rename below stays on one filesystem.
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(format!(".{}.tmp", std::process::id()));
+    let tmp = std::path::PathBuf::from(tmp);
+    let mut file = std::fs::File::create(&tmp).map_err(|e| fail(e, "cannot create temp file"))?;
+    let bytes = text.as_bytes();
+    if let Some(WriteFault::Torn { keep }) = injected {
+        // Simulated mid-write crash: a strict prefix lands in the temp
+        // file and the write fails — the target document is untouched.
+        let keep = keep.min(bytes.len().saturating_sub(1));
+        let _ = file.write_all(&bytes[..keep]);
+        let _ = file.sync_all();
+        return Err(format!("{}: injected torn write at site '{site}'", path.display()));
+    }
+    file.write_all(bytes).map_err(|e| fail(e, "cannot write temp file"))?;
+    // fsync BEFORE rename: once the new name is visible, its bytes are.
+    file.sync_all().map_err(|e| fail(e, "cannot fsync temp file"))?;
+    drop(file);
+    std::fs::rename(&tmp, path).map_err(|e| fail(e, "cannot rename temp file into place"))?;
+    sync_parent_dir(path);
+    Ok(())
+}
+
+/// Best-effort fsync of `path`'s parent directory, making the rename
+/// itself durable on filesystems that need it. Errors are ignored: some
+/// platforms/filesystems refuse to fsync directories, and the rename's
+/// atomicity does not depend on it.
+fn sync_parent_dir(path: &Path) {
+    #[cfg(unix)]
+    {
+        let dir = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    #[cfg(not(unix))]
+    let _ = path;
+}
+
+/// Open a streaming sink at `path` (truncating any previous document) —
+/// for append-as-you-go outputs like the event JSONL, which cannot be
+/// written atomically as one document. Consults the fault hook at
+/// `site` like [`atomic_write`] does.
+pub fn create_sink(path: impl AsRef<Path>, site: &str) -> Result<std::fs::File, String> {
+    let path = path.as_ref();
+    if fault::write_fault(site) == Some(WriteFault::FailBefore) {
+        return Err(format!("{}: injected write failure at site '{site}'", path.display()));
+    }
+    std::fs::File::create(path).map_err(|e| format!("{}: cannot create: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fault::{FaultHook, WriteFault};
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("cprune-io-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn atomic_write_replaces_the_document() {
+        let path = tmp_path("replace.json");
+        atomic_write(&path, "old\n", "cache").unwrap();
+        atomic_write(&path, "new\n", "cache").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "new\n");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Hook that tears the k-th write to a single site at byte `keep`.
+    struct TearAt {
+        site: &'static str,
+        keep: usize,
+    }
+
+    impl FaultHook for TearAt {
+        fn write_fault(&mut self, site: &str) -> Option<WriteFault> {
+            (site == self.site).then_some(WriteFault::Torn { keep: self.keep })
+        }
+    }
+
+    #[test]
+    fn torn_write_leaves_old_document_at_every_tear_length() {
+        let path = tmp_path("torn.json");
+        let old = "{\"doc\":\"old\"}\n";
+        let new = "{\"doc\":\"new-and-longer\"}\n";
+        for keep in 0..new.len() {
+            atomic_write(&path, old, "cache").unwrap();
+            let _guard = crate::util::fault::install(Box::new(TearAt { site: "cache", keep }));
+            let err = atomic_write(&path, new, "cache").unwrap_err();
+            assert!(err.contains("torn"), "unexpected error: {err}");
+            assert_eq!(
+                std::fs::read_to_string(&path).unwrap(),
+                old,
+                "target must keep the old document after a tear at byte {keep}"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn injected_failure_prevents_any_write() {
+        let path = tmp_path("fail.json");
+        let _ = std::fs::remove_file(&path);
+        let _guard = crate::util::fault::install(Box::new(
+            crate::util::fault::FaultPlan::parse("fail@report:1,fail@report:2").unwrap(),
+        ));
+        assert!(atomic_write(&path, "doc\n", "report").is_err());
+        assert!(!path.exists(), "nothing may land when the write fails before bytes");
+        assert!(create_sink(&path, "report").is_err());
+        assert!(!path.exists(), "a failed sink may not create the file either");
+    }
+}

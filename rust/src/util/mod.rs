@@ -1,7 +1,13 @@
 //! Small self-contained utilities (the environment is offline, so the usual
 //! crates — `rand`, `serde_json`, `criterion` — are replaced by these).
+//!
+//! The crash-safety plane lives here too (DESIGN.md §15): [`io`] holds
+//! the sanctioned temp+fsync+rename artifact write path, and [`fault`]
+//! the deterministic fault-injection seam that exercises it.
 
 pub mod bench;
+pub mod fault;
+pub mod io;
 pub mod json;
 pub mod rng;
 pub mod stats;

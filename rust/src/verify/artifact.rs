@@ -25,6 +25,7 @@ use crate::device::replay::{TRACE_FORMAT, TRACE_VERSION};
 use crate::device::DeviceSpec;
 use crate::perf::{BENCH_FORMAT, BENCH_VERSION};
 use crate::run::events::{EVENTS_FORMAT, EVENTS_VERSION};
+use crate::run::journal::{JOURNAL_FORMAT, JOURNAL_VERSION};
 use crate::serve::{Checkpoint, REGISTRY_FORMAT, REGISTRY_VERSION};
 use crate::tir::jsonio::{program_from_json, program_to_json, workload_from_json, workload_to_json};
 use crate::tuner::cache::{CACHE_FORMAT, CACHE_VERSION};
@@ -37,7 +38,7 @@ pub const BENCH_GOLDEN_FORMAT: &str = "cprune-bench-golden";
 /// Every format tag the checker understands. A file that fails to parse
 /// is only reported (CPV190) when it mentions one of these — arbitrary
 /// foreign JSON is none of our business.
-const KNOWN_FORMATS: [&str; 9] = [
+const KNOWN_FORMATS: [&str; 10] = [
     CACHE_FORMAT,
     TRACE_FORMAT,
     REMOTE_TRACE_FORMAT,
@@ -47,17 +48,21 @@ const KNOWN_FORMATS: [&str; 9] = [
     BENCH_FORMAT,
     BENCH_GOLDEN_FORMAT,
     EVENTS_FORMAT,
+    JOURNAL_FORMAT,
 ];
 
 /// Check a document. `None` = not a cprune artifact; `Some(vec![])` = a
 /// recognized, clean artifact.
 pub fn check_text(text: &str) -> Option<Vec<Diagnostic>> {
-    // Events logs are JSONL — the whole file is not one JSON value, so
-    // recognize them by their header line before whole-document parsing.
+    // Events logs and run journals are JSONL — the whole file is not one
+    // JSON value, so recognize them by their header line before
+    // whole-document parsing.
     if let Some(line) = text.lines().find(|l| !l.trim().is_empty()) {
         if let Ok(j) = json::parse(line) {
-            if j.get("format").and_then(Json::as_str) == Some(EVENTS_FORMAT) {
-                return Some(check_events(text));
+            match j.get("format").and_then(Json::as_str) {
+                Some(EVENTS_FORMAT) => return Some(check_events(text)),
+                Some(JOURNAL_FORMAT) => return Some(check_journal(text)),
+                _ => {}
             }
         }
     }
@@ -861,6 +866,270 @@ fn check_event_line(ev: &Json, ctx: &str, out: &mut Vec<Diagnostic>) {
     }
 }
 
+/// `cprune-run-journal` v1 JSONL (`RunJournal` output, DESIGN.md §15):
+/// a header line, a `config` record, then `baseline` / `iteration` /
+/// `resumed` records in order, optionally ending with `finished`. The
+/// checker is deliberately strict about torn tails — a journal
+/// interrupted mid-append flags CPV160 until `cprune run --resume`
+/// truncates it; committed golden journals are always complete.
+fn check_journal(text: &str) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    match lines.next() {
+        Some((_, header)) => match json::parse(header) {
+            Ok(h) => {
+                match h.get("format").and_then(Json::as_str) {
+                    Some(JOURNAL_FORMAT) => {}
+                    other => out.push(Diagnostic::new(
+                        Code::BadHeader,
+                        "line 1",
+                        format!("not a journal header (format {other:?})"),
+                    )),
+                }
+                match h.get("version").and_then(Json::as_usize) {
+                    Some(v) if v as u64 == JOURNAL_VERSION => {}
+                    other => out.push(Diagnostic::new(
+                        Code::BadHeader,
+                        "line 1",
+                        format!("unsupported journal version {other:?} (want {JOURNAL_VERSION})"),
+                    )),
+                }
+            }
+            Err(e) => {
+                out.push(Diagnostic::new(Code::CorruptDocument, "line 1", e));
+                return out;
+            }
+        },
+        None => {
+            out.push(Diagnostic::new(Code::BadHeader, "line 1", "empty journal"));
+            return out;
+        }
+    }
+    let mut seen_config = false;
+    let mut seen_baseline = false;
+    let mut finished = false;
+    let mut last_iteration = 0usize;
+    for (idx, line) in lines {
+        let ctx = format!("line {}", idx + 1);
+        let rec = match json::parse(line) {
+            Ok(r) => r,
+            Err(e) => {
+                out.push(Diagnostic::new(
+                    Code::JournalRecord,
+                    &ctx,
+                    format!("unparseable record (torn tail?): {e}"),
+                ));
+                continue;
+            }
+        };
+        let kind = check_journal_record(&rec, &ctx, &mut out);
+        if finished {
+            out.push(Diagnostic::new(Code::JournalSequence, &ctx, "record after 'finished'"));
+        }
+        if !seen_config && kind != Some("config") {
+            out.push(Diagnostic::new(
+                Code::JournalSequence,
+                &ctx,
+                "record before the config record",
+            ));
+        }
+        match kind {
+            Some("config") => {
+                if seen_config {
+                    out.push(Diagnostic::new(
+                        Code::JournalSequence,
+                        &ctx,
+                        "duplicate config record",
+                    ));
+                }
+                seen_config = true;
+            }
+            Some("baseline") => {
+                if seen_baseline {
+                    out.push(Diagnostic::new(
+                        Code::JournalSequence,
+                        &ctx,
+                        "duplicate baseline record",
+                    ));
+                }
+                seen_baseline = true;
+            }
+            Some("iteration") => {
+                if !seen_baseline {
+                    out.push(Diagnostic::new(
+                        Code::JournalSequence,
+                        &ctx,
+                        "iteration record before the baseline record",
+                    ));
+                }
+                if let Some(n) = rec.get("iteration").and_then(Json::as_usize) {
+                    if n <= last_iteration {
+                        out.push(Diagnostic::new(
+                            Code::JournalSequence,
+                            &ctx,
+                            format!("iteration {n} does not increase past {last_iteration}"),
+                        ));
+                    }
+                    last_iteration = n;
+                }
+            }
+            Some("finished") => finished = true,
+            _ => {} // resumed has no ordering constraint; unknown already flagged
+        }
+    }
+    if !seen_config {
+        out.push(Diagnostic::new(Code::JournalSequence, "document", "no config record"));
+    }
+    out
+}
+
+/// One journal record: kind tag, exact field set (CPV160), and — for
+/// `baseline`/`iteration` — the embedded tune-cache delta (CPV162).
+/// Returns the record kind when the tag parsed.
+fn check_journal_record<'j>(
+    rec: &'j Json,
+    ctx: &str,
+    out: &mut Vec<Diagnostic>,
+) -> Option<&'j str> {
+    #[derive(Clone, Copy)]
+    enum F {
+        Num,
+        NumOrNull,
+        Str,
+        Checkpoint,
+        CacheArr,
+    }
+    let kind = match rec.get("record").and_then(Json::as_str) {
+        Some(k) => k,
+        None => {
+            out.push(Diagnostic::new(Code::JournalRecord, ctx, "missing 'record' kind tag"));
+            return None;
+        }
+    };
+    let fields: &[(&str, F)] = match kind {
+        "config" => &[
+            ("seed", F::Num),
+            ("pruner", F::Str),
+            ("model", F::Str),
+            ("device", F::Str),
+            ("iters", F::Num),
+            ("target_acc", F::NumOrNull),
+        ],
+        "baseline" => {
+            &[("latency", F::Num), ("fps", F::Num), ("events", F::Num), ("cache", F::CacheArr)]
+        }
+        "iteration" => &[
+            ("iteration", F::Num),
+            ("latency", F::Num),
+            ("latency_target", F::Num),
+            ("short_accuracy", F::Num),
+            ("accuracy_gate", F::Num),
+            ("filters_removed", F::Num),
+            ("candidates_tried", F::Num),
+            ("checkpoint", F::Checkpoint),
+            ("programs_measured", F::Num),
+            ("events", F::Num),
+            ("cache", F::CacheArr),
+        ],
+        "resumed" => &[("from_iteration", F::Num)],
+        "finished" => &[("events", F::Num)],
+        other => {
+            out.push(Diagnostic::new(
+                Code::JournalRecord,
+                ctx,
+                format!("unknown record kind '{other}'"),
+            ));
+            return Some(kind);
+        }
+    };
+    for (name, shape) in fields {
+        let v = match rec.get(name) {
+            Some(v) => v,
+            None => {
+                out.push(Diagnostic::new(
+                    Code::JournalRecord,
+                    ctx,
+                    format!("{kind} missing field '{name}'"),
+                ));
+                continue;
+            }
+        };
+        let ok = match shape {
+            F::Num => v.as_f64().is_some(),
+            F::NumOrNull => v.as_f64().is_some() || matches!(v, Json::Null),
+            F::Str => v.as_str().is_some(),
+            F::Checkpoint => match Checkpoint::from_json(v) {
+                Ok(_) => true,
+                Err(e) => {
+                    out.push(Diagnostic::new(
+                        Code::JournalRecord,
+                        ctx,
+                        format!("checkpoint: {e}"),
+                    ));
+                    continue;
+                }
+            },
+            F::CacheArr => match v.as_arr() {
+                Some(entries) => {
+                    check_journal_cache_delta(entries, &format!("{ctx}.cache"), out);
+                    true
+                }
+                None => false,
+            },
+        };
+        if !ok {
+            out.push(Diagnostic::new(
+                Code::JournalRecord,
+                ctx,
+                format!("{kind} field '{name}' has the wrong shape"),
+            ));
+        }
+    }
+    if let Json::Obj(m) = rec {
+        for key in m.keys() {
+            if key != "record" && !fields.iter().any(|(name, _)| *name == key.as_str()) {
+                out.push(Diagnostic::new(
+                    Code::JournalRecord,
+                    ctx,
+                    format!("{kind} has unexpected field '{key}'"),
+                ));
+            }
+        }
+    }
+    Some(kind)
+}
+
+/// A journaled tune-cache delta: each entry carries the same invariants
+/// as a `cprune-tune-cache` entry (parse, canonical round-trip, legal
+/// program, positive latency, sorted by workload key), all reported as
+/// CPV162 so a finding names the journal layer it sits in.
+fn check_journal_cache_delta(entries: &[Json], ctx: &str, out: &mut Vec<Diagnostic>) {
+    let mut inner = Vec::new();
+    let mut keys = Vec::with_capacity(entries.len());
+    for (i, e) in entries.iter().enumerate() {
+        let ectx = format!("{ctx}[{i}]");
+        let key = check_wp_entry(e, &ectx, &mut inner).map(|(wk, _)| wk);
+        match e.get("latency").and_then(Json::as_f64) {
+            Some(lat) if finite_positive(lat) => {}
+            Some(lat) => inner.push(Diagnostic::new(
+                Code::NumericRange,
+                &ectx,
+                format!("latency {lat} is not finite and positive"),
+            )),
+            None => inner.push(Diagnostic::new(Code::MalformedEntry, &ectx, "missing latency")),
+        }
+        if e.get("measured").and_then(Json::as_usize).is_none() {
+            inner.push(Diagnostic::new(Code::MalformedEntry, &ectx, "missing measured count"));
+        }
+        keys.push(key);
+    }
+    check_sorted(&keys, ctx, &mut inner);
+    for mut d in inner {
+        d.code = Code::JournalCacheEntry;
+        out.push(d);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -984,6 +1253,101 @@ mod tests {
         ]);
         let diags = check_text(&doc.to_string()).unwrap();
         assert_eq!(ids(&diags), ["CPV122"]);
+    }
+
+    fn journal_header_and_config() -> String {
+        "{\"format\":\"cprune-run-journal\",\"version\":1}\n\
+         {\"record\":\"config\",\"device\":\"kryo385\",\"iters\":3,\"model\":\"resnet8-cifar\",\
+          \"pruner\":\"cprune\",\"seed\":7,\"target_acc\":null}\n"
+            .to_string()
+    }
+
+    fn journal_baseline(cache: &str) -> String {
+        format!(
+            "{{\"record\":\"baseline\",\"cache\":[{cache}],\"events\":1,\
+              \"fps\":4,\"latency\":0.25}}\n"
+        )
+    }
+
+    #[test]
+    fn clean_journal_is_recognized_and_clean() {
+        let text = format!(
+            "{}{}{}{}",
+            journal_header_and_config(),
+            journal_baseline(""),
+            "{\"record\":\"iteration\",\"accuracy_gate\":0.8,\"cache\":[],\
+              \"candidates_tried\":4,\"checkpoint\":{\"accuracy\":0.9,\"channels\":{},\
+              \"iteration\":1,\"latency\":0.2},\"events\":5,\"filters_removed\":8,\
+              \"iteration\":1,\"latency\":0.2,\"latency_target\":0.25,\
+              \"programs_measured\":12,\"short_accuracy\":0.9}\n",
+            "{\"record\":\"finished\",\"events\":7}\n"
+        );
+        assert_eq!(check_text(&text), Some(vec![]));
+    }
+
+    #[test]
+    fn torn_journal_tail_is_cpv160() {
+        let text = format!("{}{{\"record\":\"baseli", journal_header_and_config());
+        assert_eq!(ids(&check_text(&text).unwrap()), ["CPV160"]);
+    }
+
+    #[test]
+    fn journal_sequence_violations_are_cpv161() {
+        // iteration before baseline
+        let text = format!(
+            "{}{}",
+            journal_header_and_config(),
+            "{\"record\":\"iteration\",\"accuracy_gate\":0.8,\"cache\":[],\
+              \"candidates_tried\":4,\"checkpoint\":{\"accuracy\":0.9,\"channels\":{},\
+              \"iteration\":1,\"latency\":0.2},\"events\":5,\"filters_removed\":8,\
+              \"iteration\":1,\"latency\":0.2,\"latency_target\":0.25,\
+              \"programs_measured\":12,\"short_accuracy\":0.9}\n"
+        );
+        assert_eq!(ids(&check_text(&text).unwrap()), ["CPV161"]);
+        // record after finished
+        let text = format!(
+            "{}{}{}{}",
+            journal_header_and_config(),
+            journal_baseline(""),
+            "{\"record\":\"finished\",\"events\":7}\n",
+            "{\"record\":\"finished\",\"events\":7}\n"
+        );
+        assert_eq!(ids(&check_text(&text).unwrap()), ["CPV161"]);
+        // baseline before config
+        let text = format!(
+            "{}{}{}",
+            "{\"format\":\"cprune-run-journal\",\"version\":1}\n",
+            journal_baseline(""),
+            "{\"record\":\"config\",\"device\":\"kryo385\",\"iters\":3,\
+              \"model\":\"resnet8-cifar\",\"pruner\":\"cprune\",\"seed\":7,\
+              \"target_acc\":null}\n"
+        );
+        assert_eq!(ids(&check_text(&text).unwrap()), ["CPV161"]);
+    }
+
+    #[test]
+    fn journal_record_and_cache_violations_are_cpv160_and_cpv162() {
+        // missing field + unexpected field
+        let text = format!(
+            "{}{}",
+            journal_header_and_config(),
+            "{\"record\":\"baseline\",\"cache\":[],\"events\":1,\"fps\":4,\
+              \"latency\":0.25,\"surprise\":1}\n"
+        );
+        assert_eq!(ids(&check_text(&text).unwrap()), ["CPV160"]);
+        let text = format!(
+            "{}{}",
+            journal_header_and_config(),
+            "{\"record\":\"baseline\",\"cache\":[],\"events\":1,\"fps\":4}\n"
+        );
+        assert_eq!(ids(&check_text(&text).unwrap()), ["CPV160"]);
+        // malformed cache delta entry
+        let text = format!(
+            "{}{}",
+            journal_header_and_config(),
+            journal_baseline("{\"latency\":0.001,\"measured\":1}")
+        );
+        assert_eq!(ids(&check_text(&text).unwrap()), ["CPV162"]);
     }
 
     #[test]

@@ -41,7 +41,8 @@ use std::path::{Path, PathBuf};
 /// Stable diagnostic identifiers. IDs are never reused; retired checks
 /// leave holes. Grouped by layer: `CPV10x` graph, `CPV11x` program,
 /// `CPV12x` artifact schema, `CPV13x` frontier, `CPV14x` event stream,
-/// `CPV15x` remote traces, `CPV19x` document-level corruption.
+/// `CPV15x` remote traces, `CPV16x` run journals, `CPV19x`
+/// document-level corruption.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Code {
     /// CPV100 — graph structure: id/index mismatch, forward-referencing
@@ -107,6 +108,19 @@ pub enum Code {
     /// non-finite, non-positive, or ≠ 1 under `noise_sigma` 0 (lognormal
     /// jitter with sigma 0 is exactly 1).
     RemoteJitterRange,
+    /// CPV160 — a `cprune-run-journal` record is malformed: unknown
+    /// record kind, missing/mistyped field, unexpected field, or an
+    /// unparseable (torn) line — a crashed journal flags this until
+    /// `cprune run --resume` truncates the torn tail.
+    JournalRecord,
+    /// CPV161 — journal records out of sequence: config not first,
+    /// an iteration before the baseline, non-increasing iteration
+    /// numbers, or a record after `finished`.
+    JournalSequence,
+    /// CPV162 — a journaled tune-cache delta entry is malformed,
+    /// non-canonical, or unsorted (the [`crate::tuner::TuneCache`]
+    /// entry invariants, applied per record).
+    JournalCacheEntry,
     /// CPV190 — a document that claims a `cprune-*` format but cannot be
     /// parsed at all.
     CorruptDocument,
@@ -114,7 +128,7 @@ pub enum Code {
 
 impl Code {
     /// Every code, in ID order.
-    pub const ALL: [Code; 21] = [
+    pub const ALL: [Code; 24] = [
         Code::GraphStructure,
         Code::ChannelMismatch,
         Code::ResidualMismatch,
@@ -135,6 +149,9 @@ impl Code {
         Code::RemoteEntry,
         Code::RemoteJitterArity,
         Code::RemoteJitterRange,
+        Code::JournalRecord,
+        Code::JournalSequence,
+        Code::JournalCacheEntry,
         Code::CorruptDocument,
     ];
 
@@ -161,6 +178,9 @@ impl Code {
             Code::RemoteEntry => "CPV150",
             Code::RemoteJitterArity => "CPV151",
             Code::RemoteJitterRange => "CPV152",
+            Code::JournalRecord => "CPV160",
+            Code::JournalSequence => "CPV161",
+            Code::JournalCacheEntry => "CPV162",
             Code::CorruptDocument => "CPV190",
         }
     }
@@ -188,6 +208,9 @@ impl Code {
             Code::RemoteEntry => "remote-trace entry missing samples/jitter/mean",
             Code::RemoteJitterArity => "remote-trace jitter draw count differs from repeats",
             Code::RemoteJitterRange => "remote-trace jitter multiplier outside its domain",
+            Code::JournalRecord => "run-journal record malformed or torn",
+            Code::JournalSequence => "run-journal records out of sequence",
+            Code::JournalCacheEntry => "run-journal cache delta malformed or unsorted",
             Code::CorruptDocument => "cprune-format document does not parse",
         }
     }
@@ -302,7 +325,7 @@ mod tests {
             [
                 "CPV100", "CPV101", "CPV102", "CPV103", "CPV104", "CPV105", "CPV110", "CPV111",
                 "CPV112", "CPV120", "CPV121", "CPV122", "CPV123", "CPV124", "CPV130", "CPV131",
-                "CPV140", "CPV150", "CPV151", "CPV152", "CPV190",
+                "CPV140", "CPV150", "CPV151", "CPV152", "CPV160", "CPV161", "CPV162", "CPV190",
             ]
         );
     }

@@ -1,0 +1,212 @@
+//! Integration: the crash-safety plane (DESIGN.md §15).
+//!
+//! The acceptance pins:
+//!
+//! 1. **Kill-point property** — truncating a run journal at *every*
+//!    record boundary (with and without a torn tail) and resuming
+//!    reproduces the uninterrupted run's RunEvent JSONL byte-for-byte,
+//!    and the resumed journal finishes cleanly under `cprune check`;
+//! 2. **Torn-write fuzz** — an injected tear at write site `cache`
+//!    leaves the old document in place, loadable and check-clean, for
+//!    every seeded tear length;
+//! 3. **Real abort** — a subprocess `cprune run --journal --faults
+//!    abort@iter:1` dies with [`ABORT_EXIT_CODE`] at the barrier, and
+//!    `cprune run --resume` completes the run with an event stream
+//!    byte-identical to an uninterrupted reference (the same discipline
+//!    the `crash-resume` CI job enforces).
+
+use cprune::graph::model_zoo::ModelKind;
+use cprune::run::{CPrune, JournalConfig, JsonlSink, RunBuilder};
+use cprune::tuner::TuneCache;
+use cprune::util::fault::{self, FaultPlan, ABORT_EXIT_CODE};
+use cprune::verify::artifact::check_text;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cprune-journal-it-{}-{name}", std::process::id()))
+}
+
+fn cfg(iters: usize) -> JournalConfig {
+    JournalConfig {
+        seed: 7,
+        pruner: "cprune".to_string(),
+        model: "resnet8-cifar".to_string(),
+        device: "kryo385".to_string(),
+        iters,
+        target_acc: None,
+    }
+}
+
+/// Execute one seeded CPrune run writing its RunEvent JSONL to
+/// `events`; `journal`/`resume` wire the crash-safety plane. Returns
+/// the event stream's bytes.
+fn run_once(events: &Path, journal: Option<&Path>, resume: Option<&Path>) -> Vec<u8> {
+    let mut b = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .device("kryo385")
+        .seed(7)
+        .max_iterations(3)
+        .observer(Box::new(JsonlSink::create(events).unwrap()));
+    if let Some(p) = journal {
+        b = b.journal(p, cfg(3));
+    }
+    if let Some(p) = resume {
+        b = b.resume(p);
+    }
+    let mut run = b.build().unwrap();
+    run.execute(&CPrune::default()).unwrap();
+    drop(run);
+    std::fs::read(events).unwrap()
+}
+
+#[test]
+fn golden_journal_pins_the_record_schema() {
+    // `tests/golden/run_journal.jsonl` is the committed, check-artifacts
+    // swept example of every `cprune-run-journal` record kind. Editing
+    // the schema means bumping JOURNAL_VERSION and regenerating it.
+    let golden = include_str!("golden/run_journal.jsonl");
+    assert_eq!(check_text(golden), Some(vec![]));
+    for kind in ["config", "baseline", "iteration", "resumed", "finished"] {
+        assert!(
+            golden.contains(&format!("\"record\":\"{kind}\"")),
+            "golden journal must exercise record kind '{kind}'"
+        );
+    }
+}
+
+#[test]
+fn resume_from_every_barrier_is_byte_identical() {
+    let ref_events = tmp("ref-events.jsonl");
+    let ref_journal = tmp("ref.journal");
+    let reference = run_once(&ref_events, Some(&ref_journal), None);
+    let journal_text = std::fs::read_to_string(&ref_journal).unwrap();
+    let diags = check_text(&journal_text).expect("journals are a recognized artifact");
+    assert!(diags.is_empty(), "reference journal failed verification: {diags:?}");
+    // header, config, baseline, iteration(s), finished
+    let lines: Vec<&str> = journal_text.lines().collect();
+    assert!(lines.len() >= 4, "journal too short to exercise barriers:\n{journal_text}");
+    assert!(lines.last().unwrap().contains("\"record\":\"finished\""), "{journal_text}");
+
+    // Kill the run after every record boundary (keep = header+config up
+    // to everything-but-finished), optionally with the torn final line a
+    // mid-append crash leaves, and resume from the survivor.
+    for keep in 2..lines.len() {
+        for torn in [false, true] {
+            let crash = tmp(&format!("crash-{keep}-{torn}.journal"));
+            let mut text: String = lines[..keep].iter().map(|l| format!("{l}\n")).collect();
+            if torn {
+                text.push_str("{\"record\":\"iteration\",\"iter");
+            }
+            std::fs::write(&crash, text).unwrap();
+            let events = tmp(&format!("resume-{keep}-{torn}.jsonl"));
+            let resumed = run_once(&events, None, Some(&crash));
+            assert_eq!(
+                resumed, reference,
+                "resume after {keep} journal records (torn tail: {torn}) must \
+                 replay the event stream byte-identically"
+            );
+            let after = std::fs::read_to_string(&crash).unwrap();
+            assert!(after.contains("\"record\":\"resumed\""), "{after}");
+            assert!(after.contains("\"record\":\"finished\""), "{after}");
+            let diags = check_text(&after).expect("resumed journal is a recognized artifact");
+            assert!(diags.is_empty(), "resumed journal failed verification: {diags:?}\n{after}");
+            let _ = std::fs::remove_file(&crash);
+            let _ = std::fs::remove_file(&events);
+        }
+    }
+    let _ = std::fs::remove_file(&ref_events);
+    let _ = std::fs::remove_file(&ref_journal);
+}
+
+#[test]
+fn torn_cache_saves_keep_the_old_document_loadable() {
+    let path = tmp("fuzz-cache.json");
+    let mut run = RunBuilder::new(ModelKind::ResNet8Cifar)
+        .device("kryo385")
+        .seed(7)
+        .max_iterations(2)
+        .build()
+        .unwrap();
+    run.execute(&CPrune::default()).unwrap();
+    let device = run.target().spec().name.to_string();
+    run.cache().save(&path, &device).unwrap();
+    let old = std::fs::read(&path).unwrap();
+
+    for seed in 0..8u64 {
+        let plan = FaultPlan::parse(&format!("seed:{seed},torn@cache")).unwrap();
+        let guard = fault::install(Box::new(plan));
+        let err = run.cache().save(&path, &device).unwrap_err();
+        drop(guard);
+        assert!(err.contains("torn"), "unexpected save error: {err}");
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            old,
+            "a torn save (seed {seed}) must leave the old document in place"
+        );
+        // the survivor still loads and still passes `cprune check`
+        TuneCache::load(&path, &device).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let diags = check_text(&text).expect("caches are a recognized artifact");
+        assert!(diags.is_empty(), "survivor failed verification: {diags:?}");
+    }
+
+    // fail-before writes leave the document untouched too
+    let guard = fault::install(Box::new(FaultPlan::parse("fail@cache").unwrap()));
+    assert!(run.cache().save(&path, &device).is_err());
+    drop(guard);
+    assert_eq!(std::fs::read(&path).unwrap(), old);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn aborted_process_resumes_to_an_identical_event_stream() {
+    // Real process death at a journal barrier — the transport-level twin
+    // of the in-process kill-point test, and exactly what the
+    // `crash-resume` CI job runs.
+    let exe = env!("CARGO_BIN_EXE_cprune");
+    let ref_events = tmp("abort-ref.jsonl");
+    let journal = tmp("abort.journal");
+    let resumed_events = tmp("abort-resumed.jsonl");
+    let run_args = [
+        "run", "--pruner", "cprune", "--model", "resnet8-cifar", "--device", "kryo385",
+        "--iters", "3", "--seed", "7", "--quiet",
+    ];
+
+    let status = Command::new(exe)
+        .args(run_args)
+        .args(["--events", ref_events.to_str().unwrap()])
+        .status()
+        .unwrap();
+    assert!(status.success(), "reference run failed: {status:?}");
+
+    let status = Command::new(exe)
+        .args(run_args)
+        .args(["--journal", journal.to_str().unwrap(), "--faults", "abort@iter:1"])
+        .status()
+        .unwrap();
+    assert_eq!(
+        status.code(),
+        Some(ABORT_EXIT_CODE),
+        "the injected abort must kill the process at the iter:1 barrier"
+    );
+
+    let status = Command::new(exe)
+        .args(["run", "--resume", journal.to_str().unwrap(), "--quiet"])
+        .args(["--events", resumed_events.to_str().unwrap()])
+        .status()
+        .unwrap();
+    assert!(status.success(), "resume failed: {status:?}");
+    assert_eq!(
+        std::fs::read(&resumed_events).unwrap(),
+        std::fs::read(&ref_events).unwrap(),
+        "resumed event stream must be byte-identical to the uninterrupted run's"
+    );
+
+    let status =
+        Command::new(exe).args(["check", journal.to_str().unwrap()]).status().unwrap();
+    assert!(status.success(), "finished journal must pass cprune check");
+
+    for p in [&ref_events, &journal, &resumed_events] {
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -17,7 +17,7 @@
 //!    pool bit-identically to the in-process provider.
 
 use cprune::device::remote::{
-    load_trace_target, Connection, LoopbackFault, RemoteOptions, RemoteTarget,
+    load_trace_target, Connection, RemoteOptions, RemoteTarget, WorkerFault,
 };
 use cprune::device::{AnalyticTarget, DeviceSpec, Target};
 use cprune::graph::model_zoo::{Model, ModelKind};
@@ -182,7 +182,7 @@ fn dead_worker_mid_run_retries_on_survivors_with_identical_result() {
     let conns = vec![
         Connection::loopback_with(
             Box::new(AnalyticTarget::new(spec.clone())),
-            LoopbackFault::DieAfter(1),
+            WorkerFault::DieAfter(1),
             0,
         ),
         Connection::loopback(Box::new(AnalyticTarget::new(spec.clone())), 1),
@@ -219,7 +219,7 @@ fn hung_worker_times_out_and_retries_on_survivors() {
     let conns = vec![
         Connection::loopback_with(
             Box::new(AnalyticTarget::new(spec.clone())),
-            LoopbackFault::HangAfter(1),
+            WorkerFault::HangAfter(1),
             0,
         ),
         Connection::loopback(Box::new(AnalyticTarget::new(spec.clone())), 1),
@@ -248,7 +248,7 @@ fn exhausted_pool_panics_loudly() {
     // then dies on the first real work.
     let conns = vec![Connection::loopback_with(
         Box::new(AnalyticTarget::new(spec)),
-        LoopbackFault::DieAfter(0),
+        WorkerFault::DieAfter(0),
         0,
     )];
     let remote = RemoteTarget::new(conns, fast_opts()).unwrap();
