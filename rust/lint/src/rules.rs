@@ -124,8 +124,15 @@ pub struct Diagnostic {
 /// Path prefixes of the deterministic modules (workspace-root-relative,
 /// `/`-separated). `serve/` is wider than the issue's `serve/sim` on
 /// purpose: the whole layer reports deterministic statistics.
-pub const DETERMINISTIC_PREFIXES: [&str; 4] =
-    ["rust/src/tuner/", "rust/src/device/", "rust/src/serve/", "rust/src/compiler/"];
+pub const DETERMINISTIC_PREFIXES: [&str; 5] = [
+    "rust/src/tuner/",
+    "rust/src/device/",
+    "rust/src/serve/",
+    "rust/src/compiler/",
+    // Masked-latency pricing only — `sparsity/pattern.rs`/`block.rs`
+    // legitimately score f32 weights, and `mod.rs` casts channel counts.
+    "rust/src/sparsity/cost.rs",
+];
 
 /// True for library (non-test-crate, non-bin) source paths.
 pub fn is_library_path(rel: &str) -> bool {

@@ -78,6 +78,18 @@ fn cpl004_f32_in_measurement_path() {
 }
 
 #[test]
+fn sparsity_cost_joins_the_deterministic_scope() {
+    // The masked-latency pricer is measurement-plane code; the f32
+    // weight-scoring modules next to it (pattern/block selection over
+    // synthetic f32 weights) deliberately are not.
+    let cost = "rust/src/sparsity/cost.rs";
+    assert_eq!(ids(cost, include_str!("fixtures/cpl004_fail.rs")), ["CPL004"]);
+    assert_eq!(ids(cost, include_str!("fixtures/cpl003_fail.rs")), ["CPL003"]);
+    let pattern = "rust/src/sparsity/pattern.rs";
+    assert_eq!(ids(pattern, include_str!("fixtures/cpl004_fail.rs")), Vec::<&str>::new());
+}
+
+#[test]
 fn cpl005_library_unwrap() {
     assert_eq!(ids(LIB, include_str!("fixtures/cpl005_fail.rs")), ["CPL005"]);
     assert_eq!(ids(LIB, include_str!("fixtures/cpl005_allowed.rs")), Vec::<&str>::new());

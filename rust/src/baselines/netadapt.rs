@@ -92,6 +92,7 @@ pub(crate) fn netadapt_run(ctx: &mut RunContext, cfg: &NetAdaptConfig) -> PruneO
         latency: base_latency,
         accuracy: base_accuracy,
         channels: state.cout.clone(),
+        schemes: std::collections::BTreeMap::new(),
     };
     ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: baseline_checkpoint.clone() });
     checkpoints.push(baseline_checkpoint);
@@ -129,6 +130,7 @@ pub(crate) fn netadapt_run(ctx: &mut RunContext, cfg: &NetAdaptConfig) -> PruneO
                     latency: lat,
                     latency_target: budget,
                     candidates_tried: candidates,
+                    scheme: None,
                 });
                 if lat <= budget {
                     found = Some((cand_state, cand_weights, lat, k));
@@ -174,12 +176,14 @@ pub(crate) fn netadapt_run(ctx: &mut RunContext, cfg: &NetAdaptConfig) -> PruneO
                     short_accuracy: acc,
                     accuracy_gate: cfg.min_short_accuracy,
                     filters_removed: k,
+                    scheme: None,
                 });
                 let checkpoint = Checkpoint {
                     iteration: iter_no,
                     latency: lat,
                     accuracy: acc,
                     channels: state.cout.clone(),
+                    schemes: std::collections::BTreeMap::new(),
                 };
                 ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: checkpoint.clone() });
                 checkpoints.push(checkpoint);

@@ -310,6 +310,7 @@ const USAGE: &str = "cprune — compiler-informed model pruning (paper reproduct
 
 USAGE:
   cprune run       [--pruner P] [--model M] [--device D | --target T] [--target-acc A] [--iters N]
+                   [--scheme auto|channel|pattern|block] [--masks FILE.json]
                    [--seed S] [--cache FILE] [--events FILE.jsonl] [--registry FILE]
                    [--record-trace FILE] [--replay-trace FILE] [--device-file FILE]
                    [--calibration FILE] [--workers N] [--remote-trace FILE]
@@ -329,13 +330,13 @@ USAGE:
   cprune compare   [--model M] [--device D] [--seed S]
   cprune bench     [--tier quick|full] [--seed S] [--out-dir DIR]
   cprune check     [PATH ...] [--codes]           # semantic artifact sweep (DESIGN.md §13)
-  cprune report    <fig1|fig6|fig7|fig8|fig9|fig10|fig11|table1|table2> [--scale smoke|full]
+  cprune report    <fig1|fig6|fig7|fig8|fig9|fig10|fig11|table1|table2|schemes> [--scale smoke|full]
   cprune devices   [--device-file FILE]           # list the target registry
   cprune dot       [--model M]                    # graphviz of graph+subgraphs+tasks
   cprune calibrate [--device D] [--save FILE]     # fit sim scale to paper anchors
   cprune e2e-info
 
-  pruners: cprune magnitude fpgm netadapt amc pqf
+  pruners: cprune magnitude fpgm netadapt amc pqf pattern block scheme-select
   models:  vgg16-cifar resnet18-imagenet resnet18-cifar resnet34 mobilenetv1
            mobilenetv2 mnasnet1.0 resnet8-cifar
   devices: kryo280 kryo385 kryo585 mali-g72 rtx3080, plus any spec loaded
@@ -379,6 +380,20 @@ RUN:
   serving layer, and the default progress printer narrates baseline
   tuning, accepted/rejected iterations and task bans (--quiet silences
   it, --verbose adds per-candidate measurements).
+
+SPARSITY (DESIGN.md §16):
+  --pruner scheme-select runs the CPrune loop with per-layer sparsity
+  scheme selection: each selected task first offers pattern (PatDNN
+  4-of-9) and block (2:4) mask candidates, priced analytically on the
+  target device over the tuned dense schedule, before falling back to
+  channel pruning; --scheme narrows the choices (auto = pattern+block,
+  channel = plain channel moves, or one scheme name). The one-shot
+  'pattern'/'block' pruners mask every applicable conv as single-scheme
+  reference points; `report schemes` prints the schemes × devices table.
+  --masks FILE writes the fastest checkpoint's scheme assignment as a
+  versioned 'cprune-sparsity-masks' JSON document (`cprune check`
+  verifies it, CPV17x). --scheme does not combine with
+  --journal/--resume (the journal config does not record it).
 
 WARM START:
   --cache FILE persists tuned programs (versioned JSON) across runs: the
@@ -586,10 +601,33 @@ pub fn run(argv: Vec<String>) -> i32 {
                 .get("pruner")
                 .map(String::as_str)
                 .unwrap_or("cprune");
-            let Some(pruner) = pruner_by_name(pruner_name) else {
+            let Some(mut pruner) = pruner_by_name(pruner_name) else {
                 eprintln!("unknown pruner '{pruner_name}'. options: {PRUNER_NAMES}");
                 return 2;
             };
+            // --scheme narrows the scheme-select search space (DESIGN.md
+            // §16). The journal config does not record it, so a resumed
+            // or journaled run must not depend on it.
+            if let Some(flag) = args.flags.get("scheme") {
+                if pruner_name != "scheme-select" {
+                    eprintln!("--scheme is only supported by --pruner scheme-select");
+                    return 2;
+                }
+                if args.flags.contains_key("journal") || args.flags.contains_key("resume") {
+                    eprintln!(
+                        "--scheme cannot be combined with --journal/--resume \
+                         (the journal config does not record the scheme restriction)"
+                    );
+                    return 2;
+                }
+                match crate::sparsity::SchemeSelect::from_scheme_flag(flag) {
+                    Ok(sel) => pruner = Box::new(sel),
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                }
+            }
             let mut builder =
                 match run_builder_from_flags(&args, model_kind, &registry, &device, seed) {
                     Ok(b) => b,
@@ -683,6 +721,27 @@ pub fn run(argv: Vec<String>) -> i32 {
             );
             if let Some(path) = args.flags.get("events") {
                 println!("events: wrote {path}");
+            }
+            // The fastest checkpoint's scheme assignment as a versioned
+            // mask artifact (DESIGN.md §16). Pattern parameters derive
+            // from the run's own weight bank (same model seed).
+            if let Some(path) = args.flags.get("masks") {
+                let schemes = out
+                    .pareto
+                    .fastest()
+                    .map(|c| c.schemes.clone())
+                    .unwrap_or_default();
+                let model = Model::build(model_kind, seed);
+                let set = crate::sparsity::MaskSet::from_schemes(
+                    &schemes,
+                    &model.graph,
+                    &model.weights,
+                );
+                if let Err(e) = set.save(path) {
+                    eprintln!("masks {path}: {e}");
+                    return 1;
+                }
+                println!("masks: wrote {}-entry scheme mask set to {path}", set.masks.len());
             }
             if let Some(path) = args.flags.get("registry") {
                 println!("registry: published {}-point frontier to {path}", out.pareto.len());
@@ -1260,6 +1319,17 @@ fn report(which: &str, scale: Scale, seed: u64) -> i32 {
                     println!(
                         "table2: {} {} fps={:.2} rate={:.2} top1={:.4}",
                         block.device, r.method, r.fps, r.fps_increase_rate, r.top1
+                    );
+                }
+            }
+        }
+        "schemes" => {
+            for (kind, spec) in exp::schemes::paper_cells() {
+                let block = exp::schemes::run_cell(kind, spec, scale, seed);
+                for r in &block.rows {
+                    println!(
+                        "schemes: {} {} {} fps={:.2} rate={:.2} top1={:.4}",
+                        block.model, block.device, r.method, r.fps, r.fps_increase_rate, r.top1
                     );
                 }
             }

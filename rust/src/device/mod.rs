@@ -26,6 +26,12 @@
 //! 128-bit NEON is wrong for a 18-core GPU), and task latencies that rank
 //! consistently. The simulator produces all four (see `sim.rs` tests).
 //!
+//! `sparse.rs` extends the analytic model to pattern/block-sparse
+//! layers (DESIGN.md §16): [`sparse::scheme_factor`] prices a
+//! [`crate::tir::sparse::SparseLowering`] per [`DeviceKind`], so CPUs
+//! and GPUs rank sparsity schemes differently and the scheme-select
+//! pruner can pick per layer by measured latency.
+//!
 //! Determinism here is machine-enforced: `cprune-lint` (DESIGN.md §12)
 //! denies wall-clock/env reads, f32 latency math and hash-ordered
 //! iteration throughout `device/`. One documented carve-out: `remote/`'s
@@ -39,6 +45,7 @@ pub mod registry;
 pub mod remote;
 pub mod replay;
 pub mod sim;
+pub mod sparse;
 pub mod spec;
 pub mod target;
 

@@ -1,0 +1,85 @@
+//! Per-device pricing of sparse lowerings (DESIGN.md §16).
+//!
+//! The compiler-informed part of scheme selection: the same mask costs
+//! a different fraction of the dense latency on different devices. A
+//! lowering that [`crate::tir::sparse::SparseLowering::needs_reorder`]
+//! (pattern compaction) is cheap on CPUs — PatDNN's observation that
+//! the reorder amortizes across the dense compacted loop — but dear on
+//! GPUs, where the gather serializes against wide SIMT loads. N:M block
+//! skipping is metadata-light everywhere, slightly cheaper on CPUs.
+//! [`scheme_factor`] folds the lowering's compute scale and the
+//! device-kind overhead into one multiplier on a subgraph's measured
+//! dense latency; [`crate::sparsity::cost::masked_model_latency`]
+//! applies it per task.
+
+use crate::device::spec::DeviceKind;
+use crate::sparsity::SchemeChoice;
+use crate::tir::sparse::SparseLowering;
+
+/// Additive latency overhead (fraction of the dense subgraph latency)
+/// the device pays to run the lowering: reorder/gather cost for pattern
+/// compaction, group-metadata decode for block skipping.
+pub fn reorder_overhead(kind: DeviceKind, lowering: &SparseLowering) -> f64 {
+    match lowering {
+        SparseLowering::DenseShrink => 0.0,
+        SparseLowering::PatternCompact { .. } => match kind {
+            DeviceKind::Cpu => 0.05,
+            DeviceKind::Gpu => 0.18,
+        },
+        SparseLowering::BlockSkip { .. } => match kind {
+            DeviceKind::Cpu => 0.02,
+            DeviceKind::Gpu => 0.04,
+        },
+    }
+}
+
+/// Multiplier on a subgraph's measured dense latency when its anchor
+/// conv runs under `choice` on a device of `kind`. Exactly 1.0 for the
+/// channel scheme (dense shrink is already priced by the measured
+/// latency of the shrunk graph); never above 1.0 — a scheme whose
+/// overhead would erase its compute saving is capped at dense cost,
+/// and the selection loop then rejects it on the latency gate.
+pub fn scheme_factor(kind: DeviceKind, choice: &SchemeChoice) -> f64 {
+    let lowering = SparseLowering::for_choice(choice);
+    match lowering {
+        SparseLowering::DenseShrink => 1.0,
+        _ => (lowering.compute_scale() + reorder_overhead(kind, &lowering)).min(1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::Scheme;
+
+    #[test]
+    fn channel_is_exactly_dense() {
+        for kind in [DeviceKind::Cpu, DeviceKind::Gpu] {
+            assert_eq!(scheme_factor(kind, &SchemeChoice::channel()), 1.0);
+        }
+    }
+
+    #[test]
+    fn devices_rank_schemes_differently() {
+        let pat_cpu = scheme_factor(DeviceKind::Cpu, &SchemeChoice::pattern());
+        let blk_cpu = scheme_factor(DeviceKind::Cpu, &SchemeChoice::block());
+        let pat_gpu = scheme_factor(DeviceKind::Gpu, &SchemeChoice::pattern());
+        let blk_gpu = scheme_factor(DeviceKind::Gpu, &SchemeChoice::block());
+        // CPUs amortize the pattern reorder; GPUs prefer block skipping.
+        assert!(pat_cpu < blk_cpu, "cpu: pattern {pat_cpu} vs block {blk_cpu}");
+        assert!(blk_gpu < pat_gpu, "gpu: block {blk_gpu} vs pattern {pat_gpu}");
+        // every sparse factor is a genuine speedup, strictly below dense
+        for f in [pat_cpu, blk_cpu, pat_gpu, blk_gpu] {
+            assert!(f > 0.0 && f < 1.0, "{f}");
+        }
+    }
+
+    #[test]
+    fn factor_never_exceeds_dense() {
+        for kind in [DeviceKind::Cpu, DeviceKind::Gpu] {
+            for s in Scheme::ALL {
+                assert!(scheme_factor(kind, &SchemeChoice::for_scheme(s)) <= 1.0);
+            }
+        }
+    }
+}

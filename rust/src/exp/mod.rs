@@ -22,6 +22,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9_10;
 pub mod fig11;
+pub mod schemes;
 pub mod serving;
 pub mod table1;
 pub mod table2;

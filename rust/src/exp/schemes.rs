@@ -1,0 +1,102 @@
+//! Schemes × devices comparison (DESIGN.md §16).
+//!
+//! Rows per (model, device): Original, CPrune (channel only), one-shot
+//! pattern, one-shot block, CPrune+SchemeSelect. Shape to reproduce:
+//! the selection loop never loses to the best single-scheme row at
+//! equal seed/budget, and the cheapest non-channel scheme differs
+//! between CPU (pattern-friendly) and GPU (block-friendly) targets —
+//! the per-kind reorder costs in [`crate::device::sparse`] made
+//! visible as a table.
+//!
+//! Every method runs through the uniform [`Pruner`] trait on one shared
+//! [`RunBuilder`] wiring, exactly like `table1` (DESIGN.md §9).
+
+use crate::baselines::Outcome;
+use crate::device::DeviceSpec;
+use crate::exp::Scale;
+use crate::graph::model_zoo::ModelKind;
+use crate::pruner::CPruneConfig;
+use crate::run::{CPrune, Pruner, RunBuilder};
+use crate::sparsity::{BlockPruner, PatternPruner, SchemeSelect};
+
+#[derive(Debug)]
+pub struct SchemeBlock {
+    pub model: &'static str,
+    pub device: &'static str,
+    pub rows: Vec<Outcome>,
+}
+
+/// The (model, device) cells the scheme sweep runs: one CPU and one GPU
+/// target so the device-dependent scheme ranking shows up side by side.
+pub fn paper_cells() -> Vec<(ModelKind, DeviceSpec)> {
+    vec![
+        (ModelKind::ResNet8Cifar, DeviceSpec::kryo385()),
+        (ModelKind::ResNet8Cifar, DeviceSpec::mali_g72()),
+    ]
+}
+
+/// The method lineup of one cell, in row order. All four share the same
+/// seed and iteration budget so the comparison is apples to apples.
+fn methods(scale: Scale, seed: u64) -> Vec<Box<dyn Pruner>> {
+    let cfg = CPruneConfig {
+        max_iterations: scale.cprune_iters(),
+        tune_opts: scale.tune_opts(),
+        seed,
+        ..Default::default()
+    };
+    let select = SchemeSelect::with_cfg(cfg.clone());
+    vec![
+        Box::new(CPrune::with_cfg(cfg)),
+        Box::new(PatternPruner),
+        Box::new(BlockPruner),
+        Box::new(select),
+    ]
+}
+
+pub fn run_cell(kind: ModelKind, spec: DeviceSpec, scale: Scale, seed: u64) -> SchemeBlock {
+    let device_name = spec.name;
+    let mut run = RunBuilder::new(kind)
+        .device_spec(spec)
+        .seed(seed)
+        .tune_opts(scale.tune_opts())
+        .build()
+        .expect("zoo model + known device"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
+
+    let (orig, _) = run.original_row();
+    let mut rows = vec![orig];
+    for pruner in methods(scale, seed) {
+        let out = run.execute(pruner.as_ref()).expect("pruner run"); // cprune-lint: allow(CPL005, reason="experiment drivers abort loudly by design")
+        rows.push(out.to_outcome());
+    }
+
+    SchemeBlock { model: kind.name(), device: device_name, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_select_never_loses_to_single_scheme_rows() {
+        for (kind, spec) in paper_cells() {
+            let device = spec.name;
+            let block = run_cell(kind, spec, Scale::Smoke, 7);
+            assert_eq!(block.rows.len(), 5, "{device}: row lineup changed");
+            let lat_of = |m: &str| {
+                block
+                    .rows
+                    .iter()
+                    .find(|r| r.method == m)
+                    .map(|r| 1.0 / r.fps)
+                    .unwrap()
+            };
+            let select = lat_of("CPrune+SchemeSelect");
+            for single in ["CPrune", "PatDNN(4-of-9)", "Block(2:4)"] {
+                assert!(
+                    select <= lat_of(single) * (1.0 + 1e-12),
+                    "{device}: scheme-select lost to {single}"
+                );
+            }
+        }
+    }
+}

@@ -13,6 +13,12 @@
 //! diagnostics, [`ops::Graph::validate`] delegates its structural pass
 //! there, and debug builds re-run the full walk after every
 //! [`prune::apply`].
+//!
+//! Channel pruning is the only rewrite that edits the graph itself.
+//! Pattern- and block-sparse schemes (DESIGN.md §16) instead layer
+//! per-layer masks *on top of* `prune::PruneState` via
+//! [`crate::sparsity`]; `stats::effective_flops_params` accounts for
+//! both at once.
 
 pub mod dot;
 pub mod model_zoo;

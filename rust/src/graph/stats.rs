@@ -5,8 +5,9 @@
 //! with the paper actually reporting MACs for the mobile nets; we expose
 //! both so the tables can print either).
 
-use super::ops::{Graph, OpKind};
+use super::ops::{Graph, NodeId, OpKind};
 use super::shape_infer;
+use std::collections::BTreeMap;
 
 /// (total_flops, total_params) for the whole graph at its builder batch size.
 pub fn flops_params(g: &Graph) -> (u64, u64) {
@@ -24,6 +25,39 @@ pub fn flops_params(g: &Graph) -> (u64, u64) {
 /// MACs (= flops / 2 for the matmul-like ops) — the mobile-papers convention.
 pub fn macs(g: &Graph) -> u64 {
     flops_params(g).0 / 2
+}
+
+/// (total_flops, total_params) under a per-conv weight-density map — the
+/// sparsity-aware variant (DESIGN.md §16). A conv with density `d` in
+/// `densities` keeps `round(macs × d)` of its dense multiply-adds and the
+/// same fraction of its weight parameters; its per-channel (bias/BN-fold)
+/// parameters stay dense, as do all nodes absent from the map. With an
+/// empty map this is exactly [`flops_params`] — pinned by test.
+pub fn effective_flops_params(g: &Graph, densities: &BTreeMap<NodeId, f64>) -> (u64, u64) {
+    let shapes = shape_infer::infer(g).expect("graph must shape-infer"); // cprune-lint: allow(CPL005, reason="callers pass validated graphs")
+    let mut flops = 0u64;
+    let mut params = 0u64;
+    for node in &g.nodes {
+        let (f, p) = node_cost(g, node.id, &shapes);
+        match (&node.op, densities.get(&node.id)) {
+            (OpKind::Conv2d { cout, .. }, Some(&d)) => {
+                let dense_bias = *cout as u64;
+                let weight_params = p - dense_bias;
+                flops += scale(f, d);
+                params += scale(weight_params, d) + dense_bias;
+            }
+            _ => {
+                flops += f;
+                params += p;
+            }
+        }
+    }
+    (flops, params)
+}
+
+/// `round(count × density)` in u64 space.
+fn scale(count: u64, density: f64) -> u64 {
+    (count as f64 * density).round() as u64
 }
 
 /// (flops, params) of a single node given precomputed shapes.
@@ -93,6 +127,33 @@ mod tests {
         let (flops, params) = flops_params(&g);
         assert_eq!(flops, 2 * (8 * 8 * 8) as u64 * 9);
         assert_eq!(params, (9 * 8 + 8) as u64);
+    }
+
+    #[test]
+    fn empty_density_map_reproduces_dense_accounting_exactly() {
+        let g = crate::graph::model_zoo::Model::build(
+            crate::graph::model_zoo::ModelKind::ResNet8Cifar,
+            0,
+        )
+        .graph;
+        assert_eq!(effective_flops_params(&g, &BTreeMap::new()), flops_params(&g));
+    }
+
+    #[test]
+    fn density_scales_conv_macs_and_weights_but_not_bias() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 4] }, vec![]);
+        g.add(
+            "c",
+            OpKind::Conv2d { kh: 3, kw: 3, cin: 4, cout: 8, stride: 1, padding: 1, groups: 1 },
+            vec![x],
+        );
+        let mut densities = BTreeMap::new();
+        densities.insert(1usize, 0.5);
+        let (flops, params) = effective_flops_params(&g, &densities);
+        // dense: 36864 flops, 288 weight params + 8 bias
+        assert_eq!(flops, 18_432);
+        assert_eq!(params, 144 + 8);
     }
 
     #[test]

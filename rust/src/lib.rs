@@ -45,6 +45,7 @@ pub mod run;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod serve;
+pub mod sparsity;
 pub mod tir;
 pub mod train;
 pub mod tuner;

@@ -196,6 +196,7 @@ pub fn cprune_run(ctx: &mut RunContext, cfg: &CPruneConfig) -> CPruneResult {
         latency: gate_baseline,
         accuracy: a_p,
         channels: state.cout.clone(),
+        schemes: std::collections::BTreeMap::new(),
     };
     ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: baseline_checkpoint.clone() });
     pareto.insert(baseline_checkpoint);
@@ -312,6 +313,7 @@ pub fn cprune_run(ctx: &mut RunContext, cfg: &CPruneConfig) -> CPruneResult {
                     latency: l_m,
                     latency_target: l_t,
                     candidates_tried,
+                    scheme: None,
                 });
                 if candidates_tried > cfg.max_candidates {
                     break 'outer;
@@ -374,6 +376,7 @@ pub fn cprune_run(ctx: &mut RunContext, cfg: &CPruneConfig) -> CPruneResult {
                     short_accuracy: a_s,
                     accuracy_gate: cfg.alpha * a_p,
                     filters_removed: removed_total,
+                    scheme: None,
                 });
                 // The journal barrier below records the gates this
                 // candidate was judged against — capture them before the
@@ -389,6 +392,7 @@ pub fn cprune_run(ctx: &mut RunContext, cfg: &CPruneConfig) -> CPruneResult {
                     latency: l_m,
                     accuracy: a_s,
                     channels: state.cout.clone(),
+                    schemes: std::collections::BTreeMap::new(),
                 };
                 ctx.emit(&RunEvent::CheckpointEmitted {
                     checkpoint: accepted_checkpoint.clone(),

@@ -9,7 +9,9 @@
 //! The search also runs behind the uniform [`crate::run::Pruner`] trait
 //! (as [`crate::run::CPrune`]) with a typed event stream; the free
 //! functions here are thin shims over [`cprune::cprune_run`]
-//! (DESIGN.md §9).
+//! (DESIGN.md §9). [`crate::sparsity::SchemeSelect`] extends the same
+//! subgraph-informed loop with per-layer sparsity-scheme selection
+//! (pattern/block masks priced by the compiler, DESIGN.md §16).
 
 pub mod cprune;
 pub mod report;

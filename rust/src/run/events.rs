@@ -18,6 +18,7 @@
 
 use crate::graph::ops::NodeId;
 use crate::serve::{Checkpoint, Registry};
+use crate::sparsity::Scheme;
 use crate::util::json::Json;
 use std::cell::RefCell;
 use std::io::Write;
@@ -71,6 +72,10 @@ pub enum RunEvent {
         latency: f64,
         latency_target: f64,
         candidates_tried: usize,
+        /// Sparsity scheme of the candidate move (DESIGN.md §16). `None`
+        /// for pure channel pruners (schema-compatible with v1 streams:
+        /// the field is omitted from the JSONL object when absent).
+        scheme: Option<Scheme>,
     },
     /// A candidate passed both gates and became the new current model.
     IterationAccepted {
@@ -81,6 +86,9 @@ pub enum RunEvent {
         /// The gate value `α·a_p` the short-term accuracy was held to.
         accuracy_gate: f64,
         filters_removed: usize,
+        /// Sparsity scheme of the accepted move (DESIGN.md §16); omitted
+        /// from the JSONL object when `None`, keeping v1 streams stable.
+        scheme: Option<Scheme>,
     },
     /// A candidate failed a gate. The accuracy fields are `None` for
     /// latency-gate rejections (the candidate is rejected before any
@@ -147,11 +155,15 @@ impl RunEvent {
                 latency,
                 latency_target,
                 candidates_tried,
+                scheme,
             } => {
                 pairs.push(("iteration", Json::Num(*iteration as f64)));
                 pairs.push(("latency", Json::Num(*latency)));
                 pairs.push(("latency_target", Json::Num(*latency_target)));
                 pairs.push(("candidates_tried", Json::Num(*candidates_tried as f64)));
+                if let Some(s) = scheme {
+                    pairs.push(("scheme", Json::Str(s.name().to_string())));
+                }
             }
             RunEvent::IterationAccepted {
                 iteration,
@@ -160,6 +172,7 @@ impl RunEvent {
                 short_accuracy,
                 accuracy_gate,
                 filters_removed,
+                scheme,
             } => {
                 pairs.push(("iteration", Json::Num(*iteration as f64)));
                 pairs.push(("latency", Json::Num(*latency)));
@@ -167,6 +180,9 @@ impl RunEvent {
                 pairs.push(("short_accuracy", Json::Num(*short_accuracy)));
                 pairs.push(("accuracy_gate", Json::Num(*accuracy_gate)));
                 pairs.push(("filters_removed", Json::Num(*filters_removed as f64)));
+                if let Some(s) = scheme {
+                    pairs.push(("scheme", Json::Str(s.name().to_string())));
+                }
             }
             RunEvent::IterationRejected {
                 iteration,
@@ -358,6 +374,7 @@ impl RunObserver for ProgressPrinter {
                 latency,
                 latency_target,
                 candidates_tried,
+                ..
             } if self.verbose => {
                 println!(
                     "[run] iter {iteration}: candidate #{candidates_tried} {:.2} ms (target {:.2} ms)",
@@ -500,6 +517,7 @@ mod tests {
                 latency: 0.125,
                 latency_target: 0.25,
                 candidates_tried: 3,
+                scheme: None,
             },
             RunEvent::IterationAccepted {
                 iteration: 1,
@@ -508,6 +526,7 @@ mod tests {
                 short_accuracy: 0.5,
                 accuracy_gate: 0.25,
                 filters_removed: 8,
+                scheme: None,
             },
             RunEvent::IterationRejected {
                 iteration: 2,
@@ -524,6 +543,7 @@ mod tests {
                     latency: 0.125,
                     accuracy: 0.5,
                     channels: BTreeMap::new(),
+                    schemes: BTreeMap::new(),
                 },
             },
             RunEvent::Finished {
@@ -552,6 +572,31 @@ mod tests {
                 "missing kind tag in {text}"
             );
         }
+    }
+
+    #[test]
+    fn scheme_field_is_omitted_when_absent_and_named_when_present() {
+        let without = RunEvent::CandidateMeasured {
+            iteration: 1,
+            latency: 0.125,
+            latency_target: 0.25,
+            candidates_tried: 1,
+            scheme: None,
+        }
+        .to_json()
+        .to_string();
+        assert!(!without.contains("scheme"), "None must serialize v1-identically: {without}");
+        let with = RunEvent::IterationAccepted {
+            iteration: 1,
+            latency: 0.125,
+            latency_target: 0.25,
+            short_accuracy: 0.5,
+            accuracy_gate: 0.25,
+            filters_removed: 0,
+            scheme: Some(Scheme::Pattern),
+        }
+        .to_json();
+        assert_eq!(with.get("scheme").and_then(Json::as_str), Some("pattern"));
     }
 
     #[test]
@@ -595,6 +640,7 @@ mod tests {
                     latency: lat,
                     accuracy: acc,
                     channels: BTreeMap::new(),
+                    schemes: BTreeMap::new(),
                 },
             });
         }

@@ -497,6 +497,7 @@ mod tests {
             latency: 0.5,
             accuracy: 0.9,
             channels: [(0, 16)].into_iter().collect(),
+            schemes: Default::default(),
         }
     }
 

@@ -1,5 +1,8 @@
 //! The run layer: one [`Pruner`] trait, one [`RunBuilder`], one typed
-//! event stream for every pruning run (DESIGN.md §9).
+//! event stream for every pruning run (DESIGN.md §9). Sparsity-scheme
+//! pruners (`pattern`, `block`, `scheme-select`; [`crate::sparsity`],
+//! DESIGN.md §16) run behind the same trait, and scheme-carrying events
+//! and checkpoints stay v1-compatible (the field is omitted when absent).
 //!
 //! The paper's headline result is a *comparison* — CPrune against
 //! magnitude, FPGM, NetAdapt, AMC and PQF under identical device, tuning
@@ -71,7 +74,8 @@ use std::collections::{BTreeMap, HashMap};
 /// regardless of which algorithm ran.
 pub trait Pruner {
     /// Registry name (`cprune`, `magnitude`, `fpgm`, `netadapt`, `amc`,
-    /// `pqf`) — what `cprune run --pruner <name>` selects.
+    /// `pqf`, `pattern`, `block`, `scheme-select`) — what
+    /// `cprune run --pruner <name>` selects.
     fn name(&self) -> &str;
 
     /// Run the algorithm against the context's model/session/oracle.
@@ -326,6 +330,7 @@ pub(crate) fn finalize(ctx: &mut RunContext, end: SearchEnd) -> PruneOutcome {
         latency: final_latency,
         accuracy: top1,
         channels: end.state.cout.clone(),
+        schemes: BTreeMap::new(),
     };
     ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: final_checkpoint.clone() });
     pareto.insert(final_checkpoint);

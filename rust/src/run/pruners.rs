@@ -20,7 +20,7 @@ use crate::serve::{Checkpoint, ParetoSet};
 use std::collections::HashMap;
 
 /// Space-separated registry names (CLI help text).
-pub const PRUNER_NAMES: &str = "cprune magnitude fpgm netadapt amc pqf";
+pub const PRUNER_NAMES: &str = "cprune magnitude fpgm netadapt amc pqf pattern block scheme-select";
 
 /// Look up a pruner by registry name, with its paper-default
 /// configuration. `None` for unknown names.
@@ -32,6 +32,9 @@ pub fn pruner_by_name(name: &str) -> Option<Box<dyn Pruner>> {
         "netadapt" => Some(Box::new(NetAdapt::default())),
         "amc" => Some(Box::new(Amc::default())),
         "pqf" => Some(Box::new(Pqf)),
+        "pattern" => Some(Box::new(crate::sparsity::PatternPruner)),
+        "block" => Some(Box::new(crate::sparsity::BlockPruner)),
+        "scheme-select" => Some(Box::new(crate::sparsity::SchemeSelect::default())),
         _ => None,
     }
 }
@@ -277,6 +280,7 @@ impl Pruner for Pqf {
             latency,
             accuracy: top1,
             channels: channels.clone(),
+            schemes: std::collections::BTreeMap::new(),
         };
         ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: checkpoint.clone() });
         let mut pareto = ParetoSet::new();

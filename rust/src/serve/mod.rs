@@ -7,8 +7,10 @@
 //! candidates. This module keeps them and serves from them:
 //!
 //! * [`pareto`] — [`Checkpoint`] (a deployable snapshot of an accepted
-//!   iteration) and [`ParetoSet`] (the non-dominated latency/accuracy
-//!   frontier a [`crate::pruner::CPruneResult`] now exposes);
+//!   iteration, including any per-layer sparsity schemes from
+//!   [`crate::sparsity`], DESIGN.md §16) and [`ParetoSet`] (the
+//!   non-dominated latency/accuracy frontier a
+//!   [`crate::pruner::CPruneResult`] now exposes);
 //! * [`registry`] — [`Registry`], frontiers per `(model, device)` pair
 //!   with versioned-JSON persistence following the
 //!   [`crate::tuner::cache`] conventions;

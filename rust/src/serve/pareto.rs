@@ -10,6 +10,7 @@
 
 use crate::graph::model_zoo::Model;
 use crate::graph::ops::{Graph, NodeId};
+use crate::sparsity::{SchemeChoice, SchemeMap};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -30,6 +31,13 @@ pub struct Checkpoint {
     pub accuracy: f64,
     /// Remaining output channels per prunable conv.
     pub channels: BTreeMap<NodeId, usize>,
+    /// Sparsity scheme per masked conv (DESIGN.md §16). Convs absent
+    /// from the map are dense channel layers, so an empty map is the
+    /// classic channel-pruned checkpoint — and serializes identically
+    /// to the pre-scheme v1 format (the field is omitted when empty,
+    /// and absent on parse means empty), keeping old registries loadable
+    /// and old readers working on scheme-free runs.
+    pub schemes: SchemeMap,
 }
 
 impl Checkpoint {
@@ -55,12 +63,24 @@ impl Checkpoint {
                 .map(|(&conv, &c)| (conv.to_string(), Json::Num(c as f64)))
                 .collect(),
         );
-        Json::obj(vec![
+        let mut fields = vec![
             ("iteration", Json::Num(self.iteration as f64)),
             ("latency", Json::Num(self.latency)),
             ("accuracy", Json::Num(self.accuracy)),
             ("channels", channels),
-        ])
+        ];
+        if !self.schemes.is_empty() {
+            fields.push((
+                "schemes",
+                Json::Obj(
+                    self.schemes
+                        .iter()
+                        .map(|(&conv, choice)| (conv.to_string(), choice.to_json()))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
     }
 
     /// Parse a checkpoint serialized by [`Checkpoint::to_json`].
@@ -77,6 +97,19 @@ impl Checkpoint {
             }
             _ => return Err("checkpoint missing channels".into()),
         }
+        let mut schemes = SchemeMap::new();
+        match j.get("schemes") {
+            None => {} // pre-scheme v1 checkpoint: all layers dense
+            Some(Json::Obj(m)) => {
+                for (k, v) in m {
+                    let conv: NodeId = k
+                        .parse()
+                        .map_err(|_| format!("bad conv id '{k}' in checkpoint schemes"))?;
+                    schemes.insert(conv, SchemeChoice::from_json(v)?);
+                }
+            }
+            Some(_) => return Err("checkpoint schemes must be an object".into()),
+        }
         Ok(Checkpoint {
             iteration: j
                 .get("iteration")
@@ -91,6 +124,7 @@ impl Checkpoint {
                 .and_then(Json::as_f64)
                 .ok_or("checkpoint missing accuracy")?,
             channels,
+            schemes,
         })
     }
 }
@@ -219,7 +253,13 @@ mod tests {
     use super::*;
 
     fn cp(iteration: usize, latency: f64, accuracy: f64) -> Checkpoint {
-        Checkpoint { iteration, latency, accuracy, channels: BTreeMap::new() }
+        Checkpoint {
+            iteration,
+            latency,
+            accuracy,
+            channels: BTreeMap::new(),
+            schemes: SchemeMap::new(),
+        }
     }
 
     #[test]
@@ -269,12 +309,43 @@ mod tests {
         let mut channels = BTreeMap::new();
         channels.insert(3usize, 48usize);
         channels.insert(11, 96);
-        s.insert(Checkpoint { iteration: 4, latency: 0.00123456789, accuracy: 0.9125, channels });
+        s.insert(Checkpoint {
+            iteration: 4,
+            latency: 0.00123456789,
+            accuracy: 0.9125,
+            channels,
+            schemes: SchemeMap::new(),
+        });
         s.insert(cp(0, 0.0101, 0.93));
         let back = ParetoSet::from_json(&s.to_json()).unwrap();
         assert_eq!(back, s);
         // byte-stable serialization (registry files must not churn)
         assert_eq!(back.to_json().to_string(), s.to_json().to_string());
+    }
+
+    #[test]
+    fn scheme_field_round_trips_and_is_omitted_when_empty() {
+        // empty map serializes exactly like a pre-scheme checkpoint
+        let plain = cp(1, 0.004, 0.90);
+        let text = plain.to_json().to_string();
+        assert!(!text.contains("schemes"), "empty schemes must be omitted: {text}");
+        // and a pre-scheme document parses back to an empty map
+        let back = Checkpoint::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plain);
+
+        let mut masked = cp(2, 0.003, 0.89);
+        masked.channels.insert(3, 48);
+        masked.schemes.insert(3, SchemeChoice::pattern());
+        masked.schemes.insert(7, SchemeChoice::block());
+        let mtext = masked.to_json().to_string();
+        assert!(mtext.contains("\"schemes\""));
+        let mback = Checkpoint::from_json(&crate::util::json::parse(&mtext).unwrap()).unwrap();
+        assert_eq!(mback, masked);
+        assert_eq!(mback.to_json().to_string(), mtext, "byte-stable");
+
+        // a malformed schemes field is refused, not ignored
+        let bad = r#"{"accuracy":0.9,"channels":{},"iteration":1,"latency":0.004,"schemes":[]}"#;
+        assert!(Checkpoint::from_json(&crate::util::json::parse(bad).unwrap()).is_err());
     }
 
     #[test]

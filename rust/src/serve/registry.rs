@@ -153,7 +153,13 @@ mod tests {
     use std::collections::BTreeMap;
 
     fn cp(iteration: usize, latency: f64, accuracy: f64) -> Checkpoint {
-        Checkpoint { iteration, latency, accuracy, channels: BTreeMap::new() }
+        Checkpoint {
+            iteration,
+            latency,
+            accuracy,
+            channels: BTreeMap::new(),
+            schemes: BTreeMap::new(),
+        }
     }
 
     fn sample_set() -> ParetoSet {

@@ -317,7 +317,13 @@ mod tests {
     use std::collections::BTreeMap;
 
     fn cp(iteration: usize, latency: f64, accuracy: f64) -> Checkpoint {
-        Checkpoint { iteration, latency, accuracy, channels: BTreeMap::new() }
+        Checkpoint {
+            iteration,
+            latency,
+            accuracy,
+            channels: BTreeMap::new(),
+            schemes: BTreeMap::new(),
+        }
     }
 
     /// 3-point frontier: 2 ms @ 0.80, 5 ms @ 0.85, 20 ms @ 0.92.

@@ -1,0 +1,94 @@
+//! N:M block sparsity over the fan-in (DESIGN.md §16).
+//!
+//! Of every [`GROUP`] consecutive weights in a filter's flattened HWI
+//! fan-in, the [`KEEP`] largest-magnitude survive (2:4 — the shape
+//! structured-sparse hardware and libraries accelerate). The group
+//! structure is metadata-light for the compiler: each group stores
+//! which lanes survive, and the inner loop skips at fixed stride — no
+//! filter reordering, unlike the pattern scheme
+//! ([`crate::tir::sparse::SparseLowering::needs_reorder`]).
+
+use crate::graph::ops::OpKind;
+
+/// Survivors per group.
+pub const KEEP: usize = 2;
+/// Group size along the flattened fan-in.
+pub const GROUP: usize = 4;
+/// Weight density of a block-sparse layer.
+pub const DENSITY: f64 = KEEP as f64 / GROUP as f64;
+
+/// Whether the scheme can lower this operator: any non-grouped conv
+/// whose fan-in holds at least one full group.
+pub fn applicable(op: &OpKind) -> bool {
+    match op {
+        OpKind::Conv2d { kh, kw, cin, groups, .. } => {
+            *groups == 1 && kh * kw * cin >= GROUP
+        }
+        _ => false,
+    }
+}
+
+/// Keep-mask of one flattened filter: per group of [`GROUP`] consecutive
+/// weights, the [`KEEP`] largest by |w| survive (ties keep the lower
+/// index, for determinism). A trailing partial group stays dense — the
+/// lowering falls back to the dense inner loop for the remainder, so
+/// masking it would buy nothing.
+pub fn keep_mask(filter: &[f32]) -> Vec<bool> {
+    let mut mask = vec![true; filter.len()];
+    let full_groups = filter.len() / GROUP;
+    for g in 0..full_groups {
+        let base = g * GROUP;
+        let mut idx: [usize; GROUP] = [0; GROUP];
+        for (k, slot) in idx.iter_mut().enumerate() {
+            *slot = base + k;
+        }
+        idx.sort_by(|&a, &b| filter[b].abs().total_cmp(&filter[a].abs()).then(a.cmp(&b)));
+        for &drop in &idx[KEEP..] {
+            mask[drop] = false;
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_is_two_of_four() {
+        assert!((DENSITY - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn applicability_requires_full_group() {
+        let ok = OpKind::Conv2d { kh: 1, kw: 1, cin: 16, cout: 8, stride: 1, padding: 0, groups: 1 };
+        let tiny = OpKind::Conv2d { kh: 1, kw: 1, cin: 3, cout: 8, stride: 1, padding: 0, groups: 1 };
+        let grouped = OpKind::Conv2d { kh: 3, kw: 3, cin: 16, cout: 16, stride: 1, padding: 1, groups: 16 };
+        assert!(applicable(&ok));
+        assert!(!applicable(&tiny));
+        assert!(!applicable(&grouped));
+        assert!(!applicable(&OpKind::Softmax));
+    }
+
+    #[test]
+    fn keep_mask_keeps_two_largest_per_group() {
+        let f = [0.1f32, 0.9, -0.8, 0.2, 0.5, 0.4, -0.3, 0.6];
+        let m = keep_mask(&f);
+        assert_eq!(m, vec![false, true, true, false, true, false, false, true]);
+        assert_eq!(m.iter().filter(|&&b| b).count(), 4);
+    }
+
+    #[test]
+    fn ties_keep_the_lower_index() {
+        let f = [0.5f32, 0.5, 0.5, 0.5];
+        assert_eq!(keep_mask(&f), vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn trailing_partial_group_stays_dense() {
+        let f = [0.9f32, 0.1, 0.2, 0.8, 0.01, 0.02];
+        let m = keep_mask(&f);
+        assert_eq!(&m[..4], &[true, false, false, true]);
+        assert_eq!(&m[4..], &[true, true], "partial tail group must stay dense");
+    }
+}

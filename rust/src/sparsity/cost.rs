@@ -1,0 +1,139 @@
+//! Mask-aware analytic latency (DESIGN.md §16).
+//!
+//! Prices a scheme assignment over an already-compiled task table: each
+//! subgraph whose anchor conv is masked contributes its measured dense
+//! latency times the device's
+//! [`crate::device::sparse::scheme_factor`]; unmasked subgraphs
+//! contribute it unchanged. This is what lets the selection loop
+//! compare a mask candidate against a channel candidate *without
+//! re-tuning* — the mask reuses the dense schedule (pattern compaction
+//! and block skipping keep the loop structure; see
+//! [`crate::tir::sparse::SparseLowering`]), so the dense measurement
+//! plus the analytic factor is the candidate's latency.
+//!
+//! Float-exactness contract: with an empty scheme map this returns
+//! *bit-for-bit* the compiled model's own latency
+//! ([`crate::relay::TaskTable::model_latency`] plus the overhead term).
+//! Each task sums its subgraph factors first and multiplies once —
+//! all-dense factors sum to exactly the subgraph count, reproducing
+//! `latency × count` — and tasks accumulate in table order. Tests pin
+//! this with `==`.
+
+use crate::device::sparse::scheme_factor;
+use crate::device::spec::DeviceKind;
+use crate::relay::partition::Partition;
+use crate::relay::TaskTable;
+use crate::sparsity::SchemeMap;
+
+/// Masked latency of a compiled model (seconds): the task table's
+/// per-subgraph latencies scaled by each anchor's scheme factor, plus
+/// the graph-level overhead term.
+pub fn masked_model_latency(
+    part: &Partition,
+    table: &TaskTable,
+    overhead_latency: f64,
+    kind: DeviceKind,
+    schemes: &SchemeMap,
+) -> f64 {
+    let mut total = 0.0;
+    for t in table.tasks() {
+        let lat = t.best_latency.unwrap_or(0.0);
+        let mut factor_sum = 0.0;
+        for &sgid in &t.subgraphs {
+            let anchor = part.subgraphs.get(sgid).map(|s| s.anchor);
+            let factor = match anchor.and_then(|a| schemes.get(&a)) {
+                Some(choice) => scheme_factor(kind, choice),
+                None => 1.0,
+            };
+            factor_sum += factor;
+        }
+        total += lat * factor_sum;
+    }
+    total + overhead_latency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler;
+    use crate::device::{DeviceSpec, Simulator};
+    use crate::graph::model_zoo::{Model, ModelKind};
+    use crate::relay::partition::partition;
+    use crate::sparsity::SchemeChoice;
+    use crate::tuner::{TuneOptions, TuningSession};
+    use std::collections::HashMap;
+
+    #[test]
+    fn empty_mask_reproduces_dense_latency_bitwise() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 0);
+        let compiled = compiler::compile_tuned(&m.graph, &session, &HashMap::new());
+        let part = partition(&m.graph);
+        let masked = masked_model_latency(
+            &part,
+            &compiled.table,
+            compiled.overhead_latency,
+            DeviceKind::Cpu,
+            &SchemeMap::new(),
+        );
+        assert_eq!(masked, compiled.latency(), "dense pricing must be exact");
+    }
+
+    #[test]
+    fn masking_an_anchor_strictly_lowers_latency() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 0);
+        let compiled = compiler::compile_tuned(&m.graph, &session, &HashMap::new());
+        let part = partition(&m.graph);
+        let dense = compiled.latency();
+        let mut schemes = SchemeMap::new();
+        schemes.insert(m.prunable[0], SchemeChoice::pattern());
+        let masked = masked_model_latency(
+            &part,
+            &compiled.table,
+            compiled.overhead_latency,
+            DeviceKind::Cpu,
+            &schemes,
+        );
+        assert!(masked < dense, "masked {masked} vs dense {dense}");
+        // a channel "mask" prices as dense exactly
+        let mut chan = SchemeMap::new();
+        chan.insert(m.prunable[0], SchemeChoice::channel());
+        let chan_lat = masked_model_latency(
+            &part,
+            &compiled.table,
+            compiled.overhead_latency,
+            DeviceKind::Cpu,
+            &chan,
+        );
+        assert_eq!(chan_lat, dense);
+    }
+
+    #[test]
+    fn gpu_and_cpu_price_the_same_mask_differently() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let sim = Simulator::new(DeviceSpec::kryo385());
+        let session = TuningSession::new(&sim, TuneOptions::quick(), 0);
+        let compiled = compiler::compile_tuned(&m.graph, &session, &HashMap::new());
+        let part = partition(&m.graph);
+        let mut schemes = SchemeMap::new();
+        schemes.insert(m.prunable[0], SchemeChoice::pattern());
+        let cpu = masked_model_latency(
+            &part,
+            &compiled.table,
+            compiled.overhead_latency,
+            DeviceKind::Cpu,
+            &schemes,
+        );
+        let gpu = masked_model_latency(
+            &part,
+            &compiled.table,
+            compiled.overhead_latency,
+            DeviceKind::Gpu,
+            &schemes,
+        );
+        assert!(cpu < gpu, "pattern reorder must cost more on gpu: {cpu} vs {gpu}");
+    }
+}

@@ -1,0 +1,263 @@
+//! The versioned sparse-mask artifact (DESIGN.md §16).
+//!
+//! `cprune-sparsity-masks` v1 records, per masked conv, the scheme, its
+//! weight density, and the scheme's parameters: the sorted library
+//! indices a pattern assignment uses ([`crate::sparsity::pattern`]), or
+//! `[keep, group]` for block sparsity. Layered onto
+//! [`crate::graph::weights::Weights`] (which taps survive) and
+//! [`crate::graph::prune::PruneState`] (which channels survive) this is
+//! a complete description of a sparse deployable. Verified under the
+//! CPV17x codes ([`crate::verify::artifact`]); written only through
+//! [`crate::util::io::atomic_write`] (DESIGN.md §15).
+
+use crate::graph::ops::{Graph, NodeId, OpKind};
+use crate::graph::weights::Weights;
+use crate::sparsity::{block, pattern, Scheme, SchemeChoice, SchemeMap};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Artifact format tag.
+pub const MASKS_FORMAT: &str = "cprune-sparsity-masks";
+/// Current artifact version.
+pub const MASKS_VERSION: u64 = 1;
+
+/// One conv's mask record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerMask {
+    /// Conv node id in the original graph.
+    pub conv: NodeId,
+    /// Scheme + density of the layer.
+    pub choice: SchemeChoice,
+    /// Scheme parameters: pattern → sorted distinct library indices in
+    /// use; block → `[keep, group]`; channel → empty.
+    pub params: Vec<usize>,
+}
+
+impl LayerMask {
+    /// Canonical JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("conv", Json::Num(self.conv as f64)),
+            ("density", Json::Num(self.choice.density)),
+            (
+                "params",
+                Json::Arr(self.params.iter().map(|&p| Json::Num(p as f64)).collect()),
+            ),
+            ("scheme", Json::Str(self.choice.scheme.name().to_string())),
+        ])
+    }
+
+    /// Parse a record previously written by [`LayerMask::to_json`].
+    pub fn from_json(j: &Json) -> Result<LayerMask, String> {
+        let conv = j
+            .get("conv")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| "mask entry missing conv".to_string())?;
+        let choice = SchemeChoice::from_json(j)?;
+        let params = match j.get("params") {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|p| p.as_usize().ok_or_else(|| "non-integer mask param".to_string()))
+                .collect::<Result<Vec<usize>, String>>()?,
+            Some(_) => return Err("mask params must be an array".to_string()),
+            None => return Err("mask entry missing params".to_string()),
+        };
+        Ok(LayerMask { conv, choice, params })
+    }
+}
+
+/// A model's mask records, sorted by conv id.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MaskSet {
+    pub masks: Vec<LayerMask>,
+}
+
+impl MaskSet {
+    pub fn new() -> MaskSet {
+        MaskSet::default()
+    }
+
+    /// Insert (or replace) a conv's record, keeping the set sorted.
+    pub fn insert(&mut self, mask: LayerMask) {
+        match self.masks.binary_search_by_key(&mask.conv, |m| m.conv) {
+            Ok(i) => self.masks[i] = mask,
+            Err(i) => self.masks.insert(i, mask),
+        }
+    }
+
+    /// Record of one conv, if masked.
+    pub fn get(&self, conv: NodeId) -> Option<&LayerMask> {
+        self.masks
+            .binary_search_by_key(&conv, |m| m.conv)
+            .ok()
+            .map(|i| &self.masks[i])
+    }
+
+    /// Materialize a scheme assignment into records, deriving each
+    /// scheme's parameters from the current weight bank: the pattern
+    /// indices each filter selects by retained ℓ1 mass, or the block
+    /// shape. Channel entries record no parameters.
+    pub fn from_schemes(schemes: &SchemeMap, graph: &Graph, weights: &Weights) -> MaskSet {
+        let mut set = MaskSet::new();
+        for (&conv, choice) in schemes {
+            let params = match choice.scheme {
+                Scheme::Channel => Vec::new(),
+                Scheme::Pattern => {
+                    let cin_g = match graph.node(conv).op {
+                        OpKind::Conv2d { cin, groups, .. } => cin / groups.max(1),
+                        _ => 1,
+                    };
+                    pattern::used_patterns(&pattern::assignment(weights, conv, cin_g))
+                }
+                Scheme::Block => vec![block::KEEP, block::GROUP],
+            };
+            set.insert(LayerMask { conv, choice: *choice, params });
+        }
+        set
+    }
+
+    /// The scheme assignment these records describe.
+    pub fn to_schemes(&self) -> SchemeMap {
+        self.masks.iter().map(|m| (m.conv, m.choice)).collect()
+    }
+
+    /// Canonical JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Str(MASKS_FORMAT.to_string())),
+            ("masks", Json::Arr(self.masks.iter().map(LayerMask::to_json).collect())),
+            ("version", Json::Num(MASKS_VERSION as f64)),
+        ])
+    }
+
+    /// Parse a document previously written by [`MaskSet::save`].
+    pub fn parse(text: &str) -> Result<MaskSet, String> {
+        let j = crate::util::json::parse(text)?;
+        let format = j.get("format").and_then(Json::as_str);
+        if format != Some(MASKS_FORMAT) {
+            return Err(format!("not a {MASKS_FORMAT} document"));
+        }
+        let version = j.get("version").and_then(Json::as_f64);
+        if version != Some(MASKS_VERSION as f64) {
+            return Err(format!("unsupported {MASKS_FORMAT} version"));
+        }
+        let masks = match j.get("masks") {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(LayerMask::from_json)
+                .collect::<Result<Vec<LayerMask>, String>>()?,
+            _ => return Err("mask document missing masks array".to_string()),
+        };
+        for w in masks.windows(2) {
+            if w[0].conv >= w[1].conv {
+                return Err(format!(
+                    "mask entries out of order: conv {} before conv {}",
+                    w[0].conv, w[1].conv
+                ));
+            }
+        }
+        Ok(MaskSet { masks })
+    }
+
+    /// Write the mask set atomically ([`crate::util::io::atomic_write`],
+    /// DESIGN.md §15).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        let path = path.as_ref();
+        let text = self.to_json().to_string();
+        #[cfg(debug_assertions)]
+        if let Some(d) =
+            crate::verify::artifact::check_text(&text).and_then(|ds| ds.into_iter().next())
+        {
+            panic!("MaskSet::save produced a non-canonical document: {d}");
+        }
+        crate::util::io::atomic_write(path, &text, "sparsity masks")
+    }
+
+    /// Load a mask set previously written by [`MaskSet::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<MaskSet, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::model_zoo::{Model, ModelKind};
+
+    fn sample() -> MaskSet {
+        let mut set = MaskSet::new();
+        set.insert(LayerMask { conv: 7, choice: SchemeChoice::block(), params: vec![2, 4] });
+        set.insert(LayerMask {
+            conv: 3,
+            choice: SchemeChoice::pattern(),
+            params: vec![0, 2],
+        });
+        set
+    }
+
+    #[test]
+    fn insert_keeps_records_sorted_and_replaces() {
+        let mut set = sample();
+        assert_eq!(set.masks[0].conv, 3);
+        assert_eq!(set.masks[1].conv, 7);
+        set.insert(LayerMask { conv: 3, choice: SchemeChoice::block(), params: vec![2, 4] });
+        assert_eq!(set.masks.len(), 2);
+        assert_eq!(set.get(3).unwrap().choice.scheme, Scheme::Block);
+        assert!(set.get(5).is_none());
+    }
+
+    #[test]
+    fn document_round_trips_canonically() {
+        let set = sample();
+        let text = set.to_json().to_string();
+        let back = MaskSet::parse(&text).unwrap();
+        assert_eq!(back, set);
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.to_schemes().len(), 2);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        assert!(MaskSet::parse("{}").is_err());
+        let wrong_version = r#"{"format":"cprune-sparsity-masks","masks":[],"version":9}"#;
+        assert!(MaskSet::parse(wrong_version).is_err());
+        let unsorted = r#"{"format":"cprune-sparsity-masks","masks":[
+            {"conv":7,"density":0.5,"params":[2,4],"scheme":"block"},
+            {"conv":3,"density":0.5,"params":[2,4],"scheme":"block"}],"version":1}"#;
+        assert!(MaskSet::parse(unsorted).is_err());
+        let bad_scheme = r#"{"format":"cprune-sparsity-masks","masks":[
+            {"conv":3,"density":0.5,"params":[],"scheme":"vibes"}],"version":1}"#;
+        assert!(MaskSet::parse(bad_scheme).is_err());
+    }
+
+    #[test]
+    fn from_schemes_derives_parameters_from_weights() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let conv = m.prunable[0];
+        let mut schemes = SchemeMap::new();
+        schemes.insert(conv, SchemeChoice::pattern());
+        let set = MaskSet::from_schemes(&schemes, &m.graph, &m.weights);
+        let rec = set.get(conv).unwrap();
+        assert!(!rec.params.is_empty(), "pattern mask must record its library indices");
+        assert!(rec.params.windows(2).all(|w| w[0] < w[1]));
+        assert!(rec.params.iter().all(|&p| p < pattern::PATTERNS.len()));
+
+        let mut blocks = SchemeMap::new();
+        blocks.insert(conv, SchemeChoice::block());
+        let bset = MaskSet::from_schemes(&blocks, &m.graph, &m.weights);
+        assert_eq!(bset.get(conv).unwrap().params, vec![block::KEEP, block::GROUP]);
+    }
+
+    #[test]
+    fn save_and_load_round_trip() {
+        let path = std::env::temp_dir().join("cprune_sparsity_mask_unit_test.json");
+        let set = sample();
+        set.save(&path).unwrap();
+        let back = MaskSet::load(&path).unwrap();
+        assert_eq!(back, set);
+        std::fs::remove_file(&path).ok();
+    }
+}

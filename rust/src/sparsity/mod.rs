@@ -1,0 +1,283 @@
+//! Sparsity schemes beyond whole-channel pruning (DESIGN.md §16).
+//!
+//! CPrune's loop prunes channels because that is the structure its
+//! compiler can shrink densely. PatDNN (arXiv 2001.00138) showed that
+//! *pattern-based* intra-kernel sparsity plus connectivity pruning is
+//! also compiler-exploitable on mobile targets, and the "Automatic
+//! Mapping" line of work (arXiv 2111.11581) showed that selecting the
+//! best scheme *per layer* beats any single scheme everywhere. This
+//! module is the vocabulary that makes those schemes first-class:
+//!
+//! * [`Scheme`] / [`SchemeChoice`] — which sparsity class a layer uses
+//!   and at what weight density;
+//! * [`pattern`] — the PatDNN-style 3×3 kernel-pattern library;
+//! * [`block`] — N:M (2:4) block sparsity over the fan-in;
+//! * [`mask`] — the versioned `cprune-sparsity-masks` artifact layered
+//!   onto [`crate::graph::weights::Weights`] +
+//!   [`crate::graph::prune::PruneState`];
+//! * [`cost`] — mask-aware analytic latency over a compiled
+//!   [`crate::relay::TaskTable`], priced per device kind through
+//!   [`crate::device::sparse::scheme_factor`] and the lowering classes
+//!   in [`crate::tir::sparse`];
+//! * [`pruners`] — the `pattern` / `block` one-shot pruners and the
+//!   `scheme-select` CPrune variant that picks the scheme per task by
+//!   measured latency under the accuracy gate.
+
+pub mod block;
+pub mod cost;
+pub mod mask;
+pub mod pattern;
+pub mod pruners;
+
+pub use cost::masked_model_latency;
+pub use mask::{LayerMask, MaskSet, MASKS_FORMAT, MASKS_VERSION};
+pub use pruners::{BlockPruner, PatternPruner, SchemeSelect};
+
+use crate::accuracy::{Criterion, LayerPrune, PruneSummary};
+use crate::graph::model_zoo::Model;
+use crate::graph::ops::{NodeId, OpKind};
+use crate::graph::prune::PruneState;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Sparsity class of one conv layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Scheme {
+    /// Dense channel shrink — the classic CPrune structure. Density 1.0
+    /// within the remaining channels.
+    Channel,
+    /// PatDNN-style kernel patterns: every 3×3 kernel keeps the same
+    /// number of taps, drawn from a small library
+    /// ([`pattern::PATTERNS`]), so the compiler can compact and reorder.
+    Pattern,
+    /// N:M block sparsity ([`block::KEEP`] of every [`block::GROUP`]
+    /// consecutive fan-in weights survive).
+    Block,
+}
+
+impl Scheme {
+    /// Every scheme, in registry/display order.
+    pub const ALL: [Scheme; 3] = [Scheme::Channel, Scheme::Pattern, Scheme::Block];
+
+    /// Stable registry/artifact name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Channel => "channel",
+            Scheme::Pattern => "pattern",
+            Scheme::Block => "block",
+        }
+    }
+
+    /// Inverse of [`Scheme::name`]. `None` for unknown names.
+    pub fn from_name(name: &str) -> Option<Scheme> {
+        match name {
+            "channel" => Some(Scheme::Channel),
+            "pattern" => Some(Scheme::Pattern),
+            "block" => Some(Scheme::Block),
+            _ => None,
+        }
+    }
+}
+
+/// A layer's selected scheme plus its weight density (kept fraction of
+/// the remaining channels' weights; 1.0 for [`Scheme::Channel`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SchemeChoice {
+    pub scheme: Scheme,
+    pub density: f64,
+}
+
+impl SchemeChoice {
+    /// Dense channel shrink (the implicit default everywhere a layer has
+    /// no recorded choice).
+    pub fn channel() -> SchemeChoice {
+        SchemeChoice { scheme: Scheme::Channel, density: 1.0 }
+    }
+
+    /// The library's 4-of-9 kernel patterns.
+    pub fn pattern() -> SchemeChoice {
+        SchemeChoice { scheme: Scheme::Pattern, density: pattern::DENSITY }
+    }
+
+    /// 2:4 block sparsity.
+    pub fn block() -> SchemeChoice {
+        SchemeChoice { scheme: Scheme::Block, density: block::DENSITY }
+    }
+
+    /// Canonical default choice for a scheme.
+    pub fn for_scheme(scheme: Scheme) -> SchemeChoice {
+        match scheme {
+            Scheme::Channel => SchemeChoice::channel(),
+            Scheme::Pattern => SchemeChoice::pattern(),
+            Scheme::Block => SchemeChoice::block(),
+        }
+    }
+
+    /// Canonical JSON object (keys sorted by [`Json::obj`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("density", Json::Num(self.density)),
+            ("scheme", Json::Str(self.scheme.name().to_string())),
+        ])
+    }
+
+    /// Parse a choice previously written by [`SchemeChoice::to_json`].
+    pub fn from_json(j: &Json) -> Result<SchemeChoice, String> {
+        let name = j
+            .get("scheme")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "scheme choice missing scheme".to_string())?;
+        let scheme =
+            Scheme::from_name(name).ok_or_else(|| format!("unknown scheme '{name}'"))?;
+        let density = j
+            .get("density")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| "scheme choice missing density".to_string())?;
+        if !density.is_finite() || density <= 0.0 || density > 1.0 {
+            return Err(format!("scheme density {density} outside (0, 1]"));
+        }
+        Ok(SchemeChoice { scheme, density })
+    }
+}
+
+/// Per-conv scheme assignment. Layers absent from the map are dense
+/// channel layers — the representation every pre-sparsity artifact
+/// implicitly used, which keeps v1 registries loadable unchanged.
+pub type SchemeMap = BTreeMap<NodeId, SchemeChoice>;
+
+/// Accuracy-retention exponent of a scheme: masking a layer to weight
+/// density `d` costs accuracy like shrinking its channels to
+/// `d^exp` of the remaining count. Patterns retain more than blocks at
+/// equal density (the kept taps are chosen per kernel by magnitude and
+/// every pattern keeps the center tap; 2:4 has no such freedom across
+/// groups) — the calibration PatDNN/N:M fine-tuning results point at.
+fn retention_exponent(scheme: Scheme) -> f64 {
+    match scheme {
+        Scheme::Channel => 1.0,
+        Scheme::Pattern => 0.55,
+        Scheme::Block => 0.7,
+    }
+}
+
+/// Oracle-facing channel count of a masked layer: the density raised to
+/// the scheme's retention exponent, applied to the remaining channels
+/// (floor 2, never above the dense count).
+pub fn effective_channels(remaining: usize, choice: &SchemeChoice) -> usize {
+    let eff = (remaining as f64 * choice.density.powf(retention_exponent(choice.scheme))).round();
+    let eff = eff as usize;
+    eff.max(2).min(remaining)
+}
+
+/// Build the oracle-facing summary of a pruning state *plus* a scheme
+/// assignment — the sparsity-aware sibling of
+/// [`crate::pruner::summarize`]. Masked layers report their
+/// [`effective_channels`]; with an empty map this is exactly
+/// `summarize`.
+pub fn masked_summary(
+    model: &Model,
+    state: &PruneState,
+    schemes: &SchemeMap,
+    criterion: Criterion,
+) -> PruneSummary {
+    let convs = model.graph.conv_ids();
+    let n = convs.len().max(1) as f64;
+    let layers = convs
+        .iter()
+        .enumerate()
+        .filter_map(|(pos, &id)| {
+            let orig = match model.graph.node(id).op {
+                OpKind::Conv2d { cout, .. } => cout,
+                _ => return None,
+            };
+            let mut remaining = state.cout.get(&id).copied().unwrap_or(orig);
+            if let Some(choice) = schemes.get(&id) {
+                remaining = effective_channels(remaining, choice);
+            }
+            Some(LayerPrune {
+                conv: id,
+                original_channels: orig,
+                remaining_channels: remaining,
+                depth: (pos as f64 + 1.0) / n,
+            })
+        })
+        .collect();
+    PruneSummary { model: model.kind, layers, criterion }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::model_zoo::ModelKind;
+    use crate::pruner::summarize;
+
+    #[test]
+    fn scheme_names_round_trip() {
+        for s in Scheme::ALL {
+            assert_eq!(Scheme::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::from_name("vibes"), None);
+    }
+
+    #[test]
+    fn choice_json_round_trips() {
+        for s in Scheme::ALL {
+            let c = SchemeChoice::for_scheme(s);
+            let j = c.to_json();
+            let back = SchemeChoice::from_json(&j).unwrap();
+            assert_eq!(back, c);
+            // canonical: parse(serialize(x)) serializes identically
+            assert_eq!(back.to_json().to_string(), j.to_string());
+        }
+        let bad = Json::obj(vec![
+            ("density", Json::Num(1.5)),
+            ("scheme", Json::Str("pattern".to_string())),
+        ]);
+        assert!(SchemeChoice::from_json(&bad).is_err());
+        let unknown = Json::obj(vec![
+            ("density", Json::Num(0.5)),
+            ("scheme", Json::Str("vibes".to_string())),
+        ]);
+        assert!(SchemeChoice::from_json(&unknown).is_err());
+    }
+
+    #[test]
+    fn empty_scheme_map_matches_summarize_exactly() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let mut st = PruneState::full(&m);
+        st.shrink(m.prunable[0], 4);
+        let dense = summarize(&m, &st, Criterion::L1Norm);
+        let masked = masked_summary(&m, &st, &SchemeMap::new(), Criterion::L1Norm);
+        assert_eq!(dense.layers.len(), masked.layers.len());
+        for (a, b) in dense.layers.iter().zip(&masked.layers) {
+            assert_eq!(a.conv, b.conv);
+            assert_eq!(a.remaining_channels, b.remaining_channels);
+            assert_eq!(a.depth, b.depth);
+        }
+    }
+
+    #[test]
+    fn masked_layers_report_fewer_effective_channels() {
+        let m = Model::build(ModelKind::ResNet8Cifar, 0);
+        let st = PruneState::full(&m);
+        let conv = m.prunable[0];
+        let mut schemes = SchemeMap::new();
+        schemes.insert(conv, SchemeChoice::pattern());
+        let s = masked_summary(&m, &st, &schemes, Criterion::L1Norm);
+        let l = s.layers.iter().find(|l| l.conv == conv).unwrap();
+        assert!(l.remaining_channels < l.original_channels);
+        assert!(l.remaining_channels >= 2);
+        // pattern retains more effective channels than block at its
+        // (lower) density raised to the retention exponents
+        let pat = effective_channels(64, &SchemeChoice::pattern());
+        let blk = effective_channels(64, &SchemeChoice::block());
+        assert!(pat > blk, "pattern {pat} should retain more than block {blk}");
+        // channel choice is the identity
+        assert_eq!(effective_channels(64, &SchemeChoice::channel()), 64);
+    }
+
+    #[test]
+    fn effective_channels_floors_at_two() {
+        assert_eq!(effective_channels(2, &SchemeChoice::block()), 2);
+        assert_eq!(effective_channels(3, &SchemeChoice::pattern()), 2);
+    }
+}

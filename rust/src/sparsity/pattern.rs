@@ -1,0 +1,158 @@
+//! PatDNN-style kernel pattern library (DESIGN.md §16).
+//!
+//! Every 3×3 kernel of a pattern-sparse layer keeps the same number of
+//! taps ([`KEPT_TAPS`] of [`TOTAL_TAPS`]), drawn from a small fixed
+//! library — that regularity is what lets the compiler compact the
+//! kernels and reorder filters so the sparse loop nest stays dense
+//! inside (arXiv 2001.00138, §3). Each filter independently picks the
+//! library pattern that retains the most ℓ1 mass, mirroring the
+//! magnitude criterion the channel path uses
+//! ([`crate::graph::weights::Weights::l1_norms`]).
+//!
+//! Tap indices address the 3×3 kernel row-major:
+//!
+//! ```text
+//!   0 1 2
+//!   3 4 5
+//!   6 7 8
+//! ```
+//!
+//! Every library pattern contains the center tap 4 — PatDNN's observed
+//! property of trained kernels, and what keeps the scheme's accuracy
+//! retention high (see `retention_exponent` in [`crate::sparsity`]).
+
+use crate::graph::ops::OpKind;
+use crate::graph::weights::Weights;
+
+/// Taps each kernel keeps.
+pub const KEPT_TAPS: usize = 4;
+/// Taps of a 3×3 kernel.
+pub const TOTAL_TAPS: usize = 9;
+/// Weight density of a pattern-sparse layer.
+pub const DENSITY: f64 = KEPT_TAPS as f64 / TOTAL_TAPS as f64;
+
+/// The pattern library: 8 four-tap patterns, all containing the center
+/// tap, covering the cross/corner shapes PatDNN's clustering finds.
+pub const PATTERNS: [[usize; KEPT_TAPS]; 8] = [
+    [1, 3, 4, 5],
+    [1, 4, 5, 7],
+    [3, 4, 5, 7],
+    [1, 3, 4, 7],
+    [0, 1, 3, 4],
+    [1, 2, 4, 5],
+    [3, 4, 6, 7],
+    [4, 5, 7, 8],
+];
+
+/// Whether the scheme can lower this operator: plain (non-grouped) 3×3
+/// convolutions only — the shape the pattern library is defined over.
+pub fn applicable(op: &OpKind) -> bool {
+    matches!(op, OpKind::Conv2d { kh: 3, kw: 3, groups: 1, .. })
+}
+
+/// Library index of the pattern retaining the most ℓ1 mass for one
+/// flattened HWI filter (`cin_g` input channels per tap; tap `t` owns
+/// `filter[t*cin_g .. (t+1)*cin_g]`). Ties break to the lowest index
+/// for determinism.
+pub fn best_pattern(filter: &[f32], cin_g: usize) -> usize {
+    let mut best = 0usize;
+    let mut best_mass = f32::NEG_INFINITY;
+    for (i, taps) in PATTERNS.iter().enumerate() {
+        let mass: f32 = taps
+            .iter()
+            .map(|&t| filter[t * cin_g..(t + 1) * cin_g].iter().map(|w| w.abs()).sum::<f32>())
+            .sum();
+        if mass.total_cmp(&best_mass) == std::cmp::Ordering::Greater {
+            best = i;
+            best_mass = mass;
+        }
+    }
+    best
+}
+
+/// Per-filter pattern assignment for a conv's current weight bank:
+/// `assignment[f]` is the library index filter `f` keeps. Empty when
+/// the conv has no weights recorded.
+pub fn assignment(weights: &Weights, conv: usize, cin_g: usize) -> Vec<usize> {
+    weights
+        .convs
+        .get(&conv)
+        .map(|filters| filters.iter().map(|f| best_pattern(f, cin_g)).collect())
+        .unwrap_or_default()
+}
+
+/// Sorted, de-duplicated library indices an assignment uses — the
+/// `params` of a pattern [`crate::sparsity::mask::LayerMask`].
+pub fn used_patterns(assignment: &[usize]) -> Vec<usize> {
+    let mut used: Vec<usize> = assignment.to_vec();
+    used.sort_unstable();
+    used.dedup();
+    used
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::Graph;
+
+    #[test]
+    fn library_is_well_formed() {
+        for taps in PATTERNS {
+            assert!(taps.contains(&4), "pattern {taps:?} drops the center tap");
+            assert!(taps.windows(2).all(|w| w[0] < w[1]), "unsorted {taps:?}");
+            assert!(taps.iter().all(|&t| t < TOTAL_TAPS));
+        }
+        assert!((DENSITY - 4.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn applicability_is_shape_driven() {
+        let three = OpKind::Conv2d { kh: 3, kw: 3, cin: 16, cout: 16, stride: 1, padding: 1, groups: 1 };
+        let one = OpKind::Conv2d { kh: 1, kw: 1, cin: 16, cout: 16, stride: 1, padding: 0, groups: 1 };
+        let dw = OpKind::Conv2d { kh: 3, kw: 3, cin: 16, cout: 16, stride: 1, padding: 1, groups: 16 };
+        assert!(applicable(&three));
+        assert!(!applicable(&one));
+        assert!(!applicable(&dw));
+        assert!(!applicable(&OpKind::ReLU));
+    }
+
+    #[test]
+    fn best_pattern_maximizes_retained_mass() {
+        // cin_g = 1: the filter IS the 9-tap kernel. Put all mass on the
+        // top row + center — pattern [0,1,3,4] (index 4) wins.
+        let mut f = vec![0.0f32; 9];
+        f[0] = 1.0;
+        f[1] = 1.0;
+        f[3] = 1.0;
+        f[4] = 1.0;
+        assert_eq!(best_pattern(&f, 1), 4);
+        // bottom-right corner mass — pattern [4,5,7,8] (index 7) wins.
+        let mut g = vec![0.0f32; 9];
+        g[5] = 1.0;
+        g[7] = 1.0;
+        g[8] = 1.0;
+        assert_eq!(best_pattern(&g, 1), 7);
+        // all-equal mass ties: lowest library index wins.
+        assert_eq!(best_pattern(&[1.0f32; 9], 1), 0);
+    }
+
+    #[test]
+    fn assignment_is_deterministic_per_seed() {
+        let mut g = Graph::new();
+        let x = g.add("x", OpKind::Input { shape: [1, 8, 8, 4] }, vec![]);
+        g.add(
+            "c",
+            OpKind::Conv2d { kh: 3, kw: 3, cin: 4, cout: 8, stride: 1, padding: 1, groups: 1 },
+            vec![x],
+        );
+        let w1 = Weights::generate(&g, 7);
+        let w2 = Weights::generate(&g, 7);
+        let a1 = assignment(&w1, 1, 4);
+        let a2 = assignment(&w2, 1, 4);
+        assert_eq!(a1, a2);
+        assert_eq!(a1.len(), 8);
+        assert!(a1.iter().all(|&p| p < PATTERNS.len()));
+        let used = used_patterns(&a1);
+        assert!(used.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -1,0 +1,652 @@
+//! Scheme-aware [`Pruner`] registry entries (DESIGN.md §16).
+//!
+//! * [`PatternPruner`] / [`BlockPruner`] — one-shot baselines that mask
+//!   every applicable conv with the scheme's canonical choice and price
+//!   the result through [`crate::sparsity::cost::masked_model_latency`]
+//!   (the PatDNN / N:M "one scheme everywhere" reference points);
+//! * [`SchemeSelect`] — the CPrune variant: the same subgraph-informed
+//!   Algorithm-1 loop, but each selected task first tries *masking* its
+//!   anchors with each allowed scheme (priced per device kind, no
+//!   re-tune needed) before falling back to channel pruning. Whichever
+//!   candidate passes the latency target and the accuracy gate is
+//!   accepted, so the per-layer scheme assignment is decided by measured
+//!   latency on the target device under the same α/β gates as channel
+//!   moves — compiler-informed scheme selection.
+
+use crate::accuracy::{Criterion, TrainPhase};
+use crate::compiler;
+use crate::graph::ops::NodeId;
+use crate::graph::prune::{apply, PruneState};
+use crate::graph::stats;
+use crate::graph::weights::Weights;
+use crate::pruner::{CPruneConfig, IterationLog};
+use crate::relay::partition::partition;
+use crate::run::{PruneOutcome, Pruner, RejectReason, RunContext, RunEvent};
+use crate::serve::{Checkpoint, ParetoSet};
+use crate::sparsity::{
+    block, cost::masked_model_latency, masked_summary, pattern, Scheme, SchemeChoice, SchemeMap,
+};
+use crate::tir::{Program, Workload};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::time::Instant;
+
+/// Per-conv weight densities of a scheme assignment — the shape
+/// [`stats::effective_flops_params`] consumes.
+fn densities(schemes: &SchemeMap) -> BTreeMap<NodeId, f64> {
+    schemes.iter().map(|(&conv, choice)| (conv, choice.density)).collect()
+}
+
+/// Shared body of the one-shot scheme baselines: mask every applicable
+/// conv, price the mask analytically over the tuned dense schedule, and
+/// report the oracle's final accuracy of the masked summary.
+fn one_shot_scheme(
+    ctx: &mut RunContext,
+    scheme: Scheme,
+    name: &str,
+    method: &str,
+) -> PruneOutcome {
+    let model = ctx.model;
+    let session = ctx.session;
+    let baseline_latency = ctx.baseline_latency();
+    let compiled = compiler::compile_tuned(&model.graph, session, &HashMap::new());
+    let part = partition(&model.graph);
+    let kind = session.spec().kind;
+
+    let mut schemes = SchemeMap::new();
+    for &conv in &model.prunable {
+        let op = &model.graph.node(conv).op;
+        let ok = match scheme {
+            Scheme::Pattern => pattern::applicable(op),
+            Scheme::Block => block::applicable(op),
+            Scheme::Channel => false,
+        };
+        if ok {
+            schemes.insert(conv, SchemeChoice::for_scheme(scheme));
+        }
+    }
+
+    let latency =
+        masked_model_latency(&part, &compiled.table, compiled.overhead_latency, kind, &schemes);
+    let state = PruneState::full(model);
+    let summary = masked_summary(model, &state, &schemes, Criterion::L1Norm);
+    let top1 = ctx.oracle.top1(&summary, TrainPhase::Final);
+    let top5 = ctx.oracle.top5(&summary, TrainPhase::Final);
+    let (flops, params) = stats::effective_flops_params(&model.graph, &densities(&schemes));
+    let channels = state.cout;
+    let checkpoint = Checkpoint {
+        iteration: 1,
+        latency,
+        accuracy: top1,
+        channels: channels.clone(),
+        schemes: schemes.clone(),
+    };
+    ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: checkpoint.clone() });
+    let mut pareto = ParetoSet::new();
+    pareto.insert(checkpoint);
+    PruneOutcome {
+        pruner: name.to_string(),
+        method: method.to_string(),
+        model: model.kind.name().to_string(),
+        device: ctx.device().to_string(),
+        baseline_latency,
+        final_latency: latency,
+        final_fps: 1.0 / latency,
+        fps_increase_rate: baseline_latency / latency,
+        macs: flops / 2,
+        params,
+        top1,
+        top5,
+        channels,
+        pareto,
+        iterations: Vec::new(),
+        search_candidates: 0,
+        main_step_seconds: 0.0,
+        programs_measured: session.measured_count(),
+    }
+}
+
+/// One-shot PatDNN-style pattern masking of every applicable 3×3 conv.
+pub struct PatternPruner;
+
+impl Pruner for PatternPruner {
+    fn name(&self) -> &str {
+        "pattern"
+    }
+
+    fn run(&self, ctx: &mut RunContext) -> PruneOutcome {
+        one_shot_scheme(ctx, Scheme::Pattern, "pattern", "PatDNN(4-of-9)")
+    }
+}
+
+/// One-shot 2:4 block masking of every applicable conv.
+pub struct BlockPruner;
+
+impl Pruner for BlockPruner {
+    fn name(&self) -> &str {
+        "block"
+    }
+
+    fn run(&self, ctx: &mut RunContext) -> PruneOutcome {
+        one_shot_scheme(ctx, Scheme::Block, "block", "Block(2:4)")
+    }
+}
+
+/// The CPrune scheme-selection variant: Algorithm 1's subgraph-informed
+/// loop where every selected task offers its mask candidates *before*
+/// its channel candidate, all judged by the same measured-latency target
+/// `l_t = β·l_m` and short-accuracy gate `a_s ≥ α·a_p`.
+pub struct SchemeSelect {
+    pub cfg: CPruneConfig,
+    /// Non-channel schemes the loop may assign. Channel pruning is
+    /// always available (it is the fallback move, exactly CPrune).
+    pub allowed: Vec<Scheme>,
+    label: String,
+}
+
+impl Default for SchemeSelect {
+    fn default() -> Self {
+        SchemeSelect {
+            cfg: CPruneConfig::default(),
+            allowed: vec![Scheme::Pattern, Scheme::Block],
+            label: "CPrune+SchemeSelect".to_string(),
+        }
+    }
+}
+
+impl SchemeSelect {
+    /// Auto scheme search under an explicit CPrune configuration
+    /// (mirrors [`crate::run::CPrune::with_cfg`] for equal-budget
+    /// comparisons).
+    pub fn with_cfg(cfg: CPruneConfig) -> SchemeSelect {
+        SchemeSelect {
+            cfg,
+            ..SchemeSelect::default()
+        }
+    }
+
+    /// Build from the CLI's `--scheme` flag: `auto` considers every
+    /// non-channel scheme, a scheme name restricts the search to it, and
+    /// `channel` disables masking (plain CPrune moves under this
+    /// pruner's accounting).
+    pub fn from_scheme_flag(flag: &str) -> Result<SchemeSelect, String> {
+        let mut sel = SchemeSelect::default();
+        match flag {
+            "auto" => {}
+            "channel" => sel.allowed = Vec::new(),
+            other => match Scheme::from_name(other) {
+                Some(Scheme::Channel) | None => {
+                    return Err(format!(
+                        "unknown --scheme '{flag}' (expected auto, channel, pattern or block)"
+                    ));
+                }
+                Some(s) => sel.allowed = vec![s],
+            },
+        }
+        Ok(sel)
+    }
+
+    fn effective_cfg(&self, ctx: &RunContext) -> CPruneConfig {
+        let mut cfg = self.cfg.clone();
+        if let Some(a) = ctx.accuracy_budget {
+            cfg.target_accuracy = a;
+        }
+        if let Some(n) = ctx.max_iterations {
+            cfg.max_iterations = n;
+        }
+        cfg
+    }
+}
+
+impl Pruner for SchemeSelect {
+    fn name(&self) -> &str {
+        "scheme-select"
+    }
+
+    fn run(&self, ctx: &mut RunContext) -> PruneOutcome {
+        let cfg = self.effective_cfg(ctx);
+        let t0 = Instant::now();
+        let model = ctx.model;
+        let session = ctx.session;
+        let kind = session.spec().kind;
+
+        // Line 1: initial tune of M.
+        let baseline = compiler::compile_tuned(&model.graph, session, &HashMap::new());
+        let base_latency = baseline.latency();
+        ctx.set_baseline(base_latency, baseline.fps());
+
+        let mut state = PruneState::full(model);
+        let mut weights = model.weights.clone();
+        let mut graph = model.graph.clone();
+        let mut table = baseline.table.clone();
+        let mut overhead = baseline.overhead_latency;
+        let mut schemes = SchemeMap::new();
+        let mut l_t = cfg.beta * base_latency;
+        let mut a_p = ctx
+            .oracle
+            .top1(&masked_summary(model, &state, &schemes, cfg.criterion), TrainPhase::Short);
+        let mut banned: BTreeSet<NodeId> = BTreeSet::new();
+        let mut mask_rejected: BTreeSet<(NodeId, Scheme)> = BTreeSet::new();
+        let mut iterations: Vec<IterationLog> = Vec::new();
+        let mut candidates_tried = 0usize;
+
+        let mut pareto = ParetoSet::new();
+        let baseline_checkpoint = Checkpoint {
+            iteration: 0,
+            latency: base_latency,
+            accuracy: a_p,
+            channels: state.cout.clone(),
+            schemes: SchemeMap::new(),
+        };
+        ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: baseline_checkpoint.clone() });
+        pareto.insert(baseline_checkpoint);
+
+        'outer: for iter_no in 0..cfg.max_iterations {
+            if a_p <= cfg.target_accuracy || candidates_tried >= cfg.max_candidates {
+                break;
+            }
+            let part = partition(&graph);
+            let ordered = table.by_pruning_impact();
+
+            let mut accepted = false;
+            for tid in ordered {
+                let tinfo = table.get(tid).clone();
+                let anchors: Vec<NodeId> = tinfo
+                    .subgraphs
+                    .iter()
+                    .filter_map(|&sgid| part.subgraphs.get(sgid).map(|s| s.anchor))
+                    .collect();
+                if anchors.is_empty()
+                    || anchors.iter().any(|a| banned.contains(a))
+                    || !anchors.iter().all(|a| state.cout.contains_key(a))
+                {
+                    continue;
+                }
+
+                // -- Mask candidates first: price each allowed scheme over
+                // the *current* tuned table (no re-tune) and keep the ones
+                // passing the latency target, cheapest first.
+                let mut mask_cands: Vec<(Scheme, f64)> = Vec::new();
+                for &scheme in &self.allowed {
+                    if anchors.iter().any(|a| schemes.contains_key(a))
+                        || mask_rejected.contains(&(anchors[0], scheme))
+                    {
+                        continue;
+                    }
+                    let applicable = anchors.iter().all(|&a| {
+                        let op = &graph.node(a).op;
+                        match scheme {
+                            Scheme::Pattern => pattern::applicable(op),
+                            Scheme::Block => block::applicable(op),
+                            Scheme::Channel => false,
+                        }
+                    });
+                    if !applicable {
+                        continue;
+                    }
+                    let mut cand_schemes = schemes.clone();
+                    for &a in &anchors {
+                        cand_schemes.insert(a, SchemeChoice::for_scheme(scheme));
+                    }
+                    let l_m = masked_model_latency(&part, &table, overhead, kind, &cand_schemes);
+                    candidates_tried += 1;
+                    ctx.emit(&RunEvent::CandidateMeasured {
+                        iteration: iter_no + 1,
+                        latency: l_m,
+                        latency_target: l_t,
+                        candidates_tried,
+                        scheme: Some(scheme),
+                    });
+                    if candidates_tried > cfg.max_candidates {
+                        break 'outer;
+                    }
+                    if l_m >= l_t {
+                        ctx.emit(&RunEvent::IterationRejected {
+                            iteration: iter_no + 1,
+                            latency: l_m,
+                            latency_target: l_t,
+                            short_accuracy: None,
+                            accuracy_gate: None,
+                            reason: RejectReason::LatencyGate,
+                        });
+                        continue;
+                    }
+                    mask_cands.push((scheme, l_m));
+                }
+                mask_cands.sort_by(|a, b| a.1.total_cmp(&b.1));
+
+                // Accuracy-gate the surviving masks, fastest first.
+                for (scheme, l_m) in mask_cands {
+                    let mut cand_schemes = schemes.clone();
+                    for &a in &anchors {
+                        cand_schemes.insert(a, SchemeChoice::for_scheme(scheme));
+                    }
+                    let a_s = ctx.oracle.top1(
+                        &masked_summary(model, &state, &cand_schemes, cfg.criterion),
+                        TrainPhase::Short,
+                    );
+                    if a_s < cfg.alpha * a_p {
+                        // Remember the refusal per (task, scheme) — the
+                        // task itself stays live for channel pruning.
+                        mask_rejected.insert((anchors[0], scheme));
+                        ctx.emit(&RunEvent::IterationRejected {
+                            iteration: iter_no + 1,
+                            latency: l_m,
+                            latency_target: l_t,
+                            short_accuracy: Some(a_s),
+                            accuracy_gate: Some(cfg.alpha * a_p),
+                            reason: RejectReason::AccuracyGate,
+                        });
+                        continue;
+                    }
+                    if a_s <= cfg.target_accuracy {
+                        ctx.emit(&RunEvent::IterationRejected {
+                            iteration: iter_no + 1,
+                            latency: l_m,
+                            latency_target: l_t,
+                            short_accuracy: Some(a_s),
+                            accuracy_gate: Some(cfg.target_accuracy),
+                            reason: RejectReason::AccuracyBudget,
+                        });
+                        break 'outer;
+                    }
+                    // Accept the mask move.
+                    schemes = cand_schemes;
+                    ctx.emit(&RunEvent::IterationAccepted {
+                        iteration: iter_no + 1,
+                        latency: l_m,
+                        latency_target: l_t,
+                        short_accuracy: a_s,
+                        accuracy_gate: cfg.alpha * a_p,
+                        filters_removed: 0,
+                        scheme: Some(scheme),
+                    });
+                    let accepted_target = l_t;
+                    let accepted_gate = cfg.alpha * a_p;
+                    l_t = cfg.beta * l_m;
+                    a_p = a_s;
+                    let checkpoint = Checkpoint {
+                        iteration: iter_no + 1,
+                        latency: l_m,
+                        accuracy: a_s,
+                        channels: state.cout.clone(),
+                        schemes: schemes.clone(),
+                    };
+                    ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: checkpoint.clone() });
+                    ctx.journal_accept(crate::run::journal::IterationRecord {
+                        iteration: iter_no + 1,
+                        latency: l_m,
+                        latency_target: accepted_target,
+                        short_accuracy: a_s,
+                        accuracy_gate: accepted_gate,
+                        filters_removed: 0,
+                        candidates_tried,
+                        checkpoint: checkpoint.clone(),
+                    });
+                    pareto.insert(checkpoint);
+                    iterations.push(IterationLog {
+                        iteration: iter_no + 1,
+                        pruned_convs: anchors.clone(),
+                        filters_removed: 0,
+                        latency: l_m,
+                        fps_rate: base_latency / l_m,
+                        short_accuracy: a_s,
+                        candidates_tried,
+                    });
+                    accepted = true;
+                    break;
+                }
+                if accepted {
+                    break;
+                }
+
+                // -- Channel fallback: exactly the CPrune move, priced and
+                // accuracy-gated under the current scheme assignment.
+                let Some(prog) = tinfo.best_program.clone() else { continue };
+                let step = prog.min_filter_prune_step().max(1);
+                let remaining = state.remaining(anchors[0]);
+                if remaining <= 2 || remaining.saturating_sub(step) < 2 {
+                    banned.insert(anchors[0]);
+                    ctx.emit(&RunEvent::TaskBanned {
+                        conv: anchors[0],
+                        reason: "channel_floor".to_string(),
+                    });
+                    continue;
+                }
+                let targets: Vec<NodeId> = if cfg.associated_subgraphs {
+                    anchors.clone()
+                } else {
+                    vec![anchors[0]]
+                };
+
+                for mult in [1usize, 2, 4, 8] {
+                    let k_want = step * mult;
+                    if k_want >= remaining.saturating_sub(2) && mult > 1 {
+                        break;
+                    }
+                    let mut cand_state = state.clone();
+                    let mut cand_weights = weights.clone();
+                    let mut removed_total = 0usize;
+                    for &conv in &targets {
+                        let scores = match cfg.criterion {
+                            Criterion::GeomMedian => cand_weights.gm_distances(conv),
+                            _ => cand_weights.l1_norms(conv),
+                        };
+                        let k = k_want.min(cand_state.remaining(conv).saturating_sub(2));
+                        if k == 0 {
+                            continue;
+                        }
+                        let idx = Weights::lowest_k(&scores, k);
+                        cand_weights.remove_filters(conv, &idx);
+                        removed_total += cand_state.shrink(conv, k);
+                    }
+                    if removed_total == 0 {
+                        banned.insert(anchors[0]);
+                        ctx.emit(&RunEvent::TaskBanned {
+                            conv: anchors[0],
+                            reason: "no_channels_removed".to_string(),
+                        });
+                        break;
+                    }
+                    let cand_graph = match apply(&model.graph, &cand_state.cout) {
+                        Ok(g) => g,
+                        Err(_) => {
+                            banned.insert(anchors[0]);
+                            ctx.emit(&RunEvent::TaskBanned {
+                                conv: anchors[0],
+                                reason: "invalid_graph".to_string(),
+                            });
+                            break;
+                        }
+                    };
+
+                    let mut seeds: HashMap<Workload, Program> = HashMap::new();
+                    let new_ff = cand_state.remaining(targets[0]);
+                    if let Some(adj) = prog.with_pruned_filters(new_ff) {
+                        let mut w2 = tinfo.workload.clone();
+                        w2.ff = new_ff;
+                        seeds.insert(w2, adj);
+                    }
+                    let cand = compiler::compile_tuned(&cand_graph, session, &seeds);
+                    let cand_part = partition(&cand_graph);
+                    let l_m = masked_model_latency(
+                        &cand_part,
+                        &cand.table,
+                        cand.overhead_latency,
+                        kind,
+                        &schemes,
+                    );
+                    candidates_tried += 1;
+                    ctx.emit(&RunEvent::CandidateMeasured {
+                        iteration: iter_no + 1,
+                        latency: l_m,
+                        latency_target: l_t,
+                        candidates_tried,
+                        scheme: Some(Scheme::Channel),
+                    });
+                    if candidates_tried > cfg.max_candidates {
+                        break 'outer;
+                    }
+                    if l_m >= l_t {
+                        ctx.emit(&RunEvent::IterationRejected {
+                            iteration: iter_no + 1,
+                            latency: l_m,
+                            latency_target: l_t,
+                            short_accuracy: None,
+                            accuracy_gate: None,
+                            reason: RejectReason::LatencyGate,
+                        });
+                        continue;
+                    }
+                    let a_s = ctx.oracle.top1(
+                        &masked_summary(model, &cand_state, &schemes, cfg.criterion),
+                        TrainPhase::Short,
+                    );
+                    if a_s < cfg.alpha * a_p {
+                        banned.insert(anchors[0]);
+                        ctx.emit(&RunEvent::IterationRejected {
+                            iteration: iter_no + 1,
+                            latency: l_m,
+                            latency_target: l_t,
+                            short_accuracy: Some(a_s),
+                            accuracy_gate: Some(cfg.alpha * a_p),
+                            reason: RejectReason::AccuracyGate,
+                        });
+                        ctx.emit(&RunEvent::TaskBanned {
+                            conv: anchors[0],
+                            reason: "accuracy_gate".to_string(),
+                        });
+                        break;
+                    }
+                    if a_s <= cfg.target_accuracy {
+                        ctx.emit(&RunEvent::IterationRejected {
+                            iteration: iter_no + 1,
+                            latency: l_m,
+                            latency_target: l_t,
+                            short_accuracy: Some(a_s),
+                            accuracy_gate: Some(cfg.target_accuracy),
+                            reason: RejectReason::AccuracyBudget,
+                        });
+                        break 'outer;
+                    }
+                    state = cand_state;
+                    weights = cand_weights;
+                    graph = cand_graph;
+                    table = cand.table;
+                    overhead = cand.overhead_latency;
+                    ctx.emit(&RunEvent::IterationAccepted {
+                        iteration: iter_no + 1,
+                        latency: l_m,
+                        latency_target: l_t,
+                        short_accuracy: a_s,
+                        accuracy_gate: cfg.alpha * a_p,
+                        filters_removed: removed_total,
+                        scheme: Some(Scheme::Channel),
+                    });
+                    let accepted_target = l_t;
+                    let accepted_gate = cfg.alpha * a_p;
+                    l_t = cfg.beta * l_m;
+                    a_p = a_s;
+                    let checkpoint = Checkpoint {
+                        iteration: iter_no + 1,
+                        latency: l_m,
+                        accuracy: a_s,
+                        channels: state.cout.clone(),
+                        schemes: schemes.clone(),
+                    };
+                    ctx.emit(&RunEvent::CheckpointEmitted { checkpoint: checkpoint.clone() });
+                    ctx.journal_accept(crate::run::journal::IterationRecord {
+                        iteration: iter_no + 1,
+                        latency: l_m,
+                        latency_target: accepted_target,
+                        short_accuracy: a_s,
+                        accuracy_gate: accepted_gate,
+                        filters_removed: removed_total,
+                        candidates_tried,
+                        checkpoint: checkpoint.clone(),
+                    });
+                    pareto.insert(checkpoint);
+                    iterations.push(IterationLog {
+                        iteration: iter_no + 1,
+                        pruned_convs: targets.clone(),
+                        filters_removed: removed_total,
+                        latency: l_m,
+                        fps_rate: base_latency / l_m,
+                        short_accuracy: a_s,
+                        candidates_tried,
+                    });
+                    accepted = true;
+                    break;
+                }
+                if accepted {
+                    break;
+                }
+            }
+            if !accepted {
+                break;
+            }
+        }
+        let main_step_seconds = t0.elapsed().as_secs_f64();
+
+        // Final tune + masked evaluation of the end state.
+        let final_compiled = compiler::compile_tuned(&graph, session, &HashMap::new());
+        let final_latency = masked_model_latency(
+            &partition(&graph),
+            &final_compiled.table,
+            final_compiled.overhead_latency,
+            kind,
+            &schemes,
+        );
+        let summary = masked_summary(model, &state, &schemes, cfg.criterion);
+        let top1 = ctx.oracle.top1(&summary, TrainPhase::Final);
+        let top5 = ctx.oracle.top5(&summary, TrainPhase::Final);
+        let (flops, params) = stats::effective_flops_params(&graph, &densities(&schemes));
+
+        PruneOutcome {
+            pruner: self.name().to_string(),
+            method: self.label.clone(),
+            model: model.kind.name().to_string(),
+            device: ctx.device().to_string(),
+            baseline_latency: base_latency,
+            final_latency,
+            final_fps: 1.0 / final_latency,
+            fps_increase_rate: base_latency / final_latency,
+            macs: flops / 2,
+            params,
+            top1,
+            top5,
+            channels: state.cout,
+            pareto,
+            iterations,
+            search_candidates: candidates_tried,
+            main_step_seconds,
+            programs_measured: session.measured_count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_flag_parses_every_documented_value() {
+        assert_eq!(
+            SchemeSelect::from_scheme_flag("auto").unwrap().allowed,
+            vec![Scheme::Pattern, Scheme::Block]
+        );
+        assert!(SchemeSelect::from_scheme_flag("channel").unwrap().allowed.is_empty());
+        assert_eq!(
+            SchemeSelect::from_scheme_flag("pattern").unwrap().allowed,
+            vec![Scheme::Pattern]
+        );
+        assert_eq!(SchemeSelect::from_scheme_flag("block").unwrap().allowed, vec![Scheme::Block]);
+        assert!(SchemeSelect::from_scheme_flag("vibes").is_err());
+    }
+
+    #[test]
+    fn registry_names_are_stable() {
+        assert_eq!(PatternPruner.name(), "pattern");
+        assert_eq!(BlockPruner.name(), "block");
+        assert_eq!(SchemeSelect::default().name(), "scheme-select");
+    }
+}

@@ -18,11 +18,18 @@
 //! to [`crate::verify::program`] (DESIGN.md §13), which also runs inside
 //! the artifact checker so a persisted program must stay legal for the
 //! workload key it is cached under.
+//!
+//! `sparse.rs` describes how a pattern- or block-sparse layer lowers
+//! onto the dense loop nest ([`sparse::SparseLowering`], DESIGN.md §16):
+//! the compute scale a scheme buys and whether it needs a data-reorder
+//! stage, which the per-device cost model in [`crate::device::sparse`]
+//! prices.
 
 pub mod jsonio;
 pub mod loopnest;
 pub mod lower;
 pub mod program;
+pub mod sparse;
 
 pub use loopnest::Workload;
 pub use program::Program;

@@ -1,0 +1,81 @@
+//! Sparse lowering classes (DESIGN.md §16).
+//!
+//! How a [`crate::sparsity::Scheme`] reaches the generated loop nest.
+//! The class determines two things the cost model needs: the *compute
+//! scale* (fraction of the dense inner-loop trips that survive) and
+//! whether the lowering must *reorder* filters to keep the inner loop
+//! dense — PatDNN's kernel compaction groups filters by pattern, which
+//! is a gather the device pays for; N:M block skipping runs in place at
+//! fixed stride; a dense channel shrink is just a smaller dense kernel.
+//! Per-device pricing of these classes lives in
+//! [`crate::device::sparse::scheme_factor`].
+
+use crate::sparsity::{Scheme, SchemeChoice};
+
+/// How a scheme lowers to TIR.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparseLowering {
+    /// Channel pruning: the kernel shrinks densely; nothing sparse to
+    /// lower.
+    DenseShrink,
+    /// Pattern sparsity: kernels compact to `taps` of `total` taps;
+    /// filters sharing a pattern are grouped so the inner loop is dense
+    /// over the kept taps (requires a filter reorder).
+    PatternCompact { taps: usize, total: usize },
+    /// N:M block sparsity: of every `group` consecutive fan-in weights,
+    /// `keep` survive; the loop skips at fixed stride, no reorder.
+    BlockSkip { keep: usize, group: usize },
+}
+
+impl SparseLowering {
+    /// The canonical lowering of a scheme choice.
+    pub fn for_choice(choice: &SchemeChoice) -> SparseLowering {
+        match choice.scheme {
+            Scheme::Channel => SparseLowering::DenseShrink,
+            Scheme::Pattern => SparseLowering::PatternCompact {
+                taps: crate::sparsity::pattern::KEPT_TAPS,
+                total: crate::sparsity::pattern::TOTAL_TAPS,
+            },
+            Scheme::Block => SparseLowering::BlockSkip {
+                keep: crate::sparsity::block::KEEP,
+                group: crate::sparsity::block::GROUP,
+            },
+        }
+    }
+
+    /// Fraction of the dense inner-loop trips that survive.
+    pub fn compute_scale(&self) -> f64 {
+        match *self {
+            SparseLowering::DenseShrink => 1.0,
+            SparseLowering::PatternCompact { taps, total } => taps as f64 / total as f64,
+            SparseLowering::BlockSkip { keep, group } => keep as f64 / group as f64,
+        }
+    }
+
+    /// Whether the lowering must gather/reorder filters before the dense
+    /// inner loop can run.
+    pub fn needs_reorder(&self) -> bool {
+        matches!(self, SparseLowering::PatternCompact { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lowering_matches_scheme_density() {
+        for s in Scheme::ALL {
+            let c = SchemeChoice::for_scheme(s);
+            let l = SparseLowering::for_choice(&c);
+            assert_eq!(l.compute_scale(), c.density, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn only_pattern_compaction_reorders() {
+        assert!(!SparseLowering::DenseShrink.needs_reorder());
+        assert!(SparseLowering::PatternCompact { taps: 4, total: 9 }.needs_reorder());
+        assert!(!SparseLowering::BlockSkip { keep: 2, group: 4 }.needs_reorder());
+    }
+}

@@ -10,8 +10,10 @@
 //! sit inside their domains (CPV123), cached/traced programs are legal
 //! for their workloads (CPV110–112 via [`super::program`]), persisted
 //! Pareto frontiers are mutually non-dominated and ascending in both
-//! objectives (CPV130/131 via [`frontier_diagnostics`]), and remote
-//! traces carry well-formed jitter samples (CPV150–152, DESIGN.md §14).
+//! objectives (CPV130/131 via [`frontier_diagnostics`]), remote
+//! traces carry well-formed jitter samples (CPV150–152, DESIGN.md §14),
+//! and sparsity mask sets arrive ordered with internally consistent
+//! scheme parameters (CPV170–172, DESIGN.md §16).
 //!
 //! A document that does not claim a `cprune-*` format is not ours:
 //! `check_text` returns `None` and the [`super::sweep`] walker skips it.
@@ -27,6 +29,7 @@ use crate::perf::{BENCH_FORMAT, BENCH_VERSION};
 use crate::run::events::{EVENTS_FORMAT, EVENTS_VERSION};
 use crate::run::journal::{JOURNAL_FORMAT, JOURNAL_VERSION};
 use crate::serve::{Checkpoint, REGISTRY_FORMAT, REGISTRY_VERSION};
+use crate::sparsity::{pattern, Scheme, MASKS_FORMAT, MASKS_VERSION};
 use crate::tir::jsonio::{program_from_json, program_to_json, workload_from_json, workload_to_json};
 use crate::tuner::cache::{CACHE_FORMAT, CACHE_VERSION};
 use crate::util::json::{self, Json};
@@ -38,7 +41,7 @@ pub const BENCH_GOLDEN_FORMAT: &str = "cprune-bench-golden";
 /// Every format tag the checker understands. A file that fails to parse
 /// is only reported (CPV190) when it mentions one of these — arbitrary
 /// foreign JSON is none of our business.
-const KNOWN_FORMATS: [&str; 10] = [
+const KNOWN_FORMATS: [&str; 11] = [
     CACHE_FORMAT,
     TRACE_FORMAT,
     REMOTE_TRACE_FORMAT,
@@ -49,6 +52,7 @@ const KNOWN_FORMATS: [&str; 10] = [
     BENCH_GOLDEN_FORMAT,
     EVENTS_FORMAT,
     JOURNAL_FORMAT,
+    MASKS_FORMAT,
 ];
 
 /// Check a document. `None` = not a cprune artifact; `Some(vec![])` = a
@@ -79,6 +83,7 @@ pub fn check_text(text: &str) -> Option<Vec<Diagnostic>> {
                 CALIBRATION_FORMAT => check_calibration(&j, &mut out),
                 BENCH_FORMAT => check_bench(&j, &mut out),
                 BENCH_GOLDEN_FORMAT => check_bench_golden(&j, &mut out),
+                MASKS_FORMAT => check_masks(&j, &mut out),
                 other if other.starts_with("cprune-") => {
                     out.push(Diagnostic::new(
                         Code::BadHeader,
@@ -695,6 +700,126 @@ fn check_bench_golden(j: &Json, out: &mut Vec<Diagnostic>) {
     }
 }
 
+/// `cprune-sparsity-masks` v1 (`MaskSet::save` output, DESIGN.md §16):
+/// entries strictly ascending by conv id with the exact field set
+/// (CPV170), densities inside (0, 1] (CPV171), and scheme/params pairs
+/// that are internally consistent (CPV172) — pattern params are
+/// ascending indexes into the fixed pattern library, block params are a
+/// `[keep, group]` shape with `0 < keep < group`, and channel masks
+/// carry no params at all.
+fn check_masks(j: &Json, out: &mut Vec<Diagnostic>) {
+    check_version(j, MASKS_VERSION, out);
+    let masks = match doc_array(j, "masks", out) {
+        Some(m) => m,
+        None => return,
+    };
+    let mut last_conv: Option<usize> = None;
+    for (i, e) in masks.iter().enumerate() {
+        let ctx = format!("masks[{i}]");
+        let obj = match e {
+            Json::Obj(m) => m,
+            _ => {
+                out.push(Diagnostic::new(Code::MaskEntry, &ctx, "entry is not an object"));
+                continue;
+            }
+        };
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "conv" | "density" | "params" | "scheme") {
+                out.push(Diagnostic::new(
+                    Code::MaskEntry,
+                    &ctx,
+                    format!("unexpected field '{key}'"),
+                ));
+            }
+        }
+        match e.get("conv").and_then(Json::as_usize) {
+            Some(conv) => {
+                if let Some(prev) = last_conv {
+                    if conv <= prev {
+                        out.push(Diagnostic::new(
+                            Code::MaskEntry,
+                            &ctx,
+                            format!("conv {conv} does not ascend past {prev}"),
+                        ));
+                    }
+                }
+                last_conv = Some(conv);
+            }
+            None => out.push(Diagnostic::new(Code::MaskEntry, &ctx, "missing conv id")),
+        }
+        match e.get("density").and_then(Json::as_f64) {
+            Some(d) if d.is_finite() && d > 0.0 && d <= 1.0 => {}
+            Some(d) => out.push(Diagnostic::new(
+                Code::MaskDensity,
+                &ctx,
+                format!("density {d} is outside (0, 1]"),
+            )),
+            None => out.push(Diagnostic::new(Code::MaskDensity, &ctx, "missing density")),
+        }
+        let params: Vec<usize> = match e.get("params").and_then(Json::as_arr) {
+            Some(a) => {
+                let parsed: Vec<Option<usize>> = a.iter().map(Json::as_usize).collect();
+                if parsed.iter().any(Option::is_none) {
+                    out.push(Diagnostic::new(
+                        Code::MaskEntry,
+                        &ctx,
+                        "params must be non-negative integers",
+                    ));
+                    continue;
+                }
+                parsed.into_iter().flatten().collect()
+            }
+            None => {
+                out.push(Diagnostic::new(Code::MaskEntry, &ctx, "missing params array"));
+                continue;
+            }
+        };
+        match e.get("scheme").and_then(Json::as_str) {
+            Some("channel") => {
+                if !params.is_empty() {
+                    out.push(Diagnostic::new(
+                        Code::MaskScheme,
+                        &ctx,
+                        "channel masks carry no params",
+                    ));
+                }
+            }
+            Some("pattern") => {
+                let ascending = params.windows(2).all(|w| w[0] < w[1]);
+                if params.is_empty()
+                    || !ascending
+                    || params.iter().any(|&p| p >= pattern::PATTERNS.len())
+                {
+                    out.push(Diagnostic::new(
+                        Code::MaskScheme,
+                        &ctx,
+                        format!(
+                            "pattern params {params:?} must be ascending indexes into the \
+                             {}-entry pattern library",
+                            pattern::PATTERNS.len()
+                        ),
+                    ));
+                }
+            }
+            Some("block") => {
+                if params.len() != 2 || params[0] == 0 || params[0] >= params[1] {
+                    out.push(Diagnostic::new(
+                        Code::MaskScheme,
+                        &ctx,
+                        format!("block params {params:?} must be [keep, group] with 0 < keep < group"),
+                    ));
+                }
+            }
+            Some(other) => out.push(Diagnostic::new(
+                Code::MaskScheme,
+                &ctx,
+                format!("unknown scheme '{other}'"),
+            )),
+            None => out.push(Diagnostic::new(Code::MaskScheme, &ctx, "missing scheme name")),
+        }
+    }
+}
+
 /// `cprune-run-events` v1 JSONL (`JsonlSink` output): a header line then
 /// one event object per line, each matching its kind's exact field set.
 fn check_events(text: &str) -> Vec<Diagnostic> {
@@ -853,9 +978,27 @@ fn check_event_line(ev: &Json, ctx: &str, out: &mut Vec<Diagnostic>) {
             ));
         }
     }
+    // `scheme` is an optional extension on the two measurement events:
+    // absent on channel-only runs (the v1 golden logs), a known scheme
+    // name when a sparsity-aware pruner emitted the line.
+    let scheme_ok = matches!(kind, "candidate_measured" | "iteration_accepted");
+    if scheme_ok {
+        if let Some(v) = ev.get("scheme") {
+            if v.as_str().and_then(Scheme::from_name).is_none() {
+                out.push(Diagnostic::new(
+                    Code::EventSchema,
+                    ctx,
+                    format!("{kind} field 'scheme' is not a known scheme name"),
+                ));
+            }
+        }
+    }
     if let Json::Obj(m) = ev {
         for key in m.keys() {
-            if key != "event" && !fields.iter().any(|(name, _)| *name == key.as_str()) {
+            if key == "event" || (scheme_ok && key == "scheme") {
+                continue;
+            }
+            if !fields.iter().any(|(name, _)| *name == key.as_str()) {
                 out.push(Diagnostic::new(
                     Code::EventSchema,
                     ctx,
@@ -1148,7 +1291,13 @@ mod tests {
     }
 
     fn cp(iteration: usize, latency: f64, accuracy: f64) -> Checkpoint {
-        Checkpoint { iteration, latency, accuracy, channels: BTreeMap::new() }
+        Checkpoint {
+            iteration,
+            latency,
+            accuracy,
+            channels: BTreeMap::new(),
+            schemes: BTreeMap::new(),
+        }
     }
 
     fn ids(diags: &[Diagnostic]) -> Vec<&'static str> {
@@ -1348,6 +1497,32 @@ mod tests {
             journal_baseline("{\"latency\":0.001,\"measured\":1}")
         );
         assert_eq!(ids(&check_text(&text).unwrap()), ["CPV162"]);
+    }
+
+    #[test]
+    fn sparsity_mask_documents_are_checked() {
+        let clean = r#"{"format":"cprune-sparsity-masks","version":1,"masks":[
+            {"conv":3,"density":0.4444444444444444,"params":[0,2],"scheme":"pattern"},
+            {"conv":7,"density":0.5,"params":[2,4],"scheme":"block"}]}"#;
+        assert_eq!(check_text(clean), Some(vec![]));
+        let unsorted = clean.replace("\"conv\":7", "\"conv\":3");
+        assert_eq!(ids(&check_text(&unsorted).unwrap()), ["CPV170"]);
+        let dense = clean.replace("\"density\":0.5", "\"density\":1.5");
+        assert_eq!(ids(&check_text(&dense).unwrap()), ["CPV171"]);
+        let scheme = clean.replace("\"scheme\":\"block\"", "\"scheme\":\"vibes\"");
+        assert_eq!(ids(&check_text(&scheme).unwrap()), ["CPV172"]);
+        let shape = clean.replace("\"params\":[2,4]", "\"params\":[4,2]");
+        assert_eq!(ids(&check_text(&shape).unwrap()), ["CPV172"]);
+    }
+
+    #[test]
+    fn event_scheme_field_is_optional_but_must_be_known() {
+        let with = "{\"format\":\"cprune-run-events\",\"version\":1}\n\
+            {\"event\":\"candidate_measured\",\"candidates_tried\":1,\"iteration\":1,\
+             \"latency\":0.2,\"latency_target\":0.25,\"scheme\":\"pattern\"}\n";
+        assert_eq!(check_text(with), Some(vec![]));
+        let bad = with.replace("\"pattern\"", "\"vibes\"");
+        assert_eq!(ids(&check_text(&bad).unwrap()), ["CPV140"]);
     }
 
     #[test]

@@ -41,8 +41,8 @@ use std::path::{Path, PathBuf};
 /// Stable diagnostic identifiers. IDs are never reused; retired checks
 /// leave holes. Grouped by layer: `CPV10x` graph, `CPV11x` program,
 /// `CPV12x` artifact schema, `CPV13x` frontier, `CPV14x` event stream,
-/// `CPV15x` remote traces, `CPV16x` run journals, `CPV19x`
-/// document-level corruption.
+/// `CPV15x` remote traces, `CPV16x` run journals, `CPV17x` sparsity
+/// masks, `CPV19x` document-level corruption.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Code {
     /// CPV100 — graph structure: id/index mismatch, forward-referencing
@@ -121,6 +121,18 @@ pub enum Code {
     /// non-canonical, or unsorted (the [`crate::tuner::TuneCache`]
     /// entry invariants, applied per record).
     JournalCacheEntry,
+    /// CPV170 — a `cprune-sparsity-masks` entry is malformed: missing or
+    /// mistyped field, unexpected field, or entries not strictly
+    /// ascending by conv id.
+    MaskEntry,
+    /// CPV171 — a mask density outside its domain: non-finite, or
+    /// outside `(0, 1]` (a channel layer is simply absent from the set).
+    MaskDensity,
+    /// CPV172 — an unknown scheme name, or scheme parameters
+    /// inconsistent with the scheme: pattern indices out of the library
+    /// range or unsorted, a block shape other than `[keep, group]` with
+    /// `keep < group`.
+    MaskScheme,
     /// CPV190 — a document that claims a `cprune-*` format but cannot be
     /// parsed at all.
     CorruptDocument,
@@ -128,7 +140,7 @@ pub enum Code {
 
 impl Code {
     /// Every code, in ID order.
-    pub const ALL: [Code; 24] = [
+    pub const ALL: [Code; 27] = [
         Code::GraphStructure,
         Code::ChannelMismatch,
         Code::ResidualMismatch,
@@ -152,6 +164,9 @@ impl Code {
         Code::JournalRecord,
         Code::JournalSequence,
         Code::JournalCacheEntry,
+        Code::MaskEntry,
+        Code::MaskDensity,
+        Code::MaskScheme,
         Code::CorruptDocument,
     ];
 
@@ -181,6 +196,9 @@ impl Code {
             Code::JournalRecord => "CPV160",
             Code::JournalSequence => "CPV161",
             Code::JournalCacheEntry => "CPV162",
+            Code::MaskEntry => "CPV170",
+            Code::MaskDensity => "CPV171",
+            Code::MaskScheme => "CPV172",
             Code::CorruptDocument => "CPV190",
         }
     }
@@ -211,6 +229,9 @@ impl Code {
             Code::JournalRecord => "run-journal record malformed or torn",
             Code::JournalSequence => "run-journal records out of sequence",
             Code::JournalCacheEntry => "run-journal cache delta malformed or unsorted",
+            Code::MaskEntry => "sparsity-mask entry malformed or out of order",
+            Code::MaskDensity => "sparsity-mask density outside (0, 1]",
+            Code::MaskScheme => "unknown scheme or inconsistent scheme parameters",
             Code::CorruptDocument => "cprune-format document does not parse",
         }
     }
@@ -325,7 +346,8 @@ mod tests {
             [
                 "CPV100", "CPV101", "CPV102", "CPV103", "CPV104", "CPV105", "CPV110", "CPV111",
                 "CPV112", "CPV120", "CPV121", "CPV122", "CPV123", "CPV124", "CPV130", "CPV131",
-                "CPV140", "CPV150", "CPV151", "CPV152", "CPV160", "CPV161", "CPV162", "CPV190",
+                "CPV140", "CPV150", "CPV151", "CPV152", "CPV160", "CPV161", "CPV162", "CPV170",
+                "CPV171", "CPV172", "CPV190",
             ]
         );
     }

@@ -237,6 +237,7 @@ fn golden_events() -> Vec<RunEvent> {
             latency: 0.125,
             latency_target: 0.25,
             candidates_tried: 1,
+            scheme: None,
         },
         RunEvent::IterationRejected {
             iteration: 1,
@@ -253,10 +254,17 @@ fn golden_events() -> Vec<RunEvent> {
             short_accuracy: 0.75,
             accuracy_gate: 0.5,
             filters_removed: 8,
+            scheme: None,
         },
         RunEvent::TaskBanned { conv: 7, reason: "accuracy_gate".to_string() },
         RunEvent::CheckpointEmitted {
-            checkpoint: Checkpoint { iteration: 1, latency: 0.125, accuracy: 0.75, channels },
+            checkpoint: Checkpoint {
+                iteration: 1,
+                latency: 0.125,
+                accuracy: 0.75,
+                channels,
+                schemes: BTreeMap::new(),
+            },
         },
         RunEvent::Finished {
             pruner: "cprune".to_string(),

@@ -123,6 +123,7 @@ fn tighter_slo_never_raises_served_accuracy() {
             latency: lat,
             accuracy: acc,
             channels: BTreeMap::new(),
+            schemes: BTreeMap::new(),
         });
     }
     let run_with_slo = |slo_ms: f64| {

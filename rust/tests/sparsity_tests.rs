@@ -1,0 +1,160 @@
+//! Integration: the sparsity subsystem end-to-end (DESIGN.md §16).
+//!
+//! Pins the PR's acceptance shape: at equal seed and iteration budget on
+//! a model-zoo model, the scheme-select CPrune variant assigns a
+//! non-channel scheme to at least one layer, meets the accuracy gate,
+//! and lands strictly below every single-scheme run's measured latency
+//! on the analytic target; the chosen schemes differ between CPU and
+//! GPU device kinds; and every scheme-aware pruner is bit-deterministic
+//! across runs and tuning thread budgets.
+
+use cprune::accuracy::ProxyOracle;
+use cprune::device::{DeviceSpec, Simulator};
+use cprune::graph::model_zoo::{Model, ModelKind};
+use cprune::pruner::CPruneConfig;
+use cprune::run::{CPrune, JsonlSink, PruneOutcome, Pruner, RunContext, RunObserver};
+use cprune::sparsity::{BlockPruner, MaskSet, PatternPruner, Scheme, SchemeSelect};
+use cprune::tuner::{TuneOptions, TuningSession};
+use std::collections::BTreeSet;
+
+const ITERS: usize = 12;
+const SEED: u64 = 7;
+
+fn cfg() -> CPruneConfig {
+    CPruneConfig {
+        max_iterations: ITERS,
+        tune_opts: TuneOptions::quick(),
+        seed: SEED,
+        ..Default::default()
+    }
+}
+
+fn select() -> SchemeSelect {
+    SchemeSelect::with_cfg(cfg())
+}
+
+/// One pruner run on a fresh session at the given tuning thread budget,
+/// optionally streaming events to a JSONL file.
+fn run_pruner(
+    pruner: &dyn Pruner,
+    spec: DeviceSpec,
+    threads: usize,
+    events: Option<&std::path::Path>,
+) -> PruneOutcome {
+    let model = Model::build(ModelKind::ResNet8Cifar, 0);
+    let sim = Simulator::new(spec);
+    let mut session = TuningSession::new(&sim, TuneOptions::quick(), SEED);
+    session.threads = threads;
+    let mut oracle = ProxyOracle::new();
+    let mut observers: Vec<Box<dyn RunObserver>> = match events {
+        Some(path) => vec![Box::new(JsonlSink::create(path).unwrap())],
+        None => Vec::new(),
+    };
+    let mut ctx = RunContext::new(&model, &session, &mut oracle, &mut observers);
+    pruner.run(&mut ctx)
+}
+
+fn selected_schemes(out: &PruneOutcome) -> BTreeSet<Scheme> {
+    out.pareto
+        .fastest()
+        .expect("non-empty frontier")
+        .schemes
+        .values()
+        .map(|c| c.scheme)
+        .collect()
+}
+
+#[test]
+fn scheme_select_beats_every_single_scheme_run_at_equal_budget() {
+    let spec = DeviceSpec::kryo385;
+    let sel = run_pruner(&select(), spec(), 0, None);
+    let channel = run_pruner(&CPrune::with_cfg(cfg()), spec(), 0, None);
+    let pat = run_pruner(&PatternPruner, spec(), 0, None);
+    let blk = run_pruner(&BlockPruner, spec(), 0, None);
+
+    // at least one layer carries a non-channel scheme in the shipped model
+    let schemes = selected_schemes(&sel);
+    assert!(
+        schemes.iter().any(|&s| s != Scheme::Channel),
+        "scheme-select never left the channel scheme: {schemes:?}"
+    );
+    // the accuracy gate held all the way down
+    assert!(sel.top1 > 0.5, "final top-1 {} collapsed", sel.top1);
+    // and it beats each single-scheme run's measured latency
+    for (name, single) in [("cprune", &channel), ("pattern", &pat), ("block", &blk)] {
+        assert!(
+            sel.final_latency < single.final_latency,
+            "scheme-select ({:.6}s) lost to {name} ({:.6}s)",
+            sel.final_latency,
+            single.final_latency
+        );
+    }
+}
+
+#[test]
+fn scheme_choice_depends_on_the_device_kind() {
+    // The per-kind reorder overheads in device::sparse make pattern
+    // compaction the cheap scheme on CPUs and block skipping the cheap
+    // scheme on GPUs; the selection loop must follow the cost model.
+    let cpu = run_pruner(&select(), DeviceSpec::kryo385(), 0, None);
+    let gpu = run_pruner(&select(), DeviceSpec::mali_g72(), 0, None);
+    assert!(
+        selected_schemes(&cpu).contains(&Scheme::Pattern),
+        "kryo385 (CPU) never picked pattern: {:?}",
+        selected_schemes(&cpu)
+    );
+    assert!(
+        selected_schemes(&gpu).contains(&Scheme::Block),
+        "mali-g72 (GPU) never picked block: {:?}",
+        selected_schemes(&gpu)
+    );
+}
+
+#[test]
+fn scheme_pruners_are_deterministic_across_runs_and_thread_budgets() {
+    let sel = select();
+    let pruners: [&dyn Pruner; 3] = [&sel, &PatternPruner, &BlockPruner];
+    for pruner in pruners {
+        let a = run_pruner(pruner, DeviceSpec::kryo385(), 1, None);
+        let b = run_pruner(pruner, DeviceSpec::kryo385(), 8, None);
+        assert_eq!(
+            a.final_latency.to_bits(),
+            b.final_latency.to_bits(),
+            "{}: thread budget changed the final latency",
+            pruner.name()
+        );
+        assert_eq!(a.channels, b.channels, "{}: masks/channels diverged", pruner.name());
+        assert_eq!(a.pareto, b.pareto, "{}: frontier (schemes included) diverged", pruner.name());
+    }
+}
+
+#[test]
+fn scheme_select_event_stream_is_byte_identical_across_runs() {
+    let dir = std::env::temp_dir();
+    let p1 = dir.join(format!("cprune_sparsity_events_a_{}.jsonl", std::process::id()));
+    let p2 = dir.join(format!("cprune_sparsity_events_b_{}.jsonl", std::process::id()));
+    let _ = run_pruner(&select(), DeviceSpec::kryo385(), 1, Some(&p1));
+    let _ = run_pruner(&select(), DeviceSpec::kryo385(), 8, Some(&p2));
+    let a = std::fs::read(&p1).unwrap();
+    let b = std::fs::read(&p2).unwrap();
+    assert!(!a.is_empty(), "no events written");
+    assert_eq!(a, b, "event streams diverged across thread budgets");
+    let text = String::from_utf8(a).unwrap();
+    assert!(text.contains("\"scheme\":"), "no scheme-stamped events in the stream");
+    // the stream passes the semantic artifact checker
+    assert_eq!(cprune::verify::artifact::check_text(&text), Some(vec![]));
+    let _ = std::fs::remove_file(&p1);
+    let _ = std::fs::remove_file(&p2);
+}
+
+#[test]
+fn golden_mask_fixture_round_trips_byte_stably() {
+    let golden = include_str!("golden/sparsity_masks.json");
+    let set = MaskSet::parse(golden).unwrap();
+    assert_eq!(set.masks.len(), 2);
+    assert_eq!(set.to_json().to_string(), golden.trim_end());
+    let schemes = set.to_schemes();
+    assert_eq!(schemes.len(), 2);
+    assert!(schemes.values().any(|c| c.scheme == Scheme::Pattern));
+    assert!(schemes.values().any(|c| c.scheme == Scheme::Block));
+}

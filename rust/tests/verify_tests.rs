@@ -274,6 +274,50 @@ fn remote_trace_corruptions_have_stable_ids() {
     assert!(ids(&artifact::check_text(&broken).unwrap()).contains(&"CPV152"));
 }
 
+#[test]
+fn sparsity_mask_corruptions_have_stable_ids() {
+    let golden = include_str!("golden/sparsity_masks.json");
+    assert_eq!(artifact::check_text(golden), Some(vec![]));
+
+    // conv ids out of strictly ascending order
+    let broken = golden.replace("\"conv\":7", "\"conv\":1");
+    assert_ne!(broken, golden);
+    assert_eq!(ids(&artifact::check_text(&broken).unwrap()), ["CPV170"]);
+
+    // density outside (0, 1]
+    let broken = golden.replace("\"density\":0.5", "\"density\":1.5");
+    assert_eq!(ids(&artifact::check_text(&broken).unwrap()), ["CPV171"]);
+    let broken = golden.replace("\"density\":0.5", "\"density\":0");
+    assert_eq!(ids(&artifact::check_text(&broken).unwrap()), ["CPV171"]);
+
+    // unknown scheme name
+    let broken = golden.replace("\"scheme\":\"block\"", "\"scheme\":\"vibes\"");
+    assert_eq!(ids(&artifact::check_text(&broken).unwrap()), ["CPV172"]);
+
+    // pattern params out of the library's range, then unsorted
+    let broken = golden.replace("\"params\":[0,2]", "\"params\":[0,99]");
+    assert_eq!(ids(&artifact::check_text(&broken).unwrap()), ["CPV172"]);
+    let broken = golden.replace("\"params\":[0,2]", "\"params\":[2,0]");
+    assert_eq!(ids(&artifact::check_text(&broken).unwrap()), ["CPV172"]);
+
+    // block params must be [keep, group] with 0 < keep < group
+    let broken = golden.replace("\"params\":[2,4]", "\"params\":[4,2]");
+    assert_eq!(ids(&artifact::check_text(&broken).unwrap()), ["CPV172"]);
+}
+
+#[test]
+fn event_scheme_extension_is_checked() {
+    // scheme-aware pruners stamp measurement events with a scheme name;
+    // channel-only logs (the v1 golden) omit the field entirely.
+    let with_scheme = "{\"format\":\"cprune-run-events\",\"version\":1}\n\
+        {\"event\":\"iteration_accepted\",\"accuracy_gate\":0.8,\"filters_removed\":0,\
+         \"iteration\":1,\"latency\":0.2,\"latency_target\":0.25,\"scheme\":\"block\",\
+         \"short_accuracy\":0.9}\n";
+    assert_eq!(artifact::check_text(with_scheme), Some(vec![]));
+    let bad = with_scheme.replace("\"scheme\":\"block\"", "\"scheme\":\"vibes\"");
+    assert_eq!(ids(&artifact::check_text(&bad).unwrap()), ["CPV140"]);
+}
+
 // ------------------------------------------------------------------- CLI
 
 #[test]
